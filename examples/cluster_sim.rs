@@ -1,0 +1,115 @@
+//! Cluster simulation walkthrough: one Figure-3 cell in detail.
+//!
+//! Simulates iterations of Long-SFT on the paper's 32-GPU testbed and
+//! prints, for one iteration, a per-DP-rank timeline of micro-batches with
+//! their Eq. 2 decomposition (local compute vs exposed comm vs distributed
+//! compute) — the Fig. 2(d) picture, numerically.
+//!
+//!   cargo run --release --offline --example cluster_sim -- [dataset] [model]
+
+use skrull::cluster::{simulate_iteration, Topology};
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
+use skrull::util::{fmt_secs, fmt_tokens};
+
+fn main() -> anyhow::Result<()> {
+    let dataset = std::env::args().nth(1).unwrap_or_else(|| "chatqa2".into());
+    let model_name = std::env::args().nth(2).unwrap_or_else(|| "qwen2.5-0.5b".into());
+    let model = ModelSpec::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let cfg = ExperimentConfig::paper_default(model, &dataset);
+
+    let topo = Topology::paper_testbed(cfg.cluster.dp, cfg.cluster.cp)?;
+    println!(
+        "testbed: {} nodes × {} GPUs, DP={} × CP={} ({} GPUs), CP groups {} node boundaries",
+        topo.nodes,
+        topo.gpus_per_node,
+        topo.dp,
+        topo.cp,
+        topo.total_gpus(),
+        if topo.cp_group_crosses_nodes(0) { "CROSS" } else { "stay within" },
+    );
+
+    let dist = LengthDistribution::by_name(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let ds = Dataset::synthesize(&dist, 100_000, cfg.seed ^ 0xD5)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let cost = CostModel::paper_default(&cfg.model);
+
+    // one iteration, in detail, under Skrull
+    let mut skrull_cfg = cfg.clone();
+    skrull_cfg.policy = Policy::Skrull;
+    let mut loader = ScheduledLoader::new(&ds, skrull_cfg);
+    let (batch, sched) = loader.next_iteration()?;
+    let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
+
+    println!(
+        "\none Skrull-scheduled iteration ({} seqs, {} tokens):",
+        batch.len(),
+        fmt_tokens(batch.iter().map(|s| s.len as u64).sum())
+    );
+    for (d, (rank, sims)) in sched.ranks.iter().zip(&sim.micro_batches).enumerate() {
+        println!("  dp{d} (span {}):", fmt_secs(sim.rank_spans[d]));
+        for (mb, s) in rank.micro_batches.iter().zip(sims) {
+            let max_local = s.busy.iter().cloned().fold(0.0, f64::max);
+            let exp_comm = s.exposed_comm.iter().cloned().fold(0.0, f64::max);
+            println!(
+                "    mb: {:>2} seqs ({} tokens) = {} local + {} sharded | tdacp {} (worst rank: busy {}, exposed comm {})",
+                mb.seqs.len(),
+                fmt_tokens(mb.total_tokens()),
+                s.num_local,
+                s.num_distributed,
+                fmt_secs(s.tdacp),
+                fmt_secs(max_local),
+                fmt_secs(exp_comm),
+            );
+        }
+    }
+    println!(
+        "iteration {} = slowest dp span {} + grad sync {}; utilization {:.1}%",
+        fmt_secs(sim.total_time),
+        fmt_secs(sim.rank_spans.iter().cloned().fold(0.0, f64::max)),
+        fmt_secs(sim.grad_sync),
+        100.0 * sim.compute_utilization
+    );
+
+    // export the timeline as a chrome://tracing / Perfetto trace
+    let trace_path = std::env::temp_dir().join("skrull_iteration_trace.json");
+    skrull::cluster::trace::write_iteration_trace(
+        trace_path.to_str().unwrap(),
+        &sched,
+        &cost,
+        cfg.cluster.cp,
+    )?;
+    println!("\nchrome trace written to {}", trace_path.display());
+
+    // then the policy comparison over several iterations
+    println!("\npolicy comparison (15 iterations):");
+    let mut base = None;
+    for policy in [Policy::Baseline, Policy::DacpOnly, Policy::Skrull, Policy::SortedBatching] {
+        let mut pcfg = cfg.clone();
+        pcfg.policy = policy;
+        let mut loader = ScheduledLoader::new(&ds, pcfg);
+        let mut total = 0.0;
+        let mut util = 0.0;
+        for _ in 0..15 {
+            let (_, sched) = loader.next_iteration()?;
+            let s = simulate_iteration(&sched, &cost, cfg.cluster.cp);
+            total += s.total_time;
+            util += s.compute_utilization;
+        }
+        let mean = total / 15.0;
+        let b = *base.get_or_insert(mean);
+        println!(
+            "  {:<10} mean iter {}  speedup {:.2}x  utilization {:.1}%",
+            policy.name(),
+            fmt_secs(mean),
+            b / mean,
+            100.0 * util / 15.0
+        );
+    }
+    Ok(())
+}

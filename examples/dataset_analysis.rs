@@ -1,0 +1,87 @@
+//! Dataset analysis (Fig. 1a / Table 1 companion): distribution summary,
+//! percentile table, and — the scheduler's-eye view — how many BucketSize-C
+//! buckets a sampled global batch actually needs under each policy, i.e.
+//! the packing-density story behind the speedups.
+//!
+//!   cargo run --release --offline --example dataset_analysis -- [dataset]
+
+use skrull::bench::TableBuilder;
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::util::fmt_tokens;
+use skrull::util::stats::{fraction_below, Summary};
+
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1);
+    let names: Vec<&str> = match which.as_deref() {
+        Some(n) => vec![match n {
+            "wikipedia" | "wiki" => "wikipedia",
+            "lmsys" => "lmsys",
+            "chatqa2" => "chatqa2",
+            other => anyhow::bail!("unknown dataset {other}"),
+        }],
+        None => vec!["wikipedia", "lmsys", "chatqa2"],
+    };
+
+    let mut table = TableBuilder::new("Table 1 view: synthesized Long-SFT datasets (n=200k)")
+        .header(&["Dataset", "<1K", "<4K", "<8K", "<32K", "mean", "p50", "p99", "longest"]);
+    for name in &names {
+        let dist = LengthDistribution::by_name(name).unwrap();
+        let ds = Dataset::synthesize(&dist, 200_000, 42);
+        let mut s = Summary::new();
+        for &l in &ds.lengths {
+            s.push(l as f64);
+        }
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}%", 100.0 * fraction_below(&ds.lengths, 1024)),
+            format!("{:.2}%", 100.0 * fraction_below(&ds.lengths, 4096)),
+            format!("{:.2}%", 100.0 * fraction_below(&ds.lengths, 8192)),
+            format!("{:.2}%", 100.0 * fraction_below(&ds.lengths, 32 * 1024)),
+            format!("{:.0}", s.mean()),
+            format!("{:.0}", s.quantile(0.5)),
+            format!("{:.0}", s.quantile(0.99)),
+            fmt_tokens(s.max() as u64),
+        ]);
+    }
+    table.print();
+
+    // Scheduler's-eye view: micro-batch counts + sharded sequences per
+    // policy for one sampled global batch of each dataset.
+    let mut t2 = TableBuilder::new(
+        "Scheduling view (Qwen2.5-0.5B, <DP=4,CP=8,B=64>, C=26K): one global batch",
+    )
+    .header(&["Dataset", "policy", "micro-batches", "sharded seqs", "tokens/bucket"]);
+    for name in &names {
+        let cfg0 = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), name);
+        let dist = LengthDistribution::by_name(name).unwrap();
+        let ds = Dataset::synthesize(&dist, 100_000, 42)
+            .truncated(cfg0.bucket_size * cfg0.cluster.cp as u32);
+        for policy in [Policy::Baseline, Policy::Skrull] {
+            let mut cfg = cfg0.clone();
+            cfg.policy = policy;
+            let mut loader = ScheduledLoader::new(&ds, cfg);
+            let (batch, sched) = loader.next_iteration()?;
+            let mbs = sched.num_micro_batches();
+            let sharded: usize = sched
+                .ranks
+                .iter()
+                .flat_map(|r| &r.micro_batches)
+                .map(|mb| mb.plan.num_distributed())
+                .sum();
+            let total: u64 = batch.iter().map(|s| s.len as u64).sum();
+            t2.row(&[
+                name.to_string(),
+                policy.name().to_string(),
+                mbs.to_string(),
+                format!("{sharded}/{}", batch.len()),
+                fmt_tokens(total / mbs.max(1) as u64),
+            ]);
+        }
+    }
+    t2.print();
+    println!("(fewer micro-batches at equal tokens = denser packing = higher GPU utilization)");
+    Ok(())
+}

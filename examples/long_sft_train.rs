@@ -1,0 +1,138 @@
+//! End-to-end Long-SFT validation on a real workload (DESIGN.md §6, E2E):
+//! trains the tiny Qwen-style transformer through the full three-layer
+//! stack — rust scheduler → packed buckets → AOT HLO artifacts (JAX +
+//! Pallas flash-attention) → PJRT CPU execution → host-side AdamW — under
+//! both the DeepSpeed-like baseline and Skrull scheduling, and reports:
+//!
+//!   * the loss curves (must both learn: the corpus is a noisy Markov
+//!     process with a known entropy floor)
+//!   * executed-token and micro-batch counts (Skrull's packing win)
+//!   * measured wall-clock per policy on this machine
+//!
+//! Run `make artifacts` first.  ~200 steps ≈ a few minutes on CPU.
+//!
+//!   cargo run --release --offline --example long_sft_train -- [steps] [bucket]
+//!
+//! Substrate note: both policies execute the same fixed bucket size
+//! (default 256 tokens) so the comparison isolates the paper's packing /
+//! launch-count mechanism.  A dense interpret-mode attention kernel pays
+//! t² for the whole bucket regardless of segment masks, so packing into
+//! *larger* buckets than the baseline's would conflate the scheduler's
+//! win with the kernel's (lack of) block skipping — on a real TPU/GPU,
+//! FlashAttention's varlen block-skip removes that term (DESIGN.md §4).
+
+use skrull::config::Policy;
+use skrull::coordinator::corpus::CorpusConfig;
+use skrull::coordinator::{Trainer, TrainerOptions};
+use skrull::data::LengthDistribution;
+use skrull::rng::Rng;
+use skrull::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let bucket: u32 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let artifacts = std::env::var("SKRULL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // tiny Long-SFT corpus: long-tail lengths with median ≪ bucket, the
+    // paper's regime (Wikipedia median ≈ 290 tokens vs C = 26K — buckets
+    // hold dozens of sequences); learnable Markov structure
+    let corpus_cfg = CorpusConfig::tiny(512);
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    let dist = LengthDistribution::LognormalMixture {
+        name: "tiny-longtail",
+        components: vec![(0.95, 3.7, 0.7), (0.05, 5.2, 0.3)],
+        max_len: bucket,
+    };
+    let lens: Vec<u32> = (0..512).map(|_| dist.sample(&mut rng).max(2)).collect();
+    let corpus = corpus_cfg.corpus(0x5EED, &lens);
+    let total_tokens: usize = corpus.iter().map(|s| s.tokens.len()).sum();
+    println!(
+        "corpus: {} sequences, {} tokens (mean {:.0}), entropy floor {:.3} nats/token",
+        corpus.len(),
+        total_tokens,
+        total_tokens as f64 / corpus.len() as f64,
+        corpus_cfg.entropy_floor()
+    );
+
+    let mut results = Vec::new();
+    for policy in [Policy::Baseline, Policy::Skrull] {
+        // 4 emulated CP workers: the global batch (~16×59 tokens) fits in
+        // one micro-batch with per-rank slack, so DACP packs shorts locally
+        // instead of memory-pressure sharding — the regime where Long-SFT
+        // spends most of its time (87%+ of sequences are short, Table 1).
+        let opts = TrainerOptions {
+            workers: 4,
+            bucket_capacity: bucket,
+            policy,
+            lr: 3e-3,
+            seed: 42,
+            batch_size: 16,
+            ..Default::default()
+        };
+        println!("\n=== policy {:?}: {steps} steps ===", policy);
+        let mut trainer = Trainer::new(&artifacts, opts)?;
+        let report = trainer.train(&corpus, steps)?;
+        println!(
+            "wall {} (compile {}), {} buckets executed, {} tokens executed ({:.1}% padding)",
+            fmt_secs(report.wall_seconds),
+            fmt_secs(report.compile_seconds),
+            report.buckets_executed,
+            report.executed_tokens,
+            100.0 * report.padding_fraction()
+        );
+        println!(
+            "loss {:.4} -> {:.4}, scheduler overhead/step {}",
+            report.metrics.first_loss().unwrap_or(f32::NAN),
+            report.metrics.final_loss(10).unwrap_or(f32::NAN),
+            fmt_secs(report.metrics.sched_seconds / steps as f64)
+        );
+        println!("loss curve (every {} steps):", (steps / 10).max(1));
+        print!("{}", report.metrics.render_curve((steps / 10).max(1)));
+        results.push((policy, report));
+    }
+
+    let (_, base) = &results[0];
+    let (_, skr) = &results[1];
+    let exec_speedup =
+        (base.wall_seconds - base.compile_seconds) / (skr.wall_seconds - skr.compile_seconds);
+    println!("\n=== summary ===");
+    println!(
+        "executed tokens: baseline {} vs skrull {} ({:.2}x fewer)",
+        base.executed_tokens,
+        skr.executed_tokens,
+        base.executed_tokens as f64 / skr.executed_tokens as f64
+    );
+    println!(
+        "micro-batches:   baseline {} vs skrull {} ({:.2}x fewer)",
+        base.buckets_executed,
+        skr.buckets_executed,
+        base.buckets_executed as f64 / skr.buckets_executed as f64
+    );
+    println!("measured wall-clock speedup (excl. compile): {exec_speedup:.2}x");
+    let floor = corpus_cfg.entropy_floor() as f32;
+    let b_final = base.metrics.final_loss(10).unwrap();
+    let s_final = skr.metrics.final_loss(10).unwrap();
+    println!(
+        "final loss: baseline {b_final:.4} vs skrull {s_final:.4} (floor {floor:.4}) — both must learn"
+    );
+    assert!(
+        b_final < base.metrics.first_loss().unwrap() * 0.7,
+        "baseline failed to learn"
+    );
+    assert!(
+        s_final < skr.metrics.first_loss().unwrap() * 0.7,
+        "skrull failed to learn"
+    );
+    assert!(
+        skr.executed_tokens < base.executed_tokens,
+        "skrull must execute fewer (padded) tokens"
+    );
+    println!("e2e validation OK: identical learning, fewer executed tokens under Skrull");
+    Ok(())
+}

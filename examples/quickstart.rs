@@ -1,0 +1,65 @@
+//! Quickstart: the Skrull public API in ~60 lines.
+//!
+//!   cargo run --release --offline --example quickstart
+//!
+//! Synthesizes a Long-SFT dataset, schedules one global batch with GDS +
+//! DACP, and compares the simulated iteration time against the DeepSpeed
+//! baseline — the paper's headline experiment in miniature.
+
+use skrull::cluster::simulate_iteration;
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
+use skrull::util::{fmt_secs, fmt_tokens};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the paper's evaluation setting: Qwen2.5-0.5B, <DP=4, CP=8, B=64>,
+    //    BucketSize C = 26K tokens
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+    println!(
+        "model={} <DP={}, CP={}, BatchSize={}> C={}",
+        cfg.model.name,
+        cfg.cluster.dp,
+        cfg.cluster.cp,
+        cfg.cluster.batch_size,
+        fmt_tokens(cfg.bucket_size as u64)
+    );
+
+    // 2. a synthetic dataset matching Wikipedia's long-tail distribution
+    let dist = LengthDistribution::wikipedia();
+    let dataset = Dataset::synthesize(&dist, 50_000, 7);
+    println!(
+        "dataset: {} sequences, {} tokens, longest {}",
+        dataset.len(),
+        fmt_tokens(dataset.total_tokens()),
+        fmt_tokens(dataset.max_len() as u64)
+    );
+
+    // 3. schedule one global batch under each policy and simulate it
+    let cost = CostModel::paper_default(&cfg.model);
+    let mut baseline_time = None;
+    for policy in [Policy::Baseline, Policy::DacpOnly, Policy::Skrull] {
+        let mut pcfg = cfg.clone();
+        pcfg.policy = policy;
+        let mut loader = ScheduledLoader::new(&dataset, pcfg);
+        let (_batch, sched) = loader.next_iteration()?;
+        let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
+        let speedup = baseline_time
+            .map(|b: f64| format!("{:.2}x", b / sim.total_time))
+            .unwrap_or_else(|| "1.00x".into());
+        baseline_time.get_or_insert(sim.total_time);
+        println!(
+            "  {:<10} {} micro-batches, iteration {}, utilization {:>5.1}%, speedup {}",
+            policy.name(),
+            sched.num_micro_batches(),
+            fmt_secs(sim.total_time),
+            100.0 * sim.compute_utilization,
+            speedup
+        );
+    }
+    println!("\n(see examples/cluster_sim.rs for the full Figure-3 sweep,");
+    println!(" and examples/long_sft_train.rs for real PJRT training)");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT pipeline: lower the L2 train step to HLO *text* artifacts for rust.
+
+Run once via `make artifacts`; python never appears on the training path.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  train_step_t{T}.hlo.txt   fused fwd+bwd train step per packed bucket size T
+  attn_fwd_t{T}.hlo.txt     forward-only attention microbenchmark
+  params.bin                initial params, f32 LE, manifest order
+  manifest.txt              model config, param layout, bucket -> artifact map
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.flash_attention import flash_attention
+
+DEFAULT_BUCKETS = (256, 512, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: M.ModelConfig, t: int) -> str:
+    step = M.make_train_step(cfg, use_pallas=True)
+    param_args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_specs(cfg)]
+    batch_args = M.example_batch(cfg, t)
+    lowered = jax.jit(step).lower(*param_args, *batch_args)
+    return to_hlo_text(lowered)
+
+
+def lower_attn_fwd(cfg: M.ModelConfig, t: int) -> str:
+    h, d = cfg.heads, cfg.head_dim
+
+    def fn(q, k, v, seg):
+        return (flash_attention(q, k, v, seg),)
+
+    spec = jax.ShapeDtypeStruct((h, t, d), jnp.float32)
+    seg = jax.ShapeDtypeStruct((t,), jnp.int32)
+    lowered = jax.jit(fn).lower(spec, spec, spec, seg)
+    return to_hlo_text(lowered)
+
+
+def write_manifest(path, cfg, buckets, attn_buckets, seed):
+    lines = ["version 1"]
+    lines.append(
+        f"model vocab={cfg.vocab} hidden={cfg.hidden} layers={cfg.layers} "
+        f"heads={cfg.heads} kv_heads={cfg.kv_heads} ffn={cfg.ffn} "
+        f"head_dim={cfg.head_dim} seed={seed}"
+    )
+    for name, shape in M.param_specs(cfg):
+        lines.append(f"param {name} {'x'.join(str(d) for d in shape)}")
+    for t in buckets:
+        lines.append(f"bucket {t} train_step_t{t}.hlo.txt")
+    for t in attn_buckets:
+        lines.append(f"attn {t} attn_fwd_t{t}.hlo.txt")
+    lines.append("params params.bin")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", type=int, nargs="*", default=list(DEFAULT_BUCKETS))
+    ap.add_argument("--attn-buckets", type=int, nargs="*", default=[512])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = M.TINY
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for t in args.buckets:
+        assert t % 128 == 0, "bucket must be a multiple of the kernel block size"
+        text = lower_train_step(cfg, t)
+        path = os.path.join(args.out_dir, f"train_step_t{t}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for t in args.attn_buckets:
+        text = lower_attn_fwd(cfg, t)
+        path = os.path.join(args.out_dir, f"attn_fwd_t{t}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).reshape(-1) for p in params])
+    bin_path = os.path.join(args.out_dir, "params.bin")
+    flat.tofile(bin_path)
+    print(f"wrote {bin_path} ({flat.size} f32 = {M.num_params(cfg)} params)")
+
+    write_manifest(os.path.join(args.out_dir, "manifest.txt"), cfg, args.buckets, args.attn_buckets, args.seed)
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""L1: FlashAttention-2-style blockwise attention as a Pallas kernel.
+
+The paper's hot spot is the Attention module over *packed* sequences
+(Appendix A.1: "we employ sequence packing to eliminate padding").  DACP
+places several local sequences into one per-rank buffer, so the kernel must
+support segment-id masking: token i attends to token j iff they belong to the
+same packed segment AND j <= i (causal).
+
+Hardware adaptation (GPU paper -> TPU Pallas, see DESIGN.md §4):
+  * FA2's SRAM threadblock tiles become VMEM blocks expressed via BlockSpec:
+    the q tile is a (BLOCK_Q, d) VMEM-resident block selected by the
+    (head, q_block) grid; K/V stream through the inner fori_loop in
+    (BLOCK_K, d) slices — the HBM<->VMEM schedule the paper's baseline gets
+    from threadblock scheduling.
+  * QK^T / PV contractions are shaped for the 128x128 MXU systolic array
+    (BLOCK_Q = BLOCK_K = 128), accumulating in f32.
+  * The online-softmax recurrence (running max m, normalizer l) is identical
+    to FA2 — IO-awareness is hierarchy-independent.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the rust runtime.  Real-TPU efficiency is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, q_seg, k_seg):
+    """Causal + same-segment mask for a (bq, bk) tile."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    same_seg = q_seg[:, None] == k_seg[None, :]
+    return causal & same_seg
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, qseg_ref, kseg_ref, o_ref, lse_ref, *, scale, block_k):
+    bq, d = q_ref.shape
+    t = k_ref.shape[0]
+    nk = t // block_k
+    i = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_seg = qseg_ref[...]
+    q_pos = i * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        k_seg = kseg_ref[pl.ds(j * block_k, block_k)]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+
+        s = q @ k.T  # (bq, bk), f32 accumulation (MXU-shaped contraction)
+        mask = _block_mask(q_pos, k_pos, q_seg, k_seg)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # exp(NEG_INF - m_new) underflows to 0 unless the whole row is still
+        # empty (m_new == NEG_INF); the explicit where() kills that case.
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(l_safe)
+
+
+def _fwd(q, k, v, segment_ids, scale, block_q, block_k):
+    h, t, d = q.shape
+    grid = (h, t // block_q)
+    out, lse = pl.pallas_call(
+        partial(_fwd_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((None, t, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((block_q,), lambda hh, ii: (ii,)),
+            pl.BlockSpec((t,), lambda hh, ii: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((None, block_q), lambda hh, ii: (hh, ii)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((h, t), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, segment_ids, segment_ids)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (FA2 work partitioning: dq over q-blocks, dk/dv over
+# k-blocks; delta = rowsum(dO * O) precomputed outside)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, qseg_ref, kseg_ref, do_ref, lse_ref, delta_ref, dq_ref, *, scale, block_k
+):
+    bq, d = q_ref.shape
+    t = k_ref.shape[0]
+    nk = t // block_k
+    i = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    q_seg = qseg_ref[...]
+    q_pos = i * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(j, dq):
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        k_seg = kseg_ref[pl.ds(j * block_k, block_k)]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+
+        s = (q @ k.T) * scale
+        mask = _block_mask(q_pos, k_pos, q_seg, k_seg)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + ds @ k
+
+    dq = jax.lax.fori_loop(0, nk, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, qseg_ref, kseg_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, scale, block_q
+):
+    bk, d = k_ref.shape
+    t = q_ref.shape[0]
+    nq = t // block_q
+    j = pl.program_id(1)
+
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    k_seg = kseg_ref[...]
+    k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        do = do_ref[pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        lse = lse_ref[pl.ds(i * block_q, block_q)]
+        delta = delta_ref[pl.ds(i * block_q, block_q)]
+        q_seg = qseg_ref[pl.ds(i * block_q, block_q)]
+        q_pos = i * block_q + jax.lax.iota(jnp.int32, block_q)
+
+        s = (q @ k.T) * scale
+        mask = _block_mask(q_pos, k_pos, q_seg, k_seg)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    dk0 = jnp.zeros((bk, d), jnp.float32)
+    dv0 = jnp.zeros((bk, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, nq, body, (dk0, dv0))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(q, k, v, segment_ids, out, lse, do, scale, block_q, block_k):
+    h, t, d = q.shape
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # (h, t)
+
+    dq = pl.pallas_call(
+        partial(_bwd_dq_kernel, scale=scale, block_k=block_k),
+        grid=(h, t // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((None, t, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((block_q,), lambda hh, ii: (ii,)),
+            pl.BlockSpec((t,), lambda hh, ii: (0,)),
+            pl.BlockSpec((None, block_q, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((None, block_q), lambda hh, ii: (hh, ii)),
+            pl.BlockSpec((None, block_q), lambda hh, ii: (hh, ii)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hh, ii: (hh, ii, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v, segment_ids, segment_ids, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        partial(_bwd_dkv_kernel, scale=scale, block_q=block_q),
+        grid=(h, t // block_k),
+        in_specs=[
+            pl.BlockSpec((None, t, d), lambda hh, jj: (hh, 0, 0)),
+            pl.BlockSpec((None, block_k, d), lambda hh, jj: (hh, jj, 0)),
+            pl.BlockSpec((None, block_k, d), lambda hh, jj: (hh, jj, 0)),
+            pl.BlockSpec((t,), lambda hh, jj: (0,)),
+            pl.BlockSpec((block_k,), lambda hh, jj: (jj,)),
+            pl.BlockSpec((None, t, d), lambda hh, jj: (hh, 0, 0)),
+            pl.BlockSpec((None, t), lambda hh, jj: (hh, 0)),
+            pl.BlockSpec((None, t), lambda hh, jj: (hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_k, d), lambda hh, jj: (hh, jj, 0)),
+            pl.BlockSpec((None, block_k, d), lambda hh, jj: (hh, jj, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((h, t, d), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, segment_ids, segment_ids, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API: differentiable packed causal attention
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention(q, k, v, segment_ids, scale=None, block_q=BLOCK_Q, block_k=BLOCK_K):
+    """Packed causal multi-head attention.
+
+    Args:
+      q, k, v: (heads, tokens, head_dim).  K/V must already be repeated to
+        the query head count (GQA repeat happens in the model layer).
+      segment_ids: (tokens,) int32 packed-segment ids; tokens attend only
+        within their own segment.  Padding uses a shared id and is
+        loss-masked downstream.
+      scale: softmax scale, default 1/sqrt(head_dim).
+      block_q, block_k: VMEM tile sizes (must divide tokens).
+
+    Returns:
+      (heads, tokens, head_dim) attention output, same dtype as q.
+    """
+    out, _ = _flash_fwd(q, k, v, segment_ids, scale, block_q, block_k)
+    return out
+
+
+def _resolve_scale(scale, d):
+    return (1.0 / (d**0.5)) if scale is None else scale
+
+
+def _flash_fwd(q, k, v, segment_ids, scale, block_q, block_k):
+    d = q.shape[-1]
+    s = _resolve_scale(scale, d)
+    out, lse = _fwd(q, k, v, segment_ids, s, block_q, block_k)
+    return out, (q, k, v, segment_ids, out, lse)
+
+
+def _vjp_fwd(q, k, v, segment_ids, scale, block_q, block_k):
+    out, res = _flash_fwd(q, k, v, segment_ids, scale, block_q, block_k)
+    return out, res
+
+
+def _vjp_bwd(scale, block_q, block_k, res, do):
+    q, k, v, segment_ids, out, lse = res
+    s = _resolve_scale(scale, q.shape[-1])
+    dq, dk, dv = _bwd(q, k, v, segment_ids, out, lse, do, s, block_q, block_k)
+    return dq, dk, dv, None
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

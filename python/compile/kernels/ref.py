@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel.
+
+This is the correctness anchor for the whole stack: the Pallas kernel (L1)
+is checked against this reference by pytest/hypothesis, and the L2 model can
+be built on either implementation so kernel-vs-ref is testable end-to-end
+(forward AND gradients).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, segment_ids, scale=None):
+    """Naive packed causal attention.  Shapes match flash_attention."""
+    h, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    pos = jnp.arange(t)
+    causal = pos[:, None] >= pos[None, :]
+    same_seg = segment_ids[:, None] == segment_ids[None, :]
+    mask = causal & same_seg
+    s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, :, :], p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

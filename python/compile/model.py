@@ -1,0 +1,192 @@
+"""L2: Qwen2.5-style decoder-only transformer over packed sequences.
+
+This is the compute graph that the rust coordinator executes per micro-batch
+bucket: forward + cross-entropy loss + full gradients (jax.value_and_grad),
+lowered once per bucket token-length by aot.py and never re-traced at
+runtime.
+
+Interchange contract with the rust runtime (rust/src/runtime/):
+  * Parameters travel as an *ordered flat list* of f32 arrays.  The order is
+    defined by `param_specs(cfg)` and written into artifacts/manifest.txt —
+    rust keeps params as flat host buffers and runs Adam over them.
+  * train_step entry:  (p_0..p_{n-1}, tokens, targets, loss_mask,
+    segment_ids, positions) -> (loss, g_0..g_{n-1}) as a single HLO tuple.
+
+Architecture (matches Qwen2.5 structurally: the scheduler's FLOPs model,
+Eq. 13, is parameterized by exactly these shapes): tied embedding, RMSNorm,
+RoPE, grouped-query attention (packed flash-attention kernel from L1),
+SwiGLU MLP.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.ref import attention_ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    kv_heads: int = 2
+    ffn: int = 768
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+
+# The end-to-end example's model (examples/long_sft_train.rs): small enough
+# to train a few hundred steps on CPU, structurally identical to Qwen2.5.
+TINY = ModelConfig()
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flat interchange layout."""
+    specs = [("tok_embed", (cfg.vocab, cfg.hidden))]
+    hd = cfg.head_dim
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1", (cfg.hidden,)),
+            (p + "wq", (cfg.hidden, cfg.heads * hd)),
+            (p + "wk", (cfg.hidden, cfg.kv_heads * hd)),
+            (p + "wv", (cfg.hidden, cfg.kv_heads * hd)),
+            (p + "wo", (cfg.heads * hd, cfg.hidden)),
+            (p + "ln2", (cfg.hidden,)),
+            (p + "w_gate", (cfg.hidden, cfg.ffn)),
+            (p + "w_up", (cfg.hidden, cfg.ffn)),
+            (p + "w_down", (cfg.ffn, cfg.hidden)),
+        ]
+    specs.append(("ln_f", (cfg.hidden,)))
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key):
+    """Flat list of f32 arrays in param_specs order."""
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for (name, shape), k in zip(specs, keys):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = fan_in**-0.5
+            out.append(jax.random.normal(k, shape, jnp.float32) * std)
+    return out
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    it = iter(flat)
+    params = {"tok_embed": next(it), "layers": []}
+    for _ in range(cfg.layers):
+        params["layers"].append(
+            {
+                k: next(it)
+                for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate", "w_up", "w_down")
+            }
+        )
+    params["ln_f"] = next(it)
+    return params
+
+
+def _rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta):
+    """x: (heads, T, d) -> rotated; positions: (T,) int32."""
+    d = x.shape[-1]
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (T, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def _attention_block(layer, x, segment_ids, positions, cfg, use_pallas):
+    hd, h, hkv = cfg.head_dim, cfg.heads, cfg.kv_heads
+    t = x.shape[0]
+    xn = _rmsnorm(x, layer["ln1"])
+    q = (xn @ layer["wq"]).reshape(t, h, hd).transpose(1, 0, 2)
+    k = (xn @ layer["wk"]).reshape(t, hkv, hd).transpose(1, 0, 2)
+    v = (xn @ layer["wv"]).reshape(t, hkv, hd).transpose(1, 0, 2)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    # GQA: repeat K/V to the query head count (the kernel is MHA-shaped; the
+    # FLOPs model Eq.13 accounts for h_kv in the projection terms).
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=0)
+    v = jnp.repeat(v, rep, axis=0)
+    attn = flash_attention if use_pallas else attention_ref
+    o = attn(q, k, v, segment_ids)  # (h, t, hd)
+    o = o.transpose(1, 0, 2).reshape(t, h * hd)
+    return x + o @ layer["wo"]
+
+
+def _mlp_block(layer, x):
+    xn = _rmsnorm(x, layer["ln2"])
+    g = jax.nn.silu(xn @ layer["w_gate"])
+    u = xn @ layer["w_up"]
+    return x + (g * u) @ layer["w_down"]
+
+
+def forward(cfg: ModelConfig, flat_params, tokens, segment_ids, positions, use_pallas=True):
+    """Packed forward pass.  tokens/segment_ids/positions: (T,) int32.
+
+    Returns logits (T, vocab).  Padding tokens carry a shared segment id and
+    are excluded from the loss by the caller's loss_mask.
+    """
+    params = _unflatten(cfg, flat_params)
+    x = params["tok_embed"][tokens]  # (T, h)
+    for layer in params["layers"]:
+        x = _attention_block(layer, x, segment_ids, positions, cfg, use_pallas)
+        x = _mlp_block(layer, x)
+    x = _rmsnorm(x, params["ln_f"])
+    return x @ params["tok_embed"].T  # tied lm head
+
+
+def loss_fn(cfg, flat_params, tokens, targets, loss_mask, segment_ids, positions, use_pallas=True):
+    logits = forward(cfg, flat_params, tokens, segment_ids, positions, use_pallas)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    nll = (logz - tgt_logit) * loss_mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, use_pallas=True):
+    """(flat params..., tokens, targets, loss_mask, seg, pos) -> (loss, grads...)."""
+    n = len(param_specs(cfg))
+
+    def train_step(*args):
+        flat = list(args[:n])
+        tokens, targets, loss_mask, seg, pos = args[n:]
+        loss, grads = jax.value_and_grad(
+            lambda fp: loss_fn(cfg, fp, tokens, targets, loss_mask, seg, pos, use_pallas)
+        )(flat)
+        return (loss, *grads)
+
+    return train_step
+
+
+def example_batch(cfg: ModelConfig, t: int):
+    """ShapeDtypeStructs for one packed bucket of t tokens."""
+    i32 = partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f32 = partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    return (i32((t,)), i32((t,)), f32((t,)), i32((t,)), i32((t,)))

@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas flash-attention kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes/segment layouts; every case asserts
+allclose against ref.py for the forward pass and (f32) for all three
+gradients through the custom VJP.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_segments(rng, t, max_segs):
+    """Random packed layout: segment ids are non-decreasing, last id pads."""
+    n = rng.integers(1, max_segs + 1)
+    cuts = np.sort(rng.choice(np.arange(1, t), size=n - 1, replace=False)) if n > 1 else np.array([], dtype=int)
+    seg = np.zeros(t, dtype=np.int32)
+    for i, c in enumerate(cuts):
+        seg[c:] = i + 1
+    return jnp.asarray(seg)
+
+
+def make_qkv(rng, h, t, d, dtype):
+    q = jnp.asarray(rng.standard_normal((h, t, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((h, t, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((h, t, d)), dtype)
+    return q, k, v
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([128, 256, 384]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    max_segs=st.sampled_from([1, 3, 7]),
+)
+def test_forward_matches_ref(h, t, d, seed, max_segs):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, h, t, d, jnp.float32)
+    seg = random_segments(rng, t, max_segs)
+    out = flash_attention(q, k, v, seg)
+    ref = attention_ref(q, k, v, seg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.sampled_from([1, 2]),
+    t=st.sampled_from([128, 256]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    max_segs=st.sampled_from([1, 4]),
+)
+def test_gradients_match_ref(h, t, d, seed, max_segs):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, h, t, d, jnp.float32)
+    seg = random_segments(rng, t, max_segs)
+    # Nonlinear reduction so every output element contributes a distinct
+    # cotangent — catches transposition/masking bugs a plain sum would hide.
+    w = jnp.asarray(rng.standard_normal((h, t, d)), jnp.float32)
+
+    def loss(attn):
+        def f(q, k, v):
+            return jnp.sum(jnp.tanh(attn(q, k, v, seg)) * w)
+
+        return f
+
+    g_ker = jax.grad(loss(flash_attention), argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss(attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g_ker, g_ref, "qkv"):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-5, rtol=5e-4, err_msg=f"d{name}"
+        )
+
+
+def test_bf16_forward():
+    rng = np.random.default_rng(0)
+    q, k, v = make_qkv(rng, 2, 256, 32, jnp.bfloat16)
+    seg = random_segments(rng, 256, 3)
+    out = flash_attention(q, k, v, seg)
+    assert out.dtype == jnp.bfloat16
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), seg)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_segment_isolation():
+    """Tokens in one segment must be invariant to other segments' content."""
+    rng = np.random.default_rng(1)
+    h, t, d = 2, 256, 32
+    q, k, v = make_qkv(rng, h, t, d, jnp.float32)
+    seg = jnp.where(jnp.arange(t) < 128, 0, 1).astype(jnp.int32)
+    out1 = flash_attention(q, k, v, seg)
+    # Perturb segment 1 only; segment 0's outputs must not move.
+    noise = jnp.asarray(rng.standard_normal((h, t, d)), jnp.float32)
+    bump = jnp.where(jnp.arange(t)[None, :, None] >= 128, noise, 0.0)
+    out2 = flash_attention(q + bump, k + bump, v + bump, seg)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :128]), np.asarray(out2[:, :128]), atol=1e-6
+    )
+    assert not np.allclose(np.asarray(out1[:, 128:]), np.asarray(out2[:, 128:]))
+
+
+def test_causality():
+    """Future tokens must not influence past outputs within a segment."""
+    rng = np.random.default_rng(2)
+    h, t, d = 1, 128, 16
+    q, k, v = make_qkv(rng, h, t, d, jnp.float32)
+    seg = jnp.zeros(t, jnp.int32)
+    out1 = flash_attention(q, k, v, seg)
+    k2 = k.at[:, 100:].add(5.0)
+    v2 = v.at[:, 100:].add(5.0)
+    out2 = flash_attention(q, k2, v2, seg)
+    np.testing.assert_allclose(np.asarray(out1[:, :100]), np.asarray(out2[:, :100]), atol=1e-6)
+
+
+def test_matches_single_sequence_softmax():
+    """One segment, no packing: equals textbook causal attention."""
+    rng = np.random.default_rng(3)
+    h, t, d = 2, 128, 32
+    q, k, v = make_qkv(rng, h, t, d, jnp.float32)
+    seg = jnp.zeros(t, jnp.int32)
+    out = flash_attention(q, k, v, seg)
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(d)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None], s, -jnp.inf)
+    ref = jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, axis=-1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(128, 128), (128, 64), (64, 128), (64, 64)])
+def test_block_size_invariance(block_q, block_k):
+    """Output must not depend on the VMEM tile decomposition."""
+    rng = np.random.default_rng(4)
+    q, k, v = make_qkv(rng, 2, 256, 32, jnp.float32)
+    seg = random_segments(rng, 256, 4)
+    out = flash_attention(q, k, v, seg, None, block_q, block_k)
+    ref = attention_ref(q, k, v, seg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)

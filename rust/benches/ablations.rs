@@ -1,0 +1,222 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!   1. heuristic vs exact solver — TDACP optimality gap at small K
+//!   2. comm/comp overlap (Eq. 2) on/off
+//!   3. GDS long/short interleaving on/off
+//!   4. roll-back victim choice: largest (ours) vs first-found (paper Alg. 3)
+
+use skrull::cluster::simulate_iteration;
+use skrull::bench::TableBuilder;
+use skrull::config::ExperimentConfig;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::data::loader::ScheduledLoader;
+use skrull::model::ModelSpec;
+use skrull::perfmodel::{CostModel, FlopsModel};
+use skrull::rng::Rng;
+use skrull::scheduler::dacp::{self, DacpConfig};
+use skrull::scheduler::gds::GdsConfig;
+use skrull::scheduler::{gds, solver};
+
+/// 1. Heuristic-vs-optimal gap on random small micro-batches.
+fn ablation_solver_gap() {
+    let spec = ModelSpec::qwen2_5_0_5b();
+    let cost = CostModel::paper_default(&spec);
+    let flops = FlopsModel::new(&spec);
+    let dist = LengthDistribution::chatqa2();
+    let mut rng = Rng::seed_from_u64(1234);
+    let (c, n) = (26 * 1024u32, 4usize);
+    let cfg = DacpConfig::new(c, n);
+
+    let mut gaps = Vec::new();
+    let mut gaps_refined = Vec::new();
+    let mut nodes_total = 0u64;
+    let trials = 40;
+    for _ in 0..trials {
+        let k = 3 + rng.usize_below(6); // K in 3..8
+        let lens: Vec<u32> = (0..k).map(|_| dist.sample(&mut rng).min(c * n as u32)).collect();
+        let Ok(hplan) = dacp::schedule(&lens, &cfg, &flops) else { continue };
+        let Some(sol) = solver::solve(&lens, c, n, &cost, 5_000_000) else { continue };
+        let h = cost.tdacp(&lens, &hplan, n);
+        let refined = dacp::refine_multistart(&hplan, &lens, &cfg, &cost);
+        let hr = cost.tdacp(&lens, &refined, n);
+        gaps.push(h / sol.cost);
+        gaps_refined.push(hr / sol.cost);
+        nodes_total += sol.nodes;
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let worst = gaps.iter().cloned().fold(0.0, f64::max);
+    let worst_r = gaps_refined.iter().cloned().fold(0.0, f64::max);
+    println!("== Ablation 1: DACP heuristic vs exact solver ({} instances) ==", gaps.len());
+    println!(
+        "Alg.1 heuristic:        mean TDACP ratio {:.4} (1.0 = optimal), worst {worst:.3}",
+        mean(&gaps)
+    );
+    println!(
+        "+ cost-aware refine:    mean TDACP ratio {:.4}, worst {worst_r:.3}   (our extension)",
+        mean(&gaps_refined)
+    );
+    println!("solver nodes explored: {nodes_total}");
+    println!(
+        "finding: Alg.1's avoid-sharding principle leaves isolated long locals\n\
+         dominating the makespan; one greedy demote/migrate pass closes most of the gap."
+    );
+    assert!(gaps.iter().all(|&g| g >= 1.0 - 1e-9), "heuristic cannot beat the optimum");
+    assert!(mean(&gaps_refined) < 1.1, "refined gap too large: {}", mean(&gaps_refined));
+    assert!(mean(&gaps_refined) <= mean(&gaps) + 1e-9);
+    println!("gap check OK (refined mean within 10% of optimal)\n");
+}
+
+/// 2. Eq. 2 overlap on/off: how much of Skrull's win comes from hiding
+/// CP communication under local computation.
+fn ablation_overlap() {
+    let spec = ModelSpec::qwen2_5_0_5b();
+    let cost = CostModel::paper_default(&spec);
+    let flops = FlopsModel::new(&spec);
+    let dist = LengthDistribution::chatqa2();
+    let mut rng = Rng::seed_from_u64(77);
+    let gcfg = GdsConfig::new(26 * 1024, 8, 4);
+    let ds = Dataset::synthesize(&dist, 50_000, 3).truncated(26 * 1024 * 8);
+
+    let mut with = 0.0;
+    let mut without = 0.0;
+    for _ in 0..20 {
+        let batch = ds.sample_batch(&mut rng, 64);
+        let sched = gds::schedule(&batch, &gcfg, &flops).unwrap();
+        for rank in &sched.ranks {
+            for mb in &rank.micro_batches {
+                let lens = mb.lens();
+                let times = cost.rank_times(&lens, &mb.plan, 8);
+                for t in &times {
+                    with += t.total;
+                    // no-overlap variant: comm serializes before local comp
+                    without += t.local_comp + t.comm + t.dist_comp
+                        + (t.total - t.local_comp.max(t.comm) - t.dist_comp);
+                }
+            }
+        }
+    }
+    println!("== Ablation 2: comm/comp overlap (Eq. 2) ==");
+    println!(
+        "aggregate rank-time with overlap {:.3}s, without {:.3}s  ({:.1}% saved)",
+        with,
+        without,
+        100.0 * (without - with) / without
+    );
+    assert!(with <= without + 1e-9);
+    println!("overlap check OK\n");
+}
+
+/// 3. GDS interleaved pairing vs contiguous chunking.
+fn ablation_interleave() {
+    let spec = ModelSpec::qwen2_5_0_5b();
+    let cost = CostModel::paper_default(&spec);
+    let flops = FlopsModel::new(&spec);
+    let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 50_000, 5)
+        .truncated(26 * 1024 * 8);
+    let mut rng = Rng::seed_from_u64(11);
+
+    let mut t_inter = 0.0;
+    let mut t_chunk = 0.0;
+    for _ in 0..20 {
+        let batch = ds.sample_batch(&mut rng, 64);
+        let mut cfg = GdsConfig::new(26 * 1024, 8, 4);
+        cfg.interleave = true;
+        let s1 = gds::schedule(&batch, &cfg, &flops).unwrap();
+        cfg.interleave = false;
+        let s2 = gds::schedule(&batch, &cfg, &flops).unwrap();
+        t_inter += simulate_iteration(&s1, &cost, 8).total_time;
+        t_chunk += simulate_iteration(&s2, &cost, 8).total_time;
+    }
+    println!("== Ablation 3: GDS long/short pairing ==");
+    println!(
+        "interleaved {:.3}s vs contiguous {:.3}s over 20 iterations ({:+.1}%)",
+        t_inter,
+        t_chunk,
+        100.0 * (t_chunk - t_inter) / t_chunk
+    );
+    println!("(paper principle ii: pairing spreads long sequences across micro-batches)\n");
+}
+
+/// 4. Roll-back victim choice.
+fn ablation_rollback() {
+    let spec = ModelSpec::qwen2_5_0_5b();
+    let flops = FlopsModel::new(&spec);
+    let cost = CostModel::paper_default(&spec);
+    let dist = LengthDistribution::chatqa2();
+    let mut rng = Rng::seed_from_u64(21);
+    let (c, n) = (13 * 1024u32, 8usize);
+
+    let mut wins_largest = 0;
+    let mut wins_first = 0;
+    let mut both_ok = 0;
+    let trials = 200;
+    for _ in 0..trials {
+        let k = 4 + rng.usize_below(8);
+        // tight workloads: scale so total ≈ 0.9 × C·N (rollback territory)
+        let mut lens: Vec<u32> = (0..k).map(|_| dist.sample(&mut rng)).collect();
+        let total: u64 = lens.iter().map(|&l| l as u64).sum();
+        let scale = 0.9 * (c as f64 * n as f64) / total as f64;
+        for l in &mut lens {
+            *l = ((*l as f64 * scale) as u32).clamp(1, c * n as u32);
+        }
+        let mut cfg = DacpConfig::new(c, n);
+        cfg.rollback_largest = true;
+        let a = dacp::schedule(&lens, &cfg, &flops);
+        cfg.rollback_largest = false;
+        let b = dacp::schedule(&lens, &cfg, &flops);
+        if let (Ok(pa), Ok(pb)) = (&a, &b) {
+            both_ok += 1;
+            let ta = cost.tdacp(&lens, pa, n);
+            let tb = cost.tdacp(&lens, pb, n);
+            if ta < tb * 0.999 {
+                wins_largest += 1;
+            } else if tb < ta * 0.999 {
+                wins_first += 1;
+            }
+        }
+    }
+    println!("== Ablation 4: roll-back victim (largest vs paper's first-found) ==");
+    println!(
+        "{both_ok}/{trials} tight instances schedulable by both; largest wins {wins_largest}, first wins {wins_first}, ties {}",
+        both_ok - wins_largest - wins_first
+    );
+    println!();
+}
+
+/// 5. End-to-end: how much each Skrull component contributes (a compact
+/// rerun of Fig. 3's step-by-step on one config).
+fn ablation_step_by_step() {
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "lmsys");
+    let ds = Dataset::synthesize(&LengthDistribution::lmsys_chat(), 100_000, 1)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let cost = CostModel::paper_default(&cfg.model);
+    let mut t = TableBuilder::new("Ablation 5: component contributions (lmsys, 0.5B, 20 iters)")
+        .header(&["policy", "mean iter", "speedup"]);
+    let mut base = None;
+    for policy in [
+        skrull::config::Policy::Baseline,
+        skrull::config::Policy::SortedBatching,
+        skrull::config::Policy::DacpOnly,
+        skrull::config::Policy::Skrull,
+    ] {
+        let mut pcfg = cfg.clone();
+        pcfg.policy = policy;
+        let mut loader = ScheduledLoader::new(&ds, pcfg);
+        let mut total = 0.0;
+        for _ in 0..20 {
+            let (_, sched) = loader.next_iteration().unwrap();
+            total += simulate_iteration(&sched, &cost, cfg.cluster.cp).total_time;
+        }
+        let mean = total / 20.0;
+        let b = *base.get_or_insert(mean);
+        t.row(&[policy.name().to_string(), skrull::util::fmt_secs(mean), format!("{:.2}x", b / mean)]);
+    }
+    t.print();
+}
+
+fn main() {
+    ablation_solver_gap();
+    ablation_overlap();
+    ablation_interleave();
+    ablation_rollback();
+    ablation_step_by_step();
+}

@@ -1,0 +1,57 @@
+//! Figure 1b: attention-module performance (achieved FLOPS) under
+//! different CP degrees, as a function of sequence length.
+//!
+//! Paper shape: higher CP degree degrades achieved FLOPS, catastrophically
+//! so for short sequences (the per-rank kernel shrinks by N and by N² for
+//! the attention term); for long sequences the curves converge toward the
+//! device roofline.
+
+use skrull::bench::TableBuilder;
+use skrull::model::ModelSpec;
+use skrull::perfmodel::{CostModel, FlopsModel};
+
+fn main() {
+    let spec = ModelSpec::qwen2_5_0_5b();
+    let cost = CostModel::paper_default(&spec);
+    let flops = FlopsModel::new(&spec);
+
+    let seq_lens: [u32; 8] = [512, 1024, 2048, 4096, 8192, 16_384, 32_768, 65_536];
+    let cp_degrees = [1usize, 2, 4, 8];
+
+    let mut table = TableBuilder::new(
+        "Figure 1b: attention achieved TFLOPS vs CP degree (Qwen2.5-0.5B, per-GPU)",
+    )
+    .header(&["SeqLen", "CP=1", "CP=2", "CP=4", "CP=8", "degradation 1→8"]);
+
+    for &s in &seq_lens {
+        let mut cells = vec![skrull::util::fmt_tokens(s as u64)];
+        let mut tflops = Vec::new();
+        for &n in &cp_degrees {
+            // per-rank attention kernel: 1/N of the sequence's attention
+            // FLOPs, executed at that shard's kernel efficiency
+            let w = flops.attn_per_layer(s) / n as f64;
+            let achieved = cost.hw.achieved_flops(w);
+            tflops.push(achieved / 1e12);
+            cells.push(format!("{:.1}", achieved / 1e12));
+        }
+        cells.push(format!("{:.1}x", tflops[0] / tflops[3]));
+        table.row(&cells);
+    }
+    table.print();
+
+    // The claims the paper draws from this figure, checked:
+    let short_deg = {
+        let w1 = flops.attn_per_layer(1024);
+        cost.hw.achieved_flops(w1) / cost.hw.achieved_flops(w1 / 8.0)
+    };
+    let long_deg = {
+        let w1 = flops.attn_per_layer(65_536);
+        cost.hw.achieved_flops(w1) / cost.hw.achieved_flops(w1 / 8.0)
+    };
+    println!("degradation(1K, CP1→8) = {short_deg:.2}x   degradation(64K, CP1→8) = {long_deg:.2}x");
+    assert!(
+        short_deg > 2.0 * long_deg,
+        "short sequences must suffer far more from CP than long ones"
+    );
+    println!("shape check OK: short sequences suffer {:.1}x more", short_deg / long_deg);
+}

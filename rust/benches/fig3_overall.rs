@@ -1,0 +1,119 @@
+//! Figure 3: overall performance and step-by-step evaluation.
+//!
+//! For each (model, dataset) pair of the paper's evaluation: 30 simulated
+//! iterations under DeepSpeed-baseline / +DACP / full Skrull (plus the
+//! LongAlign sorted-batching comparator), reporting mean iteration time
+//! and speedup — the same lanes as the paper's bars.
+//!
+//! Paper numbers for reference: Skrull vs DeepSpeed averages 3.76x
+//! (peak 7.54x); 0.5B avg 5.50x, 7B avg 2.03x; long-tail datasets gain
+//! more than the bimodal ChatQA2.
+
+use skrull::bench::TableBuilder;
+use skrull::cluster::simulate_iteration;
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
+
+struct Lane {
+    policy: Policy,
+    mean_iter: f64,
+    utilization: f64,
+}
+
+fn run_config(model: ModelSpec, dataset: &str, iters: usize) -> (ExperimentConfig, Vec<Lane>) {
+    let cfg = ExperimentConfig::paper_default(model, dataset);
+    let dist = LengthDistribution::by_name(dataset).unwrap();
+    let ds = Dataset::synthesize(&dist, 100_000, cfg.seed ^ 0xD5)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let cost = CostModel::paper_default(&cfg.model);
+
+    let lanes = [Policy::Baseline, Policy::DacpOnly, Policy::Skrull, Policy::SkrullRefined, Policy::SortedBatching]
+        .into_iter()
+        .map(|policy| {
+            let mut pcfg = cfg.clone();
+            pcfg.policy = policy;
+            let mut loader = ScheduledLoader::new(&ds, pcfg);
+            let mut total = 0.0;
+            let mut util = 0.0;
+            for _ in 0..iters {
+                let (_, sched) = loader.next_iteration().expect("schedule");
+                let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
+                total += sim.total_time;
+                util += sim.compute_utilization;
+            }
+            Lane {
+                policy,
+                mean_iter: total / iters as f64,
+                utilization: util / iters as f64,
+            }
+        })
+        .collect();
+    (cfg, lanes)
+}
+
+fn main() {
+    let iters = 30;
+    let configs = [
+        (ModelSpec::qwen2_5_0_5b(), "wikipedia"),
+        (ModelSpec::qwen2_5_0_5b(), "lmsys"),
+        (ModelSpec::qwen2_5_0_5b(), "chatqa2"),
+        (ModelSpec::qwen2_5_7b(), "wikipedia"),
+        (ModelSpec::qwen2_5_7b(), "lmsys"),
+        (ModelSpec::qwen2_5_7b(), "chatqa2"),
+    ];
+
+    let mut table = TableBuilder::new("Figure 3: overall + step-by-step (30 iterations each)")
+        .header(&[
+            "Model", "Dataset", "Setting", "baseline", "+DACP", "Skrull", "+refine", "sorted",
+            "DACP spd", "Skrull spd", "util b→s",
+        ]);
+
+    let mut speedups = Vec::new();
+    let mut per_model: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for (model, dataset) in configs {
+        let name = model.name;
+        let (cfg, lanes) = run_config(model, dataset, iters);
+        let base = lanes[0].mean_iter;
+        let skrull = lanes[2].mean_iter;
+        let spd_dacp = base / lanes[1].mean_iter;
+        let spd_skrull = base / skrull;
+        speedups.push(spd_skrull);
+        per_model.entry(name).or_default().push(spd_skrull);
+        table.row(&[
+            name.to_string(),
+            dataset.to_string(),
+            format!(
+                "<DP={},CP={},B={}>",
+                cfg.cluster.dp, cfg.cluster.cp, cfg.cluster.batch_size
+            ),
+            skrull::util::fmt_secs(base),
+            skrull::util::fmt_secs(lanes[1].mean_iter),
+            skrull::util::fmt_secs(skrull),
+            skrull::util::fmt_secs(lanes[3].mean_iter),
+            skrull::util::fmt_secs(lanes[4].mean_iter),
+            format!("{spd_dacp:.2}x"),
+            format!("{spd_skrull:.2}x"),
+            format!("{:.0}%→{:.0}%", 100.0 * lanes[0].utilization, 100.0 * lanes[2].utilization),
+        ]);
+    }
+    table.print();
+
+    let avg: f64 = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let peak = speedups.iter().cloned().fold(0.0, f64::max);
+    println!("ours:  average speedup {avg:.2}x, peak {peak:.2}x");
+    println!("paper: average speedup 3.76x, peak 7.54x");
+    for (m, s) in &per_model {
+        let a = s.iter().sum::<f64>() / s.len() as f64;
+        println!("  {m}: avg {a:.2}x (paper: 0.5b 5.50x / 7b 2.03x)");
+    }
+
+    // Shape assertions (who wins, qualitative ordering):
+    assert!(speedups.iter().all(|&s| s > 1.0), "Skrull must beat baseline everywhere");
+    let s05: f64 = per_model["qwen2.5-0.5b"].iter().sum::<f64>() / 3.0;
+    let s7: f64 = per_model["qwen2.5-7b"].iter().sum::<f64>() / 3.0;
+    assert!(s05 > s7, "0.5B (larger BucketSize) must gain more than 7B");
+    println!("shape checks OK");
+}

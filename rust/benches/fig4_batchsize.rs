@@ -1,0 +1,82 @@
+//! Figure 4: speedup vs batch size (ChatQA2-Long-SFT, Qwen2.5-0.5B).
+//!
+//! Paper shape: speedup grows with batch size (larger scheduling scope for
+//! GDS) then stabilizes as sampled batches converge to the dataset's
+//! length distribution.
+
+use skrull::bench::TableBuilder;
+use skrull::cluster::simulate_iteration;
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
+
+fn mean_iter_time(cfg: &ExperimentConfig, ds: &Dataset, cost: &CostModel, iters: usize) -> f64 {
+    let mut loader = ScheduledLoader::new(ds, cfg.clone());
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let (_, sched) = loader.next_iteration().expect("schedule");
+        total += simulate_iteration(&sched, cost, cfg.cluster.cp).total_time;
+    }
+    total / iters as f64
+}
+
+fn main() {
+    let iters = 30;
+    let base_cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+    let dist = LengthDistribution::chatqa2();
+    let ds = Dataset::synthesize(&dist, 100_000, base_cfg.seed ^ 0xD5)
+        .truncated(base_cfg.bucket_size * base_cfg.cluster.cp as u32);
+    let cost = CostModel::paper_default(&base_cfg.model);
+
+    let mut table = TableBuilder::new("Figure 4: speedup vs batch size (ChatQA2, Qwen2.5-0.5B)")
+        .header(&["BatchSize", "baseline", "skrull", "speedup", "+refine", "refine spd"]);
+    let mut speedups = Vec::new();
+    let mut speedups_ref = Vec::new();
+    let batch_sizes = [8usize, 16, 24, 32, 40, 48, 56, 64];
+    for &b in &batch_sizes {
+        let mut cfg = base_cfg.clone();
+        cfg.cluster.batch_size = b;
+        cfg.policy = Policy::Baseline;
+        let t_base = mean_iter_time(&cfg, &ds, &cost, iters);
+        cfg.policy = Policy::Skrull;
+        let t_skrull = mean_iter_time(&cfg, &ds, &cost, iters);
+        cfg.policy = Policy::SkrullRefined;
+        let t_ref = mean_iter_time(&cfg, &ds, &cost, iters);
+        let spd = t_base / t_skrull;
+        let spd_ref = t_base / t_ref;
+        speedups.push(spd);
+        speedups_ref.push(spd_ref);
+        table.row(&[
+            b.to_string(),
+            skrull::util::fmt_secs(t_base),
+            skrull::util::fmt_secs(t_skrull),
+            format!("{spd:.2}x"),
+            skrull::util::fmt_secs(t_ref),
+            format!("{spd_ref:.2}x"),
+        ]);
+    }
+    table.print();
+
+    // Shape: speedup grows with scheduling scope.  Plain Alg.1 can dip
+    // below 1x at tiny batches (few sequences per rank ⇒ avoid-sharding
+    // keeps whole long sequences on single ranks while the baseline at
+    // least shards them); the cost-aware refinement removes that dip —
+    // the same weakness the solver-gap ablation quantifies.
+    let first = speedups[0];
+    let last = *speedups.last().unwrap();
+    println!("skrull: {first:.2}x @B=8 → {last:.2}x @B=64");
+    println!(
+        "refined: {:.2}x @B=8 → {:.2}x @B=64",
+        speedups_ref[0],
+        speedups_ref.last().unwrap()
+    );
+    assert!(last > first, "speedup must grow with scheduling scope");
+    assert!(
+        speedups_ref.iter().all(|&s| s > 0.95),
+        "refined policy must not lose to baseline at any batch size"
+    );
+    assert!(speedups_ref.last().unwrap() > &speedups_ref[0]);
+    println!("shape check OK: speedup grows with batch size then stabilizes");
+}

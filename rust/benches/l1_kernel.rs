@@ -1,0 +1,55 @@
+//! L1 kernel measurement through the real runtime: executes the
+//! Pallas-lowered attention artifact and the full train step on the CPU
+//! PJRT client, reporting wall-clock and effective FLOP/s.
+//!
+//! interpret=True numbers are CPU-numpy-grade — NOT a TPU proxy (the
+//! kernel's TPU story is the analytic VMEM/MXU estimate in EXPERIMENTS.md
+//! §Perf) — but they pin the end-to-end execution cost the e2e example
+//! pays per bucket, and track regressions in the lowered HLO.
+
+use skrull::bench::{measure, TableBuilder};
+use skrull::coordinator::corpus::CorpusConfig;
+use skrull::data::packing::pack;
+use skrull::model::ModelSpec;
+use skrull::perfmodel::FlopsModel;
+use skrull::runtime::Runtime;
+
+fn main() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).join("manifest.txt").exists() {
+        println!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(&dir).unwrap();
+    let params = rt.initial_params().unwrap();
+    let flops = FlopsModel::new(&ModelSpec::tiny());
+    let corpus_cfg = CorpusConfig::tiny(512);
+
+    let mut table = TableBuilder::new("L1/L2 execution on CPU PJRT (tiny model, fwd+bwd)")
+        .header(&["bucket", "exec mean", "tokens/s", "GFLOP/s (est 3x fwd)"]);
+    let buckets = rt.available_buckets();
+    for &t in &buckets {
+        rt.ensure_bucket(t).unwrap();
+        let corpus = corpus_cfg.corpus(1, &[t - 2]);
+        let bucket = pack(&[&corpus[0]], t as usize);
+        let dev = rt.upload_params(&params).unwrap();
+        let m = measure(&format!("train_step t={t}"), 2, 8, || {
+            let _ = rt.train_step_on(&dev, &bucket).unwrap();
+        });
+        // fwd+bwd ≈ 3× forward FLOPs
+        let work = 3.0 * flops.seq(t);
+        table.row(&[
+            t.to_string(),
+            skrull::util::fmt_secs(m.mean_s()),
+            format!("{:.0}", t as f64 / m.mean_s()),
+            format!("{:.2}", work / m.mean_s() / 1e9),
+        ]);
+    }
+    table.print();
+    println!(
+        "compile {:.1}s total for {} buckets; params upload {:.1}ms/step",
+        rt.compile_seconds,
+        buckets.len(),
+        rt.upload_seconds * 1e3 / buckets.len() as f64
+    );
+}

@@ -1,0 +1,82 @@
+//! Section 4.3's "near-zero cost online scheduling" claim: wall-clock of
+//! the full GDS+DACP scheduler per iteration vs the simulated iteration
+//! time it schedules, across batch sizes (and a large-K stress sweep).
+//!
+//! Pass criterion (paper's claim): scheduling < 1% of iteration time at
+//! the paper's settings.
+
+use skrull::bench::{measure, TableBuilder};
+use skrull::cluster::simulate_iteration;
+use skrull::config::ExperimentConfig;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::{CostModel, FlopsModel};
+use skrull::rng::Rng;
+use skrull::scheduler::gds::{self, GdsConfig};
+
+fn main() {
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+    let dist = LengthDistribution::wikipedia();
+    let ds = Dataset::synthesize(&dist, 100_000, 7).truncated(cfg.bucket_size * 8);
+    let cost = CostModel::paper_default(&cfg.model);
+    let flops = FlopsModel::new(&cfg.model);
+    let gcfg = GdsConfig::new(cfg.bucket_size, cfg.cluster.cp, cfg.cluster.dp);
+
+    let mut table = TableBuilder::new("Scheduler overhead (GDS+DACP, Qwen2.5-0.5B, wikipedia)")
+        .header(&["BatchSize K", "sched time", "+refine", "iter time (sim)", "overhead"]);
+
+    let mut rng = Rng::seed_from_u64(99);
+    let mut worst_ratio: f64 = 0.0;
+    for k in [16usize, 64, 256, 1024, 4096] {
+        let batch = ds.sample_batch(&mut rng, k);
+        let m = measure(&format!("gds k={k}"), 3, 20, || {
+            let _ = gds::schedule(&batch, &gcfg, &flops).expect("schedule");
+        });
+        let m_ref = measure(&format!("gds+refine k={k}"), 3, 20, || {
+            let _ = gds::schedule_refined(&batch, &gcfg, &cost).expect("schedule");
+        });
+        let sched = gds::schedule(&batch, &gcfg, &flops).unwrap();
+        let iter_time = simulate_iteration(&sched, &cost, cfg.cluster.cp).total_time;
+        let ratio = m.mean_s() / iter_time;
+        if k <= 64 {
+            worst_ratio = worst_ratio.max(ratio);
+        }
+        table.row(&[
+            k.to_string(),
+            skrull::util::fmt_secs(m.mean_s()),
+            skrull::util::fmt_secs(m_ref.mean_s()),
+            skrull::util::fmt_secs(iter_time),
+            format!("{:.3}%", 100.0 * ratio),
+        ]);
+    }
+    table.print();
+    println!("worst overhead at paper-scale batches (K≤64): {:.3}%", 100.0 * worst_ratio);
+    assert!(
+        worst_ratio < 0.01,
+        "near-zero-overhead claim violated: {:.3}%",
+        100.0 * worst_ratio
+    );
+    println!("near-zero-overhead claim holds (<1%)");
+
+    // component microbenches
+    println!();
+    let batch = ds.sample_batch(&mut rng, 64);
+    let lens: Vec<u32> = batch.iter().map(|s| s.len).collect();
+    let dcfg = skrull::scheduler::dacp::DacpConfig::new(cfg.bucket_size, cfg.cluster.cp);
+    println!(
+        "{}",
+        measure("dacp alone (K=64 micro-batch)", 10, 100, || {
+            let _ = skrull::scheduler::dacp::schedule(&lens, &dcfg, &flops);
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        measure("binpack alone (K=64, ws=4)", 10, 100, || {
+            let weighted: Vec<(u64, f64)> =
+                batch.iter().map(|s| (s.id, flops.seq(s.len))).collect();
+            let _ = skrull::scheduler::binpack::balance(&weighted, 4);
+        })
+        .report()
+    );
+}

@@ -1,0 +1,86 @@
+//! Table 1 + Figure 1a: sequence-length distributions of the three
+//! Long-SFT datasets.  Regenerates the paper's percentile table from the
+//! synthetic generators and prints an ASCII log-scale histogram per
+//! dataset (the Fig. 1a view).
+
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::util::stats::fraction_below;
+use skrull::util::fmt_tokens;
+
+/// Paper's Table 1 (percent below each threshold, longest).
+const PAPER: &[(&str, [f64; 5], &str)] = &[
+    ("wikipedia", [87.88, 99.34, 99.92, 99.99, 100.0], "78K"),
+    ("lmsys", [87.12, 99.35, 99.87, 99.98, 99.99], "1643K"),
+    ("chatqa2", [21.92, 31.48, 40.43, 99.86, 100.0], "99K"),
+];
+
+const THRESHOLDS: [u32; 5] = [1 << 10, 4 << 10, 8 << 10, 32 << 10, 128 << 10];
+
+fn histogram(lengths: &[u32]) -> String {
+    // log2 bins from 64 to 256K
+    let mut bins = [0usize; 13];
+    for &l in lengths {
+        let mut b = 0usize;
+        let mut edge = 64u32;
+        while l > edge && b < 12 {
+            edge = edge.saturating_mul(2);
+            b += 1;
+        }
+        bins[b] += 1;
+    }
+    let max = *bins.iter().max().unwrap_or(&1);
+    let mut out = String::new();
+    let mut edge = 64u64;
+    for &count in &bins {
+        let bar = "#".repeat((count * 48 + max - 1) / max.max(1));
+        out.push_str(&format!("  ≤{:>6} {:>7} {}\n", fmt_tokens(edge), count, bar));
+        edge *= 2;
+    }
+    out
+}
+
+fn main() {
+    let n = 200_000;
+    println!("== Table 1: Percentage of sequence length in real-world datasets ==");
+    println!(
+        "{:<12} {:>22} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}",
+        "Dataset", "", "<1K", "<4K", "<8K", "<32K", "<128K", "Longest"
+    );
+    for (name, paper_pcts, paper_longest) in PAPER {
+        let dist = LengthDistribution::by_name(name).unwrap();
+        let ds = Dataset::synthesize(&dist, n, 42);
+        let ours: Vec<f64> = THRESHOLDS
+            .iter()
+            .map(|&t| 100.0 * fraction_below(&ds.lengths, t))
+            .collect();
+        println!(
+            "{:<12} {:>22} {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>9}",
+            name, "paper", paper_pcts[0], paper_pcts[1], paper_pcts[2], paper_pcts[3], paper_pcts[4], paper_longest
+        );
+        println!(
+            "{:<12} {:>22} {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>9}",
+            "",
+            "ours (synthesized)",
+            ours[0],
+            ours[1],
+            ours[2],
+            ours[3],
+            ours[4],
+            fmt_tokens(ds.max_len() as u64)
+        );
+        let max_dev = ours
+            .iter()
+            .zip(paper_pcts)
+            .map(|(o, p)| (o - p).abs())
+            .fold(0.0, f64::max);
+        println!("{:<12} {:>22} max deviation {max_dev:.2} pp", "", "");
+    }
+    println!("\n== Figure 1a: sequence length histograms (log2 bins) ==");
+    for (name, _, _) in PAPER {
+        let dist = LengthDistribution::by_name(name).unwrap();
+        let ds = Dataset::synthesize(&dist, n, 42);
+        println!("{name}:");
+        print!("{}", histogram(&ds.lengths));
+    }
+    println!("note: lmsys longest is truncated to the 128K context window (DESIGN.md §2)");
+}

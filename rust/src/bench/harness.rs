@@ -1,0 +1,65 @@
+//! Timing harness: warmup + N samples, summary statistics.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Summary,
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        self.samples.mean()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10}  p50 {:>10}  min {:>10}  max {:>10}  (n={})",
+            self.name,
+            crate::util::fmt_secs(self.samples.mean()),
+            crate::util::fmt_secs(self.samples.quantile(0.5)),
+            crate::util::fmt_secs(self.samples.min()),
+            crate::util::fmt_secs(self.samples.max()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `samples` measured repetitions.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut summary = Summary::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        summary.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.to_string(), samples: summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let mut count = 0usize;
+        let m = measure("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.mean_s() >= 0.0);
+        assert!(m.report().contains("noop"));
+    }
+
+    #[test]
+    fn measure_orders_timings_sanely() {
+        let slow = measure("slow", 0, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        let fast = measure("fast", 0, 3, || {});
+        assert!(slow.mean_s() > fast.mean_s());
+    }
+}

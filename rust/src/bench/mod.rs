@@ -1,0 +1,9 @@
+//! Benchmark harness substrate (criterion is not in the vendored set):
+//! wall-clock measurement with warmup + repetitions, and plain-text table
+//! rendering shared by all `benches/*.rs` targets.
+
+pub mod harness;
+pub mod table;
+
+pub use harness::{measure, Measurement};
+pub use table::TableBuilder;

@@ -1,0 +1,103 @@
+//! Plain-text table rendering for bench reports (the "same rows the paper
+//! reports" requirement — every bench prints paper-shaped tables).
+
+#[derive(Default)]
+pub struct TableBuilder {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str) -> Self {
+        TableBuilder { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.rows.push(cells.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("| ");
+            for i in 0..ncols {
+                let cell = cells.get(i).map(|c| c.as_str()).unwrap_or("");
+                s.push_str(&format!("{:<width$} | ", cell, width = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&format!(
+                "|{}|\n",
+                widths
+                    .iter()
+                    .map(|w| "-".repeat(w + 2))
+                    .collect::<Vec<_>>()
+                    .join("|")
+            ));
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = TableBuilder::new("Table 1").header(&["Dataset", "<1K", "Longest"]);
+        t.row_strs(&["Wikipedia", "87.88%", "78K"]);
+        t.row_strs(&["ChatQA2", "21.92%", "99K"]);
+        let s = t.render();
+        assert!(s.contains("== Table 1 =="));
+        assert!(s.contains("| Wikipedia"));
+        // all data rows share the same width
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn handles_ragged_rows() {
+        let mut t = TableBuilder::new("x").header(&["a"]);
+        t.row_strs(&["1", "2", "3"]);
+        let s = t.render();
+        assert!(s.contains('1') && s.contains('3'));
+    }
+}

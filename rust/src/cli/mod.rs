@@ -1,0 +1,155 @@
+//! Hand-rolled CLI argument parser (no clap in the vendored crate set).
+//!
+//! Supports `skrull <subcommand> [--key value|--key=value|--flag] ...`,
+//! typed accessors with defaults, required-argument errors, and generated
+//! usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required argument --{0}")]
+    Missing(String),
+    #[error("invalid value for --{0}: {1:?}")]
+    Invalid(String, String),
+    #[error("unknown argument {0:?}")]
+    Unknown(String),
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+}
+
+/// Parsed arguments: positionals + `--key value` options + `--flag`s.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw tokens.  `known_flags` lists value-less options; everything
+    /// else starting with `--` consumes the next token as its value.
+    pub fn parse(raw: &[String], known_flags: &[&str]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        args.known = known_flags.iter().map(|s| s.to_string()).collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&stripped) {
+                    args.flags.push(stripped.to_string());
+                } else {
+                    i += 1;
+                    let v = raw.get(i).ok_or_else(|| CliError::MissingValue(stripped.into()))?;
+                    args.options.insert(stripped.to_string(), v.clone());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                return Err(CliError::Unknown(tok.clone()));
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, CliError> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.into()))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| CliError::Invalid(name.into(), v.into())),
+        }
+    }
+
+    /// Comma-separated list of T.
+    pub fn list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse::<T>().map_err(|_| CliError::Invalid(name.into(), x.into())))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&s(&["train", "--steps", "100", "--verbose", "--lr=0.1"]), &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.parse_or::<u32>("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or::<f64>("lr", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = Args::parse(&s(&["bench"]), &[]).unwrap();
+        assert!(matches!(a.required("dataset"), Err(CliError::Missing(_))));
+    }
+
+    #[test]
+    fn invalid_typed_value_errors() {
+        let a = Args::parse(&s(&["--steps", "abc"]), &[]).unwrap();
+        assert!(matches!(a.parse_or::<u32>("steps", 1), Err(CliError::Invalid(..))));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            Args::parse(&s(&["--steps"]), &[]),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&s(&["--buckets", "256,512, 1024"]), &[]).unwrap();
+        assert_eq!(a.list_or::<u32>("buckets", &[]).unwrap(), vec![256, 512, 1024]);
+        assert_eq!(a.list_or::<u32>("other", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn defaults_pass_through() {
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+        assert_eq!(a.parse_or::<u64>("seed", 42).unwrap(), 42);
+        assert!(!a.flag("verbose"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Simulated distributed cluster: topology (DP×CP process groups over
+//! nodes/GPUs) and the event-driven iteration simulator that plays an
+//! `IterationSchedule` against the cost model.
+
+pub mod sim;
+pub mod topology;
+pub mod trace;
+
+pub use sim::{simulate_iteration, IterationSim, MicroBatchSim};
+pub use topology::Topology;

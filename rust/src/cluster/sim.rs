@@ -1,0 +1,207 @@
+//! Event-driven iteration simulator.
+//!
+//! Plays an `IterationSchedule` against the cost model with the paper's
+//! execution semantics:
+//!   * within a micro-batch, each CP rank runs its local sequences while
+//!     the CP collective for distributed sequences is in flight (Eq. 2
+//!     overlap), then the distributed shards execute;
+//!   * CP ranks synchronize at each micro-batch boundary (the attention
+//!     collective is a group barrier);
+//!   * DP ranks proceed independently through their micro-batch lists and
+//!     meet at the gradient synchronization (Eq. 8 + ZeRO-2 reduce-scatter).
+//!
+//! Produces per-rank busy/idle traces for the utilization numbers in
+//! EXPERIMENTS.md.
+
+use crate::perfmodel::CostModel;
+use crate::scheduler::plan::IterationSchedule;
+
+/// Simulated timing of one micro-batch on one DP rank's CP group.
+#[derive(Clone, Debug)]
+pub struct MicroBatchSim {
+    /// Eq. 1: makespan across the CP group.
+    pub tdacp: f64,
+    /// per-CP-rank busy compute time (local + dist, no comm wait)
+    pub busy: Vec<f64>,
+    /// exposed (un-overlapped) communication time per CP rank
+    pub exposed_comm: Vec<f64>,
+    pub num_distributed: usize,
+    pub num_local: usize,
+}
+
+/// Simulated timing of one whole iteration.
+#[derive(Clone, Debug)]
+pub struct IterationSim {
+    /// Eq. 8 + gradient sync.
+    pub total_time: f64,
+    /// per-DP-rank accumulated compute span (before grad sync)
+    pub rank_spans: Vec<f64>,
+    pub grad_sync: f64,
+    pub micro_batches: Vec<Vec<MicroBatchSim>>,
+    /// mean over GPUs of busy_compute / total_time
+    pub compute_utilization: f64,
+    /// makespan imbalance across DP ranks (max/mean)
+    pub dp_imbalance: f64,
+}
+
+/// Simulate one micro-batch through Eq. 2.
+pub fn simulate_micro_batch(
+    lens: &[u32],
+    plan: &crate::scheduler::plan::DacpPlan,
+    cost: &CostModel,
+    cp: usize,
+) -> MicroBatchSim {
+    let times = cost.rank_times(lens, plan, cp);
+    let tdacp = times.iter().map(|t| t.total).fold(0.0, f64::max);
+    MicroBatchSim {
+        tdacp,
+        busy: times.iter().map(|t| t.local_comp + t.dist_comp).collect(),
+        exposed_comm: times
+            .iter()
+            .map(|t| (t.comm - t.local_comp).max(0.0))
+            .collect(),
+        num_distributed: plan.num_distributed(),
+        num_local: lens.len() - plan.num_distributed(),
+    }
+}
+
+/// Simulate a full iteration (Eq. 8–11 semantics).  `cp` is the job's
+/// fixed context-parallel degree (N).
+pub fn simulate_iteration(sched: &IterationSchedule, cost: &CostModel, cp: usize) -> IterationSim {
+    let dp = sched.ranks.len();
+    let mut rank_spans = Vec::with_capacity(dp);
+    let mut mbs_out = Vec::with_capacity(dp);
+    for rank in &sched.ranks {
+        let mut span = 0.0;
+        let mut sims = Vec::with_capacity(rank.micro_batches.len());
+        for mb in &rank.micro_batches {
+            let sim = simulate_micro_batch(&mb.lens(), &mb.plan, cost, cp);
+            span += sim.tdacp;
+            sims.push(sim);
+        }
+        rank_spans.push(span);
+        mbs_out.push(sims);
+    }
+    let slowest = rank_spans.iter().cloned().fold(0.0, f64::max);
+    let grad_sync = cost.grad_sync_time(dp);
+    let total = slowest + grad_sync;
+
+    // utilization: mean busy compute over all CP ranks / total
+    let mut busy_total = 0.0;
+    let mut gpu_count = 0usize;
+    for sims in &mbs_out {
+        let cp = sims.first().map(|s| s.busy.len()).unwrap_or(1);
+        gpu_count += cp;
+        for sim in sims {
+            busy_total += sim.busy.iter().sum::<f64>();
+        }
+    }
+    let utilization = if total > 0.0 && gpu_count > 0 {
+        busy_total / (gpu_count as f64 * total)
+    } else {
+        0.0
+    };
+    let mean_span = rank_spans.iter().sum::<f64>() / dp.max(1) as f64;
+    let dp_imbalance = if mean_span > 0.0 { slowest / mean_span } else { 1.0 };
+
+    IterationSim {
+        total_time: total,
+        rank_spans,
+        grad_sync,
+        micro_batches: mbs_out,
+        compute_utilization: utilization,
+        dp_imbalance,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sequence;
+    use crate::model::ModelSpec;
+    use crate::perfmodel::CostModel;
+    use crate::scheduler::plan::{DacpPlan, MicroBatch, RankSchedule, DISTRIBUTED};
+
+    fn cm() -> CostModel {
+        CostModel::paper_default(&ModelSpec::qwen2_5_0_5b())
+    }
+
+    fn mb(lens: &[u32], assign: Vec<i32>) -> MicroBatch {
+        MicroBatch {
+            seqs: lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| Sequence { id: i as u64, len })
+                .collect(),
+            plan: DacpPlan { assign },
+        }
+    }
+
+    #[test]
+    fn iteration_time_gated_by_slowest_dp_rank() {
+        let cost = cm();
+        let sched = IterationSchedule {
+            ranks: vec![
+                RankSchedule { micro_batches: vec![mb(&[30_000], vec![DISTRIBUTED])] },
+                RankSchedule { micro_batches: vec![mb(&[100], vec![0])] },
+            ],
+        };
+        let sim = simulate_iteration(&sched, &cost, 8);
+        assert!(sim.rank_spans[0] > sim.rank_spans[1]);
+        assert!((sim.total_time - (sim.rank_spans[0] + sim.grad_sync)).abs() < 1e-12);
+        assert!(sim.dp_imbalance > 1.0);
+    }
+
+    #[test]
+    fn utilization_higher_when_balanced() {
+        let cost = cm();
+        let unbalanced = IterationSchedule {
+            ranks: vec![
+                RankSchedule { micro_batches: vec![mb(&[8_000, 8_000], vec![0, 0])] },
+                RankSchedule { micro_batches: vec![] },
+            ],
+        };
+        let balanced = IterationSchedule {
+            ranks: vec![
+                RankSchedule { micro_batches: vec![mb(&[8_000], vec![0])] },
+                RankSchedule { micro_batches: vec![mb(&[8_000], vec![0])] },
+            ],
+        };
+        let u_un = simulate_iteration(&unbalanced, &cost, 1).compute_utilization;
+        let u_ba = simulate_iteration(&balanced, &cost, 1).compute_utilization;
+        assert!(u_ba > u_un, "balanced {u_ba} vs unbalanced {u_un}");
+    }
+
+    #[test]
+    fn exposed_comm_shrinks_with_local_overlap() {
+        let cost = cm();
+        // distributed long seq alone: comm fully exposed on every rank
+        let alone = simulate_micro_batch(
+            &[20_000],
+            &DacpPlan { assign: vec![DISTRIBUTED] },
+            &cost,
+            2,
+        );
+        // same + local work on rank 0: rank 0's comm partially hidden
+        let overlapped = simulate_micro_batch(
+            &[20_000, 15_000],
+            &DacpPlan { assign: vec![DISTRIBUTED, 0] },
+            &cost,
+            2,
+        );
+        assert!(overlapped.exposed_comm[0] < alone.exposed_comm[0]);
+        assert_eq!(alone.num_distributed, 1);
+        assert_eq!(overlapped.num_local, 1);
+    }
+
+    #[test]
+    fn empty_schedule_costs_only_grad_sync() {
+        let cost = cm();
+        let sched = IterationSchedule {
+            ranks: vec![RankSchedule::default(), RankSchedule::default()],
+        };
+        let sim = simulate_iteration(&sched, &cost, 8);
+        assert!((sim.total_time - sim.grad_sync).abs() < 1e-15);
+        assert_eq!(sim.compute_utilization, 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Cluster topology: nodes × GPUs arranged into DP × CP process groups,
+//! mirroring the paper's testbed (4 nodes × 8 H100; CP groups within
+//! NVLink domains where possible).
+
+/// Physical + logical layout of one training job.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub dp: usize,
+    pub cp: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TopologyError {
+    #[error("dp*cp = {need} GPUs but cluster has {have}")]
+    TooManyRanks { need: usize, have: usize },
+    #[error("cp degree {cp} must be a power of two")]
+    BadCpDegree { cp: usize },
+}
+
+/// Global GPU id of (dp_rank, cp_rank).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GpuId(pub usize);
+
+impl Topology {
+    /// The paper's testbed: 4 nodes × 8 GPUs.
+    pub fn paper_testbed(dp: usize, cp: usize) -> Result<Self, TopologyError> {
+        Self::new(4, 8, dp, cp)
+    }
+
+    pub fn new(nodes: usize, gpus_per_node: usize, dp: usize, cp: usize) -> Result<Self, TopologyError> {
+        let have = nodes * gpus_per_node;
+        let need = dp * cp;
+        if need > have {
+            return Err(TopologyError::TooManyRanks { need, have });
+        }
+        if !cp.is_power_of_two() {
+            return Err(TopologyError::BadCpDegree { cp });
+        }
+        Ok(Topology { nodes, gpus_per_node, dp, cp })
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// GPUs are laid out CP-major so CP groups stay inside a node whenever
+    /// cp ≤ gpus_per_node (NVLink domain), as real launchers do.
+    pub fn gpu_of(&self, dp_rank: usize, cp_rank: usize) -> GpuId {
+        assert!(dp_rank < self.dp && cp_rank < self.cp);
+        GpuId(dp_rank * self.cp + cp_rank)
+    }
+
+    /// Does the CP group of `dp_rank` span node boundaries?  (If so, its
+    /// collectives run at IB, not NVLink, bandwidth.)
+    pub fn cp_group_crosses_nodes(&self, dp_rank: usize) -> bool {
+        let first = self.gpu_of(dp_rank, 0).0 / self.gpus_per_node;
+        let last = self.gpu_of(dp_rank, self.cp - 1).0 / self.gpus_per_node;
+        first != last
+    }
+
+    /// All (dp, cp) rank pairs.
+    pub fn ranks(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.dp).flat_map(move |d| (0..self.cp).map(move |c| (d, c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_fits_dp4_cp8() {
+        let t = Topology::paper_testbed(4, 8).unwrap();
+        assert_eq!(t.total_gpus(), 32);
+        assert_eq!(t.ranks().count(), 32);
+        // CP groups of 8 fit in one 8-GPU node
+        for d in 0..4 {
+            assert!(!t.cp_group_crosses_nodes(d));
+        }
+    }
+
+    #[test]
+    fn dp2_cp16_crosses_nodes() {
+        // the 7B+ChatQA2 setting <DP=2, CP=16> spans two nodes
+        let t = Topology::paper_testbed(2, 16).unwrap();
+        assert!(t.cp_group_crosses_nodes(0));
+        assert!(t.cp_group_crosses_nodes(1));
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        assert!(matches!(
+            Topology::paper_testbed(8, 8),
+            Err(TopologyError::TooManyRanks { need: 64, have: 32 })
+        ));
+    }
+
+    #[test]
+    fn rejects_non_power_of_two_cp() {
+        assert!(matches!(
+            Topology::paper_testbed(2, 6),
+            Err(TopologyError::BadCpDegree { cp: 6 })
+        ));
+    }
+
+    #[test]
+    fn gpu_ids_are_unique() {
+        let t = Topology::paper_testbed(4, 8).unwrap();
+        let mut ids: Vec<usize> = t.ranks().map(|(d, c)| t.gpu_of(d, c).0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 32);
+    }
+}

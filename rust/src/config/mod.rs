@@ -1,0 +1,190 @@
+//! Typed experiment configuration, loadable from a TOML-subset file or
+//! assembled from CLI flags.  This is the launcher's single source of truth
+//! (paper's evaluation setup: `<DP=4, CP=8, BatchSize=64>` etc.).
+
+pub mod toml;
+
+use crate::model::ModelSpec;
+
+/// Parallelism + batch settings of one training job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Data-parallel world size (ws in the paper).
+    pub dp: usize,
+    /// Context-parallel degree (N in the paper).
+    pub cp: usize,
+    /// Global batch size in sequences (K per iteration).
+    pub batch_size: usize,
+}
+
+impl ClusterConfig {
+    pub fn gpus(&self) -> usize {
+        self.dp * self.cp
+    }
+}
+
+/// Scheduling policy selector — Fig. 3's step-by-step lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// DeepSpeed-like: fixed micro-batching, every sequence CP-sharded.
+    Baseline,
+    /// DACP within baseline micro-batches (step-by-step lane 2).
+    DacpOnly,
+    /// Full Skrull: GDS batching + DACP placement.
+    Skrull,
+    /// Skrull + cost-aware placement refinement (our extension; see
+    /// scheduler::dacp::refine and the `ablations` bench).
+    SkrullRefined,
+    /// LongAlign-style sorted batching (related-work comparator).
+    SortedBatching,
+}
+
+impl Policy {
+    pub fn by_name(s: &str) -> Option<Policy> {
+        match s {
+            "baseline" | "deepspeed" => Some(Policy::Baseline),
+            "dacp" | "dacp-only" => Some(Policy::DacpOnly),
+            "skrull" | "full" => Some(Policy::Skrull),
+            "skrull-refined" | "refined" => Some(Policy::SkrullRefined),
+            "sorted" | "longalign" => Some(Policy::SortedBatching),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Baseline => "baseline",
+            Policy::DacpOnly => "dacp-only",
+            Policy::Skrull => "skrull",
+            Policy::SkrullRefined => "skrull-refined",
+            Policy::SortedBatching => "sorted",
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelSpec,
+    pub cluster: ClusterConfig,
+    /// BucketSize C in tokens per rank (paper: 26K for 0.5B, 13K for 7B).
+    pub bucket_size: u32,
+    pub dataset: String,
+    pub policy: Policy,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// The paper's default evaluation setting for a given model + dataset.
+    pub fn paper_default(model: ModelSpec, dataset: &str) -> Self {
+        // <DP=4, CP=8, B=64> except Qwen-7B + ChatQA2 which uses
+        // <DP=2, CP=16, B=40> (Section 5).
+        let (dp, cp, batch) = if model.name == "qwen2.5-7b" && dataset == "chatqa2" {
+            (2, 16, 40)
+        } else {
+            (4, 8, 64)
+        };
+        let bucket = if model.name == "qwen2.5-7b" { 13 * 1024 } else { 26 * 1024 };
+        ExperimentConfig {
+            model,
+            cluster: ClusterConfig { dp, cp, batch_size: batch },
+            bucket_size: bucket,
+            dataset: dataset.to_string(),
+            policy: Policy::Skrull,
+            iterations: 30,
+            seed: 42,
+        }
+    }
+
+    /// Load from a TOML-subset file; missing keys fall back to the paper
+    /// defaults for the named model/dataset.
+    pub fn from_table(t: &toml::Table) -> anyhow::Result<Self> {
+        let model_name = t.str_or("model.name", "qwen2.5-0.5b");
+        let model = ModelSpec::by_name(&model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+        let dataset = t.str_or("dataset.name", "wikipedia");
+        let mut cfg = ExperimentConfig::paper_default(model, &dataset);
+        cfg.cluster.dp = t.i64_or("cluster.dp", cfg.cluster.dp as i64) as usize;
+        cfg.cluster.cp = t.i64_or("cluster.cp", cfg.cluster.cp as i64) as usize;
+        cfg.cluster.batch_size =
+            t.i64_or("cluster.batch_size", cfg.cluster.batch_size as i64) as usize;
+        cfg.bucket_size = t.i64_or("scheduler.bucket_size", cfg.bucket_size as i64) as u32;
+        let policy = t.str_or("scheduler.policy", cfg.policy.name());
+        cfg.policy = Policy::by_name(&policy)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy {policy:?}"))?;
+        cfg.iterations = t.i64_or("run.iterations", cfg.iterations as i64) as usize;
+        cfg.seed = t.i64_or("run.seed", cfg.seed as i64) as u64;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let table = toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_table(&table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section5() {
+        let c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+        assert_eq!((c.cluster.dp, c.cluster.cp, c.cluster.batch_size), (4, 8, 64));
+        assert_eq!(c.bucket_size, 26 * 1024);
+        let c7 = ExperimentConfig::paper_default(ModelSpec::qwen2_5_7b(), "chatqa2");
+        assert_eq!((c7.cluster.dp, c7.cluster.cp, c7.cluster.batch_size), (2, 16, 40));
+        assert_eq!(c7.bucket_size, 13 * 1024);
+        assert_eq!(c7.cluster.gpus(), 32);
+    }
+
+    #[test]
+    fn from_table_overrides() {
+        let t = toml::parse(
+            r#"
+[model]
+name = "7b"
+[dataset]
+name = "lmsys"
+[cluster]
+dp = 8
+[scheduler]
+policy = "dacp"
+bucket_size = 4096
+[run]
+iterations = 5
+seed = 7
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.model.name, "qwen2.5-7b");
+        assert_eq!(c.cluster.dp, 8);
+        assert_eq!(c.cluster.cp, 8); // default retained
+        assert_eq!(c.policy, Policy::DacpOnly);
+        assert_eq!(c.bucket_size, 4096);
+        assert_eq!(c.iterations, 5);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn bad_model_name_errors() {
+        let t = toml::parse("[model]\nname = \"gpt9\"\n").unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn policy_round_trips() {
+        for p in [
+            Policy::Baseline,
+            Policy::DacpOnly,
+            Policy::Skrull,
+            Policy::SkrullRefined,
+            Policy::SortedBatching,
+        ] {
+            assert_eq!(Policy::by_name(p.name()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! TOML-subset parser (no serde/toml offline).  Supports the config
+//! surface the launcher needs: `[section.sub]` tables, string/int/float/
+//! bool scalars, homogeneous arrays, and `#` comments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Flat table: keys are `section.sub.key`.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+fn parse_scalar(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let t = raw.trim();
+    if t.starts_with('"') {
+        if !t.ends_with('"') || t.len() < 2 {
+            return Err(err(line, format!("unterminated string: {t}")));
+        }
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(err(line, format!("unterminated array: {t}")));
+        }
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_scalar(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value: {t:?}")))
+}
+
+/// Strip a trailing comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn parse(text: &str) -> Result<Table, ParseError> {
+    let mut table = Table::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(err(line_no, "unterminated section header"));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                return Err(err(line_no, "empty section name"));
+            }
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| err(line_no, format!("expected key = value, got {line:?}")))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(err(line_no, "empty key"));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        table.entries.insert(full_key, parse_scalar(v, line_no)?);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let t = parse(
+            r#"
+# experiment config
+name = "fig3"
+[cluster]
+dp = 4
+cp = 8           # per-node GPUs
+[model]
+peak_tflops = 989.0
+enabled = true
+buckets = [256, 512, 1024]
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.str_or("name", ""), "fig3");
+        assert_eq!(t.i64_or("cluster.dp", 0), 4);
+        assert_eq!(t.i64_or("cluster.cp", 0), 8);
+        assert!((t.f64_or("model.peak_tflops", 0.0) - 989.0).abs() < 1e-9);
+        assert!(t.bool_or("model.enabled", false));
+        match t.get("model.buckets").unwrap() {
+            Value::Array(a) => assert_eq!(a.len(), 3),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let t = parse("x = 3").unwrap();
+        assert_eq!(t.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(t.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = @?!\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let t = parse("").unwrap();
+        assert_eq!(t.i64_or("nope", 7), 7);
+        assert_eq!(t.str_or("nope", "d"), "d");
+    }
+}

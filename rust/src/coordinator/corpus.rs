@@ -1,0 +1,109 @@
+//! Synthetic tiny-corpus generator for the end-to-end training example.
+//!
+//! Sequences are drawn from a learnable order-1 Markov process: with
+//! probability 1-ε the next token is a fixed affine function of the
+//! current one, else uniform noise.  Cross-entropy of the optimal
+//! predictor is  H = -(1-ε+ε/V)·ln(1-ε+ε/V) - ... ≈ well below ln(V),
+//! so a training run that learns must show the loss dropping from ~ln(V)
+//! toward the entropy floor — the e2e validation signal.
+
+use crate::data::packing::TokenSeq;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: i32,
+    /// affine transition: next = (a*cur + b) mod vocab
+    pub a: i32,
+    pub b: i32,
+    /// noise probability ε
+    pub noise: f64,
+}
+
+impl CorpusConfig {
+    pub fn tiny(vocab: i32) -> Self {
+        CorpusConfig { vocab, a: 7, b: 3, noise: 0.10 }
+    }
+
+    /// Entropy floor (nats/token) of the process — the best achievable loss.
+    pub fn entropy_floor(&self) -> f64 {
+        let v = self.vocab as f64;
+        let p_hit = (1.0 - self.noise) + self.noise / v;
+        let p_other = self.noise / v;
+        -(p_hit * p_hit.ln() + (v - 1.0) * p_other * p_other.ln())
+    }
+
+    /// Generate one sequence of `len` tokens.
+    pub fn generate(&self, rng: &mut Rng, id: u64, len: u32) -> TokenSeq {
+        let mut tokens = Vec::with_capacity(len as usize);
+        let mut cur = rng.below(self.vocab as u64) as i32;
+        tokens.push(cur);
+        for _ in 1..len {
+            cur = if rng.bool_with(self.noise) {
+                rng.below(self.vocab as u64) as i32
+            } else {
+                (self.a * cur + self.b).rem_euclid(self.vocab)
+            };
+            tokens.push(cur);
+        }
+        TokenSeq { id, tokens }
+    }
+
+    /// Generate a corpus with the given sequence lengths.
+    pub fn corpus(&self, seed: u64, lens: &[u32]) -> Vec<TokenSeq> {
+        let mut rng = Rng::seed_from_u64(seed);
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| self.generate(&mut rng, i as u64, l))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_and_lengths_respected() {
+        let cfg = CorpusConfig::tiny(512);
+        let corpus = cfg.corpus(1, &[5, 100, 37]);
+        assert_eq!(corpus.len(), 3);
+        assert_eq!(corpus[1].tokens.len(), 100);
+        assert_eq!(corpus[2].id, 2);
+        for s in &corpus {
+            assert!(s.tokens.iter().all(|&t| (0..512).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn transitions_mostly_follow_the_rule() {
+        let cfg = CorpusConfig::tiny(512);
+        let mut rng = Rng::seed_from_u64(2);
+        let s = cfg.generate(&mut rng, 0, 10_000);
+        let hits = s
+            .tokens
+            .windows(2)
+            .filter(|w| w[1] == (cfg.a * w[0] + cfg.b).rem_euclid(cfg.vocab))
+            .count();
+        let rate = hits as f64 / 9_999.0;
+        assert!((0.85..0.95).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn entropy_floor_is_below_uniform() {
+        let cfg = CorpusConfig::tiny(512);
+        let floor = cfg.entropy_floor();
+        let uniform = (512f64).ln();
+        assert!(floor < uniform / 2.0, "floor {floor} vs uniform {uniform}");
+        assert!(floor > 0.0);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let cfg = CorpusConfig::tiny(128);
+        let a = cfg.corpus(9, &[50, 60]);
+        let b = cfg.corpus(9, &[50, 60]);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(a[1].tokens, b[1].tokens);
+    }
+}

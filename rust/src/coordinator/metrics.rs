@@ -1,0 +1,96 @@
+//! Training metrics: loss curve, iteration timings, token throughput.
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainMetrics {
+    /// (step, loss) pairs
+    pub loss_curve: Vec<(usize, f32)>,
+    pub step_seconds: Summary,
+    pub tokens_processed: u64,
+    /// tokens that carried loss (non-padding, non-final)
+    pub loss_tokens: u64,
+    pub micro_batches_executed: usize,
+    pub sched_seconds: f64,
+}
+
+impl TrainMetrics {
+    pub fn record_step(&mut self, step: usize, loss: f32, seconds: f64, tokens: u64, loss_tokens: u64, mbs: usize) {
+        self.loss_curve.push((step, loss));
+        self.step_seconds.push(seconds);
+        self.tokens_processed += tokens;
+        self.loss_tokens += loss_tokens;
+        self.micro_batches_executed += mbs;
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        let total: f64 = self.step_seconds.len() as f64 * self.step_seconds.mean();
+        if total > 0.0 {
+            self.tokens_processed as f64 / total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn first_loss(&self) -> Option<f32> {
+        self.loss_curve.first().map(|&(_, l)| l)
+    }
+
+    /// Mean loss over the final `n` recorded steps.
+    pub fn final_loss(&self, n: usize) -> Option<f32> {
+        if self.loss_curve.is_empty() {
+            return None;
+        }
+        let tail = &self.loss_curve[self.loss_curve.len().saturating_sub(n)..];
+        Some(tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Render the loss curve as sparse text rows (for EXPERIMENTS.md).
+    pub fn render_curve(&self, every: usize) -> String {
+        let mut out = String::from("step,loss\n");
+        for (i, &(step, loss)) in self.loss_curve.iter().enumerate() {
+            if i % every == 0 || i + 1 == self.loss_curve.len() {
+                out.push_str(&format!("{step},{loss:.4}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = TrainMetrics::default();
+        m.record_step(0, 6.0, 0.5, 1000, 900, 4);
+        m.record_step(1, 5.0, 0.5, 1000, 900, 4);
+        assert_eq!(m.first_loss(), Some(6.0));
+        assert_eq!(m.final_loss(1), Some(5.0));
+        assert_eq!(m.final_loss(10), Some(5.5));
+        assert_eq!(m.tokens_processed, 2000);
+        assert!((m.tokens_per_second() - 2000.0).abs() < 1.0);
+        assert_eq!(m.micro_batches_executed, 8);
+    }
+
+    #[test]
+    fn curve_rendering_includes_last_point() {
+        let mut m = TrainMetrics::default();
+        for i in 0..10 {
+            m.record_step(i, 6.0 - i as f32 * 0.1, 0.1, 10, 9, 1);
+        }
+        let s = m.render_curve(4);
+        assert!(s.starts_with("step,loss"));
+        assert!(s.contains("0,6.0000"));
+        assert!(s.contains("9,5.1000"));
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = TrainMetrics::default();
+        assert_eq!(m.first_loss(), None);
+        assert_eq!(m.final_loss(3), None);
+        assert_eq!(m.tokens_per_second(), 0.0);
+    }
+}

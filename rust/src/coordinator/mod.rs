@@ -1,0 +1,15 @@
+//! The training coordinator: ties the scheduling DataLoader, the PJRT
+//! runtime and the host-side optimizer into the end-to-end Long-SFT loop
+//! (examples/long_sft_train.rs), and collects the metrics the benches and
+//! EXPERIMENTS.md report.
+
+pub mod corpus;
+pub mod metrics;
+pub mod optimizer;
+pub mod state;
+pub mod trainer;
+
+pub use metrics::TrainMetrics;
+pub use optimizer::{Adam, LrSchedule};
+pub use state::TrainState;
+pub use trainer::{TrainReport, Trainer, TrainerOptions};

@@ -1,0 +1,203 @@
+//! Host-side AdamW over the flat parameter buffer (Kingma & Ba; Loshchilov
+//! & Hutter).  The paper's GDS keeps scheduling within the global batch
+//! precisely so these optimizers stay mathematically equivalent — the
+//! trainer's gradient accumulation preserves that (token-weighted mean
+//! across micro-batches before a single step).
+
+/// AdamW with bias correction.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u32 {
+        self.t
+    }
+
+    /// Expose the moment buffers + step for checkpointing.
+    pub fn state(&self) -> (&[f32], &[f32], u32) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Rebuild from a checkpoint.
+    pub fn from_state(lr: f32, m: Vec<f32>, v: Vec<f32>, t: u32) -> Self {
+        assert_eq!(m.len(), v.len());
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, m, v, t }
+    }
+}
+
+/// Learning-rate schedules (linear warmup + cosine decay is the Long-SFT
+/// staple).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant(f32),
+    WarmupCosine { peak: f32, warmup: u32, total: u32, floor: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u32) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::WarmupCosine { peak, warmup, total, floor } => {
+                if warmup > 0 && step < warmup {
+                    peak * (step + 1) as f32 / warmup as f32
+                } else if step >= total {
+                    floor
+                } else {
+                    let t = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+                    floor + 0.5 * (peak - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+}
+
+/// Clip a gradient buffer to a global L2 norm; returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = grads.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// f(x) = Σ (x_i - c_i)²: Adam must converge to c.
+    #[test]
+    fn converges_on_quadratic() {
+        let target = [3.0f32, -2.0, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&target).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.step(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&target) {
+            assert!((xi - ci).abs() < 1e-2, "{x:?}");
+        }
+        assert_eq!(opt.steps_taken(), 2000);
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // with bias correction, |Δx| of step 1 ≈ lr regardless of grad scale
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut x = vec![0.0f32];
+            let mut opt = Adam::new(1, 0.01);
+            opt.step(&mut x, &[scale]);
+            assert!((x[0].abs() - 0.01).abs() < 1e-4, "scale {scale} -> {}", x[0]);
+        }
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut x = vec![1.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.weight_decay = 0.1;
+        for _ in 0..100 {
+            opt.step(&mut x, &[0.0]);
+        }
+        assert!(x[0] < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_sizes_panic() {
+        let mut opt = Adam::new(2, 0.1);
+        let mut x = vec![0.0f32; 2];
+        opt.step(&mut x, &[1.0]);
+    }
+
+    #[test]
+    fn state_round_trip_resumes_identically() {
+        // train 5 steps; checkpoint; train 5 more vs resume-and-train 5:
+        // identical trajectories.
+        let grad = |x: &[f32]| vec![2.0 * (x[0] - 1.0), 2.0 * (x[1] + 1.0)];
+        let mut x1 = vec![0.0f32; 2];
+        let mut o1 = Adam::new(2, 0.05);
+        for _ in 0..5 {
+            let g = grad(&x1);
+            o1.step(&mut x1, &g);
+        }
+        let (m, v, t) = o1.state();
+        let mut o2 = Adam::from_state(0.05, m.to_vec(), v.to_vec(), t);
+        let mut x2 = x1.clone();
+        for _ in 0..5 {
+            let g1 = grad(&x1);
+            o1.step(&mut x1, &g1);
+            let g2 = grad(&x2);
+            o2.step(&mut x2, &g2);
+        }
+        assert_eq!(x1, x2);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine { peak: 1.0, warmup: 10, total: 110, floor: 0.1 };
+        assert!(s.at(0) < s.at(5));
+        assert!((s.at(9) - 1.0).abs() < 0.11); // near peak at warmup end
+        assert!((s.at(10) - 1.0).abs() < 1e-6);
+        let mid = s.at(60);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.at(109) - 0.1).abs() < 0.01);
+        assert_eq!(s.at(500), 0.1);
+        assert_eq!(LrSchedule::Constant(0.3).at(77), 0.3);
+    }
+
+    #[test]
+    fn clip_global_norm_behaviour() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let norm = clip_global_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let new_norm = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-6);
+        // under the cap: untouched
+        let mut g2 = vec![0.3f32, 0.4];
+        let n2 = clip_global_norm(&mut g2, 1.0);
+        assert!((n2 - 0.5).abs() < 1e-6);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Training-state checkpointing: params + AdamW moments + step counter in
+//! a self-describing little-endian binary format (no serde offline).
+//!
+//! Layout:
+//!   magic  "SKRULLCK"            8 bytes
+//!   version u32                  (= 1)
+//!   step    u32
+//!   lr      f32
+//!   n       u64  (param count)
+//!   params  n × f32
+//!   m       n × f32
+//!   v       n × f32
+//!   crc     u64  (FNV-1a over everything above)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SKRULLCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic — not a skrull checkpoint")]
+    BadMagic,
+    #[error("unsupported checkpoint version {0}")]
+    BadVersion(u32),
+    #[error("checksum mismatch (file corrupt)")]
+    BadChecksum,
+    #[error("parameter count mismatch: checkpoint {got}, model {want}")]
+    SizeMismatch { got: usize, want: usize },
+}
+
+/// A complete resumable training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub step: u32,
+    pub lr: f32,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_f32s(bytes: &[u8], n: usize, off: &mut usize) -> Result<Vec<f32>, CheckpointError> {
+    let need = n * 4;
+    if *off + need > bytes.len() {
+        return Err(CheckpointError::BadMagic);
+    }
+    let mut out = vec![0f32; n];
+    for (i, ch) in bytes[*off..*off + need].chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+    }
+    *off += need;
+    Ok(out)
+}
+
+impl TrainState {
+    pub fn encode(&self) -> Vec<u8> {
+        assert_eq!(self.params.len(), self.m.len());
+        assert_eq!(self.params.len(), self.v.len());
+        let mut buf = Vec::with_capacity(32 + self.params.len() * 12);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&self.lr.to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        push_f32s(&mut buf, &self.params);
+        push_f32s(&mut buf, &self.m);
+        push_f32s(&mut buf, &self.v);
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<TrainState, CheckpointError> {
+        if bytes.len() < 32 + 8 || &bytes[..8] != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let crc_stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a(body) != crc_stored {
+            return Err(CheckpointError::BadChecksum);
+        }
+        let ver = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if ver != VERSION {
+            return Err(CheckpointError::BadVersion(ver));
+        }
+        let step = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        let lr = f32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let n = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
+        let mut off = 28;
+        let params = read_f32s(body, n, &mut off)?;
+        let m = read_f32s(body, n, &mut off)?;
+        let v = read_f32s(body, n, &mut off)?;
+        Ok(TrainState { step, lr, params, m, v })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), CheckpointError> {
+        // write-then-rename for atomicity
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&self.encode())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>, expect_params: usize) -> Result<TrainState, CheckpointError> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let st = Self::decode(&bytes)?;
+        if st.params.len() != expect_params {
+            return Err(CheckpointError::SizeMismatch {
+                got: st.params.len(),
+                want: expect_params,
+            });
+        }
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainState {
+        TrainState {
+            step: 42,
+            lr: 3e-3,
+            params: vec![1.0, -2.5, 3.25],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let st = sample();
+        let back = TrainState::decode(&st.encode()).unwrap();
+        assert_eq!(st, back);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("skrull_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let st = sample();
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path, 3).unwrap();
+        assert_eq!(st, back);
+        assert!(!path.with_extension("tmp").exists(), "tmp file must be renamed away");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut bytes = sample().encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(matches!(TrainState::decode(&bytes), Err(CheckpointError::BadChecksum)));
+    }
+
+    #[test]
+    fn wrong_magic_and_version() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert!(matches!(TrainState::decode(&bytes), Err(CheckpointError::BadMagic)));
+        let mut bytes = sample().encode();
+        bytes[8] = 9;
+        // checksum covers the version field, so flipping it must first
+        // trip the checksum — rebuild a valid-but-wrong-version blob:
+        let body_len = bytes.len() - 8;
+        let crc = super::fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(TrainState::decode(&bytes), Err(CheckpointError::BadVersion(9))));
+    }
+
+    #[test]
+    fn size_mismatch_on_load() {
+        let dir = std::env::temp_dir().join(format!("skrull_ckpt_sz_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        sample().save(&path).unwrap();
+        assert!(matches!(
+            TrainState::load(&path, 99),
+            Err(CheckpointError::SizeMismatch { got: 3, want: 99 })
+        ));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let bytes = sample().encode();
+        assert!(TrainState::decode(&bytes[..10]).is_err());
+    }
+}

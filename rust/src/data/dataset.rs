@@ -1,0 +1,148 @@
+//! Dataset abstraction: a bag of sequences (identified by id + token
+//! length) plus global-batch sampling.  Token *contents* are only
+//! materialized by the end-to-end trainer (coordinator/corpus.rs); the
+//! scheduler and the simulator operate on lengths alone, exactly like the
+//! paper's DataLoader-level scheduler.
+
+use crate::data::distribution::LengthDistribution;
+use crate::rng::Rng;
+
+/// One training sample: opaque id + token count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sequence {
+    pub id: u64,
+    pub len: u32,
+}
+
+/// A materialized dataset of sequence lengths.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub lengths: Vec<u32>,
+}
+
+impl Dataset {
+    /// Synthesize `n` samples from a named distribution.
+    pub fn synthesize(dist: &LengthDistribution, n: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        Dataset {
+            name: dist.name().to_string(),
+            lengths: dist.sample_many(&mut rng, n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lengths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lengths.is_empty()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.lengths.iter().map(|&l| l as u64).sum()
+    }
+
+    pub fn max_len(&self) -> u32 {
+        self.lengths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Iterate the dataset in shuffled order as global batches of
+    /// `batch_size` sequences — one epoch.  The tail short batch is kept.
+    pub fn epoch_batches(&self, batch_size: usize, seed: u64) -> Vec<Vec<Sequence>> {
+        let mut order: Vec<u64> = (0..self.lengths.len() as u64).collect();
+        let mut rng = Rng::seed_from_u64(seed);
+        rng.shuffle(&mut order);
+        order
+            .chunks(batch_size)
+            .map(|chunk| {
+                chunk
+                    .iter()
+                    .map(|&id| Sequence { id, len: self.lengths[id as usize] })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Sample one global batch with replacement (for benchmarking runs that
+    /// draw i.i.d. batches like the paper's iteration-time measurements).
+    pub fn sample_batch(&self, rng: &mut Rng, batch_size: usize) -> Vec<Sequence> {
+        (0..batch_size)
+            .map(|_| {
+                let id = rng.below(self.lengths.len() as u64);
+                Sequence { id, len: self.lengths[id as usize] }
+            })
+            .collect()
+    }
+
+    /// Clamp all lengths (used when a bucket/CP config cannot hold the
+    /// longest sample — mirrors SFT-time truncation to the context window).
+    pub fn truncated(&self, max_len: u32) -> Dataset {
+        Dataset {
+            name: format!("{}-trunc{}", self.name, max_len),
+            lengths: self.lengths.iter().map(|&l| l.min(max_len)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset { name: "toy".into(), lengths: vec![10, 20, 30, 40, 50, 60, 70] }
+    }
+
+    #[test]
+    fn epoch_covers_every_sequence_exactly_once() {
+        let ds = toy();
+        let batches = ds.epoch_batches(3, 7);
+        assert_eq!(batches.len(), 3); // 3 + 3 + 1
+        let mut ids: Vec<u64> = batches.iter().flatten().map(|s| s.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        for b in &batches {
+            for s in b {
+                assert_eq!(s.len, ds.lengths[s.id as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_shuffle_is_seeded() {
+        let ds = toy();
+        let a = ds.epoch_batches(3, 7);
+        let b = ds.epoch_batches(3, 7);
+        let c = ds.epoch_batches(3, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sample_batch_draws_valid_ids() {
+        let ds = toy();
+        let mut rng = Rng::seed_from_u64(1);
+        let batch = ds.sample_batch(&mut rng, 64);
+        assert_eq!(batch.len(), 64);
+        for s in batch {
+            assert!(s.id < 7);
+            assert_eq!(s.len, ds.lengths[s.id as usize]);
+        }
+    }
+
+    #[test]
+    fn truncation_clamps() {
+        let ds = toy().truncated(35);
+        assert_eq!(ds.lengths, vec![10, 20, 30, 35, 35, 35, 35]);
+        assert_eq!(ds.max_len(), 35);
+    }
+
+    #[test]
+    fn synthesize_is_deterministic() {
+        let d = LengthDistribution::wikipedia();
+        let a = Dataset::synthesize(&d, 100, 3);
+        let b = Dataset::synthesize(&d, 100, 3);
+        assert_eq!(a.lengths, b.lengths);
+        assert_eq!(a.total_tokens(), b.total_tokens());
+    }
+}

@@ -1,0 +1,12 @@
+//! Long-SFT data substrate: synthetic sequence-length distributions fit to
+//! the paper's Table 1, dataset sampling, sequence packing, and the
+//! scheduling DataLoader that hosts GDS+DACP (Section 4.3: "our scheduling
+//! algorithm is integrated into the DataLoader").
+
+pub mod dataset;
+pub mod distribution;
+pub mod loader;
+pub mod packing;
+
+pub use dataset::{Dataset, Sequence};
+pub use distribution::LengthDistribution;

@@ -1,0 +1,146 @@
+//! Sequence packing (Appendix A.1: "we employ sequence packing to eliminate
+//! padding").  A `PackedBucket` is the unit the runtime executes: a fixed-
+//! capacity token buffer holding whole sequences back-to-back with segment
+//! ids, intra-segment positions, next-token targets and a loss mask; the
+//! unfilled remainder is a padding segment with loss weight zero.
+
+/// A sequence's tokens, ready for packing.
+#[derive(Clone, Debug)]
+pub struct TokenSeq {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// A packed fixed-size training buffer, matching the L2 train_step inputs.
+#[derive(Clone, Debug)]
+pub struct PackedBucket {
+    pub capacity: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub segment_ids: Vec<i32>,
+    pub positions: Vec<i32>,
+    /// ids of the sequences packed here (for bookkeeping/tests).
+    pub seq_ids: Vec<u64>,
+}
+
+impl PackedBucket {
+    /// Number of loss-bearing tokens.
+    pub fn loss_tokens(&self) -> f64 {
+        self.loss_mask.iter().map(|&m| m as f64).sum()
+    }
+
+    /// Number of non-padding tokens.
+    pub fn used_tokens(&self) -> usize {
+        self.tokens.len() - self.pad_tokens()
+    }
+
+    pub fn pad_tokens(&self) -> usize {
+        // padding is the trailing run with segment id == pad id (= #segments)
+        let pad_id = self.seq_ids.len() as i32;
+        self.segment_ids.iter().filter(|&&s| s == pad_id).count()
+    }
+}
+
+pub const PAD_TOKEN: i32 = 0;
+
+/// Pack the given sequences (all must fit) into one bucket of `capacity`
+/// tokens.  Targets are next-token within each segment; the final token of
+/// each segment and all padding are loss-masked.
+///
+/// Panics if the sequences exceed capacity — callers (the scheduler) are
+/// responsible for respecting BucketSize C; this is asserted, not patched,
+/// so memory-constraint violations surface in tests.
+pub fn pack(seqs: &[&TokenSeq], capacity: usize) -> PackedBucket {
+    let used: usize = seqs.iter().map(|s| s.tokens.len()).sum();
+    assert!(
+        used <= capacity,
+        "packing overflow: {used} tokens into capacity {capacity}"
+    );
+    let mut b = PackedBucket {
+        capacity,
+        tokens: Vec::with_capacity(capacity),
+        targets: Vec::with_capacity(capacity),
+        loss_mask: Vec::with_capacity(capacity),
+        segment_ids: Vec::with_capacity(capacity),
+        positions: Vec::with_capacity(capacity),
+        seq_ids: seqs.iter().map(|s| s.id).collect(),
+    };
+    for (seg, s) in seqs.iter().enumerate() {
+        let n = s.tokens.len();
+        for (i, &tok) in s.tokens.iter().enumerate() {
+            b.tokens.push(tok);
+            b.targets.push(if i + 1 < n { s.tokens[i + 1] } else { PAD_TOKEN });
+            b.loss_mask.push(if i + 1 < n { 1.0 } else { 0.0 });
+            b.segment_ids.push(seg as i32);
+            b.positions.push(i as i32);
+        }
+    }
+    // padding segment: distinct id so it only attends to itself, zero loss
+    let pad_seg = seqs.len() as i32;
+    let mut pos = 0;
+    while b.tokens.len() < capacity {
+        b.tokens.push(PAD_TOKEN);
+        b.targets.push(PAD_TOKEN);
+        b.loss_mask.push(0.0);
+        b.segment_ids.push(pad_seg);
+        b.positions.push(pos);
+        pos += 1;
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(id: u64, toks: &[i32]) -> TokenSeq {
+        TokenSeq { id, tokens: toks.to_vec() }
+    }
+
+    #[test]
+    fn packs_two_sequences_with_padding() {
+        let (s1, s2) = (seq(7, &[1, 2, 3]), seq(9, &[4, 5]));
+        let b = pack(&[&s1, &s2], 8);
+        assert_eq!(b.tokens, vec![1, 2, 3, 4, 5, 0, 0, 0]);
+        assert_eq!(b.targets, vec![2, 3, 0, 5, 0, 0, 0, 0]);
+        assert_eq!(b.loss_mask, vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(b.segment_ids, vec![0, 0, 0, 1, 1, 2, 2, 2]);
+        assert_eq!(b.positions, vec![0, 1, 2, 0, 1, 0, 1, 2]);
+        assert_eq!(b.seq_ids, vec![7, 9]);
+        assert_eq!(b.used_tokens(), 5);
+        assert_eq!(b.pad_tokens(), 3);
+        assert_eq!(b.loss_tokens(), 3.0);
+    }
+
+    #[test]
+    fn exact_fit_has_no_padding() {
+        let (s1, s2) = (seq(0, &[1, 2]), seq(1, &[3, 4]));
+        let b = pack(&[&s1, &s2], 4);
+        assert_eq!(b.pad_tokens(), 0);
+        assert_eq!(b.used_tokens(), 4);
+    }
+
+    #[test]
+    fn empty_pack_is_all_padding() {
+        let b = pack(&[] as &[&TokenSeq], 4);
+        assert_eq!(b.used_tokens(), 0);
+        assert_eq!(b.loss_tokens(), 0.0);
+        assert_eq!(b.segment_ids, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "packing overflow")]
+    fn overflow_panics() {
+        let s = seq(0, &[1, 2, 3, 4, 5]);
+        pack(&[&s], 4);
+    }
+
+    #[test]
+    fn single_token_sequence_is_fully_masked() {
+        let s = seq(0, &[42]);
+        let b = pack(&[&s], 2);
+        assert_eq!(b.loss_mask[0], 0.0); // no next token to predict
+        assert_eq!(b.loss_tokens(), 0.0);
+    }
+}

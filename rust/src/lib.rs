@@ -1,0 +1,27 @@
+//! Skrull: dynamic data scheduling for efficient long-context fine-tuning.
+//!
+//! Reproduction of "Skrull: Towards Efficient Long Context Fine-tuning
+//! through Dynamic Data Scheduling" (NIPS 2025) as a three-layer
+//! Rust + JAX + Pallas stack.  See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * L3 (this crate): the scheduler (GDS + DACP), performance model,
+//!   cluster simulator, PJRT runtime and training coordinator.
+//! * L2 (python/compile/model.py): the JAX train step, AOT-lowered to HLO.
+//! * L1 (python/compile/kernels/): the Pallas packed flash-attention
+//!   kernel the train step calls.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod logging;
+pub mod model;
+pub mod perfmodel;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;

@@ -1,0 +1,258 @@
+//! skrull — the launcher.
+//!
+//! Subcommands:
+//!   schedule  — schedule one sampled global batch, print the plan + times
+//!   simulate  — run N simulated iterations under each policy, report speedup
+//!   train     — end-to-end tiny-model training through PJRT artifacts
+//!   analyze   — dataset length-distribution report (Fig. 1a / Table 1)
+//!   profile   — print the offline-profiling fits (Appendix A)
+//!
+//! Configuration comes from `--config <file>` (TOML subset) or direct flags
+//! (--model, --dataset, --dp, --cp, --batch-size, --policy, --bucket-size,
+//! --iterations, --seed).
+
+use anyhow::{bail, Context, Result};
+
+use skrull::cli::Args;
+use skrull::cluster::simulate_iteration;
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::coordinator::corpus::CorpusConfig;
+use skrull::coordinator::{Trainer, TrainerOptions};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::{profile, CostModel};
+use skrull::rng::Rng;
+use skrull::util::stats::fraction_below;
+use skrull::util::{fmt_secs, fmt_tokens};
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        let model = ModelSpec::by_name(args.str_or("model", "qwen2.5-0.5b"))
+            .context("unknown --model (qwen2.5-0.5b | qwen2.5-7b | tiny)")?;
+        ExperimentConfig::paper_default(model, args.str_or("dataset", "wikipedia"))
+    };
+    cfg.cluster.dp = args.parse_or("dp", cfg.cluster.dp)?;
+    cfg.cluster.cp = args.parse_or("cp", cfg.cluster.cp)?;
+    cfg.cluster.batch_size = args.parse_or("batch-size", cfg.cluster.batch_size)?;
+    cfg.bucket_size = args.parse_or("bucket-size", cfg.bucket_size)?;
+    cfg.iterations = args.parse_or("iterations", cfg.iterations)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    if let Some(p) = args.get("policy") {
+        cfg.policy = Policy::by_name(p).context("unknown --policy")?;
+    }
+    Ok(cfg)
+}
+
+fn dataset_for(cfg: &ExperimentConfig, n: usize) -> Result<Dataset> {
+    let dist = LengthDistribution::by_name(&cfg.dataset)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    let ds = Dataset::synthesize(&dist, n, cfg.seed ^ 0xD5);
+    // truncate to what the parallel config can hold (as real SFT does)
+    let cap = cfg.bucket_size * cfg.cluster.cp as u32;
+    Ok(ds.truncated(cap))
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let ds = dataset_for(&cfg, 100_000)?;
+    let cost = CostModel::paper_default(&cfg.model);
+    let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+    let (batch, sched) = loader.next_iteration()?;
+    let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
+
+    println!(
+        "scheduled {} sequences ({} tokens) under {:?}",
+        batch.len(),
+        fmt_tokens(batch.iter().map(|s| s.len as u64).sum()),
+        cfg.policy
+    );
+    for (i, rank) in sched.ranks.iter().enumerate() {
+        let mbs = &rank.micro_batches;
+        let toks: u64 = mbs.iter().map(|m| m.total_tokens()).sum();
+        let dist: usize = mbs.iter().map(|m| m.plan.num_distributed()).sum();
+        println!(
+            "  dp{i}: {} micro-batches, {} tokens, {dist} sharded seqs, span {}",
+            mbs.len(),
+            fmt_tokens(toks),
+            fmt_secs(sim.rank_spans[i]),
+        );
+    }
+    println!(
+        "iteration time {} (grad sync {}), utilization {:.1}%, dp imbalance {:.3}, sched overhead {}",
+        fmt_secs(sim.total_time),
+        fmt_secs(sim.grad_sync),
+        100.0 * sim.compute_utilization,
+        sim.dp_imbalance,
+        fmt_secs(loader.mean_sched_seconds()),
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let ds = dataset_for(&cfg, 100_000)?;
+    let cost = CostModel::paper_default(&cfg.model);
+
+    let policies = [Policy::Baseline, Policy::DacpOnly, Policy::Skrull];
+    let mut base_time = None;
+    println!(
+        "model={} dataset={} <DP={},CP={},B={}> C={} iters={}",
+        cfg.model.name,
+        ds.name,
+        cfg.cluster.dp,
+        cfg.cluster.cp,
+        cfg.cluster.batch_size,
+        fmt_tokens(cfg.bucket_size as u64),
+        cfg.iterations
+    );
+    for policy in policies {
+        let mut pcfg = cfg.clone();
+        pcfg.policy = policy;
+        let mut loader = ScheduledLoader::new(&ds, pcfg);
+        let mut total = 0.0;
+        let mut util = 0.0;
+        for _ in 0..cfg.iterations {
+            let (_, sched) = loader.next_iteration()?;
+            let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
+            total += sim.total_time;
+            util += sim.compute_utilization;
+        }
+        let mean = total / cfg.iterations as f64;
+        let speedup = base_time.map(|b: f64| b / mean).unwrap_or(1.0);
+        if base_time.is_none() {
+            base_time = Some(mean);
+        }
+        println!(
+            "  {:<10} mean iter {}  speedup {speedup:.2}x  utilization {:.1}%  sched/iter {}",
+            policy.name(),
+            fmt_secs(mean),
+            100.0 * util / cfg.iterations as f64,
+            fmt_secs(loader.mean_sched_seconds()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let steps: usize = args.parse_or("steps", 100)?;
+    let policy = Policy::by_name(args.str_or("policy", "skrull")).context("unknown --policy")?;
+    let opts = TrainerOptions {
+        workers: args.parse_or("workers", 4)?,
+        bucket_capacity: args.parse_or("bucket-size", 1024u32)?,
+        policy,
+        lr: args.parse_or("lr", 3e-3f32)?,
+        seed: args.parse_or("seed", 42u64)?,
+        batch_size: args.parse_or("batch-size", 16usize)?,
+        ..Default::default()
+    };
+    let corpus_cfg = CorpusConfig::tiny(512);
+    let n_seqs: usize = args.parse_or("corpus-size", 512)?;
+    let mut rng = Rng::seed_from_u64(opts.seed ^ 0xC0);
+    let dist = LengthDistribution::LognormalMixture {
+        name: "tiny-longtail",
+        components: vec![(0.95, 4.6, 0.8), (0.05, 6.5, 0.4)],
+        max_len: opts.bucket_capacity,
+    };
+    let lens: Vec<u32> = (0..n_seqs).map(|_| dist.sample(&mut rng).max(2)).collect();
+    let corpus = corpus_cfg.corpus(opts.seed ^ 0x11, &lens);
+
+    println!(
+        "training tiny model for {steps} steps, policy {:?}, {} sequences",
+        opts.policy,
+        corpus.len()
+    );
+    let mut trainer = Trainer::new(artifacts, opts)?;
+    println!("platform: {}", trainer.runtime.platform());
+    let report = trainer.train(&corpus, steps)?;
+    println!(
+        "done in {} (compile {}), {} buckets, padding {:.1}%, tokens/s {:.0}",
+        fmt_secs(report.wall_seconds),
+        fmt_secs(report.compile_seconds),
+        report.buckets_executed,
+        100.0 * report.padding_fraction(),
+        report.metrics.tokens_per_second(),
+    );
+    println!(
+        "loss {:.4} -> {:.4} (entropy floor {:.4})",
+        report.metrics.first_loss().unwrap_or(0.0),
+        report.metrics.final_loss(10).unwrap_or(0.0),
+        corpus_cfg.entropy_floor(),
+    );
+    print!("{}", report.metrics.render_curve(steps.div_ceil(20).max(1)));
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let n: usize = args.parse_or("samples", 200_000)?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    println!("Table 1: percentage of sequence length in (synthesized) datasets, n={n}");
+    println!(
+        "{:<18} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}",
+        "Dataset", "<1K", "<4K", "<8K", "<32K", "<128K", "Longest"
+    );
+    for name in ["wikipedia", "lmsys", "chatqa2"] {
+        let dist = LengthDistribution::by_name(name).unwrap();
+        let ds = Dataset::synthesize(&dist, n, seed);
+        let f = |t: u32| 100.0 * fraction_below(&ds.lengths, t);
+        println!(
+            "{:<18} {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>7.2}% {:>9}",
+            name,
+            f(1024),
+            f(4096),
+            f(8192),
+            f(32 * 1024),
+            f(128 * 1024),
+            fmt_tokens(ds.max_len() as u64)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model = ModelSpec::by_name(args.str_or("model", "qwen2.5-0.5b"))
+        .context("unknown --model")?;
+    let p = profile::profile_model(&model, args.parse_or("dp", 4usize)?);
+    println!("offline profile for {}", model.name);
+    println!(
+        "  T_comp  = {:.3e}·FLOPs + {:.3e}s   (r² {:.4})",
+        p.comp.alpha_s_per_flop, p.comp.beta_s, p.comp.r2
+    );
+    println!(
+        "  Memory  = {:.1} B/token (BucketSize C = {})",
+        p.memory.alpha_bytes_per_token,
+        fmt_tokens(p.bucket_size as u64)
+    );
+    println!(
+        "  T_comm  = {:.3e}·V + {:.1}us   ({:.0} GB/s effective)",
+        p.comm.alpha_s_per_byte,
+        p.comm.fixed_s * 1e6,
+        p.comm.bandwidth_gbps()
+    );
+    Ok(())
+}
+
+const USAGE: &str = "usage: skrull <schedule|simulate|train|analyze|profile> [--options]
+  common: --config FILE | --model M --dataset D --dp N --cp N --batch-size K
+          --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S
+  train:  --artifacts DIR --steps N --workers W --lr F --corpus-size K";
+
+fn main() -> Result<()> {
+    skrull::logging::init();
+    let args = Args::from_env(&["verbose"])?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "schedule" => cmd_schedule(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "analyze" => cmd_analyze(&args),
+        "profile" => cmd_profile(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

@@ -1,0 +1,123 @@
+//! Model specifications.  The scheduler and the performance model depend on
+//! the model only through these shapes (Eq. 13/15 of the paper), so the
+//! same code drives both the paper's Qwen2.5 configs (analytic/simulated)
+//! and the tiny config actually trained end-to-end on CPU.
+
+/// Transformer shape parameters, Qwen2.5-style (GQA + SwiGLU + tied head).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub vocab: u64,
+    pub hidden: u64,
+    pub layers: u64,
+    pub heads: u64,
+    pub kv_heads: u64,
+    pub ffn: u64,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.heads
+    }
+
+    /// h_kv of Eq. 13/15: the key/value hidden dimension.
+    pub fn kv_hidden(&self) -> u64 {
+        self.kv_heads * self.head_dim()
+    }
+
+    /// Parameter count (tied embedding, no biases) — used for the gradient
+    /// synchronization cost and the ZeRO-2 state estimate.
+    pub fn num_params(&self) -> u64 {
+        let h = self.hidden;
+        let hkv = self.kv_hidden();
+        let per_layer = h // ln1
+            + h * h // wq
+            + h * hkv * 2 // wk, wv
+            + h * h // wo
+            + h // ln2
+            + 3 * h * self.ffn; // gate, up, down
+        self.vocab * h + self.layers * per_layer + h
+    }
+
+    /// Qwen2.5-0.5B (paper's small evaluation model).
+    pub fn qwen2_5_0_5b() -> Self {
+        ModelSpec {
+            name: "qwen2.5-0.5b",
+            vocab: 151_936,
+            hidden: 896,
+            layers: 24,
+            heads: 14,
+            kv_heads: 2,
+            ffn: 4864,
+        }
+    }
+
+    /// Qwen2.5-7B (paper's large evaluation model).
+    pub fn qwen2_5_7b() -> Self {
+        ModelSpec {
+            name: "qwen2.5-7b",
+            vocab: 152_064,
+            hidden: 3584,
+            layers: 28,
+            heads: 28,
+            kv_heads: 4,
+            ffn: 18_944,
+        }
+    }
+
+    /// The tiny model compiled by python/compile/aot.py and trained for real
+    /// in examples/long_sft_train.rs.  MUST stay in sync with model.TINY.
+    pub fn tiny() -> Self {
+        ModelSpec {
+            name: "tiny",
+            vocab: 512,
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: 2,
+            ffn: 768,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "qwen2.5-0.5b" | "0.5b" => Some(Self::qwen2_5_0_5b()),
+            "qwen2.5-7b" | "7b" => Some(Self::qwen2_5_7b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_param_counts_are_plausible() {
+        // ~0.49B and ~7.6B with tied/untied caveats; we accept +-20%.
+        let p05 = ModelSpec::qwen2_5_0_5b().num_params() as f64;
+        assert!((0.35e9..0.65e9).contains(&p05), "{p05}");
+        let p7 = ModelSpec::qwen2_5_7b().num_params() as f64;
+        assert!((6.0e9..9.0e9).contains(&p7), "{p7}");
+    }
+
+    #[test]
+    fn tiny_matches_python_manifest_count() {
+        // python/compile/model.py reported 3_148_032 params for TINY.
+        assert_eq!(ModelSpec::tiny().num_params(), 3_148_032);
+    }
+
+    #[test]
+    fn kv_hidden() {
+        let m = ModelSpec::qwen2_5_0_5b();
+        assert_eq!(m.head_dim(), 64);
+        assert_eq!(m.kv_hidden(), 128);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelSpec::by_name("7b").unwrap().name, "qwen2.5-7b");
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,121 @@
+//! Eq. 13 — computational cost as a function of sequence length:
+//!
+//!   FLOPs(S) = 20·b·h²·S + 4·b·h·h_kv·S + 4·b·h·S²        (per layer, b=1)
+//!
+//! The linear terms cover the projections + SwiGLU MLP; the quadratic term
+//! is FlashAttention.  The hybrid linear/quadratic dependence — and where
+//! the quadratic term starts to dominate (Fig. 5) — is what makes balancing
+//! computation and memory simultaneously impossible (Section 4.3.1).
+
+use crate::model::ModelSpec;
+
+/// FLOPs estimation for one model configuration.
+#[derive(Clone, Debug)]
+pub struct FlopsModel {
+    pub hidden: f64,
+    pub kv_hidden: f64,
+    pub layers: f64,
+}
+
+impl FlopsModel {
+    pub fn new(spec: &ModelSpec) -> Self {
+        FlopsModel {
+            hidden: spec.hidden as f64,
+            kv_hidden: spec.kv_hidden() as f64,
+            layers: spec.layers as f64,
+        }
+    }
+
+    /// Linear (projection + MLP) component per layer, Eq. 13 terms 1–2.
+    pub fn linear_per_layer(&self, s: u32) -> f64 {
+        let s = s as f64;
+        20.0 * self.hidden * self.hidden * s + 4.0 * self.hidden * self.kv_hidden * s
+    }
+
+    /// Quadratic (attention) component per layer, Eq. 13 term 3.
+    pub fn attn_per_layer(&self, s: u32) -> f64 {
+        let s = s as f64;
+        4.0 * self.hidden * s * s
+    }
+
+    /// Whole-model FLOPs for one sequence of `s` tokens (Eq. 13 × layers).
+    pub fn seq(&self, s: u32) -> f64 {
+        self.layers * (self.linear_per_layer(s) + self.attn_per_layer(s))
+    }
+
+    /// Per-rank FLOPs of a CP-sharded sequence (Eq. 4: FLOPs(S)/N).
+    pub fn shard(&self, s: u32, n: usize) -> f64 {
+        self.seq(s) / n as f64
+    }
+
+    /// Whole-model attention FLOPs (for Fig. 1b's attention-only view).
+    pub fn attn(&self, s: u32) -> f64 {
+        self.layers * self.attn_per_layer(s)
+    }
+
+    /// Sequence length at which the quadratic term overtakes the linear
+    /// terms (Fig. 5's crossover): 4hS² = 20h²S + 4h·h_kv·S.
+    pub fn quadratic_crossover(&self) -> f64 {
+        (20.0 * self.hidden + 4.0 * self.kv_hidden) / 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    #[test]
+    fn eq13_hand_computed() {
+        // h=2, h_kv=1, 1 layer, S=3:
+        // 20*4*3 + 4*2*1*3 + 4*2*9 = 240 + 24 + 72 = 336
+        let f = FlopsModel { hidden: 2.0, kv_hidden: 1.0, layers: 1.0 };
+        assert_eq!(f.seq(3), 336.0);
+        assert_eq!(f.linear_per_layer(3), 264.0);
+        assert_eq!(f.attn_per_layer(3), 72.0);
+    }
+
+    #[test]
+    fn shard_divides_by_n() {
+        let f = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+        let s = 32_768;
+        assert!((f.shard(s, 8) - f.seq(s) / 8.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn crossover_near_4k_for_0_5b() {
+        // Appendix A.2: "the quadratic term begins to dominate only when the
+        // sequence length S exceeds approximately 4K" for Qwen2.5-0.5B.
+        let f = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+        let x = f.quadratic_crossover();
+        assert!((3_000.0..6_000.0).contains(&x), "crossover {x}");
+    }
+
+    #[test]
+    fn crossover_larger_for_7b() {
+        // Fig. 5: 7B has larger h => faster FLOPs growth, crossover moves up.
+        let c05 = FlopsModel::new(&ModelSpec::qwen2_5_0_5b()).quadratic_crossover();
+        let c7 = FlopsModel::new(&ModelSpec::qwen2_5_7b()).quadratic_crossover();
+        assert!(c7 > c05);
+    }
+
+    #[test]
+    fn appendix_a2_32k_vs_4k_ratio() {
+        // "when S=32K, the total computational workload is 30 times greater
+        // than when S=4K" (Qwen2.5-0.5B) — accept 20–40x.
+        let f = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+        let ratio = f.seq(32 * 1024) / f.seq(4 * 1024);
+        assert!((20.0..40.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn monotone_in_length() {
+        let f = FlopsModel::new(&ModelSpec::qwen2_5_7b());
+        let mut prev = 0.0;
+        for s in [1u32, 128, 1024, 8192, 65536] {
+            let x = f.seq(s);
+            assert!(x > prev);
+            prev = x;
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Performance modeling (paper Appendix A): FLOPs (Eq. 13), activation
+//! memory -> BucketSize (Eq. 12), communication volume/latency (Eq. 15/16),
+//! the hardware ground-truth used by the cluster simulator, and the joint
+//! cost function TDACP (Eq. 1–7) / iteration time (Eq. 8–11).
+
+pub mod comm;
+pub mod cost;
+pub mod flops;
+pub mod hardware;
+pub mod memory;
+pub mod profile;
+
+pub use comm::CommModel;
+pub use cost::CostModel;
+pub use flops::FlopsModel;
+pub use hardware::Hardware;
+pub use memory::MemoryModel;

@@ -1,0 +1,198 @@
+//! artifacts/manifest.txt parser — the AOT interchange contract with
+//! python/compile/aot.py (see that file for the writer).
+//!
+//! Format (line-oriented, whitespace-separated):
+//!   version 1
+//!   model vocab=512 hidden=256 layers=4 ... seed=0
+//!   param <name> <d0>x<d1>...
+//!   bucket <tokens> <hlo file>
+//!   attn <tokens> <hlo file>
+//!   params <bin file>
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest line {0}: {1}")]
+    Parse(usize, String),
+    #[error("unsupported manifest version {0}")]
+    Version(String),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// model config key=value pairs from the `model` line
+    pub model: BTreeMap<String, String>,
+    pub params: Vec<ParamSpec>,
+    /// bucket token count -> train_step HLO path
+    pub buckets: BTreeMap<u32, PathBuf>,
+    /// attention microbench artifacts
+    pub attn: BTreeMap<u32, PathBuf>,
+    pub params_bin: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, ManifestError> {
+        let mut model = BTreeMap::new();
+        let mut params = Vec::new();
+        let mut buckets = BTreeMap::new();
+        let mut attn = BTreeMap::new();
+        let mut params_bin = None;
+        for (i, line) in text.lines().enumerate() {
+            let ln = i + 1;
+            let mut toks = line.split_whitespace();
+            let Some(kind) = toks.next() else { continue };
+            let err = |m: &str| ManifestError::Parse(ln, m.to_string());
+            match kind {
+                "version" => {
+                    let v = toks.next().ok_or_else(|| err("missing version"))?;
+                    if v != "1" {
+                        return Err(ManifestError::Version(v.to_string()));
+                    }
+                }
+                "model" => {
+                    for kv in toks {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| err(&format!("bad model kv {kv:?}")))?;
+                        model.insert(k.to_string(), v.to_string());
+                    }
+                }
+                "param" => {
+                    let name = toks.next().ok_or_else(|| err("missing param name"))?;
+                    let dims = toks.next().ok_or_else(|| err("missing param shape"))?;
+                    let shape = dims
+                        .split('x')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()
+                        .map_err(|e| err(&format!("bad shape {dims:?}: {e}")))?;
+                    params.push(ParamSpec { name: name.to_string(), shape });
+                }
+                "bucket" | "attn" => {
+                    let t = toks
+                        .next()
+                        .and_then(|t| t.parse::<u32>().ok())
+                        .ok_or_else(|| err("missing/invalid token count"))?;
+                    let file = toks.next().ok_or_else(|| err("missing file"))?;
+                    let map = if kind == "bucket" { &mut buckets } else { &mut attn };
+                    map.insert(t, dir.join(file));
+                }
+                "params" => {
+                    let file = toks.next().ok_or_else(|| err("missing params file"))?;
+                    params_bin = Some(dir.join(file));
+                }
+                other => return Err(err(&format!("unknown record {other:?}"))),
+            }
+        }
+        Ok(Manifest {
+            dir,
+            model,
+            params,
+            buckets,
+            attn,
+            params_bin: params_bin.ok_or(ManifestError::Parse(0, "no params line".into()))?,
+        })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn model_u64(&self, key: &str) -> Option<u64> {
+        self.model.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Smallest bucket that can hold `tokens`, if any.
+    pub fn bucket_for(&self, tokens: u32) -> Option<u32> {
+        self.buckets.keys().copied().find(|&b| b >= tokens)
+    }
+
+    pub fn largest_bucket(&self) -> Option<u32> {
+        self.buckets.keys().copied().max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+model vocab=512 hidden=256 layers=4 seed=0
+param tok_embed 512x256
+param layer0.ln1 256
+bucket 256 train_step_t256.hlo.txt
+bucket 512 train_step_t512.hlo.txt
+attn 512 attn_fwd_t512.hlo.txt
+params params.bin
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.model_u64("vocab"), Some(512));
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].numel(), 512 * 256);
+        assert_eq!(m.total_params(), 512 * 256 + 256);
+        assert_eq!(m.buckets.len(), 2);
+        assert_eq!(m.bucket_for(300), Some(512));
+        assert_eq!(m.bucket_for(100), Some(256));
+        assert_eq!(m.bucket_for(9999), None);
+        assert_eq!(m.largest_bucket(), Some(512));
+        assert_eq!(m.params_bin, PathBuf::from("/a/params.bin"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let e = Manifest::parse("version 9\nparams p.bin\n", PathBuf::new());
+        assert!(matches!(e, Err(ManifestError::Version(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_record() {
+        let e = Manifest::parse("version 1\nwat 3\n", PathBuf::new());
+        assert!(matches!(e, Err(ManifestError::Parse(2, _))));
+    }
+
+    #[test]
+    fn requires_params_line() {
+        let e = Manifest::parse("version 1\n", PathBuf::new());
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.txt").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.total_params(), 3_148_032);
+            assert!(m.largest_bucket().unwrap() >= 256);
+            for p in m.buckets.values() {
+                assert!(p.exists(), "{p:?}");
+            }
+            assert!(m.params_bin.exists());
+        }
+    }
+}

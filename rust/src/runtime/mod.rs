@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO text + params.bin + manifest) and executes train steps on the CPU
+//! PJRT client.  Python never runs here — the rust binary is self-contained
+//! once artifacts exist.
+
+pub mod manifest;
+pub mod params;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use params::FlatParams;
+pub use pjrt::{Runtime, StepOutput};

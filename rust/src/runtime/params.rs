@@ -1,0 +1,130 @@
+//! Flat parameter storage: all model parameters live in one contiguous f32
+//! buffer (manifest order), sliced per-tensor when building PJRT literals.
+//! Adam runs directly over this buffer (coordinator/optimizer.rs).
+
+use crate::runtime::manifest::Manifest;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParamsError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("params.bin holds {got} f32s, manifest expects {want}")]
+    SizeMismatch { got: usize, want: usize },
+}
+
+/// Flat f32 parameter (or gradient) buffer with per-tensor offsets.
+#[derive(Clone, Debug)]
+pub struct FlatParams {
+    pub data: Vec<f32>,
+    /// (offset, numel) per manifest param, in order.
+    pub spans: Vec<(usize, usize)>,
+}
+
+impl FlatParams {
+    pub fn zeros_like(manifest: &Manifest) -> Self {
+        let spans = Self::spans_of(manifest);
+        let total = manifest.total_params();
+        FlatParams { data: vec![0.0; total], spans }
+    }
+
+    fn spans_of(manifest: &Manifest) -> Vec<(usize, usize)> {
+        let mut spans = Vec::with_capacity(manifest.params.len());
+        let mut off = 0;
+        for p in &manifest.params {
+            spans.push((off, p.numel()));
+            off += p.numel();
+        }
+        spans
+    }
+
+    /// Load params.bin (f32 LE, manifest order).
+    pub fn load(manifest: &Manifest) -> Result<Self, ParamsError> {
+        let bytes = std::fs::read(&manifest.params_bin)?;
+        let want = manifest.total_params();
+        if bytes.len() != want * 4 {
+            return Err(ParamsError::SizeMismatch { got: bytes.len() / 4, want });
+        }
+        let mut data = vec![0f32; want];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        Ok(FlatParams { data, spans: Self::spans_of(manifest) })
+    }
+
+    pub fn tensor(&self, idx: usize) -> &[f32] {
+        let (off, n) = self.spans[idx];
+        &self.data[off..off + n]
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny_manifest(dir: PathBuf) -> Manifest {
+        Manifest::parse(
+            "version 1\nmodel vocab=4\nparam a 2x3\nparam b 4\nbucket 128 x.hlo.txt\nparams params.bin\n",
+            dir,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn zeros_like_has_right_layout() {
+        let m = tiny_manifest(PathBuf::from("/tmp"));
+        let p = FlatParams::zeros_like(&m);
+        assert_eq!(p.data.len(), 10);
+        assert_eq!(p.spans, vec![(0, 6), (6, 4)]);
+        assert_eq!(p.tensor(1).len(), 4);
+        assert_eq!(p.num_tensors(), 2);
+        assert_eq!(p.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn load_round_trips_le_f32() {
+        let dir = std::env::temp_dir().join(format!("skrull_params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = (0..10).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("params.bin"), bytes).unwrap();
+        let m = tiny_manifest(dir.clone());
+        let p = FlatParams::load(&m).unwrap();
+        assert_eq!(p.data, vals);
+        assert_eq!(p.tensor(0), &vals[..6]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_is_detected() {
+        let dir = std::env::temp_dir().join(format!("skrull_params_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("params.bin"), [0u8; 8]).unwrap();
+        let m = tiny_manifest(dir.clone());
+        assert!(matches!(
+            FlatParams::load(&m),
+            Err(ParamsError::SizeMismatch { got: 2, want: 10 })
+        ));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn loads_real_params_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.txt").exists() {
+            let m = Manifest::load(dir).unwrap();
+            let p = FlatParams::load(&m).unwrap();
+            assert_eq!(p.data.len(), 3_148_032);
+            assert!(p.l2_norm() > 0.0);
+            assert!(p.data.iter().all(|x| x.is_finite()));
+        }
+    }
+}

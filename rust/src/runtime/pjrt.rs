@@ -1,0 +1,182 @@
+//! The PJRT execution engine: compile HLO-text artifacts once per bucket
+//! size, then execute train steps from the coordinator's hot loop.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5's serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+//!
+//! Execution goes through `execute_b` with rust-owned `PjRtBuffer`s, NOT
+//! the crate's `execute(&[Literal])`: that path's C++ wrapper `release()`s
+//! the input device buffers it creates and never frees them, leaking the
+//! full parameter set (~12.6 MB for the tiny model) on every call
+//! (EXPERIMENTS.md §Perf).  Owning the buffers also lets the trainer
+//! upload parameters once per optimizer step and share them across all of
+//! the step's micro-batch executions.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::packing::PackedBucket;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::params::FlatParams;
+
+/// Output of one executed train step.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// flat gradient buffer, same layout as FlatParams
+    pub grads: Vec<f32>,
+    /// pure execute() wall time (excludes literal marshalling)
+    pub exec_seconds: f64,
+}
+
+/// Device-resident model parameters (one buffer per tensor, manifest
+/// order).  Upload once per optimizer step, reuse for every micro-batch.
+pub struct DeviceParams {
+    buffers: Vec<xla::PjRtBuffer>,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<u32, xla::PjRtLoadedExecutable>,
+    /// cumulative compile seconds (reported by the e2e example)
+    pub compile_seconds: f64,
+    /// cumulative host->device parameter upload seconds
+    pub upload_seconds: f64,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU PJRT client.  Executables are
+    /// compiled lazily per bucket (call `ensure_bucket` to force).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir.as_ref())
+            .with_context(|| format!("loading manifest from {:?}", artifacts_dir.as_ref()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            compile_seconds: 0.0,
+            upload_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile the train-step executable for bucket size `t` if needed.
+    pub fn ensure_bucket(&mut self, t: u32) -> Result<()> {
+        if self.executables.contains_key(&t) {
+            return Ok(());
+        }
+        let path = self
+            .manifest
+            .buckets
+            .get(&t)
+            .with_context(|| format!("no artifact for bucket {t}"))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        self.compile_seconds += t0.elapsed().as_secs_f64();
+        self.executables.insert(t, exe);
+        Ok(())
+    }
+
+    /// Test/bench access to a compiled executable (panics if not compiled).
+    pub fn executable_for_test(&self, t: u32) -> &xla::PjRtLoadedExecutable {
+        &self.executables[&t]
+    }
+
+    pub fn available_buckets(&self) -> Vec<u32> {
+        self.manifest.buckets.keys().copied().collect()
+    }
+
+    /// Load the initial parameters written by aot.py.
+    pub fn initial_params(&self) -> Result<FlatParams> {
+        Ok(FlatParams::load(&self.manifest)?)
+    }
+
+    /// Upload the flat parameters to the device once (per optimizer step).
+    pub fn upload_params(&mut self, params: &FlatParams) -> Result<DeviceParams> {
+        let t0 = Instant::now();
+        let mut buffers = Vec::with_capacity(self.manifest.params.len());
+        for (i, spec) in self.manifest.params.iter().enumerate() {
+            buffers.push(self.client.buffer_from_host_buffer(
+                params.tensor(i),
+                &spec.shape,
+                None,
+            )?);
+        }
+        self.upload_seconds += t0.elapsed().as_secs_f64();
+        Ok(DeviceParams { buffers })
+    }
+
+    /// Execute one train step on a packed bucket with pre-uploaded params.
+    /// The bucket's capacity must match a compiled artifact exactly (HLO
+    /// shapes are static).
+    pub fn train_step_on(
+        &mut self,
+        params: &DeviceParams,
+        bucket: &PackedBucket,
+    ) -> Result<StepOutput> {
+        let t = bucket.capacity as u32;
+        self.ensure_bucket(t)?;
+
+        // batch inputs: tokens, targets, loss_mask, segment_ids, positions
+        let cap = [bucket.capacity];
+        let mut inputs = Vec::with_capacity(5);
+        inputs.push(self.client.buffer_from_host_buffer(&bucket.tokens, &cap, None)?);
+        inputs.push(self.client.buffer_from_host_buffer(&bucket.targets, &cap, None)?);
+        inputs.push(self.client.buffer_from_host_buffer(&bucket.loss_mask, &cap, None)?);
+        inputs.push(self.client.buffer_from_host_buffer(&bucket.segment_ids, &cap, None)?);
+        inputs.push(self.client.buffer_from_host_buffer(&bucket.positions, &cap, None)?);
+
+        let exe = &self.executables[&t];
+        let args: Vec<&xla::PjRtBuffer> =
+            params.buffers.iter().chain(inputs.iter()).collect();
+
+        let t0 = Instant::now();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: a single tuple root of
+        // (loss, grad_0, ..., grad_{n-1})
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        let n_tensors = params.buffers.len();
+        anyhow::ensure!(
+            parts.len() == 1 + n_tensors,
+            "expected {} outputs, got {}",
+            1 + n_tensors,
+            parts.len()
+        );
+        let loss = parts[0].to_vec::<f32>()?[0];
+        let total: usize = self.manifest.total_params();
+        let mut grads = vec![0f32; total];
+        let mut off = 0;
+        for (i, part) in parts[1..].iter().enumerate() {
+            let n = self.manifest.params[i].numel();
+            let v = part.to_vec::<f32>()?;
+            anyhow::ensure!(v.len() == n, "grad {i}: {} vs {}", v.len(), n);
+            grads[off..off + n].copy_from_slice(&v);
+            off += n;
+        }
+        Ok(StepOutput { loss, grads, exec_seconds })
+    }
+
+    /// Convenience: upload + execute in one call (tests, one-shot use).
+    pub fn train_step(&mut self, params: &FlatParams, bucket: &PackedBucket) -> Result<StepOutput> {
+        let dev = self.upload_params(params)?;
+        self.train_step_on(&dev, bucket)
+    }
+}
+
+// NOTE: integration tests that actually execute artifacts live in
+// rust/tests/runtime_e2e.rs (they need `make artifacts` to have run).

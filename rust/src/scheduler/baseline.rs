@@ -1,0 +1,224 @@
+//! Comparator schedulers for Fig. 3 and the related-work discussion.
+//!
+//! * `deepspeed` — the paper's baseline: DeepSpeed + ZeRO-2 with CP sized
+//!   for the longest sequence.  No data scheduling: sequences go to DP
+//!   ranks round-robin in arrival order, one sequence per micro-batch
+//!   (Long-SFT practice when the length spread is extreme), and *every*
+//!   sequence is CP-sharded across all N ranks.
+//! * `deepspeed_packed` — a stronger baseline that greedily packs arrival-
+//!   order sequences under the token cap (still all-sharded, no balance).
+//! * `dacp_only` — Fig. 3's step-by-step lane: baseline batching, but DACP
+//!   placement inside each micro-batch.
+//! * `sorted_batching` — LongAlign-style: sort the global batch, pack
+//!   contiguous chunks (efficient but equivalence-breaking; Section 6).
+
+use crate::data::Sequence;
+use crate::perfmodel::FlopsModel;
+use crate::scheduler::dacp::{self, DacpConfig};
+use crate::scheduler::plan::{DacpPlan, IterationSchedule, MicroBatch, RankSchedule, SchedError};
+
+/// Round-robin sequences over DP ranks in arrival order.
+fn round_robin(batch: &[Sequence], dp: usize) -> Vec<Vec<Sequence>> {
+    let mut bins: Vec<Vec<Sequence>> = vec![Vec::new(); dp];
+    for (i, &s) in batch.iter().enumerate() {
+        bins[i % dp].push(s);
+    }
+    bins
+}
+
+/// DeepSpeed-like baseline: 1 sequence per micro-batch, everything sharded.
+pub fn deepspeed(batch: &[Sequence], dp: usize, _cp: usize) -> IterationSchedule {
+    let ranks = round_robin(batch, dp)
+        .into_iter()
+        .map(|subset| RankSchedule {
+            micro_batches: subset
+                .into_iter()
+                .map(|s| MicroBatch { seqs: vec![s], plan: DacpPlan::all_distributed(1) })
+                .collect(),
+        })
+        .collect();
+    IterationSchedule { ranks }
+}
+
+/// DeepSpeed + naive packing: fill micro-batches in arrival order up to the
+/// C·N token cap; still no placement decisions (all sharded).
+pub fn deepspeed_packed(
+    batch: &[Sequence],
+    dp: usize,
+    cp: usize,
+    bucket_size: u32,
+) -> IterationSchedule {
+    let cap = bucket_size as u64 * cp as u64;
+    let ranks = round_robin(batch, dp)
+        .into_iter()
+        .map(|subset| {
+            let mut mbs: Vec<Vec<Sequence>> = Vec::new();
+            let mut cur: Vec<Sequence> = Vec::new();
+            let mut cur_tokens = 0u64;
+            for s in subset {
+                if !cur.is_empty() && cur_tokens + s.len as u64 > cap {
+                    mbs.push(std::mem::take(&mut cur));
+                    cur_tokens = 0;
+                }
+                cur_tokens += s.len as u64;
+                cur.push(s);
+            }
+            if !cur.is_empty() {
+                mbs.push(cur);
+            }
+            RankSchedule {
+                micro_batches: mbs
+                    .into_iter()
+                    .map(|seqs| {
+                        let k = seqs.len();
+                        MicroBatch { seqs, plan: DacpPlan::all_distributed(k) }
+                    })
+                    .collect(),
+            }
+        })
+        .collect();
+    IterationSchedule { ranks }
+}
+
+/// Step-by-step lane 2: baseline (packed) batching, DACP placement inside.
+pub fn dacp_only(
+    batch: &[Sequence],
+    dp: usize,
+    cp: usize,
+    bucket_size: u32,
+    flops: &FlopsModel,
+) -> Result<IterationSchedule, SchedError> {
+    let base = deepspeed_packed(batch, dp, cp, bucket_size);
+    let cfg = DacpConfig::new(bucket_size, cp);
+    let ranks = base
+        .ranks
+        .into_iter()
+        .map(|r| {
+            let micro_batches = r
+                .micro_batches
+                .into_iter()
+                .map(|mb| {
+                    let lens = mb.lens();
+                    dacp::schedule(&lens, &cfg, flops).map(|plan| MicroBatch { seqs: mb.seqs, plan })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(RankSchedule { micro_batches })
+        })
+        .collect::<Result<Vec<_>, SchedError>>()?;
+    Ok(IterationSchedule { ranks })
+}
+
+/// LongAlign-style sorted batching: sort the whole batch, pack contiguous
+/// runs under the cap, deal micro-batches round-robin over DP ranks.
+pub fn sorted_batching(
+    batch: &[Sequence],
+    dp: usize,
+    cp: usize,
+    bucket_size: u32,
+) -> IterationSchedule {
+    let cap = bucket_size as u64 * cp as u64;
+    let mut sorted: Vec<Sequence> = batch.to_vec();
+    sorted.sort_by_key(|s| s.len);
+    let mut mbs: Vec<Vec<Sequence>> = Vec::new();
+    let mut cur: Vec<Sequence> = Vec::new();
+    let mut cur_tokens = 0u64;
+    for s in sorted {
+        if !cur.is_empty() && cur_tokens + s.len as u64 > cap {
+            mbs.push(std::mem::take(&mut cur));
+            cur_tokens = 0;
+        }
+        cur_tokens += s.len as u64;
+        cur.push(s);
+    }
+    if !cur.is_empty() {
+        mbs.push(cur);
+    }
+    let mut ranks: Vec<RankSchedule> = (0..dp).map(|_| RankSchedule::default()).collect();
+    for (i, seqs) in mbs.into_iter().enumerate() {
+        let k = seqs.len();
+        ranks[i % dp]
+            .micro_batches
+            .push(MicroBatch { seqs, plan: DacpPlan::all_distributed(k) });
+    }
+    IterationSchedule { ranks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    fn fm() -> FlopsModel {
+        FlopsModel::new(&ModelSpec::qwen2_5_0_5b())
+    }
+
+    fn seqs(lens: &[u32]) -> Vec<Sequence> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect()
+    }
+
+    #[test]
+    fn deepspeed_one_seq_per_microbatch_all_sharded() {
+        let batch = seqs(&[100, 200, 300, 400, 500]);
+        let sched = deepspeed(&batch, 2, 8);
+        assert_eq!(sched.ranks[0].micro_batches.len(), 3);
+        assert_eq!(sched.ranks[1].micro_batches.len(), 2);
+        for r in &sched.ranks {
+            for mb in &r.micro_batches {
+                assert_eq!(mb.seqs.len(), 1);
+                assert_eq!(mb.plan.num_distributed(), 1);
+            }
+        }
+        assert_eq!(sched.assigned_ids(), (0..5).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn packed_baseline_respects_cap_and_order() {
+        let batch = seqs(&[600, 600, 600, 600]);
+        // dp=1, cap = 1000*1 → pairs of 600 overflow: 1 per mb
+        let sched = deepspeed_packed(&batch, 1, 1, 1000);
+        assert_eq!(sched.ranks[0].micro_batches.len(), 4);
+        // cap 1300 → 600+600=1200 fits, 2 per mb
+        let sched = deepspeed_packed(&batch, 1, 1, 1300);
+        assert_eq!(sched.ranks[0].micro_batches.len(), 2);
+        let mb0 = &sched.ranks[0].micro_batches[0];
+        assert!(mb0.total_tokens() <= 1300);
+    }
+
+    #[test]
+    fn dacp_only_localizes_short_sequences() {
+        let batch = seqs(&[100, 200, 300, 400]);
+        let sched = dacp_only(&batch, 1, 8, 26 * 1024, &fm()).unwrap();
+        for r in &sched.ranks {
+            for mb in &r.micro_batches {
+                assert_eq!(mb.plan.num_distributed(), 0, "shorts must stay local");
+            }
+        }
+        assert_eq!(sched.assigned_ids(), (0..4).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn sorted_batching_groups_similar_lengths() {
+        let batch = seqs(&[10_000, 50, 9_000, 60, 8_000, 70]);
+        let sched = sorted_batching(&batch, 2, 8, 26 * 1024);
+        assert_eq!(sched.assigned_ids(), (0..6).collect::<Vec<u64>>());
+        // first micro-batch (shortest-first) holds the short ones
+        let first = &sched.ranks[0].micro_batches[0];
+        assert!(first.seqs.iter().any(|s| s.len <= 70));
+    }
+
+    #[test]
+    fn all_baselines_cover_every_sequence() {
+        let batch = seqs(&[5, 10, 2000, 40_000, 17, 900, 33_000, 120]);
+        for sched in [
+            deepspeed(&batch, 4, 8),
+            deepspeed_packed(&batch, 4, 8, 26 * 1024),
+            dacp_only(&batch, 4, 8, 26 * 1024, &fm()).unwrap(),
+            sorted_batching(&batch, 4, 8, 26 * 1024),
+        ] {
+            assert_eq!(sched.assigned_ids(), (0..8).collect::<Vec<u64>>());
+        }
+    }
+}

@@ -1,0 +1,626 @@
+//! Algorithm 1 + Algorithm 3: the DACP heuristic.
+//!
+//! Principles (Section 4.3.2): (i) avoid sharding, (ii) prioritize
+//! computation balance, (iii) roll back on memory pressure.
+//!
+//! Bookkeeping per CP rank: RemainBucket RB (token budget left, Eq. 7) and
+//! Loads L (FLOPs assigned).  Sequences are visited in ascending length;
+//! each tries (a) the min-load rank, (b) the max-remaining rank, then
+//! (c) distribution, and if even distribution cannot fit, a local sequence
+//! in the tightest bucket is rolled back to distributed and the sequence is
+//! retried.
+//!
+//! Two deliberate deviations from the paper's pseudocode (documented in
+//! DESIGN.md):
+//!  * Alg. 3's ROLLBACK updates `RB[rank] ← RB[rank] - S[i] + S[i]/N`; the
+//!    signs are inverted there (rolling a local sequence *out* frees its
+//!    tokens and charges the shard), and only the chosen rank is updated
+//!    even though a distributed sequence occupies S/N on *every* rank
+//!    (Eq. 7).  We apply the sign-corrected, all-rank update — otherwise
+//!    the memory constraint the roll-back exists to protect is violated.
+//!  * We roll back the *largest* local sequence in the bucket rather than
+//!    the first in iteration order: it frees the most memory per roll-back,
+//!    so the retry loop converges in fewer steps (ablated in benches).
+
+use crate::perfmodel::FlopsModel;
+use crate::scheduler::plan::{DacpPlan, SchedError, DISTRIBUTED};
+
+/// Tuning knobs, mostly for ablation benches.
+#[derive(Clone, Debug)]
+pub struct DacpConfig {
+    pub bucket_size: u32,
+    pub cp_degree: usize,
+    /// Roll back the largest local (true, our default) or the first-found
+    /// (paper's literal Alg. 3).
+    pub rollback_largest: bool,
+}
+
+impl DacpConfig {
+    pub fn new(bucket_size: u32, cp_degree: usize) -> Self {
+        DacpConfig { bucket_size, cp_degree, rollback_largest: true }
+    }
+}
+
+/// Internal mutable state: RB, L and the assignment under construction.
+struct State<'a> {
+    cfg: &'a DacpConfig,
+    flops: &'a FlopsModel,
+    lens: &'a [u32],
+    /// remaining bucket tokens per rank (can go fractional via shards —
+    /// tracked in tokens, shards use ceiling division)
+    rb: Vec<i64>,
+    /// FLOPs load per rank
+    load: Vec<f64>,
+    assign: Vec<i32>,
+}
+
+impl<'a> State<'a> {
+    fn shard_tokens(&self, len: u32) -> i64 {
+        let n = self.cfg.cp_degree as i64;
+        (len as i64 + n - 1) / n
+    }
+
+    /// UPDATELOCAL (Alg. 3): place sequence `idx` whole on `rank`.
+    fn update_local(&mut self, idx: usize, rank: usize) {
+        self.assign[idx] = rank as i32;
+        self.rb[rank] -= self.lens[idx] as i64;
+        self.load[rank] += self.flops.seq(self.lens[idx]);
+    }
+
+    /// UPDATEALL (Alg. 3): distribute sequence `idx` over all ranks.
+    fn update_all(&mut self, idx: usize) {
+        self.assign[idx] = DISTRIBUTED;
+        let shard = self.shard_tokens(self.lens[idx]);
+        let w = self.flops.shard(self.lens[idx], self.cfg.cp_degree);
+        for j in 0..self.cfg.cp_degree {
+            self.rb[j] -= shard;
+            self.load[j] += w;
+        }
+    }
+
+    /// ROLLBACK (Alg. 3, sign-corrected): demote one local sequence of
+    /// `rank` to distributed.  Returns false if the bucket has no locals.
+    fn rollback(&mut self, rank: usize) -> bool {
+        let candidate = self
+            .assign
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == rank as i32)
+            .map(|(i, _)| i)
+            .reduce(|best, i| {
+                if self.cfg.rollback_largest {
+                    if self.lens[i] > self.lens[best] {
+                        i
+                    } else {
+                        best
+                    }
+                } else {
+                    best.min(i)
+                }
+            });
+        let Some(i) = candidate else { return false };
+        // undo the local placement...
+        self.rb[rank] += self.lens[i] as i64;
+        self.load[rank] -= self.flops.seq(self.lens[i]);
+        // ...and re-account it as distributed on every rank
+        self.update_all(i);
+        true
+    }
+
+    fn argmin_load(&self) -> usize {
+        (0..self.cfg.cp_degree)
+            .min_by(|&a, &b| self.load[a].partial_cmp(&self.load[b]).unwrap())
+            .unwrap()
+    }
+
+    fn argmax_rb(&self) -> usize {
+        (0..self.cfg.cp_degree).max_by_key(|&j| self.rb[j]).unwrap()
+    }
+
+    fn argmin_rb(&self) -> usize {
+        (0..self.cfg.cp_degree).min_by_key(|&j| self.rb[j]).unwrap()
+    }
+}
+
+/// Algorithm 1.  Returns the assignment in the original index order of
+/// `lens` (the paper sorts in place; we schedule through a sorted index
+/// view so callers keep stable sequence identity).
+pub fn schedule(lens: &[u32], cfg: &DacpConfig, flops: &FlopsModel) -> Result<DacpPlan, SchedError> {
+    let n = cfg.cp_degree;
+    let cap = cfg.bucket_size as u64 * n as u64;
+    for &l in lens {
+        if l as u64 > cap {
+            return Err(SchedError::TooLong { len: l, cap });
+        }
+    }
+    let mut st = State {
+        cfg,
+        flops,
+        lens,
+        rb: vec![cfg.bucket_size as i64; n],
+        load: vec![0.0; n],
+        assign: vec![i32::MIN; lens.len()],
+    };
+
+    // ascending length order (line 1)
+    let mut order: Vec<usize> = (0..lens.len()).collect();
+    order.sort_by_key(|&i| lens[i]);
+
+    let mut qi = 0;
+    // Roll-backs can only happen O(K) times total (each converts one local
+    // to distributed, permanently), so this loop terminates.
+    let mut rollback_budget = lens.len() + 1;
+    while qi < order.len() {
+        let i = order[qi];
+        let s = lens[i] as i64;
+
+        // (a) min-load rank, if it fits (lines 6-8)
+        let t = st.argmin_load();
+        if st.rb[t] >= s {
+            st.update_local(i, t);
+            qi += 1;
+            continue;
+        }
+        // (b) max-remaining rank (lines 10-12)
+        let t = st.argmax_rb();
+        if st.rb[t] >= s {
+            st.update_local(i, t);
+            qi += 1;
+            continue;
+        }
+        // (c) distribute if every rank can take a shard (lines 14-16);
+        // feasibility is gated by the *tightest* bucket.
+        let t = st.argmin_rb();
+        let shard = st.shard_tokens(lens[i]);
+        if st.rb[t] >= shard {
+            st.update_all(i);
+            qi += 1;
+            continue;
+        }
+        // (d) roll back a local in the tightest bucket and retry (line 18)
+        if rollback_budget == 0 || !st.rollback(t) {
+            return Err(SchedError::RollbackFailed { rank: t });
+        }
+        rollback_budget -= 1;
+        // retry the same sequence (line 19: i ← i-1; continue)
+    }
+
+    let plan = DacpPlan { assign: st.assign };
+    debug_assert!(plan.validate(lens, cfg.bucket_size, n).is_ok());
+    Ok(plan)
+}
+
+/// Cost-aware refinement (extension, not in the paper's Alg. 1; see the
+/// `ablations` bench).  Algorithm 1's "avoid sharding" principle can leave
+/// a single long local sequence dominating the micro-batch makespan even
+/// when distributing it would be much faster.  This pass greedily applies
+/// the best of two move types while TDACP improves:
+///   * demote a local sequence to distributed (if every rank has room)
+///   * migrate a local sequence to another rank (if it fits)
+/// The plan stays feasible by construction (validated in debug builds).
+pub fn refine(
+    plan: &DacpPlan,
+    lens: &[u32],
+    cfg: &DacpConfig,
+    cost: &crate::perfmodel::CostModel,
+) -> DacpPlan {
+    Refiner::new(lens, cfg, cost, plan.clone()).run()
+}
+
+/// Incremental refinement engine.  The naive formulation (clone the plan,
+/// re-validate, recompute TDACP for every candidate move) is O(K²·N) per
+/// round and dominated wall-clock at large K (EXPERIMENTS.md §Perf);
+/// maintaining per-rank FLOPs/token sums makes each candidate O(N).
+struct Refiner<'a> {
+    lens: &'a [u32],
+    cfg: &'a DacpConfig,
+    cost: &'a crate::perfmodel::CostModel,
+    plan: DacpPlan,
+    /// per-rank Σ seq_layer_flops of locals
+    local_flops: Vec<f64>,
+    /// per-rank Σ tokens of locals
+    local_tokens: Vec<i64>,
+    /// Σ seq_layer_flops of distributed seqs
+    dist_flops: f64,
+    /// Σ tokens of distributed seqs (drives T_comm)
+    dist_tokens: u64,
+    /// Σ ceil(S/N) of distributed seqs (drives Eq. 7)
+    dist_shard_tokens: i64,
+    /// cached per-seq layer flops
+    seq_flops: Vec<f64>,
+    /// cached per-rank t_comp_per_layer(local_flops[j])
+    t_local: Vec<f64>,
+    /// top-3 (value, rank) of t_local — lets a move be costed in O(1)
+    top_t_local: [(f64, usize); 3],
+    /// top-3 (tokens, rank) of local_tokens — O(1) Eq. 7 check
+    top_tokens: [(i64, usize); 3],
+}
+
+/// Top-3 (value, index) of a slice, descending; missing entries keep the
+/// sentinel.  Excluding at most two indices always leaves a valid max.
+macro_rules! top3_fn {
+    ($name:ident, $t:ty, $sentinel:expr) => {
+        fn $name(xs: &[$t]) -> [($t, usize); 3] {
+            let mut top = [($sentinel, usize::MAX); 3];
+            for (i, &x) in xs.iter().enumerate() {
+                if x > top[0].0 {
+                    top[2] = top[1];
+                    top[1] = top[0];
+                    top[0] = (x, i);
+                } else if x > top[1].0 {
+                    top[2] = top[1];
+                    top[1] = (x, i);
+                } else if x > top[2].0 {
+                    top[2] = (x, i);
+                }
+            }
+            top
+        }
+    };
+}
+top3_fn!(top3_f64, f64, f64::NEG_INFINITY);
+top3_fn!(top3_i64, i64, i64::MIN);
+
+/// Largest value among entries whose index is neither `a` nor `b`.
+fn max_excluding<T: Copy>(top: &[(T, usize); 3], a: usize, b: usize, sentinel: T) -> T {
+    for &(v, i) in top {
+        if i != a && i != b && i != usize::MAX {
+            return v;
+        }
+    }
+    sentinel
+}
+
+impl<'a> Refiner<'a> {
+    fn new(
+        lens: &'a [u32],
+        cfg: &'a DacpConfig,
+        cost: &'a crate::perfmodel::CostModel,
+        plan: DacpPlan,
+    ) -> Self {
+        let n = cfg.cp_degree;
+        let seq_flops: Vec<f64> = lens.iter().map(|&s| cost.seq_layer_flops(s)).collect();
+        let mut r = Refiner {
+            lens,
+            cfg,
+            cost,
+            plan,
+            local_flops: vec![0.0; n],
+            local_tokens: vec![0; n],
+            dist_flops: 0.0,
+            dist_tokens: 0,
+            dist_shard_tokens: 0,
+            seq_flops,
+            t_local: vec![0.0; n],
+            top_t_local: [(f64::NEG_INFINITY, usize::MAX); 3],
+            top_tokens: [(i64::MIN, usize::MAX); 3],
+        };
+        r.rebuild_sums();
+        r
+    }
+
+    fn shard_tokens(&self, s: u32) -> i64 {
+        let n = self.cfg.cp_degree as i64;
+        (s as i64 + n - 1) / n
+    }
+
+    /// Recompute the aggregates from the assignment (also re-run between
+    /// rounds to kill f64 add/subtract drift).
+    fn rebuild_sums(&mut self) {
+        self.local_flops.iter_mut().for_each(|x| *x = 0.0);
+        self.local_tokens.iter_mut().for_each(|x| *x = 0);
+        self.dist_flops = 0.0;
+        self.dist_tokens = 0;
+        self.dist_shard_tokens = 0;
+        for (k, &a) in self.plan.assign.iter().enumerate() {
+            if a == DISTRIBUTED {
+                self.dist_flops += self.seq_flops[k];
+                self.dist_tokens += self.lens[k] as u64;
+                self.dist_shard_tokens += self.shard_tokens(self.lens[k]);
+            } else {
+                self.local_flops[a as usize] += self.seq_flops[k];
+                self.local_tokens[a as usize] += self.lens[k] as i64;
+            }
+        }
+        for j in 0..self.t_local.len() {
+            self.t_local[j] = self.cost.t_comp_per_layer(self.local_flops[j]);
+        }
+        self.top_t_local = top3_f64(&self.t_local);
+        self.top_tokens = top3_i64(&self.local_tokens);
+    }
+
+    /// TDACP of the current aggregates, with sequence k hypothetically
+    /// moved to `to` (DISTRIBUTED or a rank).  Returns None if the move
+    /// violates Eq. 7.
+    fn move_cost(&self, k: usize, to: i32) -> Option<f64> {
+        let n = self.cfg.cp_degree;
+        let from = self.plan.assign[k];
+        let s = self.lens[k];
+        let w = self.seq_flops[k];
+        // aggregates after the move
+        let mut dist_flops = self.dist_flops;
+        let mut dist_tokens = self.dist_tokens;
+        let mut dist_shard = self.dist_shard_tokens;
+        if from == DISTRIBUTED {
+            dist_flops -= w;
+            dist_tokens -= s as u64;
+            dist_shard -= self.shard_tokens(s);
+        }
+        if to == DISTRIBUTED {
+            dist_flops += w;
+            dist_tokens += s as u64;
+            dist_shard += self.shard_tokens(s);
+        }
+        // at most two ranks change their local sums
+        let ra = if from >= 0 { from as usize } else { usize::MAX };
+        let rb = if to >= 0 { to as usize } else { usize::MAX };
+
+        // Eq. 7 feasibility in O(1): the binding rank is either an
+        // unchanged max-token rank or one of the two changed ranks.
+        let cap = self.cfg.bucket_size as i64;
+        let mut max_tokens = max_excluding(&self.top_tokens, ra, rb, i64::MIN);
+        if ra != usize::MAX {
+            max_tokens = max_tokens.max(self.local_tokens[ra] - s as i64);
+        }
+        if rb != usize::MAX {
+            max_tokens = max_tokens.max(self.local_tokens[rb] + s as i64);
+        }
+        if max_tokens.max(0) + dist_shard > cap {
+            return None;
+        }
+
+        // Eq. 1/2 cost in O(1): max_j max(t_local_j, t_comm) + t_dist.
+        let t_comm = self.cost.t_comm_dist(dist_tokens);
+        let t_dist = self.cost.t_comp_per_layer(dist_flops / n as f64);
+        let overhead = if self.lens.is_empty() { 0.0 } else { self.cost.hw.step_overhead_s };
+        let mut max_t_local = max_excluding(&self.top_t_local, ra, rb, 0.0).max(0.0);
+        if ra != usize::MAX {
+            max_t_local = max_t_local.max(self.cost.t_comp_per_layer(self.local_flops[ra] - w));
+        }
+        if rb != usize::MAX {
+            max_t_local = max_t_local.max(self.cost.t_comp_per_layer(self.local_flops[rb] + w));
+        }
+        Some(max_t_local.max(t_comm) + t_dist + overhead)
+    }
+
+    fn apply(&mut self, k: usize, to: i32) {
+        self.plan.assign[k] = to;
+        self.rebuild_sums();
+    }
+
+    fn run(mut self) -> DacpPlan {
+        let n = self.cfg.cp_degree;
+        let mut best_cost = self
+            .cost
+            .tdacp(self.lens, &self.plan, n);
+        let budget = 4 * self.lens.len().max(4);
+        for _ in 0..budget {
+            let mut improved: Option<(usize, i32, f64)> = None;
+            for k in 0..self.lens.len() {
+                let from = self.plan.assign[k];
+                let candidates = (0..n as i32).map(Some).chain(std::iter::once(None));
+                for cand in candidates {
+                    let to = cand.unwrap_or(DISTRIBUTED);
+                    if to == from {
+                        continue;
+                    }
+                    if let Some(c) = self.move_cost(k, to) {
+                        if c < best_cost * (1.0 - 1e-9)
+                            && improved.map(|(_, _, ic)| c < ic).unwrap_or(true)
+                        {
+                            improved = Some((k, to, c));
+                        }
+                    }
+                }
+            }
+            match improved {
+                Some((k, to, c)) => {
+                    self.apply(k, to);
+                    best_cost = c;
+                }
+                None => break,
+            }
+        }
+        debug_assert!(self
+            .plan
+            .validate(self.lens, self.cfg.bucket_size, n)
+            .is_ok());
+        self.plan
+    }
+}
+
+/// Multi-start refinement: greedy local search is vulnerable to the
+/// demote-one-at-a-time valley (distributing a single sequence piles shard
+/// work onto already-busy ranks even when distributing *all* long
+/// sequences would win).  Starting a second descent from the
+/// all-distributed plan covers that regime; the cheaper plan wins.
+pub fn refine_multistart(
+    plan: &DacpPlan,
+    lens: &[u32],
+    cfg: &DacpConfig,
+    cost: &crate::perfmodel::CostModel,
+) -> DacpPlan {
+    let n = cfg.cp_degree;
+    let a = refine(plan, lens, cfg, cost);
+    // Lower bound on any plan: all compute spread perfectly with zero
+    // communication.  If descent A is already within 10% of it, the
+    // second (all-distributed) start cannot pay for itself — this gate is
+    // what keeps the refined scheduler near-zero-overhead on short-heavy
+    // batches (EXPERIMENTS.md §Perf).
+    let total_layer_flops: f64 = lens.iter().map(|&s| cost.seq_layer_flops(s)).sum();
+    let lb = cost.t_comp_per_layer(total_layer_flops / n as f64)
+        + if lens.is_empty() { 0.0 } else { cost.hw.step_overhead_s };
+    let cost_a = cost.tdacp(lens, &a, n);
+    if cost_a <= 1.10 * lb {
+        return a;
+    }
+    let all_dist = DacpPlan::all_distributed(lens.len());
+    if all_dist.validate(lens, cfg.bucket_size, n).is_err() {
+        return a;
+    }
+    let b = refine(&all_dist, lens, cfg, cost);
+    if cost.tdacp(lens, &b, n) < cost_a {
+        b
+    } else {
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::util::proptest::{forall, SeqLensGen};
+
+    fn fm() -> FlopsModel {
+        FlopsModel::new(&ModelSpec::qwen2_5_0_5b())
+    }
+
+    fn sched(lens: &[u32], c: u32, n: usize) -> Result<DacpPlan, SchedError> {
+        schedule(lens, &DacpConfig::new(c, n), &fm())
+    }
+
+    #[test]
+    fn all_short_sequences_stay_local() {
+        // plenty of room: nothing should be sharded (principle i)
+        let lens = [100, 200, 300, 400, 500, 600, 700, 800];
+        let plan = sched(&lens, 10_000, 4).unwrap();
+        assert_eq!(plan.num_distributed(), 0);
+        plan.validate(&lens, 10_000, 4).unwrap();
+    }
+
+    #[test]
+    fn long_sequence_is_distributed() {
+        // one sequence larger than C must be sharded
+        let lens = [100, 200, 5_000];
+        let plan = sched(&lens, 2_000, 4).unwrap();
+        assert_eq!(plan.assign[2], DISTRIBUTED);
+        assert_eq!(plan.num_distributed(), 1);
+        plan.validate(&lens, 2_000, 4).unwrap();
+    }
+
+    #[test]
+    fn load_balance_spreads_locals() {
+        // 4 equal sequences over 4 ranks: one each (min-load rule)
+        let lens = [1000, 1000, 1000, 1000];
+        let plan = sched(&lens, 4_000, 4).unwrap();
+        let mut ranks: Vec<i32> = plan.assign.clone();
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn sequence_exceeding_total_capacity_errors() {
+        let e = sched(&[100_000], 1_000, 8).unwrap_err();
+        assert!(matches!(e, SchedError::TooLong { .. }));
+    }
+
+    #[test]
+    fn rollback_rescues_tight_fit() {
+        // C=1000, N=2, lens sorted [4, 998, 998] (total = C·N exactly).
+        // Greedy places 4→r0, 998→r1, then 998 fits nowhere locally and
+        // its shard (499) exceeds min RB — only rolling earlier locals
+        // back to distributed makes the assignment feasible (all three
+        // distributed: per-rank 2+499+499 = 1000 = C).
+        let lens = [998, 998, 4];
+        let plan = sched(&lens, 1000, 2).unwrap();
+        plan.validate(&lens, 1000, 2).unwrap();
+        assert_eq!(plan.num_distributed(), 3);
+    }
+
+    #[test]
+    fn rollback_failure_reports_error() {
+        // N=2, C=100: [90, 90, 90, 90, 200] — after filling both buckets
+        // with 90+90... capacity 2*100=200 total vs 560 needed: infeasible.
+        let e = sched(&[90, 90, 90, 90, 200], 100, 2);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn paper_literal_rollback_variant_also_valid() {
+        let mut cfg = DacpConfig::new(1000, 2);
+        cfg.rollback_largest = false;
+        let lens = [998, 998, 4];
+        let plan = schedule(&lens, &cfg, &fm()).unwrap();
+        plan.validate(&lens, 1000, 2).unwrap();
+    }
+
+    #[test]
+    fn refine_never_worsens_and_shards_isolated_long_seq() {
+        use crate::perfmodel::CostModel;
+        let cost = CostModel::paper_default(&ModelSpec::qwen2_5_0_5b());
+        let cfg = DacpConfig::new(26 * 1024, 4);
+        // a lone 25K sequence fits locally, so Alg. 1 keeps it local — but
+        // distributing it cuts the makespan ~Nx (one rank does all work
+        // otherwise).
+        let lens = [25_000u32, 300, 400, 500];
+        let plan = schedule(&lens, &cfg, &cost.flops).unwrap();
+        assert_eq!(plan.num_distributed(), 0); // paper behaviour
+        let refined = refine(&plan, &lens, &cfg, &cost);
+        refined.validate(&lens, cfg.bucket_size, 4).unwrap();
+        let before = cost.tdacp(&lens, &plan, 4);
+        let after = cost.tdacp(&lens, &refined, 4);
+        assert!(after <= before);
+        assert_eq!(refined.assign[0], DISTRIBUTED, "long seq should be sharded");
+        assert!(after < 0.6 * before, "{after} vs {before}");
+    }
+
+    #[test]
+    fn refine_property_monotone_and_valid() {
+        use crate::perfmodel::CostModel;
+        let cost = CostModel::paper_default(&ModelSpec::qwen2_5_0_5b());
+        let gen = SeqLensGen { min_k: 1, max_k: 12, max_len: 50_000 };
+        let cfg = DacpConfig::new(26 * 1024, 8);
+        forall(0x0F13E, 100, &gen, |lens| {
+            let Ok(plan) = schedule(lens, &cfg, &cost.flops) else { return Ok(()) };
+            let refined = refine(&plan, lens, &cfg, &cost);
+            refined
+                .validate(lens, cfg.bucket_size, cfg.cp_degree)
+                .map_err(|e| e.to_string())?;
+            let before = cost.tdacp(lens, &plan, cfg.cp_degree);
+            let after = cost.tdacp(lens, &refined, cfg.cp_degree);
+            if after > before * (1.0 + 1e-9) {
+                return Err(format!("refine worsened: {before} -> {after}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_valid_or_error_never_panics() {
+        // On any workload, schedule() either returns a plan satisfying
+        // Eq. 6/7 or a structured error.
+        let gen = SeqLensGen { min_k: 1, max_k: 40, max_len: 60_000 };
+        let flops = fm();
+        for (c, n) in [(26 * 1024, 8), (13 * 1024, 16), (2_048, 4), (512, 2)] {
+            forall(0xDAC9, 300, &gen, |lens| {
+                match schedule(lens, &DacpConfig::new(c, n), &flops) {
+                    Ok(plan) => {
+                        if plan.assign.iter().any(|&a| a == i32::MIN) {
+                            return Err("unassigned sequence".into());
+                        }
+                        plan.validate(lens, c, n).map_err(|e| e.to_string())
+                    }
+                    Err(_) => Ok(()),
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn property_feasible_when_total_fits_halved() {
+        // Sufficient condition: if ΣS ≤ C·N/2 the heuristic must succeed
+        // (it has slack to place or shard everything).
+        let gen = SeqLensGen { min_k: 1, max_k: 24, max_len: 8_000 };
+        let flops = fm();
+        forall(0xFEA5, 300, &gen, |lens| {
+            let total: u64 = lens.iter().map(|&l| l as u64).sum();
+            let n = 8usize;
+            let c = ((2 * total / n as u64).max(*lens.iter().max().unwrap() as u64) + 1) as u32;
+            match schedule(lens, &DacpConfig::new(c, n), &flops) {
+                Ok(plan) => plan.validate(lens, c, n).map_err(|e| e.to_string()),
+                Err(e) => Err(format!("unexpected failure: {e}")),
+            }
+        });
+    }
+}

@@ -1,0 +1,289 @@
+//! Algorithm 2: Global Data Scheduling.
+//!
+//! Principles (Section 4.3.2): (i) balance FLOPs across DP ranks via
+//! bin-packing, (ii) pair long and short sequences by sorting then slicing
+//! with a stride ("Subset[j::init]"), (iii) use as few micro-batches as
+//! memory allows, growing the count when the token cap or DACP scheduling
+//! fails (the GDS-level roll-back).
+//!
+//! Scope is the global batch — the largest scheduling scope that keeps
+//! Adam/AdamW mathematically equivalent (Section 4.2).
+
+use crate::data::Sequence;
+use crate::perfmodel::FlopsModel;
+use crate::scheduler::binpack;
+use crate::scheduler::dacp::{self, DacpConfig};
+use crate::scheduler::plan::{IterationSchedule, MicroBatch, RankSchedule, SchedError};
+
+#[derive(Clone, Debug)]
+pub struct GdsConfig {
+    pub bucket_size: u32,
+    pub cp: usize,
+    pub dp: usize,
+    pub rollback_largest: bool,
+    /// Disable the long/short interleaving (ablation): contiguous chunks
+    /// of the sorted subset instead of strided slices.
+    pub interleave: bool,
+}
+
+impl GdsConfig {
+    pub fn new(bucket_size: u32, cp: usize, dp: usize) -> Self {
+        GdsConfig { bucket_size, cp, dp, rollback_largest: true, interleave: true }
+    }
+
+    pub fn dacp(&self) -> DacpConfig {
+        let mut c = DacpConfig::new(self.bucket_size, self.cp);
+        c.rollback_largest = self.rollback_largest;
+        c
+    }
+}
+
+/// GDS + DACP + the cost-aware refinement pass (our extension — see
+/// scheduler::dacp::refine and the `ablations` bench).  Guarantees the
+/// plan is never worse than Algorithm 1's under the cost model, and in
+/// particular restores bigger-bucket monotonicity that the avoid-sharding
+/// principle alone violates.
+pub fn schedule_refined(
+    global_batch: &[Sequence],
+    cfg: &GdsConfig,
+    cost: &crate::perfmodel::CostModel,
+) -> Result<IterationSchedule, SchedError> {
+    let mut sched = schedule(global_batch, cfg, &cost.flops)?;
+    let dcfg = cfg.dacp();
+    for rank in &mut sched.ranks {
+        for mb in &mut rank.micro_batches {
+            let lens = mb.lens();
+            mb.plan = crate::scheduler::dacp::refine_multistart(&mb.plan, &lens, &dcfg, cost);
+        }
+    }
+    Ok(sched)
+}
+
+/// Schedule one DP rank's subset (Algorithm 2 body).  `subset` is that
+/// rank's sequences in any order.
+pub fn schedule_rank(
+    subset: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+) -> Result<RankSchedule, SchedError> {
+    if subset.is_empty() {
+        return Ok(RankSchedule::default());
+    }
+    let cap = cfg.bucket_size as u64 * cfg.cp as u64;
+    let total: u64 = subset.iter().map(|s| s.len as u64).sum();
+    for s in subset {
+        if s.len as u64 > cap {
+            return Err(SchedError::TooLong { len: s.len, cap });
+        }
+    }
+
+    // line 3: ascending sort
+    let mut sorted: Vec<Sequence> = subset.to_vec();
+    sorted.sort_by_key(|s| s.len);
+
+    // line 2: start from the memory lower bound on micro-batch count
+    let min_mbs = (total.div_ceil(cap) as usize).max(1);
+    let dacp_cfg = cfg.dacp();
+
+    'outer: for n_mb in min_mbs..=sorted.len() {
+        let mut mbs: Vec<MicroBatch> = Vec::with_capacity(n_mb);
+        for j in 0..n_mb {
+            // line 7: Subset[j::n_mb] pairs long and short sequences
+            let seqs: Vec<Sequence> = if cfg.interleave {
+                sorted.iter().skip(j).step_by(n_mb).copied().collect()
+            } else {
+                let chunk = sorted.len().div_ceil(n_mb);
+                sorted.iter().skip(j * chunk).take(chunk).copied().collect()
+            };
+            if seqs.is_empty() {
+                continue;
+            }
+            let tokens: u64 = seqs.iter().map(|s| s.len as u64).sum();
+            // line 8: token cap or DACP failure → retry with more MBs
+            if tokens > cap {
+                continue 'outer;
+            }
+            let lens: Vec<u32> = seqs.iter().map(|s| s.len).collect();
+            match dacp::schedule(&lens, &dacp_cfg, flops) {
+                Ok(plan) => mbs.push(MicroBatch { seqs, plan }),
+                Err(_) => continue 'outer,
+            }
+        }
+        return Ok(RankSchedule { micro_batches: mbs });
+    }
+
+    // n_mb == len means one sequence per micro-batch; with S ≤ C·N that
+    // must be schedulable, so reaching here is a genuine capacity error.
+    Err(SchedError::TooLong {
+        len: sorted.last().map(|s| s.len).unwrap_or(0),
+        cap,
+    })
+}
+
+/// Full GDS: bin-pack the global batch over DP ranks by FLOPs
+/// (Algorithm 2, line 1), then schedule each rank.
+pub fn schedule(
+    global_batch: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+) -> Result<IterationSchedule, SchedError> {
+    let weighted: Vec<(Sequence, f64)> = global_batch
+        .iter()
+        .map(|&s| (s, flops.seq(s.len)))
+        .collect();
+    let bins = binpack::balance(&weighted, cfg.dp);
+    let ranks = bins
+        .iter()
+        .map(|subset| schedule_rank(subset, cfg, flops))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(IterationSchedule { ranks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::util::proptest::{forall, SeqLensGen};
+
+    fn fm() -> FlopsModel {
+        FlopsModel::new(&ModelSpec::qwen2_5_0_5b())
+    }
+
+    fn seqs(lens: &[u32]) -> Vec<Sequence> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect()
+    }
+
+    #[test]
+    fn every_sequence_assigned_exactly_once() {
+        let batch = seqs(&[100, 5000, 250, 30_000, 90, 800, 12_000, 400]);
+        let cfg = GdsConfig::new(26 * 1024, 8, 4);
+        let sched = schedule(&batch, &cfg, &fm()).unwrap();
+        assert_eq!(sched.assigned_ids(), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn micro_batches_respect_token_cap() {
+        let batch = seqs(&[40_000; 12]);
+        let cfg = GdsConfig::new(26 * 1024, 8, 4);
+        let sched = schedule(&batch, &cfg, &fm()).unwrap();
+        let cap = cfg.bucket_size as u64 * cfg.cp as u64;
+        for r in &sched.ranks {
+            for mb in &r.micro_batches {
+                assert!(mb.total_tokens() <= cap);
+                mb.plan
+                    .validate(&mb.lens(), cfg.bucket_size, cfg.cp)
+                    .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn pairing_spreads_long_sequences() {
+        // 2 long + 6 short on one rank, 2 micro-batches: interleaving must
+        // not put both longs in the same micro-batch.
+        let subset = seqs(&[30_000, 30_000, 100, 100, 100, 100, 100, 100]);
+        let mut cfg = GdsConfig::new(26 * 1024, 8, 1);
+        cfg.interleave = true;
+        let rs = schedule_rank(&subset, &cfg, &fm()).unwrap();
+        if rs.micro_batches.len() >= 2 {
+            let longs_per_mb: Vec<usize> = rs
+                .micro_batches
+                .iter()
+                .map(|mb| mb.seqs.iter().filter(|s| s.len >= 30_000).count())
+                .collect();
+            assert!(longs_per_mb.iter().all(|&c| c <= 1), "{longs_per_mb:?}");
+        }
+    }
+
+    #[test]
+    fn grows_micro_batch_count_under_memory_pressure() {
+        // total 100K tokens, cap C·N = 16K → at least 7 micro-batches
+        let subset = seqs(&[10_000; 10]);
+        let cfg = GdsConfig::new(2 * 1024, 8, 1);
+        let rs = schedule_rank(&subset, &cfg, &fm()).unwrap();
+        assert!(rs.micro_batches.len() >= 7, "{}", rs.micro_batches.len());
+        let cap = cfg.bucket_size as u64 * cfg.cp as u64;
+        for mb in &rs.micro_batches {
+            assert!(mb.total_tokens() <= cap);
+        }
+    }
+
+    #[test]
+    fn too_long_sequence_errors() {
+        let batch = seqs(&[300_000]);
+        let cfg = GdsConfig::new(26 * 1024, 8, 4);
+        assert!(matches!(
+            schedule(&batch, &cfg, &fm()),
+            Err(SchedError::TooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let cfg = GdsConfig::new(1024, 8, 4);
+        let sched = schedule(&[], &cfg, &fm()).unwrap();
+        assert_eq!(sched.ranks.len(), 4);
+        assert_eq!(sched.num_micro_batches(), 0);
+    }
+
+    #[test]
+    fn schedule_refined_keeps_invariants_and_improves() {
+        use crate::perfmodel::CostModel;
+        let cost = CostModel::paper_default(&ModelSpec::qwen2_5_0_5b());
+        let batch = seqs(&[25_000, 300, 400, 500, 14_000, 100, 18_000, 900]);
+        let cfg = GdsConfig::new(26 * 1024, 4, 2);
+        let plain = schedule(&batch, &cfg, &cost.flops).unwrap();
+        let refined = schedule_refined(&batch, &cfg, &cost).unwrap();
+        assert_eq!(refined.assigned_ids(), plain.assigned_ids());
+        let total = |s: &IterationSchedule| -> f64 {
+            s.ranks
+                .iter()
+                .map(|r| {
+                    r.micro_batches
+                        .iter()
+                        .map(|mb| cost.tdacp(&mb.lens(), &mb.plan, cfg.cp))
+                        .sum::<f64>()
+                })
+                .fold(0.0, f64::max)
+        };
+        assert!(total(&refined) <= total(&plain) * (1.0 + 1e-9));
+        for r in &refined.ranks {
+            for mb in &r.micro_batches {
+                mb.plan.validate(&mb.lens(), cfg.bucket_size, cfg.cp).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn property_completeness_and_memory() {
+        // Eq. 9 (exactly once) + Eq. 7/10 (memory) on random workloads.
+        let gen = SeqLensGen { min_k: 1, max_k: 64, max_len: 100_000 };
+        let flops = fm();
+        forall(0x6D5, 200, &gen, |lens| {
+            let batch = seqs(lens);
+            let cfg = GdsConfig::new(26 * 1024, 8, 4);
+            match schedule(&batch, &cfg, &flops) {
+                Err(SchedError::TooLong { .. }) => Ok(()), // only when a seq > C·N
+                Err(e) => Err(format!("unexpected: {e}")),
+                Ok(sched) => {
+                    let mut ids = sched.assigned_ids();
+                    ids.dedup();
+                    if ids.len() != lens.len() {
+                        return Err(format!("{} ids for {} seqs", ids.len(), lens.len()));
+                    }
+                    for r in &sched.ranks {
+                        for mb in &r.micro_batches {
+                            mb.plan
+                                .validate(&mb.lens(), cfg.bucket_size, cfg.cp)
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's contribution: dynamic data scheduling for Long-SFT.
+//!
+//! * `dacp` — Distributed-Aware Context Parallelism (Algorithm 1 + 3):
+//!   fine-grained, within a micro-batch.
+//! * `gds` — Global Data Scheduling (Algorithm 2): coarse-grained, from the
+//!   global batch to per-DP-rank micro-batches.
+//! * `binpack` — FLOPs-balancing bin packing used by GDS step (i).
+//! * `baseline` — the comparators of Fig. 3 (DeepSpeed-like, DACP-only,
+//!   LongAlign sorted batching).
+//! * `solver` — exact branch-and-bound DACP for heuristic-gap ablations.
+
+pub mod baseline;
+pub mod binpack;
+pub mod dacp;
+pub mod gds;
+pub mod plan;
+pub mod solver;
+
+pub use plan::{DacpPlan, IterationSchedule, MicroBatch, RankSchedule, SchedError};

@@ -1,0 +1,180 @@
+//! Schedule plan types shared by the heuristics, the exact solver, the cost
+//! model and the simulator.  These are the D/P/B variables of the paper's
+//! formulation in concrete form.
+
+use crate::data::Sequence;
+
+/// Sentinel for "distributed": the sequence is CP-sharded over all N ranks
+/// (paper: ret[i] = -1, i.e. D_k = 1).
+pub const DISTRIBUTED: i32 = -1;
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SchedError {
+    #[error("sequence {seq_idx} (len {len}) cannot fit: shard {shard} > min remaining bucket {remain}")]
+    Infeasible { seq_idx: usize, len: u32, shard: u32, remain: i64 },
+    #[error("roll-back failed: no local sequence left in bucket {rank}")]
+    RollbackFailed { rank: usize },
+    #[error("sequence of length {len} exceeds total capacity C*N = {cap}")]
+    TooLong { len: u32, cap: u64 },
+}
+
+/// DACP result for one micro-batch: per-sequence assignment, in the
+/// *original* order of the micro-batch's sequence list.
+/// `assign[k] == DISTRIBUTED` ⇔ D_k = 1; otherwise P_{k, assign[k]} = 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DacpPlan {
+    pub assign: Vec<i32>,
+}
+
+impl DacpPlan {
+    pub fn all_distributed(k: usize) -> Self {
+        DacpPlan { assign: vec![DISTRIBUTED; k] }
+    }
+
+    pub fn num_distributed(&self) -> usize {
+        self.assign.iter().filter(|&&a| a == DISTRIBUTED).count()
+    }
+
+    /// Indices of local sequences on CP rank `j`.
+    pub fn locals_of(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        let j = j as i32;
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(move |(_, &a)| a == j)
+            .map(|(i, _)| i)
+    }
+
+    /// Indices of distributed sequences.
+    pub fn distributed(&self) -> impl Iterator<Item = usize> + '_ {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == DISTRIBUTED)
+            .map(|(i, _)| i)
+    }
+
+    /// Check Eq. 6 (completeness is structural) + Eq. 7 (memory): for every
+    /// CP rank j:  Σ_local S_k + Σ_dist S_k/N  ≤  C.
+    /// Shard sizes use ceiling division (a real CP implementation pads the
+    /// sequence to a multiple of N).
+    pub fn validate(&self, lens: &[u32], bucket_size: u32, n: usize) -> Result<(), SchedError> {
+        assert_eq!(self.assign.len(), lens.len());
+        let dist_tokens: u64 = self
+            .distributed()
+            .map(|i| (lens[i] as u64).div_ceil(n as u64))
+            .sum();
+        for j in 0..n {
+            let local: u64 = self.locals_of(j).map(|i| lens[i] as u64).sum();
+            if local + dist_tokens > bucket_size as u64 {
+                return Err(SchedError::Infeasible {
+                    seq_idx: j,
+                    len: (local + dist_tokens) as u32,
+                    shard: dist_tokens as u32,
+                    remain: bucket_size as i64 - local as i64,
+                });
+            }
+        }
+        for (k, &a) in self.assign.iter().enumerate() {
+            if a != DISTRIBUTED && (a < 0 || a as usize >= n) {
+                return Err(SchedError::Infeasible {
+                    seq_idx: k,
+                    len: lens[k],
+                    shard: 0,
+                    remain: -1,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One scheduled micro-batch: its sequences + the DACP placement.
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    pub seqs: Vec<Sequence>,
+    pub plan: DacpPlan,
+}
+
+impl MicroBatch {
+    pub fn lens(&self) -> Vec<u32> {
+        self.seqs.iter().map(|s| s.len).collect()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.seqs.iter().map(|s| s.len as u64).sum()
+    }
+}
+
+/// All micro-batches of one DP rank for one iteration (inner Vec = the
+/// gradient-accumulation steps), i.e. one row of the B_{kij} matrix.
+#[derive(Debug, Clone, Default)]
+pub struct RankSchedule {
+    pub micro_batches: Vec<MicroBatch>,
+}
+
+/// The full iteration schedule across DP ranks.
+#[derive(Debug, Clone)]
+pub struct IterationSchedule {
+    pub ranks: Vec<RankSchedule>,
+}
+
+impl IterationSchedule {
+    /// Every sequence id must appear exactly once (Eq. 9).
+    pub fn assigned_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .ranks
+            .iter()
+            .flat_map(|r| r.micro_batches.iter())
+            .flat_map(|mb| mb.seqs.iter().map(|s| s.id))
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn num_micro_batches(&self) -> usize {
+        self.ranks.iter().map(|r| r.micro_batches.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_feasible_plan() {
+        // lens [10, 20, 100], C=60, N=2; distribute the 100, split the rest
+        let plan = DacpPlan { assign: vec![0, 1, DISTRIBUTED] };
+        plan.validate(&[10, 20, 100], 70, 2).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_memory_violation() {
+        // rank 0 holds 10 local + 50 shard = 60 > C=55
+        let plan = DacpPlan { assign: vec![0, 1, DISTRIBUTED] };
+        assert!(plan.validate(&[10, 20, 100], 55, 2).is_err());
+    }
+
+    #[test]
+    fn validate_uses_ceiling_shards() {
+        // len 101 over N=2 → 51 per rank, not 50
+        let plan = DacpPlan { assign: vec![DISTRIBUTED] };
+        assert!(plan.validate(&[101], 50, 2).is_err());
+        plan.validate(&[101], 51, 2).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_rank() {
+        let plan = DacpPlan { assign: vec![5] };
+        assert!(plan.validate(&[10], 100, 2).is_err());
+    }
+
+    #[test]
+    fn locals_and_distributed_partition() {
+        let plan = DacpPlan { assign: vec![0, DISTRIBUTED, 1, 0] };
+        assert_eq!(plan.locals_of(0).collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(plan.locals_of(1).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(plan.distributed().collect::<Vec<_>>(), vec![1]);
+        assert_eq!(plan.num_distributed(), 1);
+    }
+}

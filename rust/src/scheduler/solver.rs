@@ -1,0 +1,221 @@
+//! Exact DACP solver (branch-and-bound) for small micro-batches.
+//!
+//! Section 4.3 notes that ILP solvers (SCIP) find the optimum but are far
+//! too slow for online use.  This module plays that role for the ablation
+//! study: it enumerates sequence classifications/assignments (D, P of the
+//! formulation) with feasibility + bound pruning and returns the true
+//! optimum of Eq. 1–7 under the same cost model the simulator uses, so the
+//! heuristic's optimality gap can be measured (bench `ablations`).
+
+use crate::perfmodel::CostModel;
+use crate::scheduler::plan::{DacpPlan, DISTRIBUTED};
+
+pub struct Solved {
+    pub plan: DacpPlan,
+    pub cost: f64,
+    /// Number of explored branch nodes (reported by the ablation bench).
+    pub nodes: u64,
+}
+
+struct Search<'a> {
+    lens: &'a [u32],
+    cost: &'a CostModel,
+    bucket: i64,
+    n: usize,
+    // state
+    assign: Vec<i32>,
+    rb: Vec<i64>,
+    best_cost: f64,
+    best: Option<Vec<i32>>,
+    nodes: u64,
+    node_limit: u64,
+}
+
+impl<'a> Search<'a> {
+    /// Lower bound on the final TDACP given a partial assignment: the
+    /// distributed compute so far is paid by everyone; local compute per
+    /// rank is a lower bound on that rank's Eq. 2 term.
+    fn lower_bound(&self) -> f64 {
+        let dist_tokens: u64 = self
+            .assign
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == DISTRIBUTED)
+            .map(|(i, _)| self.lens[i] as u64)
+            .sum();
+        let t_dist = self.cost.t_comp_dist_agg(
+            self.assign
+                .iter()
+                .enumerate()
+                .filter(|(_, &a)| a == DISTRIBUTED)
+                .map(|(i, _)| self.lens[i]),
+            self.n,
+        );
+        let t_comm = self.cost.t_comm_dist(dist_tokens);
+        // adding sequences to a rank only grows its aggregate kernel, so
+        // the partial assignment's per-rank local time lower-bounds the
+        // final one
+        let max_local: f64 = (0..self.n)
+            .map(|j| {
+                self.cost.t_comp_local_agg(
+                    self.assign
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &a)| a == j as i32)
+                        .map(|(i, _)| self.lens[i]),
+                )
+            })
+            .fold(0.0, f64::max);
+        max_local.max(t_comm) + t_dist
+    }
+
+    fn evaluate(&mut self) {
+        let plan = DacpPlan { assign: self.assign.clone() };
+        let c = self.cost.tdacp(self.lens, &plan, self.n);
+        if c < self.best_cost {
+            self.best_cost = c;
+            self.best = Some(self.assign.clone());
+        }
+    }
+
+    fn dfs(&mut self, k: usize) {
+        self.nodes += 1;
+        if self.nodes > self.node_limit {
+            return;
+        }
+        if self.lower_bound() >= self.best_cost {
+            return; // bound prune
+        }
+        if k == self.lens.len() {
+            self.evaluate();
+            return;
+        }
+        let s = self.lens[k] as i64;
+        let shard = (s + self.n as i64 - 1) / self.n as i64;
+
+        // branch: local on each rank (dedupe symmetric empty ranks)
+        let mut seen_empty = false;
+        for j in 0..self.n {
+            let empty = self.rb[j] == self.bucket
+                && !self.assign[..k].iter().any(|&a| a == j as i32);
+            if empty {
+                if seen_empty {
+                    continue; // identical to the previous empty rank
+                }
+                seen_empty = true;
+            }
+            if self.rb[j] >= s {
+                self.rb[j] -= s;
+                self.assign[k] = j as i32;
+                self.dfs(k + 1);
+                self.rb[j] += s;
+            }
+        }
+        // branch: distributed
+        if (0..self.n).all(|j| self.rb[j] >= shard) {
+            for j in 0..self.n {
+                self.rb[j] -= shard;
+            }
+            self.assign[k] = DISTRIBUTED;
+            self.dfs(k + 1);
+            for j in 0..self.n {
+                self.rb[j] += shard;
+            }
+        }
+        self.assign[k] = i32::MIN;
+    }
+}
+
+/// Find the optimal DACP plan, or None if no feasible assignment exists
+/// (or the node limit was exhausted without finding one).
+pub fn solve(
+    lens: &[u32],
+    bucket_size: u32,
+    n: usize,
+    cost: &CostModel,
+    node_limit: u64,
+) -> Option<Solved> {
+    // order longest-first: decisions about big sequences prune hardest
+    let mut order: Vec<usize> = (0..lens.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(lens[i]));
+    let ordered: Vec<u32> = order.iter().map(|&i| lens[i]).collect();
+    let mut s2 = Search {
+        lens: &ordered,
+        cost,
+        bucket: bucket_size as i64,
+        n,
+        assign: vec![i32::MIN; lens.len()],
+        rb: vec![bucket_size as i64; n],
+        best_cost: f64::INFINITY,
+        best: None,
+        nodes: 0,
+        node_limit,
+    };
+    s2.dfs(0);
+    let best = s2.best?;
+    // un-permute the assignment back to the original order
+    let mut assign = vec![0i32; lens.len()];
+    for (pos, &orig) in order.iter().enumerate() {
+        assign[orig] = best[pos];
+    }
+    Some(Solved { plan: DacpPlan { assign }, cost: s2.best_cost, nodes: s2.nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::perfmodel::CostModel;
+    use crate::scheduler::dacp::{self, DacpConfig};
+    use crate::util::proptest::{forall, SeqLensGen};
+
+    fn cm() -> CostModel {
+        CostModel::paper_default(&ModelSpec::qwen2_5_0_5b())
+    }
+
+    #[test]
+    fn optimal_keeps_shorts_local() {
+        let cost = cm();
+        let lens = [500, 600, 700, 800];
+        let sol = solve(&lens, 10_000, 2, &cost, 1_000_000).unwrap();
+        assert_eq!(sol.plan.num_distributed(), 0);
+        sol.plan.validate(&lens, 10_000, 2).unwrap();
+    }
+
+    #[test]
+    fn optimal_never_beaten_by_heuristic() {
+        let cost = cm();
+        let gen = SeqLensGen { min_k: 1, max_k: 8, max_len: 30_000 };
+        let cfg = DacpConfig::new(16 * 1024, 4);
+        forall(0x501E, 60, &gen, |lens| {
+            let Some(sol) = solve(lens, cfg.bucket_size, cfg.cp_degree, &cost, 2_000_000) else {
+                return Ok(()); // infeasible for both
+            };
+            sol.plan
+                .validate(lens, cfg.bucket_size, cfg.cp_degree)
+                .map_err(|e| e.to_string())?;
+            if let Ok(hplan) = dacp::schedule(lens, &cfg, &cost.flops) {
+                let hcost = cost.tdacp(lens, &hplan, cfg.cp_degree);
+                if sol.cost > hcost * (1.0 + 1e-9) {
+                    return Err(format!("solver {0} worse than heuristic {hcost}", sol.cost));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        // 3 sequences of 100 with C=40, N=2: shard=50 > 40 → nothing fits
+        assert!(solve(&[100, 100, 100], 40, 2, &cm(), 100_000).is_none());
+    }
+
+    #[test]
+    fn distributes_when_optimal() {
+        // one huge sequence + tiny bucket: must be distributed
+        let cost = cm();
+        let lens = [7_000];
+        let sol = solve(&lens, 4_000, 4, &cost, 100_000).unwrap();
+        assert_eq!(sol.plan.assign[0], DISTRIBUTED);
+    }
+}

@@ -1,0 +1,46 @@
+//! Small shared utilities: summary statistics, histograms, formatting,
+//! and a micro property-testing harness (no proptest in the vendored set).
+
+pub mod proptest;
+pub mod stats;
+
+/// Format a token count the way the paper's tables do ("26K", "1643K").
+pub fn fmt_tokens(n: u64) -> String {
+    if n >= 1024 * 1024 {
+        format!("{:.1}M", n as f64 / (1024.0 * 1024.0))
+    } else if n >= 1024 {
+        format!("{}K", n / 1024)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_formatting() {
+        assert_eq!(fmt_tokens(512), "512");
+        assert_eq!(fmt_tokens(26 * 1024), "26K");
+        assert_eq!(fmt_tokens(2 * 1024 * 1024), "2.0M");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(1.5), "1.50s");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(42e-6), "42.0us");
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal property-testing harness (the vendored crate set lacks proptest).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it greedily shrinks via the generator's `shrink` and panics
+//! with the minimal failing case.  Used by the scheduler invariant tests.
+
+use crate::rng::Rng;
+
+/// A generator produces a case from randomness and can propose smaller cases.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate shrinks, largest reduction first.  Default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs, shrinking on failure.
+pub fn forall<G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::seed_from_u64(seed);
+    for case_idx in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(first_msg) = prop(&v) {
+            // shrink loop: repeatedly take the first failing shrink candidate
+            let mut cur = v;
+            let mut msg = first_msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {seed}):\n  {msg}\n  minimal input: {cur:?}"
+            );
+        }
+    }
+}
+
+/// Generator for a vector of sequence lengths in [1, max_len], a staple for
+/// scheduler tests.  Shrinks by halving the vector and by shrinking lengths.
+pub struct SeqLensGen {
+    pub min_k: usize,
+    pub max_k: usize,
+    pub max_len: u32,
+}
+
+impl Gen for SeqLensGen {
+    type Value = Vec<u32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<u32> {
+        let k = self.min_k + rng.usize_below(self.max_k - self.min_k + 1);
+        (0..k)
+            .map(|_| {
+                // log-uniform lengths: scheduler stress lives in the skew
+                let lo = 1f64.ln();
+                let hi = (self.max_len as f64).ln();
+                (lo + rng.f64() * (hi - lo)).exp().round().max(1.0) as u32
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_k {
+            let half = v.len().max(2) / 2;
+            if half >= self.min_k {
+                out.push(v[..half].to_vec());
+                out.push(v[half..].to_vec());
+            }
+            let mut drop_first = v.clone();
+            drop_first.remove(0);
+            if drop_first.len() >= self.min_k {
+                out.push(drop_first);
+            }
+        }
+        // halve each length
+        let halved: Vec<u32> = v.iter().map(|&x| (x / 2).max(1)).collect();
+        if &halved != v {
+            out.push(halved);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = SeqLensGen { min_k: 1, max_k: 16, max_len: 1000 };
+        forall(1, 100, &gen, |v| {
+            if v.iter().all(|&x| x >= 1) {
+                Ok(())
+            } else {
+                Err("zero length".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_case() {
+        let gen = SeqLensGen { min_k: 1, max_k: 32, max_len: 4096 };
+        forall(2, 100, &gen, |v| {
+            if v.iter().sum::<u32>() < 100 {
+                Ok(())
+            } else {
+                Err(format!("sum too big: {}", v.iter().sum::<u32>()))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        let gen = SeqLensGen { min_k: 1, max_k: 8, max_len: 100 };
+        let v = vec![50u32, 60, 70, 80];
+        for s in gen.shrink(&v) {
+            let smaller_len = s.len() < v.len();
+            let smaller_vals = s.iter().sum::<u32>() < v.iter().sum::<u32>();
+            assert!(smaller_len || smaller_vals, "{s:?} is not smaller than {v:?}");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Runtime integration tests: real PJRT execution of the AOT artifacts.
+//! Require `make artifacts` (skipped cleanly when artifacts are absent,
+//! e.g. on a fresh checkout before the first build).
+//!
+//! The centerpiece is `packing_equivalence_through_hlo`: the loss of two
+//! sequences packed into one bucket must equal the token-weighted mean of
+//! their standalone losses — validating the Pallas kernel's segment
+//! masking, the packing layout, and the scheduler's core assumption, all
+//! through the compiled HLO.
+
+use skrull::config::Policy;
+use skrull::coordinator::corpus::CorpusConfig;
+use skrull::coordinator::{Trainer, TrainerOptions};
+use skrull::data::packing::{pack, TokenSeq};
+use skrull::runtime::Runtime;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&dir)
+        .join("manifest.txt")
+        .exists()
+        .then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn corpus_seqs(lens: &[u32]) -> Vec<TokenSeq> {
+    CorpusConfig::tiny(512).corpus(7, lens)
+}
+
+#[test]
+fn loads_manifest_and_compiles_smallest_bucket() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    let buckets = rt.available_buckets();
+    assert!(!buckets.is_empty());
+    rt.ensure_bucket(buckets[0]).unwrap();
+    assert!(rt.compile_seconds > 0.0);
+}
+
+#[test]
+fn train_step_returns_finite_loss_and_grads() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let params = rt.initial_params().unwrap();
+    let seqs = corpus_seqs(&[100, 80]);
+    let bucket = pack(&[&seqs[0], &seqs[1]], 256);
+    let out = rt.train_step(&params, &bucket).unwrap();
+    // random init over vocab 512: loss near ln(512) = 6.24
+    assert!((4.0..9.0).contains(&out.loss), "loss {}", out.loss);
+    assert_eq!(out.grads.len(), params.data.len());
+    assert!(out.grads.iter().all(|g| g.is_finite()));
+    let gnorm: f64 = out.grads.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(gnorm > 1e-6, "gradients must be nonzero");
+}
+
+#[test]
+fn packing_equivalence_through_hlo() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let params = rt.initial_params().unwrap();
+    let seqs = corpus_seqs(&[120, 90]);
+
+    let separate: Vec<(f32, f64)> = seqs
+        .iter()
+        .map(|s| {
+            let b = pack(&[s], 256);
+            let w = b.loss_tokens();
+            (rt.train_step(&params, &b).unwrap().loss, w)
+        })
+        .collect();
+    let expected: f64 = separate.iter().map(|(l, w)| *l as f64 * w).sum::<f64>()
+        / separate.iter().map(|(_, w)| w).sum::<f64>();
+
+    let packed = pack(&[&seqs[0], &seqs[1]], 256);
+    let got = rt.train_step(&params, &packed).unwrap().loss as f64;
+    assert!(
+        (got - expected).abs() < 2e-4,
+        "packed {got} vs weighted separate {expected}"
+    );
+}
+
+#[test]
+fn padding_does_not_affect_loss() {
+    // the same sequence in a 256 vs 512 bucket must give the same loss —
+    // padding is segment-isolated and loss-masked end to end.
+    let dir = require_artifacts!();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let params = rt.initial_params().unwrap();
+    let seqs = corpus_seqs(&[150]);
+    let l256 = rt.train_step(&params, &pack(&[&seqs[0]], 256)).unwrap().loss;
+    let l512 = rt.train_step(&params, &pack(&[&seqs[0]], 512)).unwrap().loss;
+    assert!((l256 - l512).abs() < 2e-4, "{l256} vs {l512}");
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    // train 4 steps, checkpoint, train 4 more; vs restore-from-checkpoint
+    // and train the same 4 — parameters must match exactly (same rng seed
+    // positioning is the caller's job; we restart the trainer to prove the
+    // state file carries everything the optimizer needs).
+    let dir = require_artifacts!();
+    let lens: Vec<u32> = (0..24).map(|i| 30 + (i * 17) % 200).collect();
+    let corpus = corpus_seqs(&lens);
+    let opts = TrainerOptions {
+        workers: 2,
+        bucket_capacity: 512,
+        policy: Policy::Skrull,
+        batch_size: 6,
+        ..Default::default()
+    };
+
+    let mut t1 = Trainer::new(&dir, opts.clone()).unwrap();
+    t1.train(&corpus, 4).unwrap();
+    let ck = t1.checkpoint();
+    let path = std::env::temp_dir().join(format!("skrull_e2e_ck_{}.bin", std::process::id()));
+    ck.save(&path).unwrap();
+
+    // continue the original
+    t1.train(&corpus, 4).unwrap();
+
+    // resume a fresh trainer from the file; replay the same 4 steps.
+    // NOTE: Trainer::new reseeds its batch rng, so drive the replica with
+    // a trainer whose rng is at the same point — we reconstruct by
+    // re-running the first 4 steps' sampling via a scratch trainer.
+    let mut t2 = Trainer::new(&dir, opts.clone()).unwrap();
+    t2.train(&corpus, 4).unwrap(); // advances rng identically to t1's first leg
+    let loaded = skrull::coordinator::TrainState::load(&path, t2.params.data.len()).unwrap();
+    t2.restore(loaded).unwrap();
+    t2.train(&corpus, 4).unwrap();
+
+    assert_eq!(t1.params.data, t2.params.data, "resume diverged");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn three_step_training_decreases_loss_for_both_policies() {
+    let dir = require_artifacts!();
+    let lens: Vec<u32> = (0..48).map(|i| 40 + (i * 13) % 400).collect();
+    let corpus = corpus_seqs(&lens);
+    let mut finals = Vec::new();
+    for policy in [Policy::Baseline, Policy::Skrull] {
+        let opts = TrainerOptions {
+            workers: 2,
+            bucket_capacity: 512,
+            policy,
+            lr: 5e-3,
+            seed: 3,
+            batch_size: 8,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&dir, opts).unwrap();
+        let report = trainer.train(&corpus, 6).unwrap();
+        let first = report.metrics.first_loss().unwrap();
+        let last = report.metrics.final_loss(2).unwrap();
+        assert!(last < first, "{policy:?}: {first} -> {last}");
+        finals.push(last);
+    }
+    // same seed, same data: both policies optimize the same objective;
+    // curves differ only through batch composition, not direction.
+    assert!(finals.iter().all(|l| l.is_finite()));
+}
