@@ -15,11 +15,11 @@ use skrull::model::ModelSpec;
 use skrull::perfmodel::CostModel;
 use skrull::util::{fmt_secs, fmt_tokens};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> skrull::util::error::Result<()> {
     let dataset = std::env::args().nth(1).unwrap_or_else(|| "chatqa2".into());
     let model_name = std::env::args().nth(2).unwrap_or_else(|| "qwen2.5-0.5b".into());
     let model = ModelSpec::by_name(&model_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+        .ok_or_else(|| skrull::anyhow!("unknown model {model_name}"))?;
     let cfg = ExperimentConfig::paper_default(model, &dataset);
 
     let topo = Topology::paper_testbed(cfg.cluster.dp, cfg.cluster.cp)?;
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dist = LengthDistribution::by_name(&dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+        .ok_or_else(|| skrull::anyhow!("unknown dataset {dataset}"))?;
     let ds = Dataset::synthesize(&dist, 100_000, cfg.seed ^ 0xD5)
         .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
     let cost = CostModel::paper_default(&cfg.model);

@@ -13,14 +13,14 @@ use skrull::model::ModelSpec;
 use skrull::util::fmt_tokens;
 use skrull::util::stats::{fraction_below, Summary};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> skrull::util::error::Result<()> {
     let which = std::env::args().nth(1);
     let names: Vec<&str> = match which.as_deref() {
         Some(n) => vec![match n {
             "wikipedia" | "wiki" => "wikipedia",
             "lmsys" => "lmsys",
             "chatqa2" => "chatqa2",
-            other => anyhow::bail!("unknown dataset {other}"),
+            other => skrull::bail!("unknown dataset {other}"),
         }],
         None => vec!["wikipedia", "lmsys", "chatqa2"],
     };

@@ -28,7 +28,7 @@ use skrull::data::LengthDistribution;
 use skrull::rng::Rng;
 use skrull::util::fmt_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> skrull::util::error::Result<()> {
     let steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())

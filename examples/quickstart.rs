@@ -14,7 +14,7 @@ use skrull::model::ModelSpec;
 use skrull::perfmodel::CostModel;
 use skrull::util::{fmt_secs, fmt_tokens};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> skrull::util::error::Result<()> {
     // 1. the paper's evaluation setting: Qwen2.5-0.5B, <DP=4, CP=8, B=64>,
     //    BucketSize C = 26K tokens
     let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");

@@ -6,17 +6,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required argument --{0}")]
     Missing(String),
-    #[error("invalid value for --{0}: {1:?}")]
     Invalid(String, String),
-    #[error("unknown argument {0:?}")]
     Unknown(String),
-    #[error("missing value for --{0}")]
     MissingValue(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(name) => write!(f, "missing required argument --{name}"),
+            CliError::Invalid(name, value) => write!(f, "invalid value for --{name}: {value:?}"),
+            CliError::Unknown(arg) => write!(f, "unknown argument {arg:?}"),
+            CliError::MissingValue(name) => write!(f, "missing value for --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Parsed arguments: positionals + `--key value` options + `--flag`s.
 #[derive(Debug, Default, Clone)]

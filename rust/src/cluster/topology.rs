@@ -11,13 +11,26 @@ pub struct Topology {
     pub cp: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TopologyError {
-    #[error("dp*cp = {need} GPUs but cluster has {have}")]
     TooManyRanks { need: usize, have: usize },
-    #[error("cp degree {cp} must be a power of two")]
     BadCpDegree { cp: usize },
 }
+
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::TooManyRanks { need, have } => {
+                write!(f, "dp*cp = {need} GPUs but cluster has {have}")
+            }
+            TopologyError::BadCpDegree { cp } => {
+                write!(f, "cp degree {cp} must be a power of two")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
 
 /// Global GPU id of (dp_rank, cp_rank).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

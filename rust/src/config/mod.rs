@@ -99,10 +99,10 @@ impl ExperimentConfig {
 
     /// Load from a TOML-subset file; missing keys fall back to the paper
     /// defaults for the named model/dataset.
-    pub fn from_table(t: &toml::Table) -> anyhow::Result<Self> {
+    pub fn from_table(t: &toml::Table) -> crate::util::error::Result<Self> {
         let model_name = t.str_or("model.name", "qwen2.5-0.5b");
         let model = ModelSpec::by_name(&model_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+            .ok_or_else(|| crate::anyhow!("unknown model {model_name:?}"))?;
         let dataset = t.str_or("dataset.name", "wikipedia");
         let mut cfg = ExperimentConfig::paper_default(model, &dataset);
         cfg.cluster.dp = t.i64_or("cluster.dp", cfg.cluster.dp as i64) as usize;
@@ -112,15 +112,15 @@ impl ExperimentConfig {
         cfg.bucket_size = t.i64_or("scheduler.bucket_size", cfg.bucket_size as i64) as u32;
         let policy = t.str_or("scheduler.policy", cfg.policy.name());
         cfg.policy = Policy::by_name(&policy)
-            .ok_or_else(|| anyhow::anyhow!("unknown policy {policy:?}"))?;
+            .ok_or_else(|| crate::anyhow!("unknown policy {policy:?}"))?;
         cfg.iterations = t.i64_or("run.iterations", cfg.iterations as i64) as usize;
         cfg.seed = t.i64_or("run.seed", cfg.seed as i64) as u64;
         Ok(cfg)
     }
 
-    pub fn load(path: &str) -> anyhow::Result<Self> {
+    pub fn load(path: &str) -> crate::util::error::Result<Self> {
         let text = std::fs::read_to_string(path)?;
-        let table = toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let table = toml::parse(&text).map_err(|e| crate::anyhow!("{path}: {e}"))?;
         Self::from_table(&table)
     }
 }

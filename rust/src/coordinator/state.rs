@@ -18,18 +18,35 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"SKRULLCK";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic — not a skrull checkpoint")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported checkpoint version {0}")]
     BadVersion(u32),
-    #[error("checksum mismatch (file corrupt)")]
     BadChecksum,
-    #[error("parameter count mismatch: checkpoint {got}, model {want}")]
     SizeMismatch { got: usize, want: usize },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io: {e}"),
+            CheckpointError::BadMagic => write!(f, "bad magic — not a skrull checkpoint"),
+            CheckpointError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CheckpointError::BadChecksum => write!(f, "checksum mismatch (file corrupt)"),
+            CheckpointError::SizeMismatch { got, want } => {
+                write!(f, "parameter count mismatch: checkpoint {got}, model {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
 }
 
 /// A complete resumable training state.

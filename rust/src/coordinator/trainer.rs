@@ -11,7 +11,7 @@
 //! demonstrates for real: packing density and micro-batch count (= PJRT
 //! launches) drop under Skrull scheduling, with identical learning curves.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::config::Policy;
 use crate::coordinator::metrics::TrainMetrics;
@@ -93,7 +93,7 @@ impl Trainer {
             .manifest
             .largest_bucket()
             .context("no buckets in manifest")?;
-        anyhow::ensure!(
+        crate::ensure!(
             opts.bucket_capacity <= largest,
             "bucket_capacity {} exceeds largest artifact bucket {largest}",
             opts.bucket_capacity
@@ -220,7 +220,7 @@ impl Trainer {
                 step_tokens += b.used_tokens() as u64;
                 step_loss_tokens += w as u64;
             }
-            anyhow::ensure!(weight_acc > 0.0, "step {step}: no loss-bearing tokens");
+            crate::ensure!(weight_acc > 0.0, "step {step}: no loss-bearing tokens");
             let mut grads: Vec<f32> = grad_acc.iter().map(|&g| (g / weight_acc) as f32).collect();
             if let Some(max_norm) = self.opts.clip_norm {
                 clip_global_norm(&mut grads, max_norm);
@@ -264,7 +264,7 @@ impl Trainer {
 
     /// Restore a snapshot (param count must match the loaded artifacts).
     pub fn restore(&mut self, st: TrainState) -> Result<()> {
-        anyhow::ensure!(
+        crate::ensure!(
             st.params.len() == self.params.data.len(),
             "checkpoint has {} params, artifacts expect {}",
             st.params.len(),

@@ -19,6 +19,9 @@ pub struct ScheduledLoader<'a> {
     flops: FlopsModel,
     cost: CostModel,
     rng: Rng,
+    /// scheduler scratch arena, reused every iteration (the fast path's
+    /// buffers survive across `next_iteration` calls)
+    ctx: gds::SchedCtx,
     /// cumulative seconds spent inside scheduling
     pub sched_seconds: f64,
     pub iterations_served: usize,
@@ -29,7 +32,16 @@ impl<'a> ScheduledLoader<'a> {
         let flops = FlopsModel::new(&cfg.model);
         let cost = CostModel::paper_default(&cfg.model);
         let rng = Rng::seed_from_u64(cfg.seed);
-        ScheduledLoader { dataset, cfg, flops, cost, rng, sched_seconds: 0.0, iterations_served: 0 }
+        ScheduledLoader {
+            dataset,
+            cfg,
+            flops,
+            cost,
+            rng,
+            ctx: gds::SchedCtx::default(),
+            sched_seconds: 0.0,
+            iterations_served: 0,
+        }
     }
 
     /// Schedule an explicit global batch under the configured policy.
@@ -43,11 +55,11 @@ impl<'a> ScheduledLoader<'a> {
             }
             Policy::Skrull => {
                 let gcfg = gds::GdsConfig::new(self.cfg.bucket_size, c.cp, c.dp);
-                gds::schedule(batch, &gcfg, &self.flops)
+                gds::schedule_with_ctx(batch, &gcfg, &self.flops, &mut self.ctx)
             }
             Policy::SkrullRefined => {
                 let gcfg = gds::GdsConfig::new(self.cfg.bucket_size, c.cp, c.dp);
-                gds::schedule_refined(batch, &gcfg, &self.cost)
+                gds::schedule_refined_with_ctx(batch, &gcfg, &self.cost, &mut self.ctx)
             }
             Policy::SortedBatching => {
                 Ok(baseline::sorted_batching(batch, c.dp, c.cp, self.cfg.bucket_size))

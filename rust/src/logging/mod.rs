@@ -1,59 +1,118 @@
-//! Minimal leveled logger backing the `log` facade (no env_logger offline).
-//! Level comes from `SKRULL_LOG` (error|warn|info|debug|trace), default info.
+//! Minimal leveled logger (the offline build has no log/env_logger).
+//! Level comes from `SKRULL_LOG` (error|warn|info|debug|trace), default
+//! info.  Use through the crate-root macros `log_error!` … `log_trace!`;
+//! `init()` stamps the epoch and applies the env level and is safe to call
+//! more than once.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
-
-struct SimpleLogger {
-    level: LevelFilter,
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for SimpleLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.elapsed().as_secs_f64();
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the logger; safe to call more than once (later calls are no-ops).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Install the logger; safe to call more than once (later calls only
+/// re-read the env level).
 pub fn init() {
+    START.get_or_init(Instant::now);
     let level = match std::env::var("SKRULL_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    let logger = Box::new(SimpleLogger { level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(level);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the `log_*!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
     }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {args}", level.tag());
+}
+
+// The level gate runs BEFORE the format arguments are evaluated, so a
+// disabled `log_debug!("{}", expensive())` costs one atomic load — the
+// zero-cost-when-disabled property of the `log` facade this replaces.
+#[macro_export]
+macro_rules! log_at {
+    ($level:expr, $($arg:tt)*) => {
+        if $crate::logging::enabled($level) {
+            $crate::logging::log($level, module_path!(), format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::log_at!($crate::logging::Level::Error, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::logging::Level::Warn, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::logging::Level::Info, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::logging::Level::Debug, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => { $crate::log_at!($crate::logging::Level::Trace, $($arg)*) };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger smoke");
+        init();
+        init();
+        crate::log_info!("logger smoke");
+    }
+
+    #[test]
+    fn level_order_is_sane() {
+        assert!(Level::Error < Level::Trace);
+        init();
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Trace) || std::env::var("SKRULL_LOG").as_deref() == Ok("trace"));
     }
 }

@@ -11,7 +11,8 @@
 //! (--model, --dataset, --dp, --cp, --batch-size, --policy, --bucket-size,
 //! --iterations, --seed).
 
-use anyhow::{bail, Context, Result};
+use skrull::bail;
+use skrull::util::error::{Context, Result};
 
 use skrull::cli::Args;
 use skrull::cluster::simulate_iteration;

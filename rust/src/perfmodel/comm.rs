@@ -76,7 +76,7 @@ impl CommModel {
             .filter(|p| p.0 < 32.0)
             .map(|p| p.1 * 1e-6 - a * p.0 * MIB)
             .collect();
-        residuals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        residuals.sort_by(f64::total_cmp);
         let fixed = if residuals.is_empty() { 1e-6 } else { residuals[residuals.len() / 2] };
         CommModel { alpha_s_per_byte: a, fixed_s: fixed.max(1e-6) }
     }

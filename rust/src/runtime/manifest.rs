@@ -12,14 +12,29 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest line {0}: {1}")]
+    Io(std::io::Error),
     Parse(usize, String),
-    #[error("unsupported manifest version {0}")]
     Version(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Parse(line, msg) => write!(f, "manifest line {line}: {msg}"),
+            ManifestError::Version(v) => write!(f, "unsupported manifest version {v}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]

@@ -6,6 +6,8 @@
 pub mod manifest;
 pub mod params;
 pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+pub mod xla_stub;
 
 pub use manifest::Manifest;
 pub use params::FlatParams;

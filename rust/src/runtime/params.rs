@@ -4,12 +4,29 @@
 
 use crate::runtime::manifest::Manifest;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ParamsError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("params.bin holds {got} f32s, manifest expects {want}")]
+    Io(std::io::Error),
     SizeMismatch { got: usize, want: usize },
+}
+
+impl std::fmt::Display for ParamsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParamsError::Io(e) => write!(f, "io: {e}"),
+            ParamsError::SizeMismatch { got, want } => {
+                write!(f, "params.bin holds {got} f32s, manifest expects {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParamsError {}
+
+impl From<std::io::Error> for ParamsError {
+    fn from(e: std::io::Error) -> Self {
+        ParamsError::Io(e)
+    }
 }
 
 /// Flat f32 parameter (or gradient) buffer with per-tensor offsets.

@@ -17,7 +17,22 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
+
+// The real PJRT bindings need the external `xla` crate, which the offline
+// build cannot fetch; the stub mirrors its API and fails fast at client
+// construction (see runtime::xla_stub).
+#[cfg(not(feature = "xla"))]
+use crate::runtime::xla_stub as xla;
+
+// The feature is a placeholder gate: turning it on only makes sense once a
+// real `xla` dependency is added to Cargo.toml, so fail with a clear
+// message instead of a wall of unresolved-path errors.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires adding the `xla` (xla_extension) crate to Cargo.toml \
+     and replacing runtime::xla_stub with it"
+);
 
 use crate::data::packing::PackedBucket;
 use crate::runtime::manifest::Manifest;
@@ -151,7 +166,7 @@ impl Runtime {
         let root = result[0][0].to_literal_sync()?;
         let parts = root.to_tuple()?;
         let n_tensors = params.buffers.len();
-        anyhow::ensure!(
+        crate::ensure!(
             parts.len() == 1 + n_tensors,
             "expected {} outputs, got {}",
             1 + n_tensors,
@@ -164,7 +179,7 @@ impl Runtime {
         for (i, part) in parts[1..].iter().enumerate() {
             let n = self.manifest.params[i].numel();
             let v = part.to_vec::<f32>()?;
-            anyhow::ensure!(v.len() == n, "grad {i}: {} vs {}", v.len(), n);
+            crate::ensure!(v.len() == n, "grad {i}: {} vs {}", v.len(), n);
             grads[off..off + n].copy_from_slice(&v);
             off += n;
         }

@@ -2,18 +2,64 @@
 //! first), used by GDS step (i) to balance FLOPs across DP ranks
 //! (Algorithm 2, line 1).  LPT has a 4/3 makespan guarantee, plenty for a
 //! near-zero-cost online scheduler.
+//!
+//! The fast path keeps the bins in a min-heap keyed by (load, index), so
+//! each placement is O(log dp) instead of an O(dp) min-scan — identical
+//! output to [`balance_reference`] (ties resolve to the lowest bin index
+//! in both), which stays around as the oracle.  All comparisons use
+//! `f64::total_cmp`: a NaN weight degrades placement quality instead of
+//! panicking the scheduler.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// `f64` with the IEEE 754 total order, for heap keys.
+#[derive(Clone, Copy, PartialEq)]
+struct TotalF64(f64);
+
+impl Eq for TotalF64 {}
+
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
 
 /// Distribute weighted items over `bins` bins, minimizing the max bin
 /// weight.  Returns per-bin item lists; items keep their payloads.
 pub fn balance<T: Copy>(items: &[(T, f64)], bins: usize) -> Vec<Vec<T>> {
     assert!(bins > 0);
     let mut order: Vec<usize> = (0..items.len()).collect();
-    order.sort_by(|&a, &b| items[b].1.partial_cmp(&items[a].1).unwrap());
+    order.sort_by(|&a, &b| items[b].1.total_cmp(&items[a].1));
+    let mut out: Vec<Vec<T>> = vec![Vec::new(); bins];
+    // min-heap over (load, bin index): equal loads pop the lowest index,
+    // matching the reference min-scan's first-minimum rule
+    let mut heap: BinaryHeap<Reverse<(TotalF64, usize)>> =
+        (0..bins).map(|j| Reverse((TotalF64(0.0), j))).collect();
+    for idx in order {
+        let Reverse((TotalF64(load), j)) = heap.pop().expect("bins > 0");
+        out[j].push(items[idx].0);
+        heap.push(Reverse((TotalF64(load + items[idx].1), j)));
+    }
+    out
+}
+
+/// The original O(items × bins) min-scan LPT — oracle for [`balance`].
+pub fn balance_reference<T: Copy>(items: &[(T, f64)], bins: usize) -> Vec<Vec<T>> {
+    assert!(bins > 0);
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by(|&a, &b| items[b].1.total_cmp(&items[a].1));
     let mut out: Vec<Vec<T>> = vec![Vec::new(); bins];
     let mut load = vec![0.0f64; bins];
     for idx in order {
         let j = (0..bins)
-            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+            .min_by(|&a, &b| load[a].total_cmp(&load[b]))
             .unwrap();
         out[j].push(items[idx].0);
         load[j] += items[idx].1;
@@ -100,5 +146,47 @@ mod tests {
         assert_eq!(bins.len(), 3);
         assert!(bins.iter().all(|b| b.is_empty()));
         assert_eq!(imbalance(&bins, |_| 1.0), 1.0);
+    }
+
+    #[test]
+    fn heap_matches_reference_min_scan() {
+        // the fast heap LPT must place every item in exactly the bin the
+        // reference min-scan picks, including tie-heavy inputs
+        let mut rng = Rng::seed_from_u64(0x1B);
+        for bins in [1usize, 2, 3, 7, 16] {
+            for trial in 0..20 {
+                let n = 1 + (trial * 13) % 97;
+                let items: Vec<(usize, f64)> = (0..n)
+                    .map(|i| {
+                        // mix of ties (quantized) and spread weights
+                        let w = if i % 3 == 0 {
+                            (rng.below(5) + 1) as f64
+                        } else {
+                            rng.lognormal(2.0, 1.2)
+                        };
+                        (i, w)
+                    })
+                    .collect();
+                assert_eq!(
+                    balance(&items, bins),
+                    balance_reference(&items, bins),
+                    "bins={bins} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_weight_does_not_panic() {
+        // regression: the seed's partial_cmp().unwrap() sorts panicked on
+        // NaN; total_cmp must keep every item assigned instead
+        let items = [(0u32, 2.0), (1, f64::NAN), (2, 1.0), (3, f64::NAN), (4, 3.0)];
+        for bins in [1usize, 2, 4] {
+            let out = balance(&items, bins);
+            let mut got: Vec<u32> = out.iter().flatten().copied().collect();
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 3, 4], "bins={bins}");
+            assert_eq!(out, balance_reference(&items, bins), "bins={bins}");
+        }
     }
 }

@@ -41,17 +41,30 @@ impl DacpConfig {
     }
 }
 
-/// Internal mutable state: RB, L and the assignment under construction.
+/// Reusable working buffers for [`schedule_with_scratch`].  GDS calls DACP
+/// once per candidate micro-batch inside its retry loop; threading one
+/// scratch through those calls removes all per-call allocations except the
+/// returned plan itself (which the caller owns).
+#[derive(Debug, Default)]
+pub struct DacpScratch {
+    rb: Vec<i64>,
+    load: Vec<f64>,
+    assign: Vec<i32>,
+    order: Vec<usize>,
+}
+
+/// Internal mutable state: RB, L and the assignment under construction
+/// (views into a `DacpScratch`).
 struct State<'a> {
     cfg: &'a DacpConfig,
     flops: &'a FlopsModel,
     lens: &'a [u32],
     /// remaining bucket tokens per rank (can go fractional via shards —
     /// tracked in tokens, shards use ceiling division)
-    rb: Vec<i64>,
+    rb: &'a mut [i64],
     /// FLOPs load per rank
-    load: Vec<f64>,
-    assign: Vec<i32>,
+    load: &'a mut [f64],
+    assign: &'a mut [i32],
 }
 
 impl<'a> State<'a> {
@@ -108,8 +121,11 @@ impl<'a> State<'a> {
     }
 
     fn argmin_load(&self) -> usize {
+        // total_cmp: NaN-safe (a poisoned FLOPs model must not panic the
+        // scheduler) and identical to partial_cmp on the finite loads the
+        // algorithm actually produces.
         (0..self.cfg.cp_degree)
-            .min_by(|&a, &b| self.load[a].partial_cmp(&self.load[b]).unwrap())
+            .min_by(|&a, &b| self.load[a].total_cmp(&self.load[b]))
             .unwrap()
     }
 
@@ -126,6 +142,17 @@ impl<'a> State<'a> {
 /// `lens` (the paper sorts in place; we schedule through a sorted index
 /// view so callers keep stable sequence identity).
 pub fn schedule(lens: &[u32], cfg: &DacpConfig, flops: &FlopsModel) -> Result<DacpPlan, SchedError> {
+    schedule_with_scratch(lens, cfg, flops, &mut DacpScratch::default())
+}
+
+/// Algorithm 1 with caller-owned working buffers.  Produces exactly the
+/// plan [`schedule`] does; the scratch only recycles allocations.
+pub fn schedule_with_scratch(
+    lens: &[u32],
+    cfg: &DacpConfig,
+    flops: &FlopsModel,
+    scratch: &mut DacpScratch,
+) -> Result<DacpPlan, SchedError> {
     let n = cfg.cp_degree;
     let cap = cfg.bucket_size as u64 * n as u64;
     for &l in lens {
@@ -133,17 +160,25 @@ pub fn schedule(lens: &[u32], cfg: &DacpConfig, flops: &FlopsModel) -> Result<Da
             return Err(SchedError::TooLong { len: l, cap });
         }
     }
+    let DacpScratch { rb, load, assign, order } = scratch;
+    rb.clear();
+    rb.resize(n, cfg.bucket_size as i64);
+    load.clear();
+    load.resize(n, 0.0);
+    assign.clear();
+    assign.resize(lens.len(), i32::MIN);
     let mut st = State {
         cfg,
         flops,
         lens,
-        rb: vec![cfg.bucket_size as i64; n],
-        load: vec![0.0; n],
-        assign: vec![i32::MIN; lens.len()],
+        rb: rb.as_mut_slice(),
+        load: load.as_mut_slice(),
+        assign: assign.as_mut_slice(),
     };
 
     // ascending length order (line 1)
-    let mut order: Vec<usize> = (0..lens.len()).collect();
+    order.clear();
+    order.extend(0..lens.len());
     order.sort_by_key(|&i| lens[i]);
 
     let mut qi = 0;
@@ -185,7 +220,7 @@ pub fn schedule(lens: &[u32], cfg: &DacpConfig, flops: &FlopsModel) -> Result<Da
         // retry the same sequence (line 19: i ← i-1; continue)
     }
 
-    let plan = DacpPlan { assign: st.assign };
+    let plan = DacpPlan { assign: st.assign.to_vec() };
     debug_assert!(plan.validate(lens, cfg.bucket_size, n).is_ok());
     Ok(plan)
 }

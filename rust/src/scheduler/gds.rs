@@ -8,12 +8,54 @@
 //!
 //! Scope is the global batch — the largest scheduling scope that keeps
 //! Adam/AdamW mathematically equivalent (Section 4.2).
+//!
+//! Two implementations live here:
+//!
+//! * the **fast path** ([`schedule`] / [`schedule_with_ctx`]) — an
+//!   allocation-lean, incremental, parallel engine: a reusable [`SchedCtx`]
+//!   scratch arena recycles the sort/stride/DACP buffers across the
+//!   micro-batch-count retry loop, an O(K) strided token-sum precheck
+//!   rejects infeasible counts before any DACP call, a galloping search
+//!   (see [`MbSearch`]) skips over the token-infeasible prefix of counts,
+//!   and the work fans out over scoped threads (util::par) twice — across
+//!   DP ranks, and across a large candidate's independent per-subset DACP
+//!   runs;
+//! * the **reference path** ([`schedule_reference`]) — the direct
+//!   transcription of Algorithm 2 that the fast path is oracle-tested
+//!   against (`fast path ≡ reference`, byte for byte, on random
+//!   workloads; see the property tests below and
+//!   rust/tests/scheduler_integration.rs).
 
 use crate::data::Sequence;
 use crate::perfmodel::FlopsModel;
 use crate::scheduler::binpack;
-use crate::scheduler::dacp::{self, DacpConfig};
-use crate::scheduler::plan::{IterationSchedule, MicroBatch, RankSchedule, SchedError};
+use crate::scheduler::dacp::{self, DacpConfig, DacpScratch};
+use crate::scheduler::plan::{DacpPlan, IterationSchedule, MicroBatch, RankSchedule, SchedError};
+use crate::util::par;
+
+/// How `schedule_rank` searches for the smallest feasible micro-batch
+/// count.  Both strategies run the same O(K) token precheck per candidate;
+/// they differ only in which candidates they visit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MbSearch {
+    /// Exponential (1, 2, 4, …) advance to bracket the first
+    /// token-feasible count, then binary search inside the bracket.
+    /// Assumes the max strided-subset token sum is non-increasing in the
+    /// count — which holds exactly on doubling chains (a stride-2b subset
+    /// is a sub-multiset of a stride-b subset) and empirically on every
+    /// random workload the oracle tests throw at it.  The assumption is
+    /// provably FALSE for the chunked ablation mode (ceil(K/n) steps make
+    /// the max chunk sum non-monotone, e.g. sorted lens
+    /// [0,5,5,9,12,15,16,32,41,49] with cap 89: feasible at n=4,
+    /// infeasible at n=5..9), so `interleave = false` always takes the
+    /// linear scan regardless of this setting.  After the first feasible
+    /// count, DACP failures advance linearly, exactly like the reference.
+    Gallop,
+    /// Plain linear scan from the memory lower bound — reference-exact by
+    /// construction, kept as the fallback for pathological length
+    /// profiles.
+    Linear,
+}
 
 #[derive(Clone, Debug)]
 pub struct GdsConfig {
@@ -24,11 +66,24 @@ pub struct GdsConfig {
     /// Disable the long/short interleaving (ablation): contiguous chunks
     /// of the sorted subset instead of strided slices.
     pub interleave: bool,
+    /// Fan DP ranks (and refinement micro-batches) out over scoped
+    /// threads.  Output is byte-identical either way.
+    pub parallel: bool,
+    /// Micro-batch-count search strategy (fast path only).
+    pub search: MbSearch,
 }
 
 impl GdsConfig {
     pub fn new(bucket_size: u32, cp: usize, dp: usize) -> Self {
-        GdsConfig { bucket_size, cp, dp, rollback_largest: true, interleave: true }
+        GdsConfig {
+            bucket_size,
+            cp,
+            dp,
+            rollback_largest: true,
+            interleave: true,
+            parallel: true,
+            search: MbSearch::Gallop,
+        }
     }
 
     pub fn dacp(&self) -> DacpConfig {
@@ -38,30 +93,400 @@ impl GdsConfig {
     }
 }
 
+/// Per-rank scratch arena: every buffer the micro-batch-count retry loop
+/// needs, reused across candidates, ranks (when serial) and iterations.
+#[derive(Debug, Default)]
+pub struct RankCtx {
+    /// the rank's subset, ascending by length
+    sorted: Vec<Sequence>,
+    /// lengths of `sorted` (contiguous, cache-friendly for the prechecks)
+    lens: Vec<u32>,
+    /// prefix token sums of `lens` (chunked precheck)
+    prefix: Vec<u64>,
+    /// per-subset token sums for one candidate count (strided precheck)
+    subset_tokens: Vec<u64>,
+    /// lengths of the subset currently handed to DACP
+    lens_buf: Vec<u32>,
+    /// accepted per-subset plans for the candidate under trial
+    plans: Vec<DacpPlan>,
+    /// DACP's own working buffers
+    dacp: DacpScratch,
+    /// per-subset length buffers for the parallel inner DACP fan-out
+    lens_pool: Vec<Vec<u32>>,
+    /// per-subset DACP scratches for the parallel inner fan-out
+    dacp_pool: Vec<DacpScratch>,
+}
+
+/// Below this many sequences on a rank, the inner per-subset DACP fan-out
+/// is not worth the thread spawns; the candidate runs serially.
+const PAR_SUBSET_MIN_SEQS: usize = 512;
+
+/// Scratch arena for a full [`schedule_with_ctx`] call: per-rank contexts
+/// plus the weighted-sequence buffer the bin-packer consumes.  Hold one
+/// per loader/caller and reuse it every iteration.
+#[derive(Debug, Default)]
+pub struct SchedCtx {
+    ranks: Vec<RankCtx>,
+    weighted: Vec<(Sequence, f64)>,
+}
+
+impl SchedCtx {
+    fn ensure_ranks(&mut self, dp: usize) {
+        if self.ranks.len() < dp {
+            self.ranks.resize_with(dp, RankCtx::default);
+        }
+    }
+}
+
+/// Max strided-subset token total `max_j Σ Subset[j::n_mb]` ≤ cap, in one
+/// pass over the sorted lengths (element i belongs to subset i mod n_mb).
+fn interleaved_feasible(lens: &[u32], n_mb: usize, cap: u64, sums: &mut Vec<u64>) -> bool {
+    sums.clear();
+    sums.resize(n_mb, 0);
+    for (i, &l) in lens.iter().enumerate() {
+        sums[i % n_mb] += l as u64;
+    }
+    sums.iter().all(|&s| s <= cap)
+}
+
+/// Chunked (ablation mode) counterpart over precomputed prefix sums.
+fn chunked_feasible(prefix: &[u64], n_mb: usize, cap: u64) -> bool {
+    let len = prefix.len() - 1;
+    let chunk = len.div_ceil(n_mb);
+    let mut start = 0;
+    while start < len {
+        let end = (start + chunk).min(len);
+        if prefix[end] - prefix[start] > cap {
+            return false;
+        }
+        start = end;
+    }
+    true
+}
+
+fn token_feasible(rctx: &mut RankCtx, interleave: bool, n_mb: usize, cap: u64) -> bool {
+    if interleave {
+        interleaved_feasible(&rctx.lens, n_mb, cap, &mut rctx.subset_tokens)
+    } else {
+        chunked_feasible(&rctx.prefix, n_mb, cap)
+    }
+}
+
+/// Smallest token-feasible micro-batch count in `[lo, hi]`, or None.
+/// `hi` = the subset size, where singleton micro-batches are always
+/// token-feasible (each sequence was length-checked against the cap), so
+/// the gallop always brackets.
+fn first_token_feasible(
+    rctx: &mut RankCtx,
+    interleave: bool,
+    cap: u64,
+    lo: usize,
+    hi: usize,
+    search: MbSearch,
+) -> Option<usize> {
+    match search {
+        MbSearch::Linear => (lo..=hi).find(|&n| token_feasible(rctx, interleave, n, cap)),
+        MbSearch::Gallop => {
+            if lo > hi {
+                return None;
+            }
+            if token_feasible(rctx, interleave, lo, cap) {
+                return Some(lo);
+            }
+            let mut bad = lo;
+            let mut step = 1usize;
+            loop {
+                let cand = bad.saturating_add(step).min(hi);
+                if token_feasible(rctx, interleave, cand, cap) {
+                    // binary search the bracket (bad, cand]
+                    let (mut l, mut r) = (bad, cand);
+                    while r - l > 1 {
+                        let m = l + (r - l) / 2;
+                        if token_feasible(rctx, interleave, m, cap) {
+                            r = m;
+                        } else {
+                            l = m;
+                        }
+                    }
+                    return Some(r);
+                }
+                if cand == hi {
+                    return None;
+                }
+                bad = cand;
+                step *= 2;
+            }
+        }
+    }
+}
+
+/// Number of non-empty micro-batches a candidate count produces.  With
+/// interleaving every stride j < n_mb ≤ K is populated; in chunked mode
+/// the trailing chunks can be empty (the reference skips them too).
+fn active_mbs(len: usize, n_mb: usize, interleave: bool) -> usize {
+    if interleave {
+        n_mb
+    } else {
+        let chunk = len.div_ceil(n_mb);
+        len.div_ceil(chunk)
+    }
+}
+
+/// Schedule one DP rank's subset (Algorithm 2 body) — fast path.
+/// Byte-identical plans to [`schedule_rank_reference`].
+pub fn schedule_rank_with_ctx(
+    subset: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+    rctx: &mut RankCtx,
+) -> Result<RankSchedule, SchedError> {
+    schedule_rank_inner(subset, cfg, flops, rctx, 1)
+}
+
+/// The rank scheduler body.  `outer_fanout` is how many sibling rank
+/// schedulers are running concurrently (1 when standalone): the inner
+/// per-subset DACP fan-out claims only its `1/outer_fanout` share of the
+/// core budget so the nested parallelism cannot oversubscribe.
+fn schedule_rank_inner(
+    subset: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+    rctx: &mut RankCtx,
+    outer_fanout: usize,
+) -> Result<RankSchedule, SchedError> {
+    if subset.is_empty() {
+        return Ok(RankSchedule::default());
+    }
+    let cap = cfg.bucket_size as u64 * cfg.cp as u64;
+    let total: u64 = subset.iter().map(|s| s.len as u64).sum();
+    for s in subset {
+        if s.len as u64 > cap {
+            return Err(SchedError::TooLong { len: s.len, cap });
+        }
+    }
+
+    // line 3: ascending sort (into the reusable arena)
+    rctx.sorted.clear();
+    rctx.sorted.extend_from_slice(subset);
+    rctx.sorted.sort_by_key(|s| s.len);
+    let k = rctx.sorted.len();
+    rctx.lens.clear();
+    rctx.lens.extend(rctx.sorted.iter().map(|s| s.len));
+    if !cfg.interleave {
+        rctx.prefix.clear();
+        rctx.prefix.reserve(k + 1);
+        rctx.prefix.push(0);
+        let mut acc = 0u64;
+        for &l in &rctx.lens {
+            acc += l as u64;
+            rctx.prefix.push(acc);
+        }
+    }
+
+    // line 2: start from the memory lower bound on micro-batch count
+    let min_mbs = (total.div_ceil(cap) as usize).max(1);
+    let dacp_cfg = cfg.dacp();
+    let capacity_error = |rctx: &RankCtx| SchedError::TooLong {
+        len: rctx.sorted.last().map(|s| s.len).unwrap_or(0),
+        cap,
+    };
+
+    // the retry loop of Algorithm 2, with the token precheck hoisted in
+    // front of every DACP call and the first candidate found by `search`.
+    // The gallop's monotonicity assumption only holds for strided subsets
+    // (see MbSearch::Gallop), so the chunked ablation mode is pinned to
+    // the exact linear scan.
+    let search = if cfg.interleave { cfg.search } else { MbSearch::Linear };
+    let Some(mut n_mb) = first_token_feasible(rctx, cfg.interleave, cap, min_mbs, k, search)
+    else {
+        return Err(capacity_error(rctx));
+    };
+    'outer: loop {
+        let active = active_mbs(k, n_mb, cfg.interleave);
+        let chunk = k.div_ceil(n_mb);
+        rctx.plans.clear();
+        let mut dacp_failed = false;
+        let inner_limit = (par::max_threads() / outer_fanout.max(1)).max(1);
+        if cfg.parallel && active >= 2 && inner_limit >= 2 && k >= PAR_SUBSET_MIN_SEQS {
+            // inner fan-out: the candidate's subsets are independent, so
+            // their DACP runs can proceed concurrently; the accept/reject
+            // decision ("did any subset fail?") and the accepted plans are
+            // identical to the serial j-order walk
+            if rctx.lens_pool.len() < active {
+                rctx.lens_pool.resize_with(active, Vec::new);
+            }
+            if rctx.dacp_pool.len() < active {
+                rctx.dacp_pool.resize_with(active, DacpScratch::default);
+            }
+            for j in 0..active {
+                let buf = &mut rctx.lens_pool[j];
+                buf.clear();
+                if cfg.interleave {
+                    buf.extend(rctx.lens.iter().skip(j).step_by(n_mb));
+                } else {
+                    buf.extend(rctx.lens.iter().skip(j * chunk).take(chunk));
+                }
+            }
+            let results = par::map_with_scratch_up_to(
+                inner_limit,
+                &rctx.lens_pool[..active],
+                &mut rctx.dacp_pool[..active],
+                |_, lens, scratch| dacp::schedule_with_scratch(lens, &dacp_cfg, flops, scratch),
+            );
+            for r in results {
+                match r {
+                    Ok(plan) => rctx.plans.push(plan),
+                    Err(_) => {
+                        dacp_failed = true;
+                        break;
+                    }
+                }
+            }
+        } else {
+            for j in 0..active {
+                // line 7: Subset[j::n_mb] pairs long and short sequences
+                rctx.lens_buf.clear();
+                if cfg.interleave {
+                    rctx.lens_buf.extend(rctx.lens.iter().skip(j).step_by(n_mb));
+                } else {
+                    rctx.lens_buf.extend(rctx.lens.iter().skip(j * chunk).take(chunk));
+                }
+                match dacp::schedule_with_scratch(&rctx.lens_buf, &dacp_cfg, flops, &mut rctx.dacp)
+                {
+                    Ok(plan) => rctx.plans.push(plan),
+                    Err(_) => {
+                        dacp_failed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dacp_failed {
+            // line 8: DACP failure → retry with more micro-batches (token
+            // failures were already excluded by the precheck); linear
+            // advance over token-feasible counts — exactly the reference's
+            // behaviour from this point on
+            loop {
+                n_mb += 1;
+                if n_mb > k {
+                    return Err(capacity_error(rctx));
+                }
+                if token_feasible(rctx, cfg.interleave, n_mb, cap) {
+                    continue 'outer;
+                }
+            }
+        }
+        // all subsets scheduled: materialize the rank plan (the only
+        // allocations that escape the arena are the returned micro-batches)
+        let mut mbs = Vec::with_capacity(active);
+        for (j, plan) in rctx.plans.drain(..).enumerate() {
+            let seqs: Vec<Sequence> = if cfg.interleave {
+                rctx.sorted.iter().skip(j).step_by(n_mb).copied().collect()
+            } else {
+                rctx.sorted.iter().skip(j * chunk).take(chunk).copied().collect()
+            };
+            mbs.push(MicroBatch { seqs, plan });
+        }
+        return Ok(RankSchedule { micro_batches: mbs });
+    }
+}
+
+/// Schedule one DP rank's subset with a throwaway scratch arena.
+pub fn schedule_rank(
+    subset: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+) -> Result<RankSchedule, SchedError> {
+    schedule_rank_with_ctx(subset, cfg, flops, &mut RankCtx::default())
+}
+
+/// Full GDS fast path: bin-pack the global batch over DP ranks by FLOPs
+/// (Algorithm 2, line 1), then schedule each rank — in parallel when
+/// `cfg.parallel` — reusing the caller's scratch arena.
+pub fn schedule_with_ctx(
+    global_batch: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+    ctx: &mut SchedCtx,
+) -> Result<IterationSchedule, SchedError> {
+    ctx.weighted.clear();
+    ctx.weighted
+        .extend(global_batch.iter().map(|&s| (s, flops.seq(s.len))));
+    let bins = binpack::balance(&ctx.weighted, cfg.dp);
+    ctx.ensure_ranks(cfg.dp);
+    let results: Vec<Result<RankSchedule, SchedError>> = if cfg.parallel && cfg.dp > 1 {
+        let outer = cfg.dp.min(par::max_threads());
+        par::map_with_scratch(&bins, &mut ctx.ranks[..cfg.dp], move |_, subset, rctx| {
+            schedule_rank_inner(subset, cfg, flops, rctx, outer)
+        })
+    } else {
+        bins.iter()
+            .zip(ctx.ranks.iter_mut())
+            .map(|(subset, rctx)| schedule_rank_inner(subset, cfg, flops, rctx, 1))
+            .collect()
+    };
+    let ranks = results.into_iter().collect::<Result<Vec<_>, _>>()?;
+    Ok(IterationSchedule { ranks })
+}
+
+/// Full GDS fast path with a throwaway scratch arena.
+pub fn schedule(
+    global_batch: &[Sequence],
+    cfg: &GdsConfig,
+    flops: &FlopsModel,
+) -> Result<IterationSchedule, SchedError> {
+    schedule_with_ctx(global_batch, cfg, flops, &mut SchedCtx::default())
+}
+
 /// GDS + DACP + the cost-aware refinement pass (our extension — see
 /// scheduler::dacp::refine and the `ablations` bench).  Guarantees the
 /// plan is never worse than Algorithm 1's under the cost model, and in
 /// particular restores bigger-bucket monotonicity that the avoid-sharding
-/// principle alone violates.
-pub fn schedule_refined(
+/// principle alone violates.  Refinement of independent micro-batches fans
+/// out over scoped threads when `cfg.parallel`.
+pub fn schedule_refined_with_ctx(
     global_batch: &[Sequence],
     cfg: &GdsConfig,
     cost: &crate::perfmodel::CostModel,
+    ctx: &mut SchedCtx,
 ) -> Result<IterationSchedule, SchedError> {
-    let mut sched = schedule(global_batch, cfg, &cost.flops)?;
+    let mut sched = schedule_with_ctx(global_batch, cfg, &cost.flops, ctx)?;
     let dcfg = cfg.dacp();
-    for rank in &mut sched.ranks {
-        for mb in &mut rank.micro_batches {
-            let lens = mb.lens();
-            mb.plan = crate::scheduler::dacp::refine_multistart(&mb.plan, &lens, &dcfg, cost);
+    let refine_one = |mb: &mut MicroBatch| {
+        let lens = mb.lens();
+        mb.plan = dacp::refine_multistart(&mb.plan, &lens, &dcfg, cost);
+    };
+    let mut mbs: Vec<&mut MicroBatch> = sched
+        .ranks
+        .iter_mut()
+        .flat_map(|r| r.micro_batches.iter_mut())
+        .collect();
+    if cfg.parallel && mbs.len() > 1 {
+        par::for_each_mut(&mut mbs, |_, mb| refine_one(mb));
+    } else {
+        for mb in mbs {
+            refine_one(mb);
         }
     }
     Ok(sched)
 }
 
-/// Schedule one DP rank's subset (Algorithm 2 body).  `subset` is that
-/// rank's sequences in any order.
-pub fn schedule_rank(
+/// GDS + refinement with a throwaway scratch arena.
+pub fn schedule_refined(
+    global_batch: &[Sequence],
+    cfg: &GdsConfig,
+    cost: &crate::perfmodel::CostModel,
+) -> Result<IterationSchedule, SchedError> {
+    schedule_refined_with_ctx(global_batch, cfg, cost, &mut SchedCtx::default())
+}
+
+// ---------------------------------------------------------------------------
+// Reference path: the direct transcription of Algorithm 2 the fast path is
+// oracle-tested against.  Serial, allocates per candidate, linear search —
+// semantics, not speed.
+
+/// Schedule one DP rank's subset — reference implementation.
+pub fn schedule_rank_reference(
     subset: &[Sequence],
     cfg: &GdsConfig,
     flops: &FlopsModel,
@@ -120,9 +545,8 @@ pub fn schedule_rank(
     })
 }
 
-/// Full GDS: bin-pack the global batch over DP ranks by FLOPs
-/// (Algorithm 2, line 1), then schedule each rank.
-pub fn schedule(
+/// Full GDS — reference implementation (reference bin-packer included).
+pub fn schedule_reference(
     global_batch: &[Sequence],
     cfg: &GdsConfig,
     flops: &FlopsModel,
@@ -131,10 +555,10 @@ pub fn schedule(
         .iter()
         .map(|&s| (s, flops.seq(s.len)))
         .collect();
-    let bins = binpack::balance(&weighted, cfg.dp);
+    let bins = binpack::balance_reference(&weighted, cfg.dp);
     let ranks = bins
         .iter()
-        .map(|subset| schedule_rank(subset, cfg, flops))
+        .map(|subset| schedule_rank_reference(subset, cfg, flops))
         .collect::<Result<Vec<_>, _>>()?;
     Ok(IterationSchedule { ranks })
 }
@@ -285,5 +709,147 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// The tentpole's safety net: the fast path (all four combinations of
+    /// search strategy × parallelism, with a *reused* arena) produces
+    /// byte-identical schedules — or the identical error — to the
+    /// reference transcription of Algorithm 2, across random workloads and
+    /// both interleave modes.
+    #[test]
+    fn property_fast_path_matches_reference() {
+        let flops = fm();
+        let gen = SeqLensGen { min_k: 1, max_k: 96, max_len: 120_000 };
+        let mut ctx = SchedCtx::default();
+        let configs = [
+            (26 * 1024u32, 8usize, 4usize, true),
+            (26 * 1024, 8, 4, false),
+            (4 * 1024, 4, 2, true),
+            (1024, 2, 3, true),
+        ];
+        forall(0xFA57, 220, &gen, |lens| {
+            let batch = seqs(lens);
+            for &(c, cp, dp, interleave) in &configs {
+                let mut cfg = GdsConfig::new(c, cp, dp);
+                cfg.interleave = interleave;
+                let reference = schedule_reference(&batch, &cfg, &flops);
+                for search in [MbSearch::Gallop, MbSearch::Linear] {
+                    for parallel in [false, true] {
+                        cfg.search = search;
+                        cfg.parallel = parallel;
+                        let fast = schedule_with_ctx(&batch, &cfg, &flops, &mut ctx);
+                        match (&reference, &fast) {
+                            (Ok(a), Ok(b)) => {
+                                if a != b {
+                                    return Err(format!(
+                                        "plan mismatch (C={c} cp={cp} dp={dp} il={interleave} {search:?} par={parallel})"
+                                    ));
+                                }
+                            }
+                            (Err(a), Err(b)) => {
+                                if a != b {
+                                    return Err(format!("error mismatch: {a} vs {b}"));
+                                }
+                            }
+                            _ => {
+                                return Err(format!(
+                                    "feasibility mismatch: ref {:?} fast {:?}",
+                                    reference.is_ok(),
+                                    fast.is_ok()
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_path_matches_reference_at_large_k() {
+        use crate::data::{Dataset, LengthDistribution};
+        use crate::rng::Rng;
+        let flops = fm();
+        let cfg = GdsConfig::new(26 * 1024, 8, 4);
+        let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 50_000, 11)
+            .truncated(26 * 1024 * 8);
+        let mut rng = Rng::seed_from_u64(0xB16);
+        let mut ctx = SchedCtx::default();
+        for k in [1024usize, 4096] {
+            let batch = ds.sample_batch(&mut rng, k);
+            let fast = schedule_with_ctx(&batch, &cfg, &flops, &mut ctx).unwrap();
+            let reference = schedule_reference(&batch, &cfg, &flops).unwrap();
+            assert_eq!(fast, reference, "K={k}");
+        }
+    }
+
+    #[test]
+    fn reused_ctx_is_stateless_across_calls() {
+        // scheduling A, then B, then A again through one arena must give
+        // the same answer for A both times
+        let flops = fm();
+        let cfg = GdsConfig::new(8 * 1024, 4, 2);
+        let a = seqs(&[100, 9_000, 250, 30_000, 90, 800, 12_000, 400]);
+        let b = seqs(&[5_000; 40]);
+        let mut ctx = SchedCtx::default();
+        let first = schedule_with_ctx(&a, &cfg, &flops, &mut ctx).unwrap();
+        let _ = schedule_with_ctx(&b, &cfg, &flops, &mut ctx).unwrap();
+        let again = schedule_with_ctx(&a, &cfg, &flops, &mut ctx).unwrap();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn refined_parallel_matches_serial() {
+        use crate::perfmodel::CostModel;
+        let cost = CostModel::paper_default(&ModelSpec::qwen2_5_0_5b());
+        let batch = seqs(&[25_000, 300, 400, 500, 14_000, 100, 18_000, 900, 22_000, 60]);
+        let mut cfg = GdsConfig::new(13 * 1024, 4, 2);
+        cfg.parallel = false;
+        let serial = schedule_refined(&batch, &cfg, &cost).unwrap();
+        cfg.parallel = true;
+        let parallel = schedule_refined(&batch, &cfg, &cost).unwrap();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn chunked_mode_pins_gallop_to_linear_scan() {
+        // max chunk sums for these lens: 90@n=3, 89@n=4, 90@n=5..9 — a
+        // non-monotone profile where binary search could overshoot the
+        // first feasible count.  Chunked mode must ignore Gallop and match
+        // the reference's linear scan exactly.
+        let flops = fm();
+        let subset = seqs(&[1, 5, 5, 9, 12, 15, 16, 32, 41, 49]);
+        let mut cfg = GdsConfig::new(89, 1, 1);
+        cfg.interleave = false;
+        cfg.search = MbSearch::Gallop;
+        let fast = schedule_rank(&subset, &cfg, &flops).unwrap();
+        let reference = schedule_rank_reference(&subset, &cfg, &flops).unwrap();
+        assert_eq!(fast, reference);
+        assert_eq!(fast.micro_batches.len(), 4);
+    }
+
+    #[test]
+    fn gallop_handles_tight_caps() {
+        // total >> cap forces a large first feasible count; gallop and
+        // linear must agree on it exactly
+        let flops = fm();
+        for lens in [vec![1_000u32; 257], vec![2_000; 64], vec![1, 1, 1, 4_000]] {
+            let subset = seqs(&lens);
+            let mut cfg = GdsConfig::new(512, 8, 1);
+            let linear = {
+                cfg.search = MbSearch::Linear;
+                schedule_rank(&subset, &cfg, &flops)
+            };
+            let gallop = {
+                cfg.search = MbSearch::Gallop;
+                schedule_rank(&subset, &cfg, &flops)
+            };
+            match (linear, gallop) {
+                (Ok(a), Ok(b)) => assert_eq!(a.micro_batches.len(), b.micro_batches.len()),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("search disagreement: {:?} vs {:?}", a.is_ok(), b.is_ok()),
+            }
+        }
     }
 }

@@ -8,15 +8,31 @@ use crate::data::Sequence;
 /// (paper: ret[i] = -1, i.e. D_k = 1).
 pub const DISTRIBUTED: i32 = -1;
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SchedError {
-    #[error("sequence {seq_idx} (len {len}) cannot fit: shard {shard} > min remaining bucket {remain}")]
     Infeasible { seq_idx: usize, len: u32, shard: u32, remain: i64 },
-    #[error("roll-back failed: no local sequence left in bucket {rank}")]
     RollbackFailed { rank: usize },
-    #[error("sequence of length {len} exceeds total capacity C*N = {cap}")]
     TooLong { len: u32, cap: u64 },
 }
+
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::Infeasible { seq_idx, len, shard, remain } => write!(
+                f,
+                "sequence {seq_idx} (len {len}) cannot fit: shard {shard} > min remaining bucket {remain}"
+            ),
+            SchedError::RollbackFailed { rank } => {
+                write!(f, "roll-back failed: no local sequence left in bucket {rank}")
+            }
+            SchedError::TooLong { len, cap } => {
+                write!(f, "sequence of length {len} exceeds total capacity C*N = {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
 
 /// DACP result for one micro-batch: per-sequence assignment, in the
 /// *original* order of the micro-batch's sequence list.
@@ -90,7 +106,8 @@ impl DacpPlan {
 }
 
 /// One scheduled micro-batch: its sequences + the DACP placement.
-#[derive(Debug, Clone)]
+/// `PartialEq` backs the fast-path-vs-reference oracle tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MicroBatch {
     pub seqs: Vec<Sequence>,
     pub plan: DacpPlan,
@@ -108,13 +125,13 @@ impl MicroBatch {
 
 /// All micro-batches of one DP rank for one iteration (inner Vec = the
 /// gradient-accumulation steps), i.e. one row of the B_{kij} matrix.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RankSchedule {
     pub micro_batches: Vec<MicroBatch>,
 }
 
 /// The full iteration schedule across DP ranks.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IterationSchedule {
     pub ranks: Vec<RankSchedule>,
 }

@@ -25,6 +25,23 @@ struct Search<'a> {
     // state
     assign: Vec<i32>,
     rb: Vec<i64>,
+    // incremental bound state, pushed/popped along the DFS so that
+    // `lower_bound` is O(N) instead of the seed's O(K·N) full rescans.
+    // Each push adds onto the exact previous partial sum and each pop
+    // restores the saved value bit-for-bit, so every bound equals what the
+    // rescan would have computed and the search explores identical nodes.
+    /// per-sequence layer FLOPs, in search (longest-first) order
+    seq_flops: Vec<f64>,
+    /// per-sequence ceil(S/N) shard tokens, in search order
+    shard_tok: Vec<i64>,
+    /// Σ seq_flops of the locals on each rank
+    local_flops: Vec<f64>,
+    /// number of locals on each rank (for the symmetric-empty-rank dedupe)
+    local_count: Vec<u32>,
+    /// Σ seq_flops of the distributed sequences
+    dist_flops: f64,
+    /// Σ tokens of the distributed sequences (drives T_comm)
+    dist_tokens: u64,
     best_cost: f64,
     best: Option<Vec<i32>>,
     nodes: u64,
@@ -34,37 +51,18 @@ struct Search<'a> {
 impl<'a> Search<'a> {
     /// Lower bound on the final TDACP given a partial assignment: the
     /// distributed compute so far is paid by everyone; local compute per
-    /// rank is a lower bound on that rank's Eq. 2 term.
+    /// rank is a lower bound on that rank's Eq. 2 term.  O(N) from the
+    /// maintained sums.
     fn lower_bound(&self) -> f64 {
-        let dist_tokens: u64 = self
-            .assign
-            .iter()
-            .enumerate()
-            .filter(|(_, &a)| a == DISTRIBUTED)
-            .map(|(i, _)| self.lens[i] as u64)
-            .sum();
-        let t_dist = self.cost.t_comp_dist_agg(
-            self.assign
-                .iter()
-                .enumerate()
-                .filter(|(_, &a)| a == DISTRIBUTED)
-                .map(|(i, _)| self.lens[i]),
-            self.n,
-        );
-        let t_comm = self.cost.t_comm_dist(dist_tokens);
+        let t_dist = self.cost.t_comp_per_layer(self.dist_flops / self.n as f64);
+        let t_comm = self.cost.t_comm_dist(self.dist_tokens);
         // adding sequences to a rank only grows its aggregate kernel, so
         // the partial assignment's per-rank local time lower-bounds the
         // final one
-        let max_local: f64 = (0..self.n)
-            .map(|j| {
-                self.cost.t_comp_local_agg(
-                    self.assign
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, &a)| a == j as i32)
-                        .map(|(i, _)| self.lens[i]),
-                )
-            })
+        let max_local: f64 = self
+            .local_flops
+            .iter()
+            .map(|&w| self.cost.t_comp_per_layer(w))
             .fold(0.0, f64::max);
         max_local.max(t_comm) + t_dist
     }
@@ -91,13 +89,13 @@ impl<'a> Search<'a> {
             return;
         }
         let s = self.lens[k] as i64;
-        let shard = (s + self.n as i64 - 1) / self.n as i64;
+        let w = self.seq_flops[k];
+        let shard = self.shard_tok[k];
 
         // branch: local on each rank (dedupe symmetric empty ranks)
         let mut seen_empty = false;
         for j in 0..self.n {
-            let empty = self.rb[j] == self.bucket
-                && !self.assign[..k].iter().any(|&a| a == j as i32);
+            let empty = self.rb[j] == self.bucket && self.local_count[j] == 0;
             if empty {
                 if seen_empty {
                     continue; // identical to the previous empty rank
@@ -105,22 +103,33 @@ impl<'a> Search<'a> {
                 seen_empty = true;
             }
             if self.rb[j] >= s {
+                // save/restore instead of add/subtract: bit-exact pops
+                let saved = self.local_flops[j];
                 self.rb[j] -= s;
+                self.local_flops[j] = saved + w;
+                self.local_count[j] += 1;
                 self.assign[k] = j as i32;
                 self.dfs(k + 1);
                 self.rb[j] += s;
+                self.local_flops[j] = saved;
+                self.local_count[j] -= 1;
             }
         }
         // branch: distributed
         if (0..self.n).all(|j| self.rb[j] >= shard) {
+            let saved = self.dist_flops;
             for j in 0..self.n {
                 self.rb[j] -= shard;
             }
+            self.dist_flops = saved + w;
+            self.dist_tokens += self.lens[k] as u64;
             self.assign[k] = DISTRIBUTED;
             self.dfs(k + 1);
             for j in 0..self.n {
                 self.rb[j] += shard;
             }
+            self.dist_flops = saved;
+            self.dist_tokens -= self.lens[k] as u64;
         }
         self.assign[k] = i32::MIN;
     }
@@ -139,6 +148,13 @@ pub fn solve(
     let mut order: Vec<usize> = (0..lens.len()).collect();
     order.sort_by_key(|&i| std::cmp::Reverse(lens[i]));
     let ordered: Vec<u32> = order.iter().map(|&i| lens[i]).collect();
+    // per-sequence costs are fixed by the lengths: compute them once here
+    // rather than once per explored node
+    let seq_flops: Vec<f64> = ordered.iter().map(|&s| cost.seq_layer_flops(s)).collect();
+    let shard_tok: Vec<i64> = ordered
+        .iter()
+        .map(|&s| (s as i64 + n as i64 - 1) / n as i64)
+        .collect();
     let mut s2 = Search {
         lens: &ordered,
         cost,
@@ -146,6 +162,12 @@ pub fn solve(
         n,
         assign: vec![i32::MIN; lens.len()],
         rb: vec![bucket_size as i64; n],
+        seq_flops,
+        shard_tok,
+        local_flops: vec![0.0; n],
+        local_count: vec![0; n],
+        dist_flops: 0.0,
+        dist_tokens: 0,
         best_cost: f64::INFINITY,
         best: None,
         nodes: 0,
@@ -201,6 +223,59 @@ mod tests {
                 }
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_exhaustive_enumeration_on_tiny_instances() {
+        // the incremental push/pop bound state must not change what the
+        // search finds: on instances small enough to enumerate every
+        // assignment, the solver's optimum equals the brute-force optimum
+        let cost = cm();
+        let gen = SeqLensGen { min_k: 1, max_k: 5, max_len: 6_000 };
+        let (c, n) = (4_000u32, 2usize);
+        forall(0xE14, 40, &gen, |lens| {
+            let k = lens.len();
+            let mut best: Option<f64> = None;
+            let mut digits = vec![0i32; k]; // base n+1; digit n means DISTRIBUTED
+            'enumerate: loop {
+                let plan = DacpPlan {
+                    assign: digits
+                        .iter()
+                        .map(|&d| if d == n as i32 { DISTRIBUTED } else { d })
+                        .collect(),
+                };
+                if plan.validate(lens, c, n).is_ok() {
+                    let t = cost.tdacp(lens, &plan, n);
+                    best = Some(best.map_or(t, |b: f64| b.min(t)));
+                }
+                for i in 0..k {
+                    if digits[i] < n as i32 {
+                        digits[i] += 1;
+                        for d in digits.iter_mut().take(i) {
+                            *d = 0;
+                        }
+                        continue 'enumerate;
+                    }
+                }
+                break;
+            }
+            let sol = solve(lens, c, n, &cost, 10_000_000);
+            match (best, sol) {
+                (None, None) => Ok(()),
+                (Some(b), Some(s)) => {
+                    if (s.cost - b).abs() <= 1e-9 * b.max(1.0) {
+                        Ok(())
+                    } else {
+                        Err(format!("solver {} vs brute force {b}", s.cost))
+                    }
+                }
+                (b, s) => Err(format!(
+                    "feasibility mismatch: brute {:?} solver {:?}",
+                    b.is_some(),
+                    s.is_some()
+                )),
+            }
         });
     }
 

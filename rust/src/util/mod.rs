@@ -1,6 +1,10 @@
 //! Small shared utilities: summary statistics, histograms, formatting,
-//! and a micro property-testing harness (no proptest in the vendored set).
+//! a micro property-testing harness (no proptest in the vendored set),
+//! anyhow-style error plumbing (util::error), and scoped-thread fan-out
+//! (util::par) — the offline build vendors its own substitutes.
 
+pub mod error;
+pub mod par;
 pub mod proptest;
 pub mod stats;
 

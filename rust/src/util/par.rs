@@ -1,0 +1,158 @@
+//! Scoped-thread fan-out helpers (the offline build has no rayon).
+//!
+//! The scheduler's unit of parallelism is coarse — one DP rank, one
+//! micro-batch refinement — so plain `std::thread::scope` with contiguous
+//! chunking is enough: no work stealing, deterministic output order, and
+//! results identical to the serial loop byte for byte.  Threads are
+//! spawned per call; at the scheduler's call rates (once per iteration)
+//! spawn cost is noise next to the work each chunk carries.
+
+use std::num::NonZeroUsize;
+
+/// Worker budget: `SKRULL_THREADS` override, else available parallelism.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("SKRULL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// `out[i] = f(i, &items[i], &mut scratch[i])`, fanned out over up to
+/// `max_threads()` scoped threads (serial when 0/1 items or 1 thread).
+/// `items` and `scratch` must have equal length; output order matches
+/// input order regardless of thread count.
+pub fn map_with_scratch<A, B, R, F>(items: &[A], scratch: &mut [B], f: F) -> Vec<R>
+where
+    A: Sync,
+    B: Send,
+    R: Send,
+    F: Fn(usize, &A, &mut B) -> R + Sync,
+{
+    map_with_scratch_up_to(max_threads(), items, scratch, f)
+}
+
+/// [`map_with_scratch`] with an explicit worker cap — for nested fan-outs,
+/// where each outer worker should only claim its share of the core budget
+/// instead of a full `max_threads()` each.
+pub fn map_with_scratch_up_to<A, B, R, F>(
+    limit: usize,
+    items: &[A],
+    scratch: &mut [B],
+    f: F,
+) -> Vec<R>
+where
+    A: Sync,
+    B: Send,
+    R: Send,
+    F: Fn(usize, &A, &mut B) -> R + Sync,
+{
+    assert_eq!(items.len(), scratch.len());
+    let n = items.len();
+    let threads = limit.max(1).min(n);
+    if threads <= 1 {
+        return items
+            .iter()
+            .zip(scratch.iter_mut())
+            .enumerate()
+            .map(|(i, (a, b))| f(i, a, b))
+            .collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for (ci, (ichunk, schunk)) in items.chunks(chunk).zip(scratch.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            handles.push(s.spawn(move || {
+                ichunk
+                    .iter()
+                    .zip(schunk.iter_mut())
+                    .enumerate()
+                    .map(|(j, (a, b))| f(ci * chunk + j, a, b))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        for h in handles {
+            out.extend(h.join().expect("par worker panicked"));
+        }
+    });
+    out
+}
+
+/// In-place parallel `for`: `f(i, &mut items[i])` over contiguous chunks.
+pub fn for_each_mut<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = max_threads().min(n);
+    if threads <= 1 {
+        for (i, t) in items.iter_mut().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, tchunk) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, t) in tchunk.iter_mut().enumerate() {
+                    f(ci * chunk + j, t);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_and_uses_scratch() {
+        let items: Vec<u64> = (0..137).collect();
+        let mut scratch = vec![0u64; items.len()];
+        let out = map_with_scratch(&items, &mut scratch, |i, &x, s| {
+            *s += x;
+            (i as u64) * 1000 + x
+        });
+        for (i, &r) in out.iter().enumerate() {
+            assert_eq!(r, (i as u64) * 1000 + i as u64);
+        }
+        assert_eq!(scratch, items);
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let mut empty_scratch: Vec<u8> = Vec::new();
+        let out: Vec<u8> = map_with_scratch(&[], &mut empty_scratch, |_, _: &u8, _| 0u8);
+        assert!(out.is_empty());
+        let mut s = [0u8];
+        assert_eq!(map_with_scratch(&[5u8], &mut s, |_, &x, _| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let mut items: Vec<u32> = vec![1; 301];
+        for_each_mut(&mut items, |i, t| *t += i as u32);
+        for (i, &t) in items.iter().enumerate() {
+            assert_eq!(t, 1 + i as u32);
+        }
+    }
+
+    #[test]
+    fn matches_serial_result_exactly() {
+        let items: Vec<f64> = (0..64).map(|i| i as f64 * 0.37).collect();
+        let mut s1 = vec![0.0f64; items.len()];
+        let par: Vec<f64> = map_with_scratch(&items, &mut s1, |_, &x, _| x.sin() * x.cos());
+        let ser: Vec<f64> = items.iter().map(|&x| x.sin() * x.cos()).collect();
+        assert_eq!(par, ser);
+    }
+}

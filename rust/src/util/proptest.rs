@@ -17,10 +17,12 @@ pub trait Gen {
 }
 
 /// Run a property over `cases` random inputs, shrinking on failure.
-pub fn forall<G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+/// `FnMut` so properties can thread mutable state (e.g. a scheduler
+/// scratch arena) through the cases.
+pub fn forall<G, F>(seed: u64, cases: usize, gen: &G, mut prop: F)
 where
     G: Gen,
-    F: Fn(&G::Value) -> Result<(), String>,
+    F: FnMut(&G::Value) -> Result<(), String>,
 {
     let mut rng = Rng::seed_from_u64(seed);
     for case_idx in 0..cases {

@@ -132,6 +132,44 @@ fn gds_beats_or_matches_exact_solver_feasibility() {
 }
 
 #[test]
+fn fast_path_oracle_matches_reference_on_200_workloads() {
+    // Acceptance gate for the scheduling fast path: across ≥200 random
+    // workloads drawn from the paper's dataset distributions, the
+    // allocation-lean/galloping/parallel `gds::schedule` produces plans
+    // byte-identical to the retained reference transcription of
+    // Algorithm 2 (which trivially implies "no worse under tdacp").
+    let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+    let mut rng = Rng::seed_from_u64(0x04AC1E);
+    let mut ctx = gds::SchedCtx::default();
+    let mut compared = 0usize;
+    for ds in all_datasets() {
+        let ds = ds.truncated(26 * 1024 * 8);
+        for trial in 0..70 {
+            let k = [8usize, 24, 64, 160][trial % 4];
+            let batch = ds.sample_batch(&mut rng, k);
+            let mut cfg = gds::GdsConfig::new(26 * 1024, 8, 4);
+            if trial % 5 == 0 {
+                cfg.bucket_size = 4 * 1024; // memory-pressure regime
+            }
+            let reference = gds::schedule_reference(&batch, &cfg, &flops);
+            let fast = gds::schedule_with_ctx(&batch, &cfg, &flops, &mut ctx);
+            match (reference, fast) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{} trial {trial}", ds.name),
+                (Err(a), Err(b)) => assert_eq!(a, b, "{} trial {trial}", ds.name),
+                (a, b) => panic!(
+                    "{} trial {trial}: feasibility mismatch ref={:?} fast={:?}",
+                    ds.name,
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+            compared += 1;
+        }
+    }
+    assert!(compared >= 200, "only {compared} workloads compared");
+}
+
+#[test]
 fn seeded_determinism_end_to_end() {
     let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 10_000, 1);
     let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
