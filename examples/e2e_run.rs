@@ -1,0 +1,85 @@
+//! End-to-end run-engine walkthrough: one workload, every policy, with the
+//! pipelined DataLoader's overhead hiding made visible.
+//!
+//!   cargo run --release --offline --example e2e_run -- [dataset] [iterations]
+//!
+//! Prints per-policy end-to-end wall-clock + speedup, then contrasts the
+//! synchronous and pipelined loader modes on the Skrull policy (identical
+//! schedules, different exposed scheduling time), and writes a multi-
+//! iteration chrome trace with the dataloader lane.
+
+use skrull::cluster::run::{simulate_run, RunConfig};
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
+use skrull::util::fmt_secs;
+
+fn main() -> skrull::util::error::Result<()> {
+    let dataset = std::env::args().nth(1).unwrap_or_else(|| "chatqa2".into());
+    let iterations: usize = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(|_| skrull::anyhow!("iterations must be a number"))?
+        .unwrap_or(8);
+
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), &dataset);
+    let dist = LengthDistribution::by_name(&dataset)
+        .ok_or_else(|| skrull::anyhow!("unknown dataset {dataset}"))?;
+    let ds = Dataset::synthesize(&dist, 20_000, cfg.seed ^ 0xD5)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let cost = CostModel::paper_default(&cfg.model);
+
+    println!(
+        "{} iterations of {} on <DP={},CP={}> (simulated cluster, measured scheduler)\n",
+        iterations, ds.name, cfg.cluster.dp, cfg.cluster.cp
+    );
+
+    // every policy, pipelined loader
+    let run = RunConfig::new(iterations, true);
+    let mut base = None;
+    for policy in skrull::bench::e2e::ALL_POLICIES {
+        let mut pcfg = cfg.clone();
+        pcfg.policy = policy;
+        let r = simulate_run(&ds, &pcfg, &cost, &run)?;
+        let wall = r.wall_seconds();
+        let b = *base.get_or_insert(wall);
+        println!(
+            "  {:<15} total {}  speedup {:.2}x  util {:.1}%  padding {:.1}%  exposed sched {}",
+            policy.name(),
+            fmt_secs(wall),
+            b / wall,
+            100.0 * r.utilization(),
+            100.0 * r.padding_fraction(),
+            fmt_secs(r.exposed_sched_seconds),
+        );
+    }
+
+    // loader-mode contrast on Skrull: scheduling hides behind execution
+    println!("\nloader modes (Skrull):");
+    for pipelined in [false, true] {
+        let r = simulate_run(&ds, &cfg, &cost, &RunConfig::new(iterations, pipelined))?;
+        println!(
+            "  {:<12} wall {}  sched total {}  exposed {}  overhead {:.4}%",
+            if pipelined { "pipelined" } else { "synchronous" },
+            fmt_secs(r.wall_seconds()),
+            fmt_secs(r.sched_seconds),
+            fmt_secs(r.exposed_sched_seconds),
+            100.0 * r.sched_overhead_fraction(),
+        );
+    }
+
+    // multi-iteration chrome trace (run engine timing + dataloader lane)
+    let n_trace = iterations.min(3);
+    let mut scheds = Vec::new();
+    let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+    loader.run_synchronous(n_trace, |_, _, sched, _| scheds.push(sched.clone()))?;
+    let report = simulate_run(&ds, &cfg, &cost, &RunConfig::new(n_trace, true))?;
+    let trace = skrull::cluster::trace::run_trace(&scheds, &report, &cost);
+    let path = std::env::temp_dir().join("skrull_run_trace.json");
+    std::fs::write(&path, trace)?;
+    println!("\n{n_trace}-iteration chrome trace written to {}", path.display());
+    Ok(())
+}

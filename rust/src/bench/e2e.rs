@@ -1,0 +1,359 @@
+//! End-to-end experiment engine (the paper's Section 5 evaluation, as a
+//! sweep): every scheduling policy × length distribution × cluster
+//! topology, played for N iterations through the run engine
+//! (`cluster::run`), with per-cell total wall-clock, speedup vs the
+//! DeepSpeed-like baseline, utilization and exposed-scheduling-overhead
+//! fraction.  Emits the machine-readable `BENCH_e2e.json` that tracks the
+//! repo's headline number across PRs (`skrull e2e`), and validates it for
+//! CI (`skrull e2e --validate`).
+
+use std::fmt::Write as _;
+
+use crate::cluster::run::{simulate_run, RunConfig, RunReport};
+use crate::cluster::Topology;
+use crate::config::{ExperimentConfig, Policy};
+use crate::data::{Dataset, LengthDistribution};
+use crate::model::ModelSpec;
+use crate::perfmodel::CostModel;
+use crate::util::error::{Context, Result};
+
+/// Sweep order: the baseline must come first so every other cell of the
+/// same (dataset, topology) can report speedup against it.
+pub const ALL_POLICIES: [Policy; 5] = [
+    Policy::Baseline,
+    Policy::SortedBatching,
+    Policy::DacpOnly,
+    Policy::Skrull,
+    Policy::SkrullRefined,
+];
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct E2eOptions {
+    pub model: ModelSpec,
+    pub datasets: Vec<String>,
+    /// (dp, cp) pairs; validated against the paper's 4×8-GPU testbed.
+    pub topologies: Vec<(usize, usize)>,
+    pub iterations: usize,
+    /// None = the paper default for each (model, dataset) cell.
+    pub batch_size: Option<usize>,
+    /// synthesized dataset size per distribution
+    pub dataset_samples: usize,
+    pub seed: u64,
+    pub pipelined: bool,
+}
+
+impl E2eOptions {
+    /// The paper's evaluation grid: 3 length distributions × 2 topologies.
+    pub fn paper_default() -> Self {
+        E2eOptions {
+            model: ModelSpec::qwen2_5_0_5b(),
+            datasets: vec!["wikipedia".into(), "lmsys".into(), "chatqa2".into()],
+            topologies: vec![(4, 8), (2, 16)],
+            iterations: 10,
+            batch_size: None,
+            dataset_samples: 20_000,
+            seed: 42,
+            pipelined: true,
+        }
+    }
+
+    /// Tiny grid for CI smoke runs (still all 5 policies).
+    pub fn smoke() -> Self {
+        let mut o = Self::paper_default();
+        o.iterations = 2;
+        o.batch_size = Some(8);
+        o.dataset_samples = 2_000;
+        o
+    }
+}
+
+/// One sweep cell: a full simulated run of one policy on one workload.
+#[derive(Clone, Debug)]
+pub struct E2eCell {
+    pub policy: Policy,
+    pub dataset: String,
+    pub dp: usize,
+    pub cp: usize,
+    pub batch_size: usize,
+    pub report: RunReport,
+    pub speedup_vs_baseline: f64,
+}
+
+/// The whole sweep.
+#[derive(Clone, Debug)]
+pub struct E2eSweep {
+    pub model: String,
+    pub iterations: usize,
+    pub pipelined: bool,
+    pub cells: Vec<E2eCell>,
+}
+
+impl E2eSweep {
+    pub fn cell(&self, policy: Policy, dataset: &str, dp: usize, cp: usize) -> Option<&E2eCell> {
+        self.cells.iter().find(|c| {
+            c.policy == policy && c.dataset == dataset && c.dp == dp && c.cp == cp
+        })
+    }
+}
+
+/// Run the full sweep: for each (topology, dataset), all policies over the
+/// *same* synthesized workload, baseline first.
+pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
+    crate::ensure!(opts.iterations > 0, "e2e sweep needs at least 1 iteration");
+    crate::ensure!(!opts.datasets.is_empty(), "e2e sweep needs at least one dataset");
+    crate::ensure!(!opts.topologies.is_empty(), "e2e sweep needs at least one topology");
+    let mut cells = Vec::new();
+    for &(dp, cp) in &opts.topologies {
+        // the paper's testbed bounds + power-of-two CP check
+        Topology::paper_testbed(dp, cp)
+            .with_context(|| format!("invalid topology dp={dp} cp={cp}"))?;
+        for name in &opts.datasets {
+            let dist = LengthDistribution::by_name(name)
+                .with_context(|| format!("unknown dataset {name:?}"))?;
+            let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
+            cfg.cluster.dp = dp;
+            cfg.cluster.cp = cp;
+            if let Some(b) = opts.batch_size {
+                cfg.cluster.batch_size = b;
+            }
+            cfg.seed = opts.seed;
+            cfg.pipelined = opts.pipelined;
+            let ds = Dataset::synthesize(&dist, opts.dataset_samples, opts.seed ^ 0xD5)
+                .truncated(cfg.bucket_size * cp as u32);
+            let cost = CostModel::paper_default(&cfg.model);
+            let run = RunConfig::new(opts.iterations, opts.pipelined);
+
+            let mut baseline_wall = None;
+            for policy in ALL_POLICIES {
+                let mut pcfg = cfg.clone();
+                pcfg.policy = policy;
+                let report = simulate_run(&ds, &pcfg, &cost, &run)
+                    .with_context(|| format!("{} on {name} <DP={dp},CP={cp}>", policy.name()))?;
+                let wall = report.wall_seconds();
+                let base = *baseline_wall.get_or_insert(wall);
+                cells.push(E2eCell {
+                    policy,
+                    dataset: name.clone(),
+                    dp,
+                    cp,
+                    batch_size: pcfg.cluster.batch_size,
+                    speedup_vs_baseline: if wall > 0.0 { base / wall } else { f64::INFINITY },
+                    report,
+                });
+            }
+        }
+    }
+    Ok(E2eSweep {
+        model: opts.model.name.to_string(),
+        iterations: opts.iterations,
+        pipelined: opts.pipelined,
+        cells,
+    })
+}
+
+fn json_str(s: &str) -> &str {
+    assert!(!s.contains(['"', '\\', '\n']), "unescapable: {s}");
+    s
+}
+
+/// Render the sweep as `BENCH_e2e.json` (hand-rolled JSON; no serde in the
+/// image).  Schema: see README "End-to-end benchmark".
+pub fn render_json(sweep: &E2eSweep) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"e2e\",");
+    let _ = writeln!(out, "  \"schema_version\": 1,");
+    let _ = writeln!(out, "  \"model\": \"{}\",", json_str(&sweep.model));
+    let _ = writeln!(out, "  \"iterations\": {},", sweep.iterations);
+    let _ = writeln!(out, "  \"pipelined\": {},", sweep.pipelined);
+    out.push_str("  \"cells\": [\n");
+    for (i, c) in sweep.cells.iter().enumerate() {
+        let r = &c.report;
+        let _ = writeln!(
+            out,
+            "    {{\"policy\": \"{}\", \"dataset\": \"{}\", \"dp\": {}, \"cp\": {}, \
+             \"batch_size\": {}, \"total_seconds\": {:e}, \"exec_seconds\": {:e}, \
+             \"sched_seconds\": {:e}, \"exposed_sched_seconds\": {:e}, \
+             \"speedup_vs_baseline\": {:.4}, \"utilization\": {:.4}, \
+             \"effective_utilization\": {:.4}, \"sched_overhead_fraction\": {:e}, \
+             \"padding_fraction\": {:.4}, \"dp_imbalance\": {:.4}, \"micro_batches\": {}}}{}",
+            json_str(c.policy.name()),
+            json_str(&c.dataset),
+            c.dp,
+            c.cp,
+            c.batch_size,
+            r.wall_seconds(),
+            r.exec_seconds,
+            r.sched_seconds,
+            r.exposed_sched_seconds,
+            c.speedup_vs_baseline,
+            r.utilization(),
+            r.effective_utilization(),
+            r.sched_overhead_fraction(),
+            r.padding_fraction(),
+            r.mean_dp_imbalance(),
+            r.total_micro_batches(),
+            if i + 1 == sweep.cells.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Top-level keys every `BENCH_e2e.json` must carry.
+const REQUIRED_TOP_KEYS: [&str; 5] =
+    ["\"bench\"", "\"schema_version\"", "\"model\"", "\"iterations\"", "\"cells\""];
+
+/// Per-cell keys; the numeric ones are additionally checked for finiteness.
+const REQUIRED_CELL_KEYS: [&str; 8] = [
+    "policy",
+    "dataset",
+    "dp",
+    "cp",
+    "total_seconds",
+    "speedup_vs_baseline",
+    "utilization",
+    "sched_overhead_fraction",
+];
+
+const FINITE_CELL_KEYS: [&str; 4] =
+    ["total_seconds", "speedup_vs_baseline", "utilization", "sched_overhead_fraction"];
+
+/// Every value token following `"key":` occurrences, in file order.
+fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
+    let needle = format!("\"{key}\":");
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find(&needle) {
+        rest = &rest[pos + needle.len()..];
+        let tail = rest.trim_start();
+        let end = tail.find([',', '}', '\n']).unwrap_or(tail.len());
+        out.push(tail[..end].trim());
+    }
+    out
+}
+
+/// CI gate: does `text` look like a complete, sane `BENCH_e2e.json`?
+/// Checks required top-level and per-cell keys and rejects non-finite (or
+/// unparsable) values for every speedup/time/utilization field.
+pub fn validate_json(text: &str) -> Result<()> {
+    for key in REQUIRED_TOP_KEYS {
+        crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
+    }
+    let n_cells = values_after(text, "policy").len();
+    crate::ensure!(n_cells > 0, "no cells in BENCH_e2e.json");
+    for key in REQUIRED_CELL_KEYS {
+        let n = values_after(text, key).len();
+        crate::ensure!(
+            n == n_cells,
+            "cell key \"{key}\" appears {n} times, expected {n_cells}"
+        );
+    }
+    for key in FINITE_CELL_KEYS {
+        for (i, v) in values_after(text, key).iter().enumerate() {
+            let x: f64 = v
+                .parse()
+                .map_err(|_| crate::anyhow!("cell {i}: \"{key}\" value {v:?} is not a number"))?;
+            crate::ensure!(x.is_finite(), "cell {i}: \"{key}\" = {v} is not finite");
+        }
+    }
+    // every known policy must be present at least once
+    for p in ALL_POLICIES {
+        crate::ensure!(
+            text.contains(&format!("\"policy\": \"{}\"", p.name())),
+            "policy {} missing from sweep",
+            p.name()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> E2eOptions {
+        E2eOptions {
+            model: ModelSpec::qwen2_5_0_5b(),
+            datasets: vec!["chatqa2".into()],
+            topologies: vec![(4, 8)],
+            iterations: 2,
+            batch_size: Some(16),
+            dataset_samples: 2_000,
+            seed: 11,
+            pipelined: true,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_baseline_is_unit_speedup() {
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        assert_eq!(sweep.cells.len(), ALL_POLICIES.len());
+        let base = sweep.cell(Policy::Baseline, "chatqa2", 4, 8).unwrap();
+        assert!((base.speedup_vs_baseline - 1.0).abs() < 1e-12);
+        for c in &sweep.cells {
+            assert!(c.speedup_vs_baseline.is_finite());
+            assert!(c.report.wall_seconds() > 0.0);
+        }
+    }
+
+    #[test]
+    fn skrull_speeds_up_mixed_workload_end_to_end() {
+        // acceptance criterion: >1.0x simulated speedup vs Baseline on a
+        // mixed long/short distribution
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        let sk = sweep.cell(Policy::Skrull, "chatqa2", 4, 8).unwrap();
+        assert!(
+            sk.speedup_vs_baseline > 1.0,
+            "skrull speedup {} ≤ 1.0",
+            sk.speedup_vs_baseline
+        );
+    }
+
+    #[test]
+    fn rendered_json_validates_and_mutations_fail() {
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        let json = render_json(&sweep);
+        validate_json(&json).unwrap();
+
+        // missing top-level key
+        let broken = json.replace("\"schema_version\"", "\"schema_ver\"");
+        assert!(validate_json(&broken).is_err());
+        // missing cell key in one cell
+        let broken = json.replacen("\"speedup_vs_baseline\"", "\"speedup\"", 1);
+        assert!(validate_json(&broken).is_err());
+        // non-finite speedup
+        let sample = values_after(&json, "speedup_vs_baseline")[0].to_string();
+        let broken = json.replacen(
+            &format!("\"speedup_vs_baseline\": {sample}"),
+            "\"speedup_vs_baseline\": NaN",
+            1,
+        );
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // truncated file
+        assert!(validate_json(&json[..json.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn values_after_extracts_tokens() {
+        let text = r#"{"a": 1, "b": "x", "a": 2.5}"#;
+        assert_eq!(values_after(text, "a"), vec!["1", "2.5"]);
+        assert_eq!(values_after(text, "b"), vec!["\"x\""]);
+        assert!(values_after(text, "c").is_empty());
+    }
+
+    #[test]
+    fn bad_options_are_rejected() {
+        let mut o = tiny_opts();
+        o.topologies = vec![(8, 8)]; // 64 GPUs > 32-GPU testbed
+        assert!(run_sweep(&o).is_err());
+        let mut o = tiny_opts();
+        o.datasets = vec!["imagenet".into()];
+        assert!(run_sweep(&o).is_err());
+        let mut o = tiny_opts();
+        o.iterations = 0;
+        assert!(run_sweep(&o).is_err());
+    }
+}

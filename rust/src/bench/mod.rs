@@ -1,7 +1,9 @@
 //! Benchmark harness substrate (criterion is not in the vendored set):
-//! wall-clock measurement with warmup + repetitions, and plain-text table
-//! rendering shared by all `benches/*.rs` targets.
+//! wall-clock measurement with warmup + repetitions, plain-text table
+//! rendering shared by all `benches/*.rs` targets, and the end-to-end
+//! policy × distribution × topology sweep behind `skrull e2e`.
 
+pub mod e2e;
 pub mod harness;
 pub mod table;
 

@@ -1,10 +1,14 @@
 //! Simulated distributed cluster: topology (DP×CP process groups over
-//! nodes/GPUs) and the event-driven iteration simulator that plays an
-//! `IterationSchedule` against the cost model.
+//! nodes/GPUs), the event-driven iteration simulator that plays an
+//! `IterationSchedule` against the cost model, and the multi-iteration
+//! run engine that turns per-iteration simulation into end-to-end
+//! wall-clock (with pipelined scheduling overlap).
 
+pub mod run;
 pub mod sim;
 pub mod topology;
 pub mod trace;
 
+pub use run::{simulate_run, IterationRecord, LoaderMode, RunConfig, RunReport};
 pub use sim::{simulate_iteration, IterationSim, MicroBatchSim};
 pub use topology::Topology;

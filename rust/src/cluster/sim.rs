@@ -86,12 +86,14 @@ pub fn simulate_iteration(sched: &IterationSchedule, cost: &CostModel, cp: usize
     let grad_sync = cost.grad_sync_time(dp);
     let total = slowest + grad_sync;
 
-    // utilization: mean busy compute over all CP ranks / total
+    // utilization: mean busy compute over all CP ranks / total.  Every DP
+    // rank owns `cp` GPUs whether or not it received micro-batches — an
+    // idle rank's GPUs still burn the iteration, so they stay in the
+    // denominator (a rank with zero micro-batches must *lower* utilization,
+    // not vanish from it).
     let mut busy_total = 0.0;
-    let mut gpu_count = 0usize;
+    let gpu_count = dp * cp;
     for sims in &mbs_out {
-        let cp = sims.first().map(|s| s.busy.len()).unwrap_or(1);
-        gpu_count += cp;
         for sim in sims {
             busy_total += sim.busy.iter().sum::<f64>();
         }
@@ -192,6 +194,75 @@ mod tests {
         assert!(overlapped.exposed_comm[0] < alone.exposed_comm[0]);
         assert_eq!(alone.num_distributed, 1);
         assert_eq!(overlapped.num_local, 1);
+    }
+
+    #[test]
+    fn empty_rank_counts_all_its_gpus() {
+        // Regression: a DP rank with zero micro-batches used to contribute
+        // one GPU to the utilization denominator instead of its cp GPUs,
+        // inflating compute_utilization.
+        let cost = cm();
+        let cp = 4;
+        let sched = IterationSchedule {
+            ranks: vec![
+                RankSchedule { micro_batches: vec![mb(&[8_000, 4_000], vec![0, 1])] },
+                RankSchedule { micro_batches: vec![] },
+            ],
+        };
+        let sim = simulate_iteration(&sched, &cost, cp);
+        let busy_total: f64 = sim
+            .micro_batches
+            .iter()
+            .flatten()
+            .map(|s| s.busy.iter().sum::<f64>())
+            .sum();
+        // denominator must be dp*cp = 8 GPUs, not cp + 1 = 5
+        let expect = busy_total / (8.0 * sim.total_time);
+        assert!(
+            (sim.compute_utilization - expect).abs() < 1e-12,
+            "utilization {} != busy/(dp*cp*total) {}",
+            sim.compute_utilization,
+            expect
+        );
+        let inflated = busy_total / (5.0 * sim.total_time);
+        assert!(sim.compute_utilization < inflated);
+    }
+
+    #[test]
+    fn utilization_and_imbalance_invariants_hold_over_random_schedules() {
+        // Property: for any schedulable workload, compute_utilization is in
+        // [0, 1] and dp_imbalance >= 1.
+        use crate::perfmodel::FlopsModel;
+        use crate::scheduler::gds::{self, GdsConfig};
+        use crate::util::proptest::{forall, SeqLensGen};
+
+        let spec = ModelSpec::qwen2_5_0_5b();
+        let cost = CostModel::paper_default(&spec);
+        let flops = FlopsModel::new(&spec);
+        let (dp, cp, bucket) = (4usize, 8usize, 16 * 1024u32);
+        let gcfg = GdsConfig::new(bucket, cp, dp);
+        let gen = SeqLensGen { min_k: 1, max_k: 48, max_len: bucket * cp as u32 };
+        forall(0xE2E, 60, &gen, |lens| {
+            let batch: Vec<Sequence> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| Sequence { id: i as u64, len })
+                .collect();
+            let sched = match gds::schedule(&batch, &gcfg, &flops) {
+                Ok(s) => s,
+                // only possible when a sequence exceeds C·N; not a sim bug
+                Err(crate::scheduler::SchedError::TooLong { .. }) => return Ok(()),
+                Err(e) => return Err(format!("schedule failed: {e}")),
+            };
+            let sim = simulate_iteration(&sched, &cost, cp);
+            if !(0.0..=1.0).contains(&sim.compute_utilization) {
+                return Err(format!("utilization {} out of [0,1]", sim.compute_utilization));
+            }
+            if sim.dp_imbalance < 1.0 {
+                return Err(format!("dp_imbalance {} < 1", sim.dp_imbalance));
+            }
+            Ok(())
+        });
     }
 
     #[test]

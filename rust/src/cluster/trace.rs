@@ -33,12 +33,19 @@ impl Event {
     }
 }
 
-/// Render one iteration's simulated timeline as a chrome trace JSON
-/// string.  pid = DP rank, tid = CP rank.
-pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -> String {
-    let mut events = Vec::new();
+/// Append one iteration's events starting at `base_us`.  (Iteration
+/// *length* on the run timeline comes from the run engine's
+/// `exec_seconds`, not from here — one source of truth.)
+fn push_iteration_events(
+    events: &mut Vec<Event>,
+    sched: &IterationSchedule,
+    cost: &CostModel,
+    cp: usize,
+    base_us: f64,
+    prefix: &str,
+) {
     for (dp, rank) in sched.ranks.iter().enumerate() {
-        let mut cursor = vec![0.0f64; cp]; // per-CP-rank clock, µs
+        let mut cursor = vec![base_us; cp]; // per-CP-rank clock, µs
         for (mb_idx, mb) in rank.micro_batches.iter().enumerate() {
             let lens = mb.lens();
             let times = cost.rank_times(&lens, &mb.plan, cp);
@@ -50,7 +57,10 @@ pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -
                 let dist = t.dist_comp * 1e6;
                 if local > 0.0 {
                     events.push(Event {
-                        name: format!("mb{mb_idx} local ({} seqs)", mb.plan.locals_of(j).count()),
+                        name: format!(
+                            "{prefix}mb{mb_idx} local ({} seqs)",
+                            mb.plan.locals_of(j).count()
+                        ),
                         pid: dp,
                         tid: j,
                         ts: start,
@@ -60,7 +70,7 @@ pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -
                 if comm > 0.0 {
                     // comm overlaps local from the start of the micro-batch
                     events.push(Event {
-                        name: format!("mb{mb_idx} kv-comm"),
+                        name: format!("{prefix}mb{mb_idx} kv-comm"),
                         pid: dp,
                         tid: j,
                         ts: start,
@@ -69,7 +79,10 @@ pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -
                 }
                 if dist > 0.0 {
                     events.push(Event {
-                        name: format!("mb{mb_idx} dist ({} shards)", mb.plan.num_distributed()),
+                        name: format!(
+                            "{prefix}mb{mb_idx} dist ({} shards)",
+                            mb.plan.num_distributed()
+                        ),
                         pid: dp,
                         tid: j,
                         ts: start + local.max(comm),
@@ -81,8 +94,67 @@ pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -
             }
         }
     }
+}
+
+fn render_events(events: &[Event]) -> String {
     let body: Vec<String> = events.iter().map(Event::render).collect();
     format!("{{\"traceEvents\":[\n{}\n]}}\n", body.join(",\n"))
+}
+
+/// Render one iteration's simulated timeline as a chrome trace JSON
+/// string.  pid = DP rank, tid = CP rank.
+pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -> String {
+    let mut events = Vec::new();
+    push_iteration_events(&mut events, sched, cost, cp, 0.0, "");
+    render_events(&events)
+}
+
+/// Render a whole simulated run: consecutive iterations laid out on the
+/// wall-clock produced by the run engine, plus a dedicated "dataloader"
+/// process row (pid = dp) showing each iteration's scheduling span — in
+/// pipelined mode it visibly overlaps the previous iteration's execution,
+/// the Section 4.3 picture.
+pub fn run_trace(
+    scheds: &[IterationSchedule],
+    report: &crate::cluster::run::RunReport,
+    cost: &CostModel,
+) -> String {
+    assert_eq!(scheds.len(), report.iterations.len());
+    let cp = report.cp;
+    let loader_pid = report.dp; // one row past the last DP rank
+    let mut events = Vec::new();
+    let mut clock_us = 0.0f64;
+    for (i, (sched, rec)) in scheds.iter().zip(&report.iterations).enumerate() {
+        // scheduling of iteration i starts when the overlap window opens:
+        // at the start of the previous iteration's execution (pipelined)
+        // or right before its own execution (synchronous)
+        let exec_start_us = clock_us + rec.exposed_sched_seconds * 1e6;
+        let sched_start_us = match report.mode {
+            crate::cluster::run::LoaderMode::Pipelined if i > 0 => {
+                clock_us - report.iterations[i - 1].exec_seconds * 1e6
+            }
+            _ => clock_us,
+        };
+        events.push(Event {
+            name: format!("sched iter{i}"),
+            pid: loader_pid,
+            tid: 0,
+            ts: sched_start_us.max(0.0),
+            dur: rec.sched_seconds * 1e6,
+        });
+        push_iteration_events(&mut events, sched, cost, cp, exec_start_us, &format!("it{i} "));
+        if rec.grad_sync_seconds > 0.0 {
+            events.push(Event {
+                name: format!("grad-sync iter{i}"),
+                pid: loader_pid,
+                tid: 1,
+                ts: exec_start_us + (rec.exec_seconds - rec.grad_sync_seconds) * 1e6,
+                dur: rec.grad_sync_seconds * 1e6,
+            });
+        }
+        clock_us = exec_start_us + rec.exec_seconds * 1e6;
+    }
+    render_events(&events)
 }
 
 /// Write the trace to a file.
@@ -143,6 +215,43 @@ mod tests {
             let ts: f64 = ts.split(',').next().unwrap().parse().unwrap();
             assert!(ts > 0.0, "{line}");
         }
+    }
+
+    #[test]
+    fn run_trace_lays_out_iterations_with_a_dataloader_lane() {
+        use crate::cluster::run::{simulate_run, RunConfig};
+        use crate::config::ExperimentConfig;
+        use crate::data::{Dataset, LengthDistribution};
+
+        let cfg = {
+            let mut c =
+                ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+            c.cluster.batch_size = 8;
+            c
+        };
+        let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 1_000, 3)
+            .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+        let cost = CostModel::paper_default(&cfg.model);
+
+        // collect the schedules by replaying the same loader sequence
+        let mut scheds = Vec::new();
+        let mut loader = crate::data::loader::ScheduledLoader::new(&ds, cfg.clone());
+        loader
+            .run_synchronous(3, |_, _, sched, _| scheds.push(sched.clone()))
+            .unwrap();
+        let report = simulate_run(&ds, &cfg, &cost, &RunConfig::new(3, true)).unwrap();
+
+        let json = run_trace(&scheds, &report, &cost);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        // one scheduling event per iteration on the dataloader row
+        for i in 0..3 {
+            assert!(json.contains(&format!("sched iter{i}")), "iter {i}");
+            assert!(json.contains(&format!("it{i} mb0")), "iter {i} exec events");
+        }
+        assert!(json.contains("grad-sync iter0"));
+        // wellformed-ish
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('"').count() % 2, 0);
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct ExperimentConfig {
     pub policy: Policy,
     pub iterations: usize,
     pub seed: u64,
+    /// Run-engine loader mode: overlap scheduling of batch i+1 with the
+    /// execution of batch i (Section 4.3's DataLoader integration).
+    pub pipelined: bool,
 }
 
 impl ExperimentConfig {
@@ -94,6 +97,7 @@ impl ExperimentConfig {
             policy: Policy::Skrull,
             iterations: 30,
             seed: 42,
+            pipelined: true,
         }
     }
 
@@ -115,6 +119,7 @@ impl ExperimentConfig {
             .ok_or_else(|| crate::anyhow!("unknown policy {policy:?}"))?;
         cfg.iterations = t.i64_or("run.iterations", cfg.iterations as i64) as usize;
         cfg.seed = t.i64_or("run.seed", cfg.seed as i64) as u64;
+        cfg.pipelined = t.bool_or("run.pipelined", cfg.pipelined);
         Ok(cfg)
     }
 
@@ -156,6 +161,7 @@ bucket_size = 4096
 [run]
 iterations = 5
 seed = 7
+pipelined = false
 "#,
         )
         .unwrap();
@@ -167,6 +173,10 @@ seed = 7
         assert_eq!(c.bucket_size, 4096);
         assert_eq!(c.iterations, 5);
         assert_eq!(c.seed, 7);
+        assert!(!c.pipelined);
+        // defaults to pipelined when the key is absent
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert!(d.pipelined);
     }
 
     #[test]

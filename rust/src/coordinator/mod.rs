@@ -12,4 +12,6 @@ pub mod trainer;
 pub use metrics::TrainMetrics;
 pub use optimizer::{Adam, LrSchedule};
 pub use state::TrainState;
-pub use trainer::{TrainReport, Trainer, TrainerOptions};
+pub use trainer::{
+    bucket_capacity_for, buckets_for_iteration, TrainReport, Trainer, TrainerOptions,
+};

@@ -22,7 +22,7 @@ use crate::data::Sequence;
 use crate::model::ModelSpec;
 use crate::perfmodel::FlopsModel;
 use crate::rng::Rng;
-use crate::runtime::Runtime;
+use crate::runtime::{Manifest, Runtime};
 use crate::scheduler::{baseline, gds};
 
 #[derive(Clone, Debug)]
@@ -107,45 +107,14 @@ impl Trainer {
 
     /// Build the iteration's packed buckets from a schedule: each CP rank's
     /// local sequences pack together; each distributed sequence gets its
-    /// own bucket (see the emulation note above).
+    /// own bucket (see the emulation note above).  Errs (instead of killing
+    /// the run) when a sequence exceeds every compiled artifact bucket.
     fn buckets_for_iteration(
         &self,
         corpus: &[TokenSeq],
         sched: &crate::scheduler::IterationSchedule,
-    ) -> Vec<PackedBucket> {
-        let mut buckets = Vec::new();
-        let cp = self.opts.workers;
-        for rank in &sched.ranks {
-            for mb in &rank.micro_batches {
-                for j in 0..cp {
-                    let locals: Vec<&TokenSeq> = mb
-                        .plan
-                        .locals_of(j)
-                        .map(|i| &corpus[mb.seqs[i].id as usize])
-                        .collect();
-                    if locals.is_empty() {
-                        continue;
-                    }
-                    let used: usize = locals.iter().map(|s| s.tokens.len()).sum();
-                    let cap = self.capacity_for(used);
-                    buckets.push(pack(&locals, cap));
-                }
-                for i in mb.plan.distributed() {
-                    let seq = &corpus[mb.seqs[i].id as usize];
-                    let cap = self.capacity_for(seq.tokens.len());
-                    buckets.push(pack(&[seq], cap));
-                }
-            }
-        }
-        buckets
-    }
-
-    /// Smallest compiled bucket that holds `tokens` (HLO shapes are static).
-    fn capacity_for(&self, tokens: usize) -> usize {
-        self.runtime
-            .manifest
-            .bucket_for(tokens as u32)
-            .unwrap_or_else(|| panic!("no artifact bucket holds {tokens} tokens")) as usize
+    ) -> Result<Vec<PackedBucket>> {
+        buckets_for_iteration(&self.runtime.manifest, corpus, sched, self.opts.workers)
     }
 
     fn schedule(
@@ -194,7 +163,7 @@ impl Trainer {
             let sched = self.schedule(&batch)?;
             metrics.sched_seconds += t_sched.elapsed().as_secs_f64();
 
-            let buckets = self.buckets_for_iteration(corpus, &sched);
+            let buckets = self.buckets_for_iteration(corpus, &sched)?;
             let t0 = std::time::Instant::now();
             let mut grad_acc = vec![0f64; self.params.data.len()];
             let mut loss_acc = 0f64;
@@ -273,5 +242,129 @@ impl Trainer {
         self.params.data = st.params;
         self.opt = Adam::from_state(st.lr, st.m, st.v, st.step);
         Ok(())
+    }
+}
+
+/// Smallest compiled bucket that holds `tokens` (HLO shapes are static).
+/// A sequence no artifact can hold is a clean, reportable configuration
+/// error — not a reason to panic mid-run.
+pub fn bucket_capacity_for(manifest: &Manifest, tokens: usize) -> Result<usize> {
+    manifest
+        .bucket_for(tokens as u32)
+        .map(|b| b as usize)
+        .with_context(|| {
+            format!(
+                "no artifact bucket holds {tokens} tokens (largest compiled bucket: {})",
+                manifest.largest_bucket().unwrap_or(0)
+            )
+        })
+}
+
+/// Manifest-level bucket construction backing [`Trainer::train`]: each CP
+/// rank's local sequences pack together; each distributed sequence gets its
+/// own bucket (time-sliced CP emulation, see the module note).
+pub fn buckets_for_iteration(
+    manifest: &Manifest,
+    corpus: &[TokenSeq],
+    sched: &crate::scheduler::IterationSchedule,
+    cp: usize,
+) -> Result<Vec<PackedBucket>> {
+    let mut buckets = Vec::new();
+    for rank in &sched.ranks {
+        for mb in &rank.micro_batches {
+            for j in 0..cp {
+                let locals: Vec<&TokenSeq> = mb
+                    .plan
+                    .locals_of(j)
+                    .map(|i| &corpus[mb.seqs[i].id as usize])
+                    .collect();
+                if locals.is_empty() {
+                    continue;
+                }
+                let used: usize = locals.iter().map(|s| s.tokens.len()).sum();
+                let cap = bucket_capacity_for(manifest, used)?;
+                buckets.push(pack(&locals, cap));
+            }
+            for i in mb.plan.distributed() {
+                let seq = &corpus[mb.seqs[i].id as usize];
+                let cap = bucket_capacity_for(manifest, seq.tokens.len())?;
+                buckets.push(pack(&[seq], cap));
+            }
+        }
+    }
+    Ok(buckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sequence;
+    use crate::scheduler::plan::{DacpPlan, IterationSchedule, MicroBatch, RankSchedule};
+    use std::path::PathBuf;
+
+    const MANIFEST: &str = "\
+version 1
+model vocab=512 hidden=256 layers=4 seed=0
+param tok_embed 512x256
+bucket 8 train_step_t8.hlo.txt
+bucket 16 train_step_t16.hlo.txt
+params params.bin
+";
+
+    fn corpus(lens: &[usize]) -> Vec<TokenSeq> {
+        lens.iter()
+            .enumerate()
+            .map(|(id, &n)| TokenSeq { id: id as u64, tokens: vec![1; n] })
+            .collect()
+    }
+
+    fn sched_of(corpus: &[TokenSeq], assign: Vec<i32>) -> IterationSchedule {
+        IterationSchedule {
+            ranks: vec![RankSchedule {
+                micro_batches: vec![MicroBatch {
+                    seqs: corpus
+                        .iter()
+                        .map(|s| Sequence { id: s.id, len: s.tokens.len() as u32 })
+                        .collect(),
+                    plan: DacpPlan { assign },
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn oversized_sequence_is_an_error_not_a_panic() {
+        // Regression: capacity_for used to panic ("no artifact bucket holds
+        // ..."), killing the training run.
+        let m = Manifest::parse(MANIFEST, PathBuf::from("/a")).unwrap();
+        let corpus = corpus(&[100]); // > largest bucket (16)
+        let sched = sched_of(&corpus, vec![0]);
+        let err = buckets_for_iteration(&m, &corpus, &sched, 2).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no artifact bucket holds 100 tokens"), "{msg}");
+        assert!(msg.contains("largest compiled bucket: 16"), "{msg}");
+    }
+
+    #[test]
+    fn fitting_sequences_pack_into_smallest_buckets() {
+        let m = Manifest::parse(MANIFEST, PathBuf::from("/a")).unwrap();
+        let corpus = corpus(&[5, 3, 12]);
+        // seqs 0+1 local on rank 0 (5+3=8 → bucket 8); seq 2 local on
+        // rank 1 (12 → bucket 16)
+        let sched = sched_of(&corpus, vec![0, 0, 1]);
+        let buckets = buckets_for_iteration(&m, &corpus, &sched, 2).unwrap();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].capacity, 8);
+        assert_eq!(buckets[0].seq_ids, vec![0, 1]);
+        assert_eq!(buckets[1].capacity, 16);
+        assert_eq!(buckets[1].seq_ids, vec![2]);
+    }
+
+    #[test]
+    fn bucket_capacity_for_reports_result() {
+        let m = Manifest::parse(MANIFEST, PathBuf::from("/a")).unwrap();
+        assert_eq!(bucket_capacity_for(&m, 7).unwrap(), 8);
+        assert_eq!(bucket_capacity_for(&m, 16).unwrap(), 16);
+        assert!(bucket_capacity_for(&m, 17).is_err());
     }
 }

@@ -3,18 +3,23 @@
 //! Subcommands:
 //!   schedule  — schedule one sampled global batch, print the plan + times
 //!   simulate  — run N simulated iterations under each policy, report speedup
+//!   e2e       — the end-to-end sweep: policies × distributions × topologies
+//!               through the run engine; writes BENCH_e2e.json
 //!   train     — end-to-end tiny-model training through PJRT artifacts
 //!   analyze   — dataset length-distribution report (Fig. 1a / Table 1)
 //!   profile   — print the offline-profiling fits (Appendix A)
 //!
 //! Configuration comes from `--config <file>` (TOML subset) or direct flags
 //! (--model, --dataset, --dp, --cp, --batch-size, --policy, --bucket-size,
-//! --iterations, --seed).
+//! --iterations, --seed, --sync).
 
 use skrull::bail;
 use skrull::util::error::{Context, Result};
 
+use skrull::bench::e2e::{self, E2eOptions};
+use skrull::bench::TableBuilder;
 use skrull::cli::Args;
+use skrull::cluster::run::{simulate_run, RunConfig};
 use skrull::cluster::simulate_iteration;
 use skrull::config::{ExperimentConfig, Policy};
 use skrull::coordinator::corpus::CorpusConfig;
@@ -41,6 +46,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.bucket_size = args.parse_or("bucket-size", cfg.bucket_size)?;
     cfg.iterations = args.parse_or("iterations", cfg.iterations)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
+    if args.flag("sync") {
+        cfg.pipelined = false;
+    }
     if let Some(p) = args.get("policy") {
         cfg.policy = Policy::by_name(p).context("unknown --policy")?;
     }
@@ -96,44 +104,126 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let ds = dataset_for(&cfg, 100_000)?;
     let cost = CostModel::paper_default(&cfg.model);
+    let run = RunConfig::new(cfg.iterations, cfg.pipelined);
 
     let policies = [Policy::Baseline, Policy::DacpOnly, Policy::Skrull];
-    let mut base_time = None;
+    let mut base_wall = None;
     println!(
-        "model={} dataset={} <DP={},CP={},B={}> C={} iters={}",
+        "model={} dataset={} <DP={},CP={},B={}> C={} iters={} loader={}",
         cfg.model.name,
         ds.name,
         cfg.cluster.dp,
         cfg.cluster.cp,
         cfg.cluster.batch_size,
         fmt_tokens(cfg.bucket_size as u64),
-        cfg.iterations
+        cfg.iterations,
+        run.mode.name(),
     );
     for policy in policies {
         let mut pcfg = cfg.clone();
         pcfg.policy = policy;
-        let mut loader = ScheduledLoader::new(&ds, pcfg);
-        let mut total = 0.0;
-        let mut util = 0.0;
-        for _ in 0..cfg.iterations {
-            let (_, sched) = loader.next_iteration()?;
-            let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
-            total += sim.total_time;
-            util += sim.compute_utilization;
-        }
-        let mean = total / cfg.iterations as f64;
-        let speedup = base_time.map(|b: f64| b / mean).unwrap_or(1.0);
-        if base_time.is_none() {
-            base_time = Some(mean);
-        }
+        let report = simulate_run(&ds, &pcfg, &cost, &run)?;
+        let wall = report.wall_seconds();
+        let base = *base_wall.get_or_insert(wall);
         println!(
-            "  {:<10} mean iter {}  speedup {speedup:.2}x  utilization {:.1}%  sched/iter {}",
+            "  {:<10} mean iter {}  speedup {:.2}x  utilization {:.1}%  exposed sched {}",
             policy.name(),
-            fmt_secs(mean),
-            100.0 * util / cfg.iterations as f64,
-            fmt_secs(loader.mean_sched_seconds()),
+            fmt_secs(wall / cfg.iterations.max(1) as f64),
+            base / wall,
+            100.0 * report.utilization(),
+            fmt_secs(report.exposed_sched_seconds),
         );
     }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    // validation-only mode (the CI gate)
+    if let Some(path) = args.get("validate") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        e2e::validate_json(&text).with_context(|| format!("{path} failed validation"))?;
+        println!("{path}: ok");
+        return Ok(());
+    }
+
+    let mut opts = if args.flag("smoke") {
+        E2eOptions::smoke()
+    } else {
+        E2eOptions::paper_default()
+    };
+    if let Some(m) = args.get("model") {
+        opts.model = ModelSpec::by_name(m).context("unknown --model")?;
+    }
+    if let Some(d) = args.get("datasets") {
+        opts.datasets = d.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(t) = args.get("topologies") {
+        // "4x8,2x16" → [(4,8), (2,16)]
+        opts.topologies = t
+            .split(',')
+            .map(|pair| {
+                let (dp, cp) = pair
+                    .trim()
+                    .split_once('x')
+                    .with_context(|| format!("bad topology {pair:?}, want DPxCP"))?;
+                Ok((
+                    dp.parse().map_err(|_| skrull::anyhow!("bad dp in {pair:?}"))?,
+                    cp.parse().map_err(|_| skrull::anyhow!("bad cp in {pair:?}"))?,
+                ))
+            })
+            .collect::<Result<Vec<(usize, usize)>>>()?;
+    }
+    opts.iterations = args.parse_or("iterations", opts.iterations)?;
+    opts.dataset_samples = args.parse_or("samples", opts.dataset_samples)?;
+    opts.seed = args.parse_or("seed", opts.seed)?;
+    if let Some(b) = args.get("batch-size") {
+        opts.batch_size =
+            Some(b.parse().map_err(|_| skrull::anyhow!("bad --batch-size {b:?}"))?);
+    }
+    if args.flag("sync") {
+        opts.pipelined = false;
+    }
+
+    println!(
+        "e2e sweep: {} policies × {} datasets × {} topologies, {} iterations, {} loader",
+        e2e::ALL_POLICIES.len(),
+        opts.datasets.len(),
+        opts.topologies.len(),
+        opts.iterations,
+        if opts.pipelined { "pipelined" } else { "synchronous" },
+    );
+    let sweep = e2e::run_sweep(&opts)?;
+
+    let mut table = TableBuilder::new("End-to-end simulated runs").header(&[
+        "topology",
+        "dataset",
+        "policy",
+        "total",
+        "speedup",
+        "util",
+        "sched exposed",
+        "padding",
+    ]);
+    for c in &sweep.cells {
+        table.row(&[
+            format!("<DP={},CP={}>", c.dp, c.cp),
+            c.dataset.clone(),
+            c.policy.name().to_string(),
+            fmt_secs(c.report.wall_seconds()),
+            format!("{:.2}x", c.speedup_vs_baseline),
+            format!("{:.1}%", 100.0 * c.report.utilization()),
+            format!("{:.4}%", 100.0 * c.report.sched_overhead_fraction()),
+            format!("{:.1}%", 100.0 * c.report.padding_fraction()),
+        ]);
+    }
+    table.print();
+
+    let out_path = args.str_or("out", "BENCH_e2e.json");
+    let json = e2e::render_json(&sweep);
+    e2e::validate_json(&json).context("self-check of rendered BENCH_e2e.json")?;
+    std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
     Ok(())
 }
 
@@ -236,14 +326,16 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: skrull <schedule|simulate|train|analyze|profile> [--options]
+const USAGE: &str = "usage: skrull <schedule|simulate|e2e|train|analyze|profile> [--options]
   common: --config FILE | --model M --dataset D --dp N --cp N --batch-size K
-          --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S
+          --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
+  e2e:    --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
+          --out FILE --smoke | --validate FILE
   train:  --artifacts DIR --steps N --workers W --lr F --corpus-size K";
 
 fn main() -> Result<()> {
     skrull::logging::init();
-    let args = Args::from_env(&["verbose"])?;
+    let args = Args::from_env(&["verbose", "sync", "smoke"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -251,6 +343,7 @@ fn main() -> Result<()> {
     match cmd {
         "schedule" => cmd_schedule(&args),
         "simulate" => cmd_simulate(&args),
+        "e2e" => cmd_e2e(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
         "profile" => cmd_profile(&args),
