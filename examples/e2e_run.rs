@@ -47,12 +47,14 @@ fn main() -> skrull::util::error::Result<()> {
         let wall = r.wall_seconds();
         let b = *base.get_or_insert(wall);
         println!(
-            "  {:<15} total {}  speedup {:.2}x  util {:.1}%  padding {:.1}%  exposed sched {}",
+            "  {:<15} total {}  speedup {:.2}x  util {:.1}%  padding {:.1}%  peak mem {:.1}%  oom {}  exposed sched {}",
             policy.name(),
             fmt_secs(wall),
             b / wall,
             100.0 * r.utilization(),
             100.0 * r.padding_fraction(),
+            100.0 * r.peak_mem_fraction(),
+            r.oom_count(),
             fmt_secs(r.exposed_sched_seconds),
         );
     }

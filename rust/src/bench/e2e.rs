@@ -1,11 +1,14 @@
 //! End-to-end experiment engine (the paper's Section 5 evaluation, as a
 //! sweep): every scheduling policy × length distribution × cluster
-//! topology, played for N iterations through the run engine
-//! (`cluster::run`), with per-cell total wall-clock, speedup vs the
-//! DeepSpeed-like baseline, utilization and exposed-scheduling-overhead
-//! fraction.  Emits the machine-readable `BENCH_e2e.json` that tracks the
-//! repo's headline number across PRs (`skrull e2e`), and validates it for
-//! CI (`skrull e2e --validate`).
+//! topology, played for N iterations (or one full epoch) through the run
+//! engine (`cluster::run`), with per-cell total wall-clock, speedup vs the
+//! DeepSpeed-like baseline, utilization, exposed-scheduling-overhead
+//! fraction and — since the memplan subsystem — peak-memory fraction and
+//! modeled OOM count.  A seed list turns every cell into a mean/stddev
+//! pair so trajectory comparisons are noise-aware.  Emits the
+//! machine-readable `BENCH_e2e.json` that tracks the repo's headline
+//! number across PRs (`skrull e2e`), and validates it for CI
+//! (`skrull e2e --validate`).
 
 use std::fmt::Write as _;
 
@@ -13,9 +16,11 @@ use crate::cluster::run::{simulate_run, RunConfig, RunReport};
 use crate::cluster::Topology;
 use crate::config::{ExperimentConfig, Policy};
 use crate::data::{Dataset, LengthDistribution};
+use crate::memplan::MemoryConfig;
 use crate::model::ModelSpec;
 use crate::perfmodel::CostModel;
 use crate::util::error::{Context, Result};
+use crate::util::stats::Summary;
 
 /// Sweep order: the baseline must come first so every other cell of the
 /// same (dataset, topology) can report speedup against it.
@@ -39,8 +44,17 @@ pub struct E2eOptions {
     pub batch_size: Option<usize>,
     /// synthesized dataset size per distribution
     pub dataset_samples: usize,
-    pub seed: u64,
+    /// One full run per seed (workload synthesis + batch sampling); the
+    /// first seed is the primary run every legacy field reports, the rest
+    /// feed the per-cell mean/stddev.
+    pub seeds: Vec<u64>,
     pub pipelined: bool,
+    /// Play one full shuffled epoch per cell instead of `iterations`
+    /// i.i.d. batches (`Dataset::epoch_batches`).
+    pub epoch: bool,
+    /// Memory subsystem settings applied to every cell (capacity source,
+    /// HBM budget, recompute policy — see `memplan`).
+    pub memory: MemoryConfig,
 }
 
 impl E2eOptions {
@@ -53,22 +67,27 @@ impl E2eOptions {
             iterations: 10,
             batch_size: None,
             dataset_samples: 20_000,
-            seed: 42,
+            seeds: vec![42],
             pipelined: true,
+            epoch: false,
+            memory: MemoryConfig::default(),
         }
     }
 
-    /// Tiny grid for CI smoke runs (still all 5 policies).
+    /// Tiny grid for CI smoke runs (still all 5 policies; two seeds so the
+    /// variance fields are exercised).
     pub fn smoke() -> Self {
         let mut o = Self::paper_default();
         o.iterations = 2;
         o.batch_size = Some(8);
         o.dataset_samples = 2_000;
+        o.seeds = vec![42, 43];
         o
     }
 }
 
-/// One sweep cell: a full simulated run of one policy on one workload.
+/// One sweep cell: simulated runs of one policy on one workload — the
+/// primary seed's full report plus cross-seed statistics.
 #[derive(Clone, Debug)]
 pub struct E2eCell {
     pub policy: Policy,
@@ -76,8 +95,15 @@ pub struct E2eCell {
     pub dp: usize,
     pub cp: usize,
     pub batch_size: usize,
+    /// the first seed's run (the primary every scalar field reports)
     pub report: RunReport,
     pub speedup_vs_baseline: f64,
+    /// cross-seed statistics (single-seed sweeps have stddev 0)
+    pub wall_mean: f64,
+    pub wall_std: f64,
+    pub speedup_mean: f64,
+    pub speedup_std: f64,
+    pub runs: usize,
 }
 
 /// The whole sweep.
@@ -86,6 +112,8 @@ pub struct E2eSweep {
     pub model: String,
     pub iterations: usize,
     pub pipelined: bool,
+    pub epoch: bool,
+    pub seeds: Vec<u64>,
     pub cells: Vec<E2eCell>,
 }
 
@@ -97,12 +125,17 @@ impl E2eSweep {
     }
 }
 
-/// Run the full sweep: for each (topology, dataset), all policies over the
-/// *same* synthesized workload, baseline first.
+/// Run the full sweep: for each (topology, dataset, seed), all policies
+/// over the *same* synthesized workload, baseline first.
 pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
-    crate::ensure!(opts.iterations > 0, "e2e sweep needs at least 1 iteration");
+    crate::ensure!(
+        opts.epoch || opts.iterations > 0,
+        "e2e sweep needs at least 1 iteration (or --epoch)"
+    );
     crate::ensure!(!opts.datasets.is_empty(), "e2e sweep needs at least one dataset");
     crate::ensure!(!opts.topologies.is_empty(), "e2e sweep needs at least one topology");
+    crate::ensure!(!opts.seeds.is_empty(), "e2e sweep needs at least one seed");
+    let np = ALL_POLICIES.len();
     let mut cells = Vec::new();
     for &(dp, cp) in &opts.topologies {
         // the paper's testbed bounds + power-of-two CP check
@@ -111,35 +144,67 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
         for name in &opts.datasets {
             let dist = LengthDistribution::by_name(name)
                 .with_context(|| format!("unknown dataset {name:?}"))?;
-            let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
-            cfg.cluster.dp = dp;
-            cfg.cluster.cp = cp;
-            if let Some(b) = opts.batch_size {
-                cfg.cluster.batch_size = b;
-            }
-            cfg.seed = opts.seed;
-            cfg.pipelined = opts.pipelined;
-            let ds = Dataset::synthesize(&dist, opts.dataset_samples, opts.seed ^ 0xD5)
-                .truncated(cfg.bucket_size * cp as u32);
-            let cost = CostModel::paper_default(&cfg.model);
-            let run = RunConfig::new(opts.iterations, opts.pipelined);
+            let mut walls: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
+            let mut speedups: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
+            let mut primaries: Vec<Option<(RunReport, f64, usize)>> =
+                (0..np).map(|_| None).collect();
+            for (si, &seed) in opts.seeds.iter().enumerate() {
+                let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
+                cfg.cluster.dp = dp;
+                cfg.cluster.cp = cp;
+                if let Some(b) = opts.batch_size {
+                    cfg.cluster.batch_size = b;
+                }
+                cfg.seed = seed;
+                cfg.pipelined = opts.pipelined;
+                cfg.memory = opts.memory.clone();
+                // resolve the capacity authority so the dataset truncation
+                // below sees the same C the schedulers will use
+                let cfg = cfg
+                    .resolve_capacity()
+                    .with_context(|| format!("resolving capacity for {name} <DP={dp},CP={cp}>"))?;
+                let ds = Dataset::synthesize(&dist, opts.dataset_samples, seed ^ 0xD5)
+                    .truncated(cfg.bucket_size * cp as u32);
+                let cost = CostModel::paper_default(&cfg.model);
+                let run = if opts.epoch {
+                    RunConfig::epoch(opts.pipelined)
+                } else {
+                    RunConfig::new(opts.iterations, opts.pipelined)
+                };
 
-            let mut baseline_wall = None;
-            for policy in ALL_POLICIES {
-                let mut pcfg = cfg.clone();
-                pcfg.policy = policy;
-                let report = simulate_run(&ds, &pcfg, &cost, &run)
-                    .with_context(|| format!("{} on {name} <DP={dp},CP={cp}>", policy.name()))?;
-                let wall = report.wall_seconds();
-                let base = *baseline_wall.get_or_insert(wall);
+                let mut baseline_wall = None;
+                for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
+                    let mut pcfg = cfg.clone();
+                    pcfg.policy = policy;
+                    let report = simulate_run(&ds, &pcfg, &cost, &run).with_context(|| {
+                        format!("{} on {name} <DP={dp},CP={cp}> seed {seed}", policy.name())
+                    })?;
+                    let wall = report.wall_seconds();
+                    let base = *baseline_wall.get_or_insert(wall);
+                    let speedup = if wall > 0.0 { base / wall } else { f64::INFINITY };
+                    walls[pi].push(wall);
+                    speedups[pi].push(speedup);
+                    if si == 0 {
+                        primaries[pi] = Some((report, speedup, pcfg.cluster.batch_size));
+                    }
+                }
+            }
+            for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
+                let (report, speedup, batch_size) =
+                    primaries[pi].take().expect("primary seed ran");
                 cells.push(E2eCell {
                     policy,
                     dataset: name.clone(),
                     dp,
                     cp,
-                    batch_size: pcfg.cluster.batch_size,
-                    speedup_vs_baseline: if wall > 0.0 { base / wall } else { f64::INFINITY },
+                    batch_size,
                     report,
+                    speedup_vs_baseline: speedup,
+                    wall_mean: walls[pi].mean(),
+                    wall_std: walls[pi].std(),
+                    speedup_mean: speedups[pi].mean(),
+                    speedup_std: speedups[pi].std(),
+                    runs: opts.seeds.len(),
                 });
             }
         }
@@ -148,6 +213,8 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
         model: opts.model.name.to_string(),
         iterations: opts.iterations,
         pipelined: opts.pipelined,
+        epoch: opts.epoch,
+        seeds: opts.seeds.clone(),
         cells,
     })
 }
@@ -163,35 +230,51 @@ pub fn render_json(sweep: &E2eSweep) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"bench\": \"e2e\",");
-    let _ = writeln!(out, "  \"schema_version\": 1,");
+    let _ = writeln!(out, "  \"schema_version\": 2,");
     let _ = writeln!(out, "  \"model\": \"{}\",", json_str(&sweep.model));
     let _ = writeln!(out, "  \"iterations\": {},", sweep.iterations);
     let _ = writeln!(out, "  \"pipelined\": {},", sweep.pipelined);
+    let _ = writeln!(out, "  \"epoch\": {},", sweep.epoch);
+    let seeds: Vec<String> = sweep.seeds.iter().map(|s| s.to_string()).collect();
+    let _ = writeln!(out, "  \"seeds\": [{}],", seeds.join(", "));
     out.push_str("  \"cells\": [\n");
     for (i, c) in sweep.cells.iter().enumerate() {
         let r = &c.report;
         let _ = writeln!(
             out,
             "    {{\"policy\": \"{}\", \"dataset\": \"{}\", \"dp\": {}, \"cp\": {}, \
-             \"batch_size\": {}, \"total_seconds\": {:e}, \"exec_seconds\": {:e}, \
+             \"batch_size\": {}, \"bucket_size\": {}, \"capacity_source\": \"{}\", \
+             \"total_seconds\": {:e}, \"exec_seconds\": {:e}, \
              \"sched_seconds\": {:e}, \"exposed_sched_seconds\": {:e}, \
-             \"speedup_vs_baseline\": {:.4}, \"utilization\": {:.4}, \
+             \"speedup_vs_baseline\": {:.4}, \"total_seconds_mean\": {:e}, \
+             \"total_seconds_std\": {:e}, \"speedup_mean\": {:.4}, \
+             \"speedup_std\": {:.4}, \"runs\": {}, \"utilization\": {:.4}, \
              \"effective_utilization\": {:.4}, \"sched_overhead_fraction\": {:e}, \
-             \"padding_fraction\": {:.4}, \"dp_imbalance\": {:.4}, \"micro_batches\": {}}}{}",
+             \"padding_fraction\": {:.4}, \"peak_mem_fraction\": {:.6}, \
+             \"oom_count\": {}, \"dp_imbalance\": {:.4}, \"micro_batches\": {}}}{}",
             json_str(c.policy.name()),
             json_str(&c.dataset),
             c.dp,
             c.cp,
             c.batch_size,
+            r.bucket_size,
+            json_str(r.capacity_source.name()),
             r.wall_seconds(),
             r.exec_seconds,
             r.sched_seconds,
             r.exposed_sched_seconds,
             c.speedup_vs_baseline,
+            c.wall_mean,
+            c.wall_std,
+            c.speedup_mean,
+            c.speedup_std,
+            c.runs,
             r.utilization(),
             r.effective_utilization(),
             r.sched_overhead_fraction(),
             r.padding_fraction(),
+            r.peak_mem_fraction(),
+            r.oom_count(),
             r.mean_dp_imbalance(),
             r.total_micro_batches(),
             if i + 1 == sweep.cells.len() { "" } else { "," }
@@ -202,23 +285,45 @@ pub fn render_json(sweep: &E2eSweep) -> String {
 }
 
 /// Top-level keys every `BENCH_e2e.json` must carry.
-const REQUIRED_TOP_KEYS: [&str; 5] =
-    ["\"bench\"", "\"schema_version\"", "\"model\"", "\"iterations\"", "\"cells\""];
+const REQUIRED_TOP_KEYS: [&str; 7] = [
+    "\"bench\"",
+    "\"schema_version\"",
+    "\"model\"",
+    "\"iterations\"",
+    "\"seeds\"",
+    "\"epoch\"",
+    "\"cells\"",
+];
 
 /// Per-cell keys; the numeric ones are additionally checked for finiteness.
-const REQUIRED_CELL_KEYS: [&str; 8] = [
+const REQUIRED_CELL_KEYS: [&str; 14] = [
     "policy",
     "dataset",
     "dp",
     "cp",
+    "bucket_size",
     "total_seconds",
     "speedup_vs_baseline",
     "utilization",
     "sched_overhead_fraction",
+    "total_seconds_mean",
+    "total_seconds_std",
+    "speedup_mean",
+    "speedup_std",
+    "peak_mem_fraction",
 ];
 
-const FINITE_CELL_KEYS: [&str; 4] =
-    ["total_seconds", "speedup_vs_baseline", "utilization", "sched_overhead_fraction"];
+const FINITE_CELL_KEYS: [&str; 9] = [
+    "total_seconds",
+    "speedup_vs_baseline",
+    "utilization",
+    "sched_overhead_fraction",
+    "total_seconds_mean",
+    "total_seconds_std",
+    "speedup_mean",
+    "speedup_std",
+    "peak_mem_fraction",
+];
 
 /// Every value token following `"key":` occurrences, in file order.
 fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
@@ -235,8 +340,10 @@ fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
 }
 
 /// CI gate: does `text` look like a complete, sane `BENCH_e2e.json`?
-/// Checks required top-level and per-cell keys and rejects non-finite (or
-/// unparsable) values for every speedup/time/utilization field.
+/// Checks required top-level and per-cell keys, rejects non-finite (or
+/// unparsable) values for every speedup/time/utilization/memory field,
+/// and enforces the memory-model consistency rule: a cell with no modeled
+/// OOM must report `peak_mem_fraction` in (0, 1].
 pub fn validate_json(text: &str) -> Result<()> {
     for key in REQUIRED_TOP_KEYS {
         crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
@@ -258,6 +365,27 @@ pub fn validate_json(text: &str) -> Result<()> {
             crate::ensure!(x.is_finite(), "cell {i}: \"{key}\" = {v} is not finite");
         }
     }
+    // memory-model consistency: oom_count is a per-cell integer, and an
+    // OOM-free cell's peak fraction must land in (0, 1]
+    let ooms = values_after(text, "oom_count");
+    crate::ensure!(
+        ooms.len() == n_cells,
+        "cell key \"oom_count\" appears {} times, expected {n_cells}",
+        ooms.len()
+    );
+    let peaks = values_after(text, "peak_mem_fraction");
+    for (i, (o, p)) in ooms.iter().zip(&peaks).enumerate() {
+        let oom: u64 = o
+            .parse()
+            .map_err(|_| crate::anyhow!("cell {i}: \"oom_count\" value {o:?} is not an integer"))?;
+        let frac: f64 = p.parse().expect("checked finite above");
+        if oom == 0 {
+            crate::ensure!(
+                frac > 0.0 && frac <= 1.0,
+                "cell {i}: peak_mem_fraction {frac} outside (0, 1] with no OOM flagged"
+            );
+        }
+    }
     // every known policy must be present at least once
     for p in ALL_POLICIES {
         crate::ensure!(
@@ -272,6 +400,7 @@ pub fn validate_json(text: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memplan::CapacitySource;
 
     fn tiny_opts() -> E2eOptions {
         E2eOptions {
@@ -281,8 +410,10 @@ mod tests {
             iterations: 2,
             batch_size: Some(16),
             dataset_samples: 2_000,
-            seed: 11,
+            seeds: vec![11],
             pipelined: true,
+            epoch: false,
+            memory: MemoryConfig::default(),
         }
     }
 
@@ -295,6 +426,12 @@ mod tests {
         for c in &sweep.cells {
             assert!(c.speedup_vs_baseline.is_finite());
             assert!(c.report.wall_seconds() > 0.0);
+            // single-seed sweep: means collapse onto the primary run
+            assert_eq!(c.runs, 1);
+            assert_eq!(c.wall_mean, c.report.wall_seconds());
+            assert_eq!(c.wall_std, 0.0);
+            assert_eq!(c.speedup_mean, c.speedup_vs_baseline);
+            assert_eq!(c.speedup_std, 0.0);
         }
     }
 
@@ -309,6 +446,95 @@ mod tests {
             "skrull speedup {} ≤ 1.0",
             sk.speedup_vs_baseline
         );
+    }
+
+    #[test]
+    fn memory_fields_are_emitted_and_sane_on_defaults() {
+        // acceptance criterion: `skrull e2e` emits peak_mem_fraction and
+        // oom_count per cell; the paper defaults (80 GB, fixed 26K bucket)
+        // are OOM-free
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        for c in &sweep.cells {
+            let f = c.report.peak_mem_fraction();
+            assert!(f > 0.0 && f <= 1.0, "{}: {f}", c.policy.name());
+            assert_eq!(c.report.oom_count(), 0, "{}", c.policy.name());
+        }
+        let json = render_json(&sweep);
+        assert!(json.contains("\"peak_mem_fraction\""));
+        assert!(json.contains("\"oom_count\""));
+        validate_json(&json).unwrap();
+    }
+
+    #[test]
+    fn hbm_derived_capacity_sweep_is_oom_free() {
+        // acceptance criterion: with CapacitySource::HbmDerived no cell
+        // reports an OOM, for any policy
+        let mut o = tiny_opts();
+        o.memory.source = CapacitySource::HbmDerived;
+        let sweep = run_sweep(&o).unwrap();
+        for c in &sweep.cells {
+            assert_eq!(c.report.oom_count(), 0, "{}", c.policy.name());
+            let f = c.report.peak_mem_fraction();
+            assert!(f > 0.0 && f <= 1.0, "{}: {f}", c.policy.name());
+            // the derived 0.5B capacity on 80 GB beats the hand-set 26K
+            assert!(c.report.bucket_size > 26 * 1024);
+            assert_eq!(c.report.capacity_source, CapacitySource::HbmDerived);
+        }
+        validate_json(&render_json(&sweep)).unwrap();
+    }
+
+    #[test]
+    fn undersized_hbm_flags_ooms_and_still_validates() {
+        let mut o = tiny_opts();
+        o.memory.hbm_gb = 4.0; // fixed 26K bucket cannot fit
+        let sweep = run_sweep(&o).unwrap();
+        assert!(sweep.cells.iter().any(|c| c.report.oom_count() > 0));
+        for c in &sweep.cells {
+            if c.report.oom_count() > 0 {
+                assert!(c.report.peak_mem_fraction() > 1.0);
+            }
+        }
+        // OOM-flagged cells are exempt from the (0,1] rule
+        validate_json(&render_json(&sweep)).unwrap();
+    }
+
+    #[test]
+    fn seed_list_emits_noise_aware_statistics() {
+        let mut o = tiny_opts();
+        o.seeds = vec![11, 12, 13];
+        let sweep = run_sweep(&o).unwrap();
+        assert_eq!(sweep.seeds, vec![11, 12, 13]);
+        for c in &sweep.cells {
+            assert_eq!(c.runs, 3);
+            assert!(c.wall_mean > 0.0 && c.wall_mean.is_finite());
+            assert!(c.wall_std >= 0.0 && c.wall_std.is_finite());
+            assert!(c.speedup_std >= 0.0 && c.speedup_std.is_finite());
+            if c.policy == Policy::Baseline {
+                // every seed's baseline is 1.0 by construction
+                assert!((c.speedup_mean - 1.0).abs() < 1e-12);
+                assert!(c.speedup_std < 1e-12);
+            }
+        }
+        validate_json(&render_json(&sweep)).unwrap();
+    }
+
+    #[test]
+    fn epoch_mode_plays_one_full_epoch_per_cell() {
+        let mut o = tiny_opts();
+        o.epoch = true;
+        o.dataset_samples = 100;
+        o.batch_size = Some(16);
+        let sweep = run_sweep(&o).unwrap();
+        assert!(sweep.epoch);
+        let dist = LengthDistribution::by_name("chatqa2").unwrap();
+        let ds = Dataset::synthesize(&dist, 100, o.seeds[0] ^ 0xD5).truncated(26 * 1024 * 8);
+        for c in &sweep.cells {
+            assert_eq!(c.report.iterations.len(), 100usize.div_ceil(16));
+            assert_eq!(c.report.data_tokens, ds.total_tokens(), "{}", c.policy.name());
+        }
+        let json = render_json(&sweep);
+        assert!(json.contains("\"epoch\": true"));
+        validate_json(&json).unwrap();
     }
 
     #[test]
@@ -334,6 +560,21 @@ mod tests {
         assert!(validate_json(&broken).is_err());
         // truncated file
         assert!(validate_json(&json[..json.len() / 2]).is_err());
+        // memory rule: an OOM-free cell with a zero or >1 peak fraction
+        let sample = values_after(&json, "peak_mem_fraction")[0].to_string();
+        for bad in ["0.000000", "1.500000"] {
+            let broken = json.replacen(
+                &format!("\"peak_mem_fraction\": {sample}"),
+                &format!("\"peak_mem_fraction\": {bad}"),
+                1,
+            );
+            assert_ne!(broken, json, "mutation must apply");
+            assert!(validate_json(&broken).is_err(), "peak {bad} should fail");
+        }
+        // non-integer oom_count
+        let broken = json.replacen("\"oom_count\": 0", "\"oom_count\": 0.5", 1);
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
     }
 
     #[test]
@@ -354,6 +595,18 @@ mod tests {
         assert!(run_sweep(&o).is_err());
         let mut o = tiny_opts();
         o.iterations = 0;
+        assert!(run_sweep(&o).is_err());
+        // ... but 0 iterations is fine in epoch mode
+        o.epoch = true;
+        o.dataset_samples = 50;
+        assert!(run_sweep(&o).is_ok());
+        let mut o = tiny_opts();
+        o.seeds = vec![];
+        assert!(run_sweep(&o).is_err());
+        // an infeasible HBM budget surfaces as a clean error
+        let mut o = tiny_opts();
+        o.memory.source = CapacitySource::HbmDerived;
+        o.memory.hbm_gb = 0.25;
         assert!(run_sweep(&o).is_err());
     }
 }

@@ -9,6 +9,6 @@ pub mod sim;
 pub mod topology;
 pub mod trace;
 
-pub use run::{simulate_run, IterationRecord, LoaderMode, RunConfig, RunReport};
-pub use sim::{simulate_iteration, IterationSim, MicroBatchSim};
+pub use run::{simulate_run, BatchSource, IterationRecord, LoaderMode, RunConfig, RunReport};
+pub use sim::{simulate_iteration, simulate_iteration_on, IterationSim, MicroBatchSim};
 pub use topology::Topology;

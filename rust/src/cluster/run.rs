@@ -23,10 +23,11 @@
 use crate::config::ExperimentConfig;
 use crate::data::loader::ScheduledLoader;
 use crate::data::{Dataset, Sequence};
+use crate::memplan::{self, CapacitySource, MemPlan, OomEvent};
 use crate::perfmodel::CostModel;
 use crate::scheduler::plan::{IterationSchedule, MicroBatch, SchedError};
 
-use super::sim::simulate_iteration;
+use super::sim::{simulate_iteration, simulate_iteration_on};
 
 /// How the run engine drives the scheduling DataLoader.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,11 +47,24 @@ impl LoaderMode {
     }
 }
 
+/// Where the run's global batches come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchSource {
+    /// `RunConfig::iterations` i.i.d. batches sampled with replacement
+    /// (the paper's iteration-time measurements).
+    Sampled,
+    /// One full shuffled epoch via `Dataset::epoch_batches` — every
+    /// sequence exactly once; the iteration count is the epoch length and
+    /// `RunConfig::iterations` is ignored.
+    Epoch,
+}
+
 /// Parameters of one simulated run.
 #[derive(Clone, Copy, Debug)]
 pub struct RunConfig {
     pub iterations: usize,
     pub mode: LoaderMode,
+    pub source: BatchSource,
 }
 
 impl RunConfig {
@@ -58,7 +72,15 @@ impl RunConfig {
         RunConfig {
             iterations,
             mode: if pipelined { LoaderMode::Pipelined } else { LoaderMode::Synchronous },
+            source: BatchSource::Sampled,
         }
+    }
+
+    /// A full-epoch run (ROADMAP: epoch-mode runs in the run engine).
+    pub fn epoch(pipelined: bool) -> Self {
+        let mut run = Self::new(0, pipelined);
+        run.source = BatchSource::Epoch;
+        run
     }
 }
 
@@ -82,6 +104,12 @@ pub struct IterationRecord {
     pub padded_tokens: u64,
     /// total bucket tokens executed (data + padding)
     pub bucket_tokens: u64,
+    /// modeled peak memory per GPU (bytes), indexed `dp_rank * cp + cp_rank`
+    pub rank_peak_bytes: Vec<f64>,
+    /// max of `rank_peak_bytes` / the HBM budget
+    pub peak_mem_fraction: f64,
+    /// (micro-batch, GPU) pairs whose modeled peak exceeded HBM
+    pub oom_events: usize,
 }
 
 /// Aggregated result of a simulated multi-iteration run.
@@ -103,11 +131,39 @@ pub struct RunReport {
     pub data_tokens: u64,
     pub padded_tokens: u64,
     pub bucket_tokens: u64,
+    /// where the bucket size came from (hand-set vs memplan-derived)
+    pub capacity_source: CapacitySource,
+    /// per-GPU HBM budget the memory simulation ran against (bytes)
+    pub hbm_bytes: f64,
+    /// run-wide peak memory per GPU (bytes), indexed `dp_rank * cp + cp_rank`
+    pub rank_peak_bytes: Vec<f64>,
+    /// every modeled OOM across the run, with coordinates
+    pub oom_events: Vec<OomEvent>,
 }
 
 impl RunReport {
     pub fn gpus(&self) -> usize {
         self.dp * self.cp
+    }
+
+    /// Run-wide peak memory over all GPUs (bytes).
+    pub fn peak_mem_bytes(&self) -> f64 {
+        self.rank_peak_bytes.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Run-wide peak memory as a fraction of HBM — > 1.0 means at least
+    /// one modeled OOM.
+    pub fn peak_mem_fraction(&self) -> f64 {
+        if self.hbm_bytes > 0.0 {
+            self.peak_mem_bytes() / self.hbm_bytes
+        } else {
+            0.0
+        }
+    }
+
+    /// Number of modeled OOM events across the run.
+    pub fn oom_count(&self) -> usize {
+        self.oom_events.len()
     }
 
     /// End-to-end wall-clock: execution plus whatever scheduling could not
@@ -192,17 +248,12 @@ impl RunReport {
 /// Padding accounting for one micro-batch under static per-rank buckets:
 /// every CP rank executes a C-token buffer; whatever its local sequences
 /// plus its 1/N shard of the distributed sequences don't fill is padding.
+/// The fill rule itself lives in [`MicroBatch::rank_used_tokens`], shared
+/// with memplan's peak-memory simulation.
 fn micro_batch_padding(mb: &MicroBatch, bucket_size: u32, cp: usize) -> (u64, u64) {
-    let dist_share: u64 = mb
-        .plan
-        .distributed()
-        .map(|i| (mb.seqs[i].len as u64).div_ceil(cp as u64))
-        .sum();
     let mut padded = 0u64;
     let mut bucket = 0u64;
-    for j in 0..cp {
-        let local: u64 = mb.plan.locals_of(j).map(|i| mb.seqs[i].len as u64).sum();
-        let used = local + dist_share;
+    for used in mb.rank_used_tokens(cp) {
         // a baseline policy may overfill C; charge what actually runs
         let cap = (bucket_size as u64).max(used);
         padded += cap - used;
@@ -224,16 +275,40 @@ pub fn simulate_run(
     cost: &CostModel,
     run: &RunConfig,
 ) -> Result<RunReport, SchedError> {
+    // resolve the capacity authority up front: under HbmDerived the bucket
+    // size below is the memplan-derived C, and an infeasible HBM budget is
+    // an error before any scheduling happens
+    let cfg = cfg.resolve_capacity()?;
     let dp = cfg.cluster.dp;
     let cp = cfg.cluster.cp;
     let bucket_size = cfg.bucket_size;
-    let mut records: Vec<IterationRecord> = Vec::with_capacity(run.iterations);
+    let mem = MemPlan::for_experiment(&cfg);
+    // cross-node CP groups pay inter-node bandwidth in the simulator; a
+    // layout the topology model cannot place (oversubscribed ranks, bad CP
+    // degree) is a configuration error, not a silent NVLink fallback
+    let topo = match cfg.cluster.topology() {
+        Ok(t) => t,
+        Err(e) => return Err(SchedError::BadTopology { reason: e.to_string() }),
+    };
+    let epoch_batches = match run.source {
+        BatchSource::Epoch => Some(ds.epoch_batches(cfg.cluster.batch_size, cfg.seed)),
+        BatchSource::Sampled => None,
+    };
+    let iterations = epoch_batches.as_ref().map_or(run.iterations, Vec::len);
+    let mut records: Vec<IterationRecord> = Vec::with_capacity(iterations);
     let mut rank_busy = vec![0.0f64; dp * cp];
+    let mut rank_peak = vec![0.0f64; dp * cp];
+    let mut oom_events: Vec<OomEvent> = Vec::new();
 
     {
         // shared per-iteration accounting for both loader modes
-        let mut record = |_: usize, batch: &[Sequence], sched: &IterationSchedule, sched_s: f64| {
-            let sim = simulate_iteration(sched, cost, cp);
+        let mut record = |i: usize, batch: &[Sequence], sched: &IterationSchedule, sched_s: f64| {
+            let sim = if topo.dp == sched.ranks.len() {
+                simulate_iteration_on(sched, cost, &topo)
+            } else {
+                simulate_iteration(sched, cost, cp)
+            };
+            let imem = memplan::iteration_memory(sched, &mem, bucket_size, cp, i);
             let mut padded = 0u64;
             let mut bucket = 0u64;
             let mut n_mb = 0usize;
@@ -252,6 +327,13 @@ pub fn simulate_run(
                     }
                 }
             }
+            for (g, &p) in imem.rank_peak_bytes.iter().enumerate() {
+                if p > rank_peak[g] {
+                    rank_peak[g] = p;
+                }
+            }
+            let n_oom = imem.events.len();
+            oom_events.extend(imem.events);
             records.push(IterationRecord {
                 exec_seconds: sim.total_time,
                 grad_sync_seconds: sim.grad_sync,
@@ -263,17 +345,27 @@ pub fn simulate_run(
                 data_tokens: batch.iter().map(|s| s.len as u64).sum(),
                 padded_tokens: padded,
                 bucket_tokens: bucket,
+                peak_mem_fraction: mem.fraction_of_hbm(imem.peak_bytes()),
+                rank_peak_bytes: imem.rank_peak_bytes,
+                oom_events: n_oom,
             });
         };
 
         let loader = ScheduledLoader::new(ds, cfg.clone());
-        match run.mode {
-            LoaderMode::Synchronous => {
+        match (run.mode, &epoch_batches) {
+            (LoaderMode::Synchronous, None) => {
                 let mut loader = loader;
-                loader.run_synchronous(run.iterations, &mut record)?;
+                loader.run_synchronous(iterations, &mut record)?;
             }
-            LoaderMode::Pipelined => {
-                loader.run_pipelined(run.iterations, &mut record)?;
+            (LoaderMode::Synchronous, Some(batches)) => {
+                let mut loader = loader;
+                loader.run_synchronous_batches(batches, &mut record)?;
+            }
+            (LoaderMode::Pipelined, None) => {
+                loader.run_pipelined(iterations, &mut record)?;
+            }
+            (LoaderMode::Pipelined, Some(batches)) => {
+                loader.run_pipelined_batches(batches, &mut record)?;
             }
         }
     }
@@ -304,6 +396,10 @@ pub fn simulate_run(
         bucket_tokens: records.iter().map(|r| r.bucket_tokens).sum(),
         iterations: records,
         rank_busy,
+        capacity_source: cfg.memory.source,
+        hbm_bytes: mem.hbm_bytes,
+        rank_peak_bytes: rank_peak,
+        oom_events,
     })
 }
 
@@ -353,6 +449,17 @@ mod tests {
         // executed bucket tokens = data (shard-rounded up) + padding, so
         // they bound the raw data tokens from above
         assert!(r.bucket_tokens >= r.data_tokens + r.padded_tokens);
+        // memory lane: peaks recorded per GPU, within budget on defaults
+        assert_eq!(r.rank_peak_bytes.len(), cfg.cluster.dp * cfg.cluster.cp);
+        let f = r.peak_mem_fraction();
+        assert!(f > 0.0 && f <= 1.0, "peak fraction {f}");
+        assert_eq!(r.oom_count(), 0);
+        assert_eq!(r.capacity_source, crate::memplan::CapacitySource::Fixed);
+        for rec in &r.iterations {
+            assert!(rec.peak_mem_fraction > 0.0);
+            assert_eq!(rec.rank_peak_bytes.len(), r.rank_peak_bytes.len());
+            assert_eq!(rec.oom_events, 0);
+        }
     }
 
     #[test]
@@ -402,6 +509,84 @@ mod tests {
         assert_eq!(r.sched_overhead_fraction(), 0.0);
         assert_eq!(r.padding_fraction(), 0.0);
         assert_eq!(r.mean_dp_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn epoch_run_plays_every_sequence_exactly_once() {
+        use crate::data::LengthDistribution;
+        let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+        cfg.policy = Policy::Skrull;
+        cfg.cluster.batch_size = 16;
+        let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 100, 5)
+            .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+        let cost = CostModel::paper_default(&cfg.model);
+        let r = simulate_run(&ds, &cfg, &cost, &RunConfig::epoch(true)).unwrap();
+        // ceil(100 / 16) batches, tail kept
+        assert_eq!(r.iterations.len(), 7);
+        assert_eq!(r.data_tokens, ds.total_tokens());
+        // pipelined and synchronous epoch runs agree on everything but
+        // overhead exposure
+        let s = simulate_run(&ds, &cfg, &cost, &RunConfig::epoch(false)).unwrap();
+        assert_eq!(s.iterations.len(), r.iterations.len());
+        for (a, b) in s.iterations.iter().zip(&r.iterations) {
+            assert_eq!(a.exec_seconds, b.exec_seconds);
+            assert_eq!(a.data_tokens, b.data_tokens);
+            assert_eq!(a.micro_batches, b.micro_batches);
+        }
+        // and the epoch is seeded: same config, same batches
+        let again = simulate_run(&ds, &cfg, &cost, &RunConfig::epoch(true)).unwrap();
+        assert_eq!(again.data_tokens, r.data_tokens);
+        assert_eq!(again.exec_seconds, r.exec_seconds);
+    }
+
+    #[test]
+    fn undersized_hbm_flags_ooms_fixed_capacity_does_not_hide_them() {
+        let (ds, mut cfg, cost) = setup(Policy::Baseline);
+        // 4 GiB cannot hold a 26K-token bucket of the 0.5B model
+        cfg.memory.hbm_gb = 4.0;
+        let r = simulate_run(&ds, &cfg, &cost, &RunConfig::new(2, true)).unwrap();
+        assert!(r.oom_count() > 0);
+        assert!(r.peak_mem_fraction() > 1.0);
+        // events carry coordinates inside the run
+        for ev in &r.oom_events {
+            assert!(ev.iteration < r.iterations.len());
+            assert!(ev.dp_rank < r.dp && ev.cp_rank < r.cp);
+            assert!(ev.peak_bytes > ev.hbm_bytes);
+        }
+    }
+
+    #[test]
+    fn oversubscribed_layout_is_rejected_not_silently_intra_node() {
+        // Regression: an unplaceable dp×cp used to fall back to uniform
+        // NVLink pricing via `.ok()`, reporting physically impossible
+        // results without a word.
+        let (ds, mut cfg, cost) = setup(Policy::Skrull);
+        cfg.cluster.dp = 8; // 8×8 = 64 ranks on the 32-GPU testbed
+        assert!(matches!(
+            simulate_run(&ds, &cfg, &cost, &RunConfig::new(1, true)),
+            Err(SchedError::BadTopology { .. })
+        ));
+    }
+
+    #[test]
+    fn hbm_derived_capacity_runs_oom_free() {
+        use crate::memplan::CapacitySource;
+        let (ds, mut cfg, cost) = setup(Policy::Skrull);
+        cfg.memory.source = CapacitySource::HbmDerived;
+        let r = simulate_run(&ds, &cfg, &cost, &RunConfig::new(3, true)).unwrap();
+        assert_eq!(r.capacity_source, CapacitySource::HbmDerived);
+        // the report carries the derived bucket, not the hand-set one
+        assert_ne!(r.bucket_size, cfg.bucket_size);
+        assert_eq!(r.bucket_size, cfg.mem_plan().derive_capacity().unwrap());
+        assert_eq!(r.oom_count(), 0);
+        let f = r.peak_mem_fraction();
+        assert!(f > 0.0 && f <= 1.0, "peak fraction {f}");
+        // infeasible budgets fail fast, before any scheduling
+        cfg.memory.hbm_gb = 0.25;
+        assert!(matches!(
+            simulate_run(&ds, &cfg, &cost, &RunConfig::new(1, true)),
+            Err(crate::scheduler::SchedError::NoCapacity { .. })
+        ));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! Produces per-rank busy/idle traces for the utilization numbers in
 //! EXPERIMENTS.md.
 
+use crate::cluster::topology::Topology;
 use crate::perfmodel::CostModel;
 use crate::scheduler::plan::IterationSchedule;
 
@@ -66,12 +67,51 @@ pub fn simulate_micro_batch(
 }
 
 /// Simulate a full iteration (Eq. 8–11 semantics).  `cp` is the job's
-/// fixed context-parallel degree (N).
+/// fixed context-parallel degree (N).  All CP groups are priced at
+/// intra-node (NVLink) bandwidth; use [`simulate_iteration_on`] to charge
+/// the actual topology.
 pub fn simulate_iteration(sched: &IterationSchedule, cost: &CostModel, cp: usize) -> IterationSim {
+    simulate_iteration_with(sched, cost, |_| None, cp)
+}
+
+/// Topology-aware iteration simulation: DP ranks whose CP group spans node
+/// boundaries (`Topology::cp_group_crosses_nodes`) pay inter-node (IB)
+/// bandwidth for their K/V exchanges; the rest keep NVLink.  Identical to
+/// [`simulate_iteration`] when no group crosses.
+pub fn simulate_iteration_on(
+    sched: &IterationSchedule,
+    cost: &CostModel,
+    topo: &Topology,
+) -> IterationSim {
+    let costs: Vec<Option<CostModel>> = (0..sched.ranks.len())
+        .map(|d| {
+            if topo.cp > 1 && d < topo.dp && topo.cp_group_crosses_nodes(d) {
+                Some(cost.with_cross_node_cp())
+            } else {
+                None
+            }
+        })
+        .collect();
+    simulate_iteration_with(sched, cost, |d| costs[d].as_ref(), topo.cp)
+}
+
+/// Shared body: `cost_for(d)` overrides the cost model for DP rank `d`
+/// (`None` = use `base`).  Gradient sync stays on `base` — ZeRO's
+/// reduce-scatter runs over the DP group, whose pricing we keep uniform.
+fn simulate_iteration_with<'c, F>(
+    sched: &IterationSchedule,
+    base: &'c CostModel,
+    cost_for: F,
+    cp: usize,
+) -> IterationSim
+where
+    F: Fn(usize) -> Option<&'c CostModel>,
+{
     let dp = sched.ranks.len();
     let mut rank_spans = Vec::with_capacity(dp);
     let mut mbs_out = Vec::with_capacity(dp);
-    for rank in &sched.ranks {
+    for (d, rank) in sched.ranks.iter().enumerate() {
+        let cost = cost_for(d).unwrap_or(base);
         let mut span = 0.0;
         let mut sims = Vec::with_capacity(rank.micro_batches.len());
         for mb in &rank.micro_batches {
@@ -82,6 +122,7 @@ pub fn simulate_iteration(sched: &IterationSchedule, cost: &CostModel, cp: usize
         rank_spans.push(span);
         mbs_out.push(sims);
     }
+    let cost = base;
     let slowest = rank_spans.iter().cloned().fold(0.0, f64::max);
     let grad_sync = cost.grad_sync_time(dp);
     let total = slowest + grad_sync;
@@ -263,6 +304,36 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn cross_node_cp_group_slows_the_iteration() {
+        // ROADMAP item made live: the same schedule on the same <DP=2,
+        // CP=16> layout is strictly slower when the CP groups span two
+        // 8-GPU nodes (paper testbed) than on hypothetical 16-GPU nodes —
+        // and with ring attention, whose chunk chain multiplies the
+        // per-step latency.
+        use crate::cluster::topology::Topology;
+        use crate::perfmodel::cost::CommPattern;
+
+        let mut cost = cm();
+        cost.pattern = CommPattern::Ring { cp: 16 };
+        let mb_long = mb(&[60_000], vec![DISTRIBUTED]);
+        let sched = IterationSchedule {
+            ranks: vec![
+                RankSchedule { micro_batches: vec![mb_long.clone()] },
+                RankSchedule { micro_batches: vec![mb_long] },
+            ],
+        };
+        let crossing = Topology::new(4, 8, 2, 16).unwrap();
+        let contained = Topology::new(2, 16, 2, 16).unwrap();
+        assert!(crossing.cp_group_crosses_nodes(0));
+        assert!(!contained.cp_group_crosses_nodes(0));
+        let t_cross = simulate_iteration_on(&sched, &cost, &crossing).total_time;
+        let t_local = simulate_iteration_on(&sched, &cost, &contained).total_time;
+        assert!(t_cross > t_local, "cross {t_cross} vs local {t_local}");
+        // no crossing ⇒ exactly the plain simulator
+        assert_eq!(t_local, simulate_iteration(&sched, &cost, 16).total_time);
     }
 
     #[test]

@@ -96,9 +96,34 @@ fn push_iteration_events(
     }
 }
 
+/// A counter event ("ph":"C") — Perfetto draws these as a value lane.
+fn counter(name: &str, pid: usize, ts: f64, value: f64) -> String {
+    format!(
+        r#"{{"name":"{}","ph":"C","pid":{},"ts":{:.3},"args":{{"value":{:.6}}}}}"#,
+        esc(name),
+        pid,
+        ts,
+        value
+    )
+}
+
+/// An instant event ("ph":"i") — a marker at a point in time.
+fn instant(name: &str, pid: usize, tid: usize, ts: f64) -> String {
+    format!(
+        r#"{{"name":"{}","ph":"i","pid":{},"tid":{},"ts":{:.3},"s":"t","cat":"sim"}}"#,
+        esc(name),
+        pid,
+        tid,
+        ts
+    )
+}
+
+fn render_lines(lines: Vec<String>) -> String {
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", lines.join(",\n"))
+}
+
 fn render_events(events: &[Event]) -> String {
-    let body: Vec<String> = events.iter().map(Event::render).collect();
-    format!("{{\"traceEvents\":[\n{}\n]}}\n", body.join(",\n"))
+    render_lines(events.iter().map(Event::render).collect())
 }
 
 /// Render one iteration's simulated timeline as a chrome trace JSON
@@ -113,7 +138,10 @@ pub fn iteration_trace(sched: &IterationSchedule, cost: &CostModel, cp: usize) -
 /// wall-clock produced by the run engine, plus a dedicated "dataloader"
 /// process row (pid = dp) showing each iteration's scheduling span — in
 /// pipelined mode it visibly overlaps the previous iteration's execution,
-/// the Section 4.3 picture.
+/// the Section 4.3 picture.  A **memory lane** rides along: one
+/// `peak_mem_frac` counter per (iteration, DP rank) with the rank's worst
+/// GPU's peak as a fraction of HBM, plus an instant `OOM` marker for every
+/// modeled out-of-memory event.
 pub fn run_trace(
     scheds: &[IterationSchedule],
     report: &crate::cluster::run::RunReport,
@@ -123,6 +151,7 @@ pub fn run_trace(
     let cp = report.cp;
     let loader_pid = report.dp; // one row past the last DP rank
     let mut events = Vec::new();
+    let mut extra: Vec<String> = Vec::new();
     let mut clock_us = 0.0f64;
     for (i, (sched, rec)) in scheds.iter().zip(&report.iterations).enumerate() {
         // scheduling of iteration i starts when the overlap window opens:
@@ -152,9 +181,29 @@ pub fn run_trace(
                 dur: rec.grad_sync_seconds * 1e6,
             });
         }
+        // memory lane: per-DP-rank peak fraction for this iteration
+        if report.hbm_bytes > 0.0 && rec.rank_peak_bytes.len() == report.dp * cp {
+            for d in 0..report.dp {
+                let peak = rec.rank_peak_bytes[d * cp..(d + 1) * cp]
+                    .iter()
+                    .copied()
+                    .fold(0.0, f64::max);
+                extra.push(counter("peak_mem_frac", d, exec_start_us, peak / report.hbm_bytes));
+            }
+        }
+        for ev in report.oom_events.iter().filter(|e| e.iteration == i) {
+            extra.push(instant(
+                &format!("OOM mb{}", ev.micro_batch),
+                ev.dp_rank,
+                ev.cp_rank,
+                exec_start_us,
+            ));
+        }
         clock_us = exec_start_us + rec.exec_seconds * 1e6;
     }
-    render_events(&events)
+    let mut lines: Vec<String> = events.iter().map(Event::render).collect();
+    lines.extend(extra);
+    render_lines(lines)
 }
 
 /// Write the trace to a file.
@@ -249,9 +298,45 @@ mod tests {
             assert!(json.contains(&format!("it{i} mb0")), "iter {i} exec events");
         }
         assert!(json.contains("grad-sync iter0"));
+        // the memory lane rides along: one counter per (iteration, dp rank)
+        assert_eq!(
+            json.matches("\"peak_mem_frac\"").count(),
+            3 * cfg.cluster.dp,
+        );
+        assert!(json.contains("\"ph\":\"C\""));
+        // no OOM markers on the default 80 GB budget
+        assert!(!json.contains("OOM"));
         // wellformed-ish
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('"').count() % 2, 0);
+    }
+
+    #[test]
+    fn run_trace_marks_ooms_on_undersized_hbm() {
+        use crate::cluster::run::{simulate_run, RunConfig};
+        use crate::config::ExperimentConfig;
+        use crate::data::{Dataset, LengthDistribution};
+
+        let cfg = {
+            let mut c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+            c.cluster.batch_size = 8;
+            c.memory.hbm_gb = 4.0; // cannot hold a 26K bucket
+            c
+        };
+        let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 1_000, 3)
+            .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+        let cost = CostModel::paper_default(&cfg.model);
+        let mut scheds = Vec::new();
+        let mut loader = crate::data::loader::ScheduledLoader::new(&ds, cfg.clone());
+        loader
+            .run_synchronous(2, |_, _, sched, _| scheds.push(sched.clone()))
+            .unwrap();
+        let report = simulate_run(&ds, &cfg, &cost, &RunConfig::new(2, true)).unwrap();
+        assert!(report.oom_count() > 0);
+        let json = run_trace(&scheds, &report, &cost);
+        assert!(json.contains("OOM mb"));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
     }
 
     #[test]

@@ -4,7 +4,10 @@
 
 pub mod toml;
 
+use crate::cluster::topology::{Topology, TopologyError};
+use crate::memplan::{CapacitySource, MemPlan, MemoryConfig};
 use crate::model::ModelSpec;
+use crate::scheduler::SchedError;
 
 /// Parallelism + batch settings of one training job.
 #[derive(Clone, Debug, PartialEq)]
@@ -15,11 +18,20 @@ pub struct ClusterConfig {
     pub cp: usize,
     /// Global batch size in sequences (K per iteration).
     pub batch_size: usize,
+    /// Physical layout (paper testbed: 4 nodes × 8 GPUs).  Decides which
+    /// CP groups cross node boundaries and pay IB instead of NVLink.
+    pub nodes: usize,
+    pub gpus_per_node: usize,
 }
 
 impl ClusterConfig {
     pub fn gpus(&self) -> usize {
         self.dp * self.cp
+    }
+
+    /// The physical topology this layout maps onto.
+    pub fn topology(&self) -> Result<Topology, TopologyError> {
+        Topology::new(self.nodes, self.gpus_per_node, self.dp, self.cp)
     }
 }
 
@@ -76,6 +88,12 @@ pub struct ExperimentConfig {
     /// Run-engine loader mode: overlap scheduling of batch i+1 with the
     /// execution of batch i (Section 4.3's DataLoader integration).
     pub pipelined: bool,
+    /// Run-engine batch source: play one full shuffled epoch
+    /// (`Dataset::epoch_batches`) instead of `iterations` i.i.d. batches.
+    pub epoch: bool,
+    /// Memory subsystem: where capacity C comes from, HBM budget,
+    /// recomputation policy (see `memplan`).
+    pub memory: MemoryConfig,
 }
 
 impl ExperimentConfig {
@@ -91,14 +109,46 @@ impl ExperimentConfig {
         let bucket = if model.name == "qwen2.5-7b" { 13 * 1024 } else { 26 * 1024 };
         ExperimentConfig {
             model,
-            cluster: ClusterConfig { dp, cp, batch_size: batch },
+            cluster: ClusterConfig { dp, cp, batch_size: batch, nodes: 4, gpus_per_node: 8 },
             bucket_size: bucket,
             dataset: dataset.to_string(),
             policy: Policy::Skrull,
             iterations: 30,
             seed: 42,
             pipelined: true,
+            epoch: false,
+            memory: MemoryConfig::default(),
         }
+    }
+
+    /// The memory plan for this experiment's model + parallel layout.
+    pub fn mem_plan(&self) -> MemPlan {
+        MemPlan::for_experiment(self)
+    }
+
+    /// The token capacity C the schedulers must use: the hand-set
+    /// `bucket_size` under `CapacitySource::Fixed`, the memplan-derived
+    /// one under `HbmDerived`.
+    pub fn resolved_bucket_size(&self) -> Result<u32, SchedError> {
+        match self.memory.source {
+            CapacitySource::Fixed => Ok(self.bucket_size),
+            CapacitySource::HbmDerived => {
+                let plan = self.mem_plan();
+                plan.derive_capacity().ok_or(SchedError::NoCapacity {
+                    hbm_bytes: plan.hbm_bytes as u64,
+                    static_bytes: plan.static_bytes as u64,
+                })
+            }
+        }
+    }
+
+    /// A copy of this config with `bucket_size` replaced by the resolved
+    /// capacity.  Idempotent (the derivation does not read `bucket_size`);
+    /// `memory.source` is kept so reports can show where C came from.
+    pub fn resolve_capacity(&self) -> Result<Self, SchedError> {
+        let mut cfg = self.clone();
+        cfg.bucket_size = self.resolved_bucket_size()?;
+        Ok(cfg)
     }
 
     /// Load from a TOML-subset file; missing keys fall back to the paper
@@ -113,6 +163,9 @@ impl ExperimentConfig {
         cfg.cluster.cp = t.i64_or("cluster.cp", cfg.cluster.cp as i64) as usize;
         cfg.cluster.batch_size =
             t.i64_or("cluster.batch_size", cfg.cluster.batch_size as i64) as usize;
+        cfg.cluster.nodes = t.i64_or("cluster.nodes", cfg.cluster.nodes as i64) as usize;
+        cfg.cluster.gpus_per_node =
+            t.i64_or("cluster.gpus_per_node", cfg.cluster.gpus_per_node as i64) as usize;
         cfg.bucket_size = t.i64_or("scheduler.bucket_size", cfg.bucket_size as i64) as u32;
         let policy = t.str_or("scheduler.policy", cfg.policy.name());
         cfg.policy = Policy::by_name(&policy)
@@ -120,6 +173,17 @@ impl ExperimentConfig {
         cfg.iterations = t.i64_or("run.iterations", cfg.iterations as i64) as usize;
         cfg.seed = t.i64_or("run.seed", cfg.seed as i64) as u64;
         cfg.pipelined = t.bool_or("run.pipelined", cfg.pipelined);
+        cfg.epoch = t.bool_or("run.epoch", cfg.epoch);
+        let source = t.str_or("memory.capacity_source", cfg.memory.source.name());
+        cfg.memory.source = CapacitySource::by_name(&source)
+            .ok_or_else(|| crate::anyhow!("unknown capacity source {source:?}"))?;
+        cfg.memory.hbm_gb = t.f64_or("memory.hbm_gb", cfg.memory.hbm_gb);
+        let recompute = t.str_or("memory.recompute", cfg.memory.recompute.name());
+        cfg.memory.recompute = crate::memplan::RecomputePolicy::by_name(&recompute)
+            .ok_or_else(|| crate::anyhow!("unknown recompute policy {recompute:?}"))?;
+        cfg.memory.peft_frac =
+            t.get("memory.peft_frac").and_then(|v| v.as_f64()).or(cfg.memory.peft_frac);
+        cfg.memory.headroom_frac = t.f64_or("memory.headroom_frac", cfg.memory.headroom_frac);
         Ok(cfg)
     }
 
@@ -177,6 +241,77 @@ pipelined = false
         // defaults to pipelined when the key is absent
         let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
         assert!(d.pipelined);
+    }
+
+    #[test]
+    fn memory_and_layout_keys_parse() {
+        use crate::memplan::RecomputePolicy;
+        let t = toml::parse(
+            r#"
+[cluster]
+nodes = 2
+gpus_per_node = 16
+[memory]
+capacity_source = "hbm-derived"
+hbm_gb = 40.0
+recompute = "full"
+peft_frac = 0.01
+[run]
+epoch = true
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!((c.cluster.nodes, c.cluster.gpus_per_node), (2, 16));
+        assert_eq!(c.memory.source, CapacitySource::HbmDerived);
+        assert_eq!(c.memory.hbm_gb, 40.0);
+        assert_eq!(c.memory.recompute, RecomputePolicy::Full);
+        assert_eq!(c.memory.peft_frac, Some(0.01));
+        assert!(c.epoch);
+        // defaults: fixed capacity, 80 GB, selective recompute, no epoch
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.memory, crate::memplan::MemoryConfig::default());
+        assert!(!d.epoch);
+        // bad values are rejected, not silently defaulted
+        let t = toml::parse("[memory]\ncapacity_source = \"psychic\"\n").unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
+        let t = toml::parse("[memory]\nrecompute = \"sometimes\"\n").unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn fixed_capacity_resolution_is_identity() {
+        let c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+        let r = c.resolve_capacity().unwrap();
+        assert_eq!(r.bucket_size, c.bucket_size);
+        assert_eq!(r.resolved_bucket_size().unwrap(), c.bucket_size);
+    }
+
+    #[test]
+    fn hbm_derived_resolution_replaces_bucket_and_is_idempotent() {
+        let mut c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+        c.memory.source = CapacitySource::HbmDerived;
+        let r = c.resolve_capacity().unwrap();
+        assert_ne!(r.bucket_size, c.bucket_size);
+        assert_eq!(r.bucket_size, c.mem_plan().derive_capacity().unwrap());
+        // idempotent: resolving again changes nothing
+        assert_eq!(r.resolve_capacity().unwrap().bucket_size, r.bucket_size);
+        // infeasible budget is a clean error
+        c.memory.hbm_gb = 0.5;
+        assert!(matches!(
+            c.resolve_capacity(),
+            Err(crate::scheduler::SchedError::NoCapacity { .. })
+        ));
+    }
+
+    #[test]
+    fn cluster_topology_maps_paper_testbed() {
+        let c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+        let t = c.cluster.topology().unwrap();
+        assert_eq!(t.total_gpus(), 32);
+        assert!(!t.cp_group_crosses_nodes(0));
+        let c7 = ExperimentConfig::paper_default(ModelSpec::qwen2_5_7b(), "chatqa2");
+        assert!(c7.cluster.topology().unwrap().cp_group_crosses_nodes(0));
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::util::error::{Context, Result};
 
 use crate::config::Policy;
 use crate::coordinator::metrics::TrainMetrics;
+use crate::memplan::{CapacitySource, MemPlan, MemoryConfig};
 use crate::coordinator::optimizer::{clip_global_norm, Adam, LrSchedule};
 use crate::coordinator::state::TrainState;
 use crate::data::packing::{pack, PackedBucket, TokenSeq};
@@ -39,6 +40,12 @@ pub struct TrainerOptions {
     pub lr_schedule: Option<LrSchedule>,
     /// global gradient-norm clip (None = off)
     pub clip_norm: Option<f32>,
+    /// where `bucket_capacity` comes from: hand-set (`Fixed`) or derived
+    /// from `hbm_gb` via memplan (then clamped to the largest compiled
+    /// artifact bucket, since HLO shapes are static)
+    pub capacity: CapacitySource,
+    /// HBM budget for `CapacitySource::HbmDerived`, in GiB
+    pub hbm_gb: f64,
 }
 
 impl Default for TrainerOptions {
@@ -52,6 +59,8 @@ impl Default for TrainerOptions {
             batch_size: 16,
             lr_schedule: None,
             clip_norm: None,
+            capacity: CapacitySource::Fixed,
+            hbm_gb: 80.0,
         }
     }
 }
@@ -93,6 +102,11 @@ impl Trainer {
             .manifest
             .largest_bucket()
             .context("no buckets in manifest")?;
+        let mut opts = opts;
+        if opts.capacity == CapacitySource::HbmDerived {
+            opts.bucket_capacity =
+                derived_bucket_capacity(&ModelSpec::tiny(), opts.workers, opts.hbm_gb, largest)?;
+        }
         crate::ensure!(
             opts.bucket_capacity <= largest,
             "bucket_capacity {} exceeds largest artifact bucket {largest}",
@@ -245,6 +259,28 @@ impl Trainer {
     }
 }
 
+/// Derive the trainer's bucket capacity from an HBM budget (memplan with
+/// dp=1 and the emulated workers as the CP footprint), clamped to the
+/// largest compiled artifact bucket — HLO shapes are static, so memory
+/// headroom beyond the biggest artifact cannot be used.
+pub fn derived_bucket_capacity(
+    spec: &ModelSpec,
+    workers: usize,
+    hbm_gb: f64,
+    largest_bucket: u32,
+) -> Result<u32> {
+    let mem = MemoryConfig {
+        source: CapacitySource::HbmDerived,
+        hbm_gb,
+        ..Default::default()
+    };
+    let plan = MemPlan::new(spec, 1, workers.max(1), &mem);
+    let c = plan.derive_capacity().with_context(|| {
+        format!("HBM budget of {hbm_gb} GiB cannot hold the {} static state", spec.name)
+    })?;
+    Ok(c.min(largest_bucket))
+}
+
 /// Smallest compiled bucket that holds `tokens` (HLO shapes are static).
 /// A sequence no artifact can hold is a clean, reportable configuration
 /// error — not a reason to panic mid-run.
@@ -358,6 +394,20 @@ params params.bin
         assert_eq!(buckets[0].seq_ids, vec![0, 1]);
         assert_eq!(buckets[1].capacity, 16);
         assert_eq!(buckets[1].seq_ids, vec![2]);
+    }
+
+    #[test]
+    fn derived_bucket_capacity_clamps_to_artifacts() {
+        let spec = crate::model::ModelSpec::tiny();
+        // a generous budget derives far more than any compiled bucket →
+        // clamped to the artifact ceiling
+        assert_eq!(derived_bucket_capacity(&spec, 4, 1.0, 1024).unwrap(), 1024);
+        // a tight budget derives a real (smaller) capacity: tiny statics
+        // are ~19 MB, so 32 MB leaves room for a few hundred tokens
+        let c = derived_bucket_capacity(&spec, 4, 0.03125, 1024).unwrap();
+        assert!(c >= 1 && c < 1024, "derived {c}");
+        // and a budget below the static state is a clean error
+        assert!(derived_bucket_capacity(&spec, 4, 0.01, 1024).is_err());
     }
 
     #[test]

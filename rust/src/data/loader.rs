@@ -13,6 +13,9 @@ use crate::perfmodel::{CostModel, FlopsModel};
 use crate::rng::Rng;
 use crate::scheduler::{baseline, gds, IterationSchedule, SchedError};
 
+/// One produced iteration: the global batch plus its schedule.
+type LoaderItem = (Vec<Sequence>, IterationSchedule);
+
 pub struct ScheduledLoader<'a> {
     dataset: &'a Dataset,
     cfg: ExperimentConfig,
@@ -22,6 +25,11 @@ pub struct ScheduledLoader<'a> {
     /// scheduler scratch arena, reused every iteration (the fast path's
     /// buffers survive across `next_iteration` calls)
     ctx: gds::SchedCtx,
+    /// resolved token capacity C: the hand-set bucket under
+    /// `CapacitySource::Fixed`, the memplan-derived one under
+    /// `HbmDerived`.  An infeasible HBM budget is held here and surfaced
+    /// by the first scheduling call.
+    capacity: Result<u32, SchedError>,
     /// cumulative seconds spent inside *successful* scheduling calls
     pub sched_seconds: f64,
     /// iterations that yielded a schedule (failed calls are not served)
@@ -35,6 +43,7 @@ impl<'a> ScheduledLoader<'a> {
         let flops = FlopsModel::new(&cfg.model);
         let cost = CostModel::paper_default(&cfg.model);
         let rng = Rng::seed_from_u64(cfg.seed);
+        let capacity = cfg.resolved_bucket_size();
         ScheduledLoader {
             dataset,
             cfg,
@@ -42,31 +51,39 @@ impl<'a> ScheduledLoader<'a> {
             cost,
             rng,
             ctx: gds::SchedCtx::default(),
+            capacity,
             sched_seconds: 0.0,
             iterations_served: 0,
             last_sched_seconds: 0.0,
         }
     }
 
+    /// The token capacity C this loader schedules against (see `memplan`).
+    pub fn capacity(&self) -> &Result<u32, SchedError> {
+        &self.capacity
+    }
+
     /// Schedule an explicit global batch under the configured policy.
     pub fn schedule_batch(&mut self, batch: &[Sequence]) -> Result<IterationSchedule, SchedError> {
+        let bucket = match &self.capacity {
+            Ok(c) => *c,
+            Err(e) => return Err(e.clone()),
+        };
         let t0 = Instant::now();
         let c = &self.cfg.cluster;
         let out = match self.cfg.policy {
             Policy::Baseline => Ok(baseline::deepspeed(batch, c.dp, c.cp)),
-            Policy::DacpOnly => {
-                baseline::dacp_only(batch, c.dp, c.cp, self.cfg.bucket_size, &self.flops)
-            }
+            Policy::DacpOnly => baseline::dacp_only(batch, c.dp, c.cp, bucket, &self.flops),
             Policy::Skrull => {
-                let gcfg = gds::GdsConfig::new(self.cfg.bucket_size, c.cp, c.dp);
+                let gcfg = gds::GdsConfig::new(bucket, c.cp, c.dp);
                 gds::schedule_with_ctx(batch, &gcfg, &self.flops, &mut self.ctx)
             }
             Policy::SkrullRefined => {
-                let gcfg = gds::GdsConfig::new(self.cfg.bucket_size, c.cp, c.dp);
+                let gcfg = gds::GdsConfig::new(bucket, c.cp, c.dp);
                 gds::schedule_refined_with_ctx(batch, &gcfg, &self.cost, &mut self.ctx)
             }
             Policy::SortedBatching => {
-                Ok(baseline::sorted_batching(batch, c.dp, c.cp, self.cfg.bucket_size))
+                Ok(baseline::sorted_batching(batch, c.dp, c.cp, bucket))
             }
         };
         self.last_sched_seconds = t0.elapsed().as_secs_f64();
@@ -125,6 +142,23 @@ impl<'a> ScheduledLoader<'a> {
         Ok(())
     }
 
+    /// Synchronous driver over an explicit batch list (epoch-mode runs:
+    /// the caller owns the batches, typically `Dataset::epoch_batches`).
+    pub fn run_synchronous_batches<F>(
+        &mut self,
+        batches: &[Vec<Sequence>],
+        mut consume: F,
+    ) -> Result<(), SchedError>
+    where
+        F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
+    {
+        for (i, batch) in batches.iter().enumerate() {
+            let sched = self.schedule_batch(batch)?;
+            consume(i, batch, &sched, self.last_sched_seconds);
+        }
+        Ok(())
+    }
+
     /// Double-buffered pipelined driver (Section 4.3: scheduling lives in
     /// the DataLoader and hides behind execution).  While `consume`
     /// processes batch *i* on the calling thread, batch *i+1* is being
@@ -135,12 +169,51 @@ impl<'a> ScheduledLoader<'a> {
     /// synchronous path (same RNG draw order, same scratch arena reuse).
     ///
     /// Returns the loader so cumulative stats remain inspectable.
-    pub fn run_pipelined<F>(
+    pub fn run_pipelined<F>(self, iterations: usize, consume: F) -> Result<Self, SchedError>
+    where
+        F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
+    {
+        self.run_pipelined_with(iterations, |l, _| l.next_iteration(), consume)
+    }
+
+    /// Pipelined driver over an explicit batch list — identical overlap
+    /// semantics to [`run_pipelined`], with the caller's batches
+    /// (epoch-mode runs) instead of fresh samples.
+    ///
+    /// [`run_pipelined`]: ScheduledLoader::run_pipelined
+    pub fn run_pipelined_batches<F>(
+        self,
+        batches: &[Vec<Sequence>],
+        consume: F,
+    ) -> Result<Self, SchedError>
+    where
+        F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
+    {
+        self.run_pipelined_with(
+            batches.len(),
+            |l, i| {
+                let batch = batches[i].clone();
+                let sched = l.schedule_batch(&batch)?;
+                Ok((batch, sched))
+            },
+            consume,
+        )
+    }
+
+    /// The double-buffered engine behind both pipelined drivers: while
+    /// `consume` processes batch *i* on the calling thread, `next`
+    /// produces batch *i+1* on a scoped background thread.  The loader
+    /// (and the producer closure) are threaded through the prefetch
+    /// thread by ownership, so schedules are byte-identical to the
+    /// synchronous path (same RNG draw order, same scratch arena reuse).
+    fn run_pipelined_with<N, F>(
         mut self,
         iterations: usize,
+        mut next: N,
         mut consume: F,
     ) -> Result<Self, SchedError>
     where
+        N: FnMut(&mut ScheduledLoader<'a>, usize) -> Result<LoaderItem, SchedError> + Send,
         F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
     {
         if iterations == 0 {
@@ -149,12 +222,12 @@ impl<'a> ScheduledLoader<'a> {
         std::thread::scope(|scope| {
             // prefetch iteration 0 (pipeline fill: this one is exposed)
             let mut pending = Some(scope.spawn(move || {
-                let r = self.next_iteration();
-                (self, r)
+                let r = next(&mut self, 0);
+                (self, next, r)
             }));
             let mut done = None;
             for i in 0..iterations {
-                let (mut loader, r) = pending
+                let (mut loader, mut next, r) = pending
                     .take()
                     .expect("prefetch handle present")
                     .join()
@@ -165,8 +238,8 @@ impl<'a> ScheduledLoader<'a> {
                     // launch the next prefetch *before* consuming — this is
                     // the overlap window
                     pending = Some(scope.spawn(move || {
-                        let r = loader.next_iteration();
-                        (loader, r)
+                        let r = next(&mut loader, i + 1);
+                        (loader, next, r)
                     }));
                 } else {
                     done = Some(loader);
@@ -280,6 +353,72 @@ mod tests {
             panic!("no iteration should be consumable");
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn batch_list_drivers_match_each_other_and_the_sampled_path() {
+        // epoch-mode plumbing: feeding the *same* batches through the
+        // synchronous and pipelined batch-list drivers must yield
+        // byte-identical schedules.
+        let (ds, cfg) = setup(Policy::Skrull);
+        let batches = ds.epoch_batches(16, 9);
+        let n = batches.len().min(5);
+        let batches = &batches[..n];
+
+        let mut sync_out: Vec<IterationSchedule> = Vec::new();
+        let mut sync_loader = ScheduledLoader::new(&ds, cfg.clone());
+        sync_loader
+            .run_synchronous_batches(batches, |i, batch, sched, _| {
+                assert_eq!(batch, &batches[i][..]);
+                sync_out.push(sched.clone());
+            })
+            .unwrap();
+
+        let mut pipe_out: Vec<IterationSchedule> = Vec::new();
+        let pipe_loader = ScheduledLoader::new(&ds, cfg)
+            .run_pipelined_batches(batches, |i, batch, sched, sched_s| {
+                assert!(sched_s >= 0.0);
+                assert_eq!(batch, &batches[i][..]);
+                pipe_out.push(sched.clone());
+            })
+            .unwrap();
+
+        assert_eq!(sync_out, pipe_out);
+        assert_eq!(sync_loader.iterations_served, n);
+        assert_eq!(pipe_loader.iterations_served, n);
+    }
+
+    #[test]
+    fn hbm_derived_capacity_drives_the_scheduler() {
+        use crate::memplan::CapacitySource;
+        let (ds, mut cfg) = setup(Policy::Skrull);
+        cfg.memory.source = CapacitySource::HbmDerived;
+        let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+        let derived = *loader.capacity().as_ref().unwrap();
+        // 80 GB admits far more than the hand-set 26K bucket on the 0.5B
+        assert!(derived > cfg.bucket_size, "derived {derived}");
+        assert_eq!(derived, cfg.mem_plan().derive_capacity().unwrap());
+        let (_, sched) = loader.next_iteration().unwrap();
+        for rank in &sched.ranks {
+            for mb in &rank.micro_batches {
+                mb.plan.validate(&mb.lens(), derived, cfg.cluster.cp).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_hbm_budget_surfaces_as_scheduling_error() {
+        use crate::memplan::CapacitySource;
+        let (ds, mut cfg) = setup(Policy::Skrull);
+        cfg.memory.source = CapacitySource::HbmDerived;
+        cfg.memory.hbm_gb = 0.5; // cannot hold the 0.5B static state
+        let mut loader = ScheduledLoader::new(&ds, cfg);
+        assert!(loader.capacity().is_err());
+        assert!(matches!(
+            loader.next_iteration(),
+            Err(SchedError::NoCapacity { .. })
+        ));
+        assert_eq!(loader.iterations_served, 0);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod logging;
+pub mod memplan;
 pub mod model;
 pub mod perfmodel;
 pub mod rng;

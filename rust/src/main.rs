@@ -32,6 +32,19 @@ use skrull::rng::Rng;
 use skrull::util::stats::fraction_below;
 use skrull::util::{fmt_secs, fmt_tokens};
 
+fn memory_from_args(args: &Args, mem: &mut skrull::memplan::MemoryConfig) -> Result<()> {
+    if let Some(c) = args.get("capacity") {
+        mem.source = skrull::memplan::CapacitySource::by_name(c)
+            .context("unknown --capacity (fixed | hbm-derived)")?;
+    }
+    mem.hbm_gb = args.parse_or("hbm-gb", mem.hbm_gb)?;
+    if let Some(r) = args.get("recompute") {
+        mem.recompute = skrull::memplan::RecomputePolicy::by_name(r)
+            .context("unknown --recompute (full | selective | none)")?;
+    }
+    Ok(())
+}
+
 fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = if let Some(path) = args.get("config") {
         ExperimentConfig::load(path)?
@@ -49,9 +62,19 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("sync") {
         cfg.pipelined = false;
     }
+    if args.flag("epoch") {
+        cfg.epoch = true;
+    }
     if let Some(p) = args.get("policy") {
         cfg.policy = Policy::by_name(p).context("unknown --policy")?;
     }
+    memory_from_args(args, &mut cfg.memory)?;
+    // resolve the capacity authority once, up front: with --capacity
+    // hbm-derived every downstream consumer (dataset truncation, loader,
+    // run engine) sees the memplan-derived C
+    let cfg = cfg
+        .resolve_capacity()
+        .context("deriving bucket capacity from the HBM budget")?;
     Ok(cfg)
 }
 
@@ -104,19 +127,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let ds = dataset_for(&cfg, 100_000)?;
     let cost = CostModel::paper_default(&cfg.model);
-    let run = RunConfig::new(cfg.iterations, cfg.pipelined);
+    let run = if cfg.epoch {
+        RunConfig::epoch(cfg.pipelined)
+    } else {
+        RunConfig::new(cfg.iterations, cfg.pipelined)
+    };
 
     let policies = [Policy::Baseline, Policy::DacpOnly, Policy::Skrull];
     let mut base_wall = None;
     println!(
-        "model={} dataset={} <DP={},CP={},B={}> C={} iters={} loader={}",
+        "model={} dataset={} <DP={},CP={},B={}> C={} ({}) {} loader={}",
         cfg.model.name,
         ds.name,
         cfg.cluster.dp,
         cfg.cluster.cp,
         cfg.cluster.batch_size,
         fmt_tokens(cfg.bucket_size as u64),
-        cfg.iterations,
+        cfg.memory.source.name(),
+        if cfg.epoch { "one epoch".to_string() } else { format!("iters={}", cfg.iterations) },
         run.mode.name(),
     );
     for policy in policies {
@@ -124,13 +152,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         pcfg.policy = policy;
         let report = simulate_run(&ds, &pcfg, &cost, &run)?;
         let wall = report.wall_seconds();
+        let iters = report.iterations.len().max(1);
         let base = *base_wall.get_or_insert(wall);
         println!(
-            "  {:<10} mean iter {}  speedup {:.2}x  utilization {:.1}%  exposed sched {}",
+            "  {:<10} mean iter {}  speedup {:.2}x  utilization {:.1}%  peak mem {:.1}%  exposed sched {}",
             policy.name(),
-            fmt_secs(wall / cfg.iterations.max(1) as f64),
+            fmt_secs(wall / iters as f64),
             base / wall,
             100.0 * report.utilization(),
+            100.0 * report.peak_mem_fraction(),
             fmt_secs(report.exposed_sched_seconds),
         );
     }
@@ -176,7 +206,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     }
     opts.iterations = args.parse_or("iterations", opts.iterations)?;
     opts.dataset_samples = args.parse_or("samples", opts.dataset_samples)?;
-    opts.seed = args.parse_or("seed", opts.seed)?;
+    if args.get("seeds").is_some() {
+        opts.seeds = args.list_or("seeds", &[])?;
+        skrull::ensure!(!opts.seeds.is_empty(), "--seeds needs at least one seed");
+    } else if let Some(s) = args.get("seed") {
+        opts.seeds = vec![s.parse().map_err(|_| skrull::anyhow!("bad --seed {s:?}"))?];
+    }
     if let Some(b) = args.get("batch-size") {
         opts.batch_size =
             Some(b.parse().map_err(|_| skrull::anyhow!("bad --batch-size {b:?}"))?);
@@ -184,14 +219,25 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     if args.flag("sync") {
         opts.pipelined = false;
     }
+    if args.flag("epoch") {
+        opts.epoch = true;
+    }
+    memory_from_args(args, &mut opts.memory)?;
 
+    let iters_desc = if opts.epoch {
+        "one epoch".to_string()
+    } else {
+        format!("{} iterations", opts.iterations)
+    };
     println!(
-        "e2e sweep: {} policies × {} datasets × {} topologies, {} iterations, {} loader",
+        "e2e sweep: {} policies × {} datasets × {} topologies × {} seeds, {}, {} loader, capacity {}",
         e2e::ALL_POLICIES.len(),
         opts.datasets.len(),
         opts.topologies.len(),
-        opts.iterations,
+        opts.seeds.len(),
+        iters_desc,
         if opts.pipelined { "pipelined" } else { "synchronous" },
+        opts.memory.source.name(),
     );
     let sweep = e2e::run_sweep(&opts)?;
 
@@ -201,9 +247,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         "policy",
         "total",
         "speedup",
+        "±std",
         "util",
         "sched exposed",
         "padding",
+        "peak mem",
+        "oom",
     ]);
     for c in &sweep.cells {
         table.row(&[
@@ -212,9 +261,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             c.policy.name().to_string(),
             fmt_secs(c.report.wall_seconds()),
             format!("{:.2}x", c.speedup_vs_baseline),
+            format!("{:.3}", c.speedup_std),
             format!("{:.1}%", 100.0 * c.report.utilization()),
             format!("{:.4}%", 100.0 * c.report.sched_overhead_fraction()),
             format!("{:.1}%", 100.0 * c.report.padding_fraction()),
+            format!("{:.1}%", 100.0 * c.report.peak_mem_fraction()),
+            c.report.oom_count().to_string(),
         ]);
     }
     table.print();
@@ -231,6 +283,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let steps: usize = args.parse_or("steps", 100)?;
     let policy = Policy::by_name(args.str_or("policy", "skrull")).context("unknown --policy")?;
+    // same --capacity / --hbm-gb surface as the simulation commands
+    let mut mem = skrull::memplan::MemoryConfig::default();
+    memory_from_args(args, &mut mem)?;
     let opts = TrainerOptions {
         workers: args.parse_or("workers", 4)?,
         bucket_capacity: args.parse_or("bucket-size", 1024u32)?,
@@ -238,6 +293,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.parse_or("lr", 3e-3f32)?,
         seed: args.parse_or("seed", 42u64)?,
         batch_size: args.parse_or("batch-size", 16usize)?,
+        capacity: mem.source,
+        hbm_gb: mem.hbm_gb,
         ..Default::default()
     };
     let corpus_cfg = CorpusConfig::tiny(512);
@@ -329,13 +386,14 @@ fn cmd_profile(args: &Args) -> Result<()> {
 const USAGE: &str = "usage: skrull <schedule|simulate|e2e|train|analyze|profile> [--options]
   common: --config FILE | --model M --dataset D --dp N --cp N --batch-size K
           --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
+  memory: --capacity (fixed|hbm-derived) --hbm-gb F --recompute (full|selective|none)
   e2e:    --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
-          --out FILE --smoke | --validate FILE
+          --seeds a,b,c --epoch --out FILE --smoke | --validate FILE
   train:  --artifacts DIR --steps N --workers W --lr F --corpus-size K";
 
 fn main() -> Result<()> {
     skrull::logging::init();
-    let args = Args::from_env(&["verbose", "sync", "smoke"])?;
+    let args = Args::from_env(&["verbose", "sync", "smoke", "epoch"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());

@@ -1,0 +1,159 @@
+//! The activation curve: bytes a rank must hold per token of its packed
+//! bucket, as a function of the recomputation policy, plus the K/V
+//! exchange buffers context parallelism adds on top.
+//!
+//! With FlashAttention + sequence packing everything activation-side is
+//! linear in tokens (Eq. 12), so the whole curve collapses to a
+//! bytes-per-token slope — but that slope moves by ~an order of magnitude
+//! between "keep everything" and "recompute everything", which is exactly
+//! the lever HBM-derived capacities (capacity.rs) trade against.
+
+use crate::model::ModelSpec;
+use crate::perfmodel::memory;
+
+/// What the backward pass recomputes (and therefore what the forward pass
+/// must keep resident).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecomputePolicy {
+    /// Full activation recomputation: only the per-layer inputs (residual
+    /// stream) survive the forward pass.
+    Full,
+    /// Selective recomputation (the default the paper profiles against):
+    /// attention is recomputed, linear-layer activations are kept.
+    Selective,
+    /// No recomputation: every intermediate the backward pass touches is
+    /// kept resident.
+    None,
+}
+
+impl RecomputePolicy {
+    pub fn by_name(s: &str) -> Option<RecomputePolicy> {
+        match s {
+            "full" | "full-recompute" => Some(RecomputePolicy::Full),
+            "selective" => Some(RecomputePolicy::Selective),
+            "none" | "no-recompute" => Some(RecomputePolicy::None),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecomputePolicy::Full => "full",
+            RecomputePolicy::Selective => "selective",
+            RecomputePolicy::None => "none",
+        }
+    }
+
+    /// Kept activation *elements* per token per layer.  `Selective` is
+    /// pinned to the same expression `perfmodel::memory` fits Eq. 12 with,
+    /// so estimator and authority agree on the default policy.
+    pub fn kept_elems_per_token_layer(&self, spec: &ModelSpec) -> f64 {
+        let h = spec.hidden as f64;
+        let ffn = spec.ffn as f64;
+        let selective = memory::selective_kept_elems_per_token_layer(spec);
+        match self {
+            // only the two residual-stream snapshots per layer
+            RecomputePolicy::Full => 2.0 * h,
+            RecomputePolicy::Selective => selective,
+            // + attention output and the activated SwiGLU product that
+            // selective recomputation discards
+            RecomputePolicy::None => selective + 2.0 * h + ffn,
+        }
+    }
+}
+
+/// The per-rank activation-memory model for one (model, policy, cp) tuple.
+#[derive(Clone, Debug)]
+pub struct ActivationModel {
+    /// Kept activation bytes per bucket token (α of Eq. 12, bf16, all
+    /// layers).
+    pub bytes_per_token: f64,
+    /// CP K/V exchange buffers per bucket token: ring attention
+    /// double-buffers both K and V chunks of the in-flight neighbour
+    /// (reused across layers, so no `layers` factor).  Zero when cp = 1 —
+    /// no collective, no buffer.
+    pub ring_bytes_per_token: f64,
+}
+
+impl ActivationModel {
+    pub fn new(spec: &ModelSpec, recompute: RecomputePolicy, cp: usize) -> Self {
+        const BF16: f64 = 2.0;
+        let elems = recompute.kept_elems_per_token_layer(spec);
+        let ring = if cp > 1 {
+            // 2 buffers (double-buffered pipeline) × 2 tensors (K, V)
+            2.0 * 2.0 * spec.kv_hidden() as f64 * BF16
+        } else {
+            0.0
+        };
+        ActivationModel {
+            bytes_per_token: BF16 * elems * spec.layers as f64,
+            ring_bytes_per_token: ring,
+        }
+    }
+
+    /// Total activation-side bytes per bucket token.
+    pub fn total_bytes_per_token(&self) -> f64 {
+        self.bytes_per_token + self.ring_bytes_per_token
+    }
+
+    /// Activation bytes for a packed bucket of `tokens` tokens.
+    pub fn bucket_bytes(&self, tokens: u64) -> f64 {
+        self.total_bytes_per_token() * tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::MemoryModel;
+
+    #[test]
+    fn policies_order_strictly() {
+        // keep-everything > selective > full-recompute, for every model
+        for spec in [ModelSpec::qwen2_5_0_5b(), ModelSpec::qwen2_5_7b(), ModelSpec::tiny()] {
+            let full = ActivationModel::new(&spec, RecomputePolicy::Full, 8);
+            let sel = ActivationModel::new(&spec, RecomputePolicy::Selective, 8);
+            let none = ActivationModel::new(&spec, RecomputePolicy::None, 8);
+            assert!(full.bytes_per_token < sel.bytes_per_token, "{}", spec.name);
+            assert!(sel.bytes_per_token < none.bytes_per_token, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn selective_matches_perfmodel_estimator() {
+        // The authority's default slope is the estimator's α (Eq. 12):
+        // memplan and perfmodel::memory must not drift apart.
+        let spec = ModelSpec::qwen2_5_0_5b();
+        let act = ActivationModel::new(&spec, RecomputePolicy::Selective, 1);
+        let est = MemoryModel::for_model(&spec, 4, 80.0 * 1024.0 * 1024.0 * 1024.0);
+        assert!((act.bytes_per_token - est.alpha_bytes_per_token).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ring_buffers_only_with_cp() {
+        let spec = ModelSpec::qwen2_5_0_5b();
+        let solo = ActivationModel::new(&spec, RecomputePolicy::Selective, 1);
+        let cp8 = ActivationModel::new(&spec, RecomputePolicy::Selective, 8);
+        assert_eq!(solo.ring_bytes_per_token, 0.0);
+        // 2 buffers × 2 tensors × h_kv(128) × 2 bytes = 1024 B/token
+        assert_eq!(cp8.ring_bytes_per_token, 1024.0);
+        assert_eq!(solo.bytes_per_token, cp8.bytes_per_token);
+    }
+
+    #[test]
+    fn bucket_bytes_linear_in_tokens() {
+        let spec = ModelSpec::tiny();
+        let m = ActivationModel::new(&spec, RecomputePolicy::Selective, 4);
+        let b1 = m.bucket_bytes(1000);
+        assert!((m.bucket_bytes(2000) - 2.0 * b1).abs() < 1e-6);
+        assert_eq!(m.bucket_bytes(0), 0.0);
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [RecomputePolicy::Full, RecomputePolicy::Selective, RecomputePolicy::None] {
+            assert_eq!(RecomputePolicy::by_name(p.name()), Some(p));
+        }
+        assert!(RecomputePolicy::by_name("sometimes").is_none());
+    }
+}

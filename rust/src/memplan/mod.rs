@@ -1,0 +1,35 @@
+//! Memory planning — the capacity authority.
+//!
+//! Skrull's joint optimization is memory-constrained at its core: DACP
+//! chunks long sequences across CP ranks precisely because *activation
+//! memory*, not FLOPs, caps what a rank can hold (Eq. 7/10/12).  The seed
+//! reproduction took the per-rank token capacity C ("BucketSize") as a
+//! hand-set number; this subsystem models where C actually comes from and
+//! what happens when a schedule exceeds it:
+//!
+//! * [`activation`] — the activation curve: kept bytes per token under a
+//!   recomputation policy, plus the CP K/V-exchange buffers that ride on
+//!   top when a sequence is sharded.
+//! * [`capacity`] — [`MemPlan`]: ZeRO-2/PEFT static bytes + the activation
+//!   curve against an HBM budget, inverted to derive C
+//!   ([`MemPlan::derive_capacity`]).  [`CapacitySource`] selects between
+//!   the hand-set C (`Fixed`, reproducing the pre-memplan schedules
+//!   byte-identically) and the derived one (`HbmDerived`).
+//! * [`peak`] — per-iteration peak-memory simulation over an
+//!   [`IterationSchedule`]: per-GPU peak bytes per micro-batch, headroom,
+//!   and structured would-be-OOM events the run engine and the e2e sweep
+//!   surface as `peak_mem_fraction` / `oom_count`.
+//!
+//! The thin Eq.-12 fit in `perfmodel::memory` remains the *estimator*
+//! (offline profiling); `memplan` is the *authority* the scheduler,
+//! loader, run engine and trainer consume.
+//!
+//! [`IterationSchedule`]: crate::scheduler::IterationSchedule
+
+pub mod activation;
+pub mod capacity;
+pub mod peak;
+
+pub use activation::{ActivationModel, RecomputePolicy};
+pub use capacity::{CapacitySource, MemPlan, MemoryConfig};
+pub use peak::{iteration_memory, IterationMemory, OomEvent};

@@ -1,0 +1,190 @@
+//! Per-iteration peak-memory simulation.
+//!
+//! Plays an [`IterationSchedule`] against a [`MemPlan`] with the same
+//! static-bucket execution semantics the run engine charges for padding:
+//! every CP rank of a micro-batch executes a C-token buffer (or larger,
+//! when a baseline policy overfills it), so its peak is
+//! `Peak(max(C, local + Σ ceil(dist/cp)))`.  The result is per-GPU peak
+//! bytes plus a structured would-be-OOM event for every (micro-batch, GPU)
+//! whose modeled peak exceeds physical HBM — the signal `bench::e2e`
+//! tracks as `peak_mem_fraction` / `oom_count` and the chrome trace draws
+//! as a memory lane.
+
+use crate::memplan::capacity::MemPlan;
+use crate::scheduler::plan::IterationSchedule;
+
+/// One modeled out-of-memory event: a (micro-batch, GPU) pair whose peak
+/// exceeds physical HBM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OomEvent {
+    pub iteration: usize,
+    pub dp_rank: usize,
+    pub cp_rank: usize,
+    /// index of the micro-batch within its DP rank's list
+    pub micro_batch: usize,
+    pub peak_bytes: f64,
+    pub hbm_bytes: f64,
+}
+
+impl std::fmt::Display for OomEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM: iter {} dp{}/cp{} mb{} needs {:.2} GiB of {:.2} GiB HBM",
+            self.iteration,
+            self.dp_rank,
+            self.cp_rank,
+            self.micro_batch,
+            self.peak_bytes / (1u64 << 30) as f64,
+            self.hbm_bytes / (1u64 << 30) as f64,
+        )
+    }
+}
+
+/// Memory profile of one simulated iteration.
+#[derive(Clone, Debug)]
+pub struct IterationMemory {
+    /// Peak bytes per GPU, indexed `dp_rank * cp + cp_rank`.  GPUs that
+    /// executed nothing still hold the static state.
+    pub rank_peak_bytes: Vec<f64>,
+    /// Every (micro-batch, GPU) whose modeled peak exceeds HBM.
+    pub events: Vec<OomEvent>,
+}
+
+impl IterationMemory {
+    /// Iteration-wide peak over all GPUs.
+    pub fn peak_bytes(&self) -> f64 {
+        self.rank_peak_bytes.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Simulate the peak memory of one iteration under static per-rank buckets
+/// of `bucket_size` tokens.  `iteration` only labels the emitted events.
+pub fn iteration_memory(
+    sched: &IterationSchedule,
+    plan: &MemPlan,
+    bucket_size: u32,
+    cp: usize,
+    iteration: usize,
+) -> IterationMemory {
+    let cp = cp.max(1);
+    let dp = sched.ranks.len();
+    // params + optimizer shards are resident on every GPU at all times
+    let mut rank_peak_bytes = vec![plan.static_bytes; dp * cp];
+    let mut events = Vec::new();
+    for (d, rank) in sched.ranks.iter().enumerate() {
+        for (m, mb) in rank.micro_batches.iter().enumerate() {
+            // the rank executes its C-token bucket; an overfilling baseline
+            // runs what it scheduled (MicroBatch::rank_used_tokens is the
+            // one fill rule, shared with the run engine's padding)
+            for (j, used) in mb.rank_used_tokens(cp).into_iter().enumerate() {
+                let bucket_tokens = (bucket_size as u64).max(used);
+                let peak = plan.peak_bytes(bucket_tokens);
+                let slot = &mut rank_peak_bytes[d * cp + j];
+                if peak > *slot {
+                    *slot = peak;
+                }
+                if peak > plan.hbm_bytes {
+                    events.push(OomEvent {
+                        iteration,
+                        dp_rank: d,
+                        cp_rank: j,
+                        micro_batch: m,
+                        peak_bytes: peak,
+                        hbm_bytes: plan.hbm_bytes,
+                    });
+                }
+            }
+        }
+    }
+    IterationMemory { rank_peak_bytes, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sequence;
+    use crate::memplan::capacity::MemoryConfig;
+    use crate::model::ModelSpec;
+    use crate::scheduler::plan::{DacpPlan, MicroBatch, RankSchedule, DISTRIBUTED};
+
+    fn sched(lens: &[u32], assign: Vec<i32>) -> IterationSchedule {
+        IterationSchedule {
+            ranks: vec![RankSchedule {
+                micro_batches: vec![MicroBatch {
+                    seqs: lens
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &len)| Sequence { id: i as u64, len })
+                        .collect(),
+                    plan: DacpPlan { assign },
+                }],
+            }],
+        }
+    }
+
+    fn plan(hbm_gb: f64) -> MemPlan {
+        let mem = MemoryConfig { hbm_gb, ..Default::default() };
+        MemPlan::new(&ModelSpec::qwen2_5_0_5b(), 1, 2, &mem)
+    }
+
+    #[test]
+    fn static_bucket_floors_the_peak() {
+        // a nearly-empty micro-batch still executes a full C-token bucket
+        let p = plan(80.0);
+        let s = sched(&[10], vec![0]);
+        let m = iteration_memory(&s, &p, 1000, 2, 0);
+        assert_eq!(m.rank_peak_bytes.len(), 2);
+        for &b in &m.rank_peak_bytes {
+            assert!((b - p.peak_bytes(1000)).abs() < 1e-6);
+        }
+        assert!(m.events.is_empty());
+    }
+
+    #[test]
+    fn overfilled_bucket_raises_the_peak() {
+        // baseline-style overfill: local 3000 > C=1000 on rank 0
+        let p = plan(80.0);
+        let m = iteration_memory(&sched(&[3000], vec![0]), &p, 1000, 2, 0);
+        assert!((m.rank_peak_bytes[0] - p.peak_bytes(3000)).abs() < 1e-6);
+        assert!((m.rank_peak_bytes[1] - p.peak_bytes(1000)).abs() < 1e-6);
+        assert!(m.peak_bytes() >= m.rank_peak_bytes[1]);
+    }
+
+    #[test]
+    fn distributed_sequences_charge_ceiling_shares() {
+        let p = plan(80.0);
+        // 101 tokens over cp=2 → 51 per rank, both ranks identical
+        let m = iteration_memory(&sched(&[101], vec![DISTRIBUTED]), &p, 10, 2, 0);
+        let expect = p.peak_bytes(51);
+        assert!((m.rank_peak_bytes[0] - expect).abs() < 1e-6);
+        assert!((m.rank_peak_bytes[1] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn oom_events_flag_budget_busts_with_coordinates() {
+        // 2 GiB HBM cannot hold a 26K-token bucket of the 0.5B model
+        let p = plan(2.0);
+        let m = iteration_memory(&sched(&[26_000], vec![0]), &p, 26 * 1024, 2, 7);
+        assert!(!m.events.is_empty());
+        let ev = &m.events[0];
+        assert_eq!(ev.iteration, 7);
+        assert_eq!(ev.dp_rank, 0);
+        assert_eq!(ev.micro_batch, 0);
+        assert!(ev.peak_bytes > ev.hbm_bytes);
+        assert!(ev.to_string().contains("OOM"));
+    }
+
+    #[test]
+    fn idle_gpus_hold_static_state_only() {
+        let p = plan(80.0);
+        let empty = IterationSchedule { ranks: vec![RankSchedule::default(); 3] };
+        let m = iteration_memory(&empty, &p, 26 * 1024, 2, 0);
+        assert_eq!(m.rank_peak_bytes.len(), 6);
+        for &b in &m.rank_peak_bytes {
+            assert_eq!(b, p.static_bytes);
+        }
+        assert!(m.events.is_empty());
+        assert_eq!(m.peak_bytes(), p.static_bytes);
+    }
+}

@@ -51,6 +51,10 @@ pub const TABLE3_REDUCE_SCATTER: &[(f64, f64)] = &[
 
 const MIB: f64 = 1024.0 * 1024.0;
 
+/// NVLink-to-InfiniBand bandwidth ratio for cross-node collectives
+/// (900 GB/s NVLink vs ≈100 GB/s effective IB).
+pub const INTER_NODE_BW_RATIO: f64 = 8.0;
+
 #[derive(Clone, Debug)]
 pub struct CommModel {
     /// Seconds per byte (α of Eq. 16).
@@ -84,6 +88,22 @@ impl CommModel {
     /// Default: fit to the paper's all_gather profile (ring-CP traffic).
     pub fn paper_default() -> Self {
         Self::fit(TABLE3_ALL_GATHER)
+    }
+
+    /// The paper's testbed network *between* nodes: InfiniBand instead of
+    /// NVLink.  Table 3 profiles intra-node collectives only, so this is a
+    /// modeled degradation of the fit: the bandwidth-bound slope scales by
+    /// the NVLink-to-IB bandwidth ratio (900 GB/s NVLink vs ≈100 GB/s
+    /// effective HDR IB per direction → 8×, [`INTER_NODE_BW_RATIO`]), and
+    /// the fixed overhead doubles for the extra NIC/switch hop.  Used for
+    /// CP groups that `Topology::cp_group_crosses_nodes` says span node
+    /// boundaries.
+    pub fn paper_inter_node() -> Self {
+        let intra = Self::paper_default();
+        CommModel {
+            alpha_s_per_byte: intra.alpha_s_per_byte * INTER_NODE_BW_RATIO,
+            fixed_s: intra.fixed_s * 2.0,
+        }
     }
 
     /// T_comm(V) of Eq. 16, V in bytes.  V=0 costs nothing (no collective
@@ -150,6 +170,18 @@ mod tests {
         let v1 = kv_comm_bytes(1000, 128, 24);
         assert_eq!(v1, 1000.0 * 128.0 * 2.0 * 2.0 * 24.0);
         assert_eq!(kv_comm_bytes(2000, 128, 24), 2.0 * v1);
+    }
+
+    #[test]
+    fn inter_node_is_strictly_slower() {
+        let intra = CommModel::paper_default();
+        let inter = CommModel::paper_inter_node();
+        assert!(inter.alpha_s_per_byte > intra.alpha_s_per_byte);
+        assert!(inter.fixed_s > intra.fixed_s);
+        assert!(inter.bandwidth_gbps() < intra.bandwidth_gbps());
+        for v in [1024.0, MIB, 256.0 * MIB] {
+            assert!(inter.latency(v) > intra.latency(v), "volume {v}");
+        }
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub struct CostModel {
     pub flops: FlopsModel,
     pub hw: Hardware,
     pub comm: CommModel,
+    /// The network between nodes (IB, not NVLink) — charged for the K/V
+    /// exchange when `cross_node_cp` is set, i.e. when
+    /// `Topology::cp_group_crosses_nodes` holds for the rank's CP group.
+    pub inter_comm: CommModel,
+    /// This model prices a CP group that spans node boundaries.
+    pub cross_node_cp: bool,
     pub kv_hidden: u64,
     pub layers: u64,
     pub num_params: u64,
@@ -64,8 +70,21 @@ impl CostModel {
             num_params: spec.num_params(),
             hw,
             comm,
+            inter_comm: CommModel::paper_inter_node(),
+            cross_node_cp: false,
             pattern: CommPattern::Ulysses,
         }
+    }
+
+    /// A copy of this model pricing a CP group that spans node boundaries:
+    /// the per-layer K/V exchange runs at inter-node (IB) instead of
+    /// intra-node (NVLink) speed.  Scheduling-side estimators keep the
+    /// intra-node fit; the simulator charges the actual topology
+    /// (`cluster::sim::simulate_iteration_on`).
+    pub fn with_cross_node_cp(&self) -> Self {
+        let mut c = self.clone();
+        c.cross_node_cp = true;
+        c
     }
 
     pub fn paper_default(spec: &ModelSpec) -> Self {
@@ -118,18 +137,19 @@ impl CostModel {
         const BYTES: f64 = 2.0; // bf16
         const KV_TENSORS: f64 = 2.0;
         let v_layer = total_dist_tokens as f64 * self.kv_hidden as f64 * BYTES * KV_TENSORS;
+        let comm = if self.cross_node_cp { &self.inter_comm } else { &self.comm };
         let per_layer = match self.pattern {
             // two all-to-alls per attention layer (scatter before, gather
             // after); the volume splits between them but each pays the
             // fixed launch overhead
-            CommPattern::Ulysses => 2.0 * self.comm.latency(v_layer / 2.0),
+            CommPattern::Ulysses => 2.0 * comm.latency(v_layer / 2.0),
             // N-1 pipelined ring steps, each moving one 1/N chunk; only
             // the non-overlappable critical path is charged here — ring
             // overlap *within* attention is part of the kernel, so the
             // exposed cost is the chunk chain
             CommPattern::Ring { cp } => {
                 let n = cp.max(2) as f64;
-                (n - 1.0) * self.comm.latency(v_layer / n)
+                (n - 1.0) * comm.latency(v_layer / n)
             }
         };
         self.layers as f64 * per_layer
@@ -291,6 +311,28 @@ mod tests {
         }
         // ring pays more fixed overheads (N-1 vs 2 launches per layer)
         assert!(ring.t_comm_dist(512) > ulysses.t_comm_dist(512));
+    }
+
+    #[test]
+    fn cross_node_cp_comm_is_strictly_slower() {
+        // ROADMAP item: a CP group spanning node boundaries pays IB, not
+        // NVLink — for both patterns, and in particular ring attention.
+        let ulysses = cm();
+        let mut ring = cm();
+        ring.pattern = CommPattern::Ring { cp: 16 };
+        for m in [&ulysses, &ring] {
+            let x = m.with_cross_node_cp();
+            assert!(x.cross_node_cp && !m.cross_node_cp);
+            for tokens in [512u64, 10_000, 1_000_000] {
+                assert!(
+                    x.t_comm_dist(tokens) > m.t_comm_dist(tokens),
+                    "{:?} tokens {tokens}",
+                    m.pattern
+                );
+            }
+            // computation is untouched: only the exchange slows down
+            assert_eq!(x.t_comp_local(4096), m.t_comp_local(4096));
+        }
     }
 
     #[test]

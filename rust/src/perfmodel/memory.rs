@@ -7,8 +7,24 @@
 //! ("BucketSize"), the memory constraint of Eq. 7/10.  α depends on the
 //! model + recomputation strategy and comes from offline profiling
 //! (perfmodel/profile.rs); β is "usually negligible" (App. A.1).
+//!
+//! This module is the Eq.-12 *estimator*; the capacity *authority* —
+//! recompute policies, CP ring buffers, HBM-derived capacities, per-
+//! iteration peak simulation — lives in `crate::memplan` and is pinned to
+//! [`selective_kept_elems_per_token_layer`] so the two cannot drift.
 
 use crate::model::ModelSpec;
+
+/// Kept activation elements per token per layer under selective
+/// recomputation (attention recomputed, linear activations kept):
+/// layer input + post-attention residual (2h), QKV projections
+/// (h + 2·h_kv), and the SwiGLU gate/up pair (2·ffn).  Shared with
+/// `memplan::activation` as the default recompute policy's curve.
+pub fn selective_kept_elems_per_token_layer(spec: &ModelSpec) -> f64 {
+    let h = spec.hidden as f64;
+    let hkv = spec.kv_hidden() as f64;
+    2.0 * h + (h + 2.0 * hkv) + 2.0 * spec.ffn as f64
+}
 
 #[derive(Clone, Debug)]
 pub struct MemoryModel {
@@ -57,10 +73,7 @@ impl MemoryModel {
     pub fn for_model(spec: &ModelSpec, dp: usize, hbm_bytes: f64) -> Self {
         // Kept activations per token per layer (bf16): input, qkv out,
         // attn out, mlp hidden pair — ≈ (2h + q+k+v + 2·ffn) elements.
-        let h = spec.hidden as f64;
-        let hkv = spec.kv_hidden() as f64;
-        let elems_per_token_layer = 2.0 * h + (h + 2.0 * hkv) + 2.0 * spec.ffn as f64;
-        let alpha = 2.0 * elems_per_token_layer * spec.layers as f64;
+        let alpha = 2.0 * selective_kept_elems_per_token_layer(spec) * spec.layers as f64;
         let budget = (hbm_bytes - Self::zero2_static_bytes(spec, dp)).max(0.0) * 0.9;
         MemoryModel {
             alpha_bytes_per_token: alpha,

@@ -13,6 +13,12 @@ pub enum SchedError {
     Infeasible { seq_idx: usize, len: u32, shard: u32, remain: i64 },
     RollbackFailed { rank: usize },
     TooLong { len: u32, cap: u64 },
+    /// `CapacitySource::HbmDerived` found no positive token capacity: the
+    /// HBM budget cannot hold the static state plus a single token.
+    NoCapacity { hbm_bytes: u64, static_bytes: u64 },
+    /// The physical cluster layout cannot host the requested dp×cp ranks
+    /// (the run engine refuses to price an impossible topology).
+    BadTopology { reason: String },
 }
 
 impl std::fmt::Display for SchedError {
@@ -27,6 +33,13 @@ impl std::fmt::Display for SchedError {
             }
             SchedError::TooLong { len, cap } => {
                 write!(f, "sequence of length {len} exceeds total capacity C*N = {cap}")
+            }
+            SchedError::NoCapacity { hbm_bytes, static_bytes } => write!(
+                f,
+                "HBM budget of {hbm_bytes} bytes cannot hold the {static_bytes}-byte static state plus any activations"
+            ),
+            SchedError::BadTopology { reason } => {
+                write!(f, "invalid cluster layout: {reason}")
             }
         }
     }
@@ -121,6 +134,27 @@ impl MicroBatch {
     pub fn total_tokens(&self) -> u64 {
         self.seqs.iter().map(|s| s.len as u64).sum()
     }
+
+    /// Tokens each CP rank must actually execute for this micro-batch: its
+    /// local sequences plus its ceil(1/N) share of every distributed
+    /// sequence.  The single source of the static-bucket fill rule — both
+    /// the run engine's padding accounting and memplan's peak-memory
+    /// simulation build on it, so they cannot drift apart.
+    pub fn rank_used_tokens(&self, cp: usize) -> Vec<u64> {
+        let cp = cp.max(1);
+        let dist_share: u64 = self
+            .plan
+            .distributed()
+            .map(|i| (self.seqs[i].len as u64).div_ceil(cp as u64))
+            .sum();
+        (0..cp)
+            .map(|j| {
+                let local: u64 =
+                    self.plan.locals_of(j).map(|i| self.seqs[i].len as u64).sum();
+                local + dist_share
+            })
+            .collect()
+    }
 }
 
 /// All micro-batches of one DP rank for one iteration (inner Vec = the
@@ -184,6 +218,27 @@ mod tests {
     fn validate_rejects_out_of_range_rank() {
         let plan = DacpPlan { assign: vec![5] };
         assert!(plan.validate(&[10], 100, 2).is_err());
+    }
+
+    #[test]
+    fn rank_used_tokens_splits_locals_and_ceil_shares() {
+        // lens [100, 50, 64], rank0 local 100, rank1 local 50, 64 sharded
+        // over cp=2 → ceil(64/2)=32 per rank
+        let mb = MicroBatch {
+            seqs: vec![
+                Sequence { id: 0, len: 100 },
+                Sequence { id: 1, len: 50 },
+                Sequence { id: 2, len: 64 },
+            ],
+            plan: DacpPlan { assign: vec![0, 1, DISTRIBUTED] },
+        };
+        assert_eq!(mb.rank_used_tokens(2), vec![132, 82]);
+        // odd shard rounds up on every rank
+        let mb = MicroBatch {
+            seqs: vec![Sequence { id: 0, len: 101 }],
+            plan: DacpPlan { assign: vec![DISTRIBUTED] },
+        };
+        assert_eq!(mb.rank_used_tokens(2), vec![51, 51]);
     }
 
     #[test]

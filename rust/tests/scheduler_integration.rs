@@ -239,3 +239,32 @@ fn refined_policy_never_loses_to_plain_skrull() {
         );
     }
 }
+
+#[test]
+fn fixed_capacity_source_reproduces_hand_set_schedules_byte_identically() {
+    // Regression for the memplan subsystem: with the default
+    // CapacitySource::Fixed, the loader must behave exactly as before the
+    // capacity authority existed — same RNG draw order, same batches, and
+    // schedules byte-identical to gds::schedule called directly with the
+    // hand-set bucket size.
+    use skrull::memplan::CapacitySource;
+
+    let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 20_000, 9);
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+    assert_eq!(cfg.memory.source, CapacitySource::Fixed);
+    let ds = ds.truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let flops = FlopsModel::new(&cfg.model);
+    let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+    assert_eq!(*loader.capacity().as_ref().unwrap(), cfg.bucket_size);
+
+    // replicate the loader's sampling stream independently
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    for _ in 0..4 {
+        let (batch, sched) = loader.next_iteration().unwrap();
+        let expect_batch = ds.sample_batch(&mut rng, cfg.cluster.batch_size);
+        assert_eq!(batch, expect_batch, "sampling stream drifted");
+        let gcfg = gds::GdsConfig::new(cfg.bucket_size, cfg.cluster.cp, cfg.cluster.dp);
+        let expect = gds::schedule(&expect_batch, &gcfg, &flops).unwrap();
+        assert_eq!(sched, expect, "schedule drifted from the hand-set bucket path");
+    }
+}
