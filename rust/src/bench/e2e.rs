@@ -14,7 +14,7 @@ use std::fmt::Write as _;
 
 use crate::cluster::run::{simulate_run, RunConfig, RunReport};
 use crate::cluster::Topology;
-use crate::config::{ExperimentConfig, Policy};
+use crate::config::{CostSource, ExperimentConfig, Policy};
 use crate::data::{Dataset, LengthDistribution};
 use crate::memplan::MemoryConfig;
 use crate::model::ModelSpec;
@@ -55,6 +55,12 @@ pub struct E2eOptions {
     /// Memory subsystem settings applied to every cell (capacity source,
     /// HBM budget, recompute policy — see `memplan`).
     pub memory: MemoryConfig,
+    /// Cost/memory coefficient source applied to every cell.  Under
+    /// `CostSource::Calibrated` each cell additionally reports
+    /// `estimator_error` — the mean per-iteration relative deviation of
+    /// the calibrated model's predictions from the analytic ground truth
+    /// on the same schedules (the round-trip quality metric).
+    pub cost: CostSource,
 }
 
 impl E2eOptions {
@@ -71,6 +77,7 @@ impl E2eOptions {
             pipelined: true,
             epoch: false,
             memory: MemoryConfig::default(),
+            cost: CostSource::Analytic,
         }
     }
 
@@ -98,6 +105,10 @@ pub struct E2eCell {
     /// the first seed's run (the primary every scalar field reports)
     pub report: RunReport,
     pub speedup_vs_baseline: f64,
+    /// mean per-iteration |calibrated − analytic| / analytic over this
+    /// cell's primary run; 0.0 under `CostSource::Analytic` (the ground
+    /// truth deviates from itself by nothing)
+    pub estimator_error: f64,
     /// cross-seed statistics (single-seed sweeps have stddev 0)
     pub wall_mean: f64,
     pub wall_std: f64,
@@ -114,6 +125,9 @@ pub struct E2eSweep {
     pub pipelined: bool,
     pub epoch: bool,
     pub seeds: Vec<u64>,
+    /// `"analytic"` or `"calibrated"` — decides the validator's
+    /// `estimator_error` gate.
+    pub cost_source: String,
     pub cells: Vec<E2eCell>,
 }
 
@@ -135,6 +149,8 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
     crate::ensure!(!opts.datasets.is_empty(), "e2e sweep needs at least one dataset");
     crate::ensure!(!opts.topologies.is_empty(), "e2e sweep needs at least one topology");
     crate::ensure!(!opts.seeds.is_empty(), "e2e sweep needs at least one seed");
+    // a profile fitted on another model must not steer this sweep
+    opts.cost.ensure_model(opts.model.name)?;
     let np = ALL_POLICIES.len();
     let mut cells = Vec::new();
     for &(dp, cp) in &opts.topologies {
@@ -146,7 +162,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                 .with_context(|| format!("unknown dataset {name:?}"))?;
             let mut walls: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
             let mut speedups: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
-            let mut primaries: Vec<Option<(RunReport, f64, usize)>> =
+            let mut primaries: Vec<Option<(RunReport, f64, usize, f64)>> =
                 (0..np).map(|_| None).collect();
             for (si, &seed) in opts.seeds.iter().enumerate() {
                 let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
@@ -158,6 +174,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                 cfg.seed = seed;
                 cfg.pipelined = opts.pipelined;
                 cfg.memory = opts.memory.clone();
+                cfg.cost = opts.cost.clone();
                 // resolve the capacity authority so the dataset truncation
                 // below sees the same C the schedulers will use
                 let cfg = cfg
@@ -165,7 +182,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                     .with_context(|| format!("resolving capacity for {name} <DP={dp},CP={cp}>"))?;
                 let ds = Dataset::synthesize(&dist, opts.dataset_samples, seed ^ 0xD5)
                     .truncated(cfg.bucket_size * cp as u32);
-                let cost = CostModel::paper_default(&cfg.model);
+                let cost = cfg.cost_model();
                 let run = if opts.epoch {
                     RunConfig::epoch(opts.pipelined)
                 } else {
@@ -185,12 +202,30 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                     walls[pi].push(wall);
                     speedups[pi].push(speedup);
                     if si == 0 {
-                        primaries[pi] = Some((report, speedup, pcfg.cluster.batch_size));
+                        // calibration quality: replay the same schedules
+                        // through the analytic ground truth and compare
+                        // per-iteration execution predictions.  This
+                        // re-runs the scheduler per cell (schedules are
+                        // deterministic so both runs agree); repricing the
+                        // already-built schedules would halve the cost of
+                        // calibrated sweeps but needs the run engine to
+                        // expose them — a deliberate simplicity tradeoff.
+                        let est_err = if opts.cost.profile().is_some() {
+                            let analytic = CostModel::paper_default(&cfg.model);
+                            let truth =
+                                simulate_run(&ds, &pcfg, &analytic, &run).with_context(|| {
+                                    format!("analytic reference for {}", policy.name())
+                                })?;
+                            estimator_error(&report, &truth)
+                        } else {
+                            0.0
+                        };
+                        primaries[pi] = Some((report, speedup, pcfg.cluster.batch_size, est_err));
                     }
                 }
             }
             for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
-                let (report, speedup, batch_size) =
+                let (report, speedup, batch_size, estimator_error) =
                     primaries[pi].take().expect("primary seed ran");
                 cells.push(E2eCell {
                     policy,
@@ -200,6 +235,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                     batch_size,
                     report,
                     speedup_vs_baseline: speedup,
+                    estimator_error,
                     wall_mean: walls[pi].mean(),
                     wall_std: walls[pi].std(),
                     speedup_mean: speedups[pi].mean(),
@@ -215,8 +251,25 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
         pipelined: opts.pipelined,
         epoch: opts.epoch,
         seeds: opts.seeds.clone(),
+        cost_source: opts.cost.name().to_string(),
         cells,
     })
+}
+
+/// Mean per-iteration relative deviation of a run's execution predictions
+/// from a reference run of the same schedules.
+fn estimator_error(run: &RunReport, reference: &RunReport) -> f64 {
+    let n = run.iterations.len().min(reference.iterations.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let total: f64 = run
+        .iterations
+        .iter()
+        .zip(&reference.iterations)
+        .map(|(a, b)| (a.exec_seconds - b.exec_seconds).abs() / b.exec_seconds.max(1e-30))
+        .sum();
+    total / n as f64
 }
 
 fn json_str(s: &str) -> &str {
@@ -230,11 +283,12 @@ pub fn render_json(sweep: &E2eSweep) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"bench\": \"e2e\",");
-    let _ = writeln!(out, "  \"schema_version\": 2,");
+    let _ = writeln!(out, "  \"schema_version\": 3,");
     let _ = writeln!(out, "  \"model\": \"{}\",", json_str(&sweep.model));
     let _ = writeln!(out, "  \"iterations\": {},", sweep.iterations);
     let _ = writeln!(out, "  \"pipelined\": {},", sweep.pipelined);
     let _ = writeln!(out, "  \"epoch\": {},", sweep.epoch);
+    let _ = writeln!(out, "  \"cost_source\": \"{}\",", json_str(&sweep.cost_source));
     let seeds: Vec<String> = sweep.seeds.iter().map(|s| s.to_string()).collect();
     let _ = writeln!(out, "  \"seeds\": [{}],", seeds.join(", "));
     out.push_str("  \"cells\": [\n");
@@ -246,7 +300,8 @@ pub fn render_json(sweep: &E2eSweep) -> String {
              \"batch_size\": {}, \"bucket_size\": {}, \"capacity_source\": \"{}\", \
              \"total_seconds\": {:e}, \"exec_seconds\": {:e}, \
              \"sched_seconds\": {:e}, \"exposed_sched_seconds\": {:e}, \
-             \"speedup_vs_baseline\": {:.4}, \"total_seconds_mean\": {:e}, \
+             \"speedup_vs_baseline\": {:.4}, \"estimator_error\": {:e}, \
+             \"total_seconds_mean\": {:e}, \
              \"total_seconds_std\": {:e}, \"speedup_mean\": {:.4}, \
              \"speedup_std\": {:.4}, \"runs\": {}, \"utilization\": {:.4}, \
              \"effective_utilization\": {:.4}, \"sched_overhead_fraction\": {:e}, \
@@ -264,6 +319,7 @@ pub fn render_json(sweep: &E2eSweep) -> String {
             r.sched_seconds,
             r.exposed_sched_seconds,
             c.speedup_vs_baseline,
+            c.estimator_error,
             c.wall_mean,
             c.wall_std,
             c.speedup_mean,
@@ -285,18 +341,19 @@ pub fn render_json(sweep: &E2eSweep) -> String {
 }
 
 /// Top-level keys every `BENCH_e2e.json` must carry.
-const REQUIRED_TOP_KEYS: [&str; 7] = [
+const REQUIRED_TOP_KEYS: [&str; 8] = [
     "\"bench\"",
     "\"schema_version\"",
     "\"model\"",
     "\"iterations\"",
     "\"seeds\"",
     "\"epoch\"",
+    "\"cost_source\"",
     "\"cells\"",
 ];
 
 /// Per-cell keys; the numeric ones are additionally checked for finiteness.
-const REQUIRED_CELL_KEYS: [&str; 14] = [
+const REQUIRED_CELL_KEYS: [&str; 15] = [
     "policy",
     "dataset",
     "dp",
@@ -304,6 +361,7 @@ const REQUIRED_CELL_KEYS: [&str; 14] = [
     "bucket_size",
     "total_seconds",
     "speedup_vs_baseline",
+    "estimator_error",
     "utilization",
     "sched_overhead_fraction",
     "total_seconds_mean",
@@ -313,9 +371,10 @@ const REQUIRED_CELL_KEYS: [&str; 14] = [
     "peak_mem_fraction",
 ];
 
-const FINITE_CELL_KEYS: [&str; 9] = [
+const FINITE_CELL_KEYS: [&str; 10] = [
     "total_seconds",
     "speedup_vs_baseline",
+    "estimator_error",
     "utilization",
     "sched_overhead_fraction",
     "total_seconds_mean",
@@ -324,6 +383,10 @@ const FINITE_CELL_KEYS: [&str; 9] = [
     "speedup_std",
     "peak_mem_fraction",
 ];
+
+/// Ceiling on per-cell `estimator_error` when the sweep ran calibrated —
+/// the acceptance bar for the calibration round trip.
+pub const CALIBRATED_ESTIMATOR_ERROR_MAX: f64 = 0.05;
 
 /// Every value token following `"key":` occurrences, in file order.
 fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
@@ -386,6 +449,23 @@ pub fn validate_json(text: &str) -> Result<()> {
             );
         }
     }
+    // calibration gate: estimator_error is non-negative everywhere, and a
+    // calibrated sweep must track the analytic ground truth within the
+    // acceptance tolerance in every cell
+    let calibrated = values_after(text, "cost_source")
+        .first()
+        .map(|v| *v == "\"calibrated\"")
+        .unwrap_or(false);
+    for (i, v) in values_after(text, "estimator_error").iter().enumerate() {
+        let err: f64 = v.parse().expect("checked finite above");
+        crate::ensure!(err >= 0.0, "cell {i}: negative estimator_error {err}");
+        if calibrated {
+            crate::ensure!(
+                err <= CALIBRATED_ESTIMATOR_ERROR_MAX,
+                "cell {i}: calibrated estimator_error {err} exceeds {CALIBRATED_ESTIMATOR_ERROR_MAX}"
+            );
+        }
+    }
     // every known policy must be present at least once
     for p in ALL_POLICIES {
         crate::ensure!(
@@ -414,6 +494,7 @@ mod tests {
             pipelined: true,
             epoch: false,
             memory: MemoryConfig::default(),
+            cost: CostSource::Analytic,
         }
     }
 
@@ -421,11 +502,14 @@ mod tests {
     fn sweep_covers_grid_and_baseline_is_unit_speedup() {
         let sweep = run_sweep(&tiny_opts()).unwrap();
         assert_eq!(sweep.cells.len(), ALL_POLICIES.len());
+        assert_eq!(sweep.cost_source, "analytic");
         let base = sweep.cell(Policy::Baseline, "chatqa2", 4, 8).unwrap();
         assert!((base.speedup_vs_baseline - 1.0).abs() < 1e-12);
         for c in &sweep.cells {
             assert!(c.speedup_vs_baseline.is_finite());
             assert!(c.report.wall_seconds() > 0.0);
+            // analytic ground truth deviates from itself by nothing
+            assert_eq!(c.estimator_error, 0.0);
             // single-seed sweep: means collapse onto the primary run
             assert_eq!(c.runs, 1);
             assert_eq!(c.wall_mean, c.report.wall_seconds());
@@ -575,6 +659,33 @@ mod tests {
         let broken = json.replacen("\"oom_count\": 0", "\"oom_count\": 0.5", 1);
         assert_ne!(broken, json, "mutation must apply");
         assert!(validate_json(&broken).is_err());
+        // schema v3: estimator_error and cost_source are mandatory
+        assert!(json.contains("\"schema_version\": 3"));
+        assert!(json.contains("\"cost_source\": \"analytic\""));
+        let broken = json.replace("\"estimator_error\"", "\"est_err\"");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replace("\"cost_source\"", "\"cost_src\"");
+        assert!(validate_json(&broken).is_err());
+        // a calibrated sweep is gated on estimator_error ≤ 5%; an analytic
+        // one carries the same field ungated
+        let sample = values_after(&json, "estimator_error")[0].to_string();
+        let drifted = json.replacen(
+            &format!("\"estimator_error\": {sample}"),
+            "\"estimator_error\": 2e-1",
+            1,
+        );
+        assert_ne!(drifted, json, "mutation must apply");
+        validate_json(&drifted).unwrap();
+        let calibrated = drifted.replace("\"cost_source\": \"analytic\"", "\"cost_source\": \"calibrated\"");
+        let err = validate_json(&calibrated).unwrap_err().to_string();
+        assert!(err.contains("estimator_error"), "{err}");
+        // negative estimator_error never validates
+        let negative = json.replacen(
+            &format!("\"estimator_error\": {sample}"),
+            "\"estimator_error\": -1e-3",
+            1,
+        );
+        assert!(validate_json(&negative).is_err());
     }
 
     #[test]

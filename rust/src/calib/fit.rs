@@ -1,0 +1,460 @@
+//! Robust coefficient fitting: from a calibration trace to a
+//! [`CalibratedProfile`] the scheduler and simulator can consume.
+//!
+//! Every model in the trace schema is affine in its features, so each
+//! coefficient pair reduces to a 1-D least-squares problem on per-launch
+//! means (built on `util::stats::linear_fit`), hardened for real traces:
+//! an outlier-trimmed refit (profilers hiccup; a 3σ trim absorbs stray
+//! steps), per-coefficient standard errors, and R².  The recovered
+//! coefficients are exactly the paper's:
+//!
+//! * Eq. 14 — `T_comp = α·FLOPs + β` per kernel (compute fit)
+//! * Eq. 16 — `T_comm = α·V + T_fixed` per collective, NVLink and IB
+//!   fitted separately (intra/inter comm fits)
+//! * Eq. 12 — `Peak = Static + α_act·C` (memory fit: the memplan
+//!   activation α, measured instead of first-principles)
+//! * the per-dispatch framework overhead (median, maximally robust)
+
+use crate::calib::trace::Trace;
+use crate::memplan::{MemPlan, MemoryConfig};
+use crate::model::ModelSpec;
+use crate::perfmodel::comm::INTER_NODE_BW_RATIO;
+use crate::perfmodel::{CommModel, CostModel, Hardware};
+use crate::util::error::Result;
+use crate::util::stats::{linear_fit, median_of};
+
+/// Version stamp of the serialized profile format.
+pub const PROFILE_SCHEMA_VERSION: u32 = 1;
+
+/// One fitted line y = slope·x + intercept with quality diagnostics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+    /// Standard error of the slope (per-coefficient confidence).
+    pub slope_stderr: f64,
+    pub intercept_stderr: f64,
+    /// Samples the final fit used.
+    pub n: usize,
+    /// Samples the trimmed refit discarded.
+    pub outliers_dropped: usize,
+}
+
+impl Fit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+
+    /// A fit carried over from another fit by a known physical ratio
+    /// (e.g. the NVLink→IB bandwidth scaling) rather than from samples.
+    pub fn scaled(&self, slope_factor: f64, intercept_factor: f64) -> Fit {
+        Fit {
+            slope: self.slope * slope_factor,
+            intercept: self.intercept * intercept_factor,
+            r2: self.r2,
+            slope_stderr: self.slope_stderr * slope_factor,
+            intercept_stderr: self.intercept_stderr * intercept_factor,
+            n: 0,
+            outliers_dropped: 0,
+        }
+    }
+}
+
+fn fit_once(xs: &[f64], ys: &[f64]) -> Fit {
+    let (slope, intercept, r2) = linear_fit(xs, ys);
+    let n = xs.len();
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (slope * x + intercept);
+            e * e
+        })
+        .sum();
+    let (slope_stderr, intercept_stderr) = if n > 2 && sxx > 0.0 {
+        let s2 = ss_res / (n - 2) as f64;
+        (
+            (s2 / sxx).sqrt(),
+            (s2 * (1.0 / n as f64 + mx * mx / sxx)).sqrt(),
+        )
+    } else {
+        (0.0, 0.0)
+    };
+    Fit { slope, intercept, r2, slope_stderr, intercept_stderr, n, outliers_dropped: 0 }
+}
+
+fn x_spread_ok(xs: &[f64]) -> bool {
+    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let scale = lo.abs().max(hi.abs()).max(1e-300);
+    (hi - lo) / scale > 1e-9
+}
+
+/// Least squares with an iterated outlier-trimmed refit: fit, drop samples
+/// whose residual exceeds 3× the robust (MAD-based) scale, refit, repeat
+/// until stable.  The MAD scale keeps gross profiler hiccups from
+/// inflating the cut the way an RMS σ would, and the trim never discards
+/// more than half the samples.  Errors on fewer than 2 samples or a
+/// degenerate abscissa (all x equal — slope and intercept cannot be
+/// separated; vary the workload instead).
+pub fn robust_fit(xs: &[f64], ys: &[f64]) -> Result<Fit> {
+    const MAX_ROUNDS: usize = 8;
+    // MAD → σ for a normal distribution
+    const MAD_SCALE: f64 = 1.4826;
+    crate::ensure!(xs.len() == ys.len(), "x/y length mismatch");
+    crate::ensure!(xs.len() >= 2, "need at least 2 samples, got {}", xs.len());
+    crate::ensure!(
+        xs.iter().chain(ys).all(|v| v.is_finite()),
+        "non-finite sample in fit input"
+    );
+    crate::ensure!(
+        x_spread_ok(xs),
+        "degenerate fit: all {} abscissae are (nearly) identical — the trace \
+         must vary the workload to separate slope from intercept",
+        xs.len()
+    );
+    let n = xs.len();
+    let y_scale = ys.iter().map(|y| y.abs()).fold(0.0, f64::max).max(1e-300);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut fit = fit_once(xs, ys);
+    for _ in 0..MAX_ROUNDS {
+        let abs_res: Vec<f64> =
+            idx.iter().map(|&i| (ys[i] - fit.predict(xs[i])).abs()).collect();
+        let sigma = MAD_SCALE * median_of(&abs_res);
+        // numerically exact already: don't let fp dust evict valid samples
+        if sigma <= 1e-12 * y_scale {
+            break;
+        }
+        let keep: Vec<usize> = idx
+            .iter()
+            .copied()
+            .zip(&abs_res)
+            .filter(|(_, r)| **r <= 3.0 * sigma)
+            .map(|(i, _)| i)
+            .collect();
+        if keep.len() == idx.len() || keep.len() < 2 || keep.len() < n.div_ceil(2) {
+            break;
+        }
+        let kx: Vec<f64> = keep.iter().map(|&i| xs[i]).collect();
+        if !x_spread_ok(&kx) {
+            // trimming collapsed the abscissa; the current fit is safer
+            break;
+        }
+        let ky: Vec<f64> = keep.iter().map(|&i| ys[i]).collect();
+        fit = fit_once(&kx, &ky);
+        fit.outliers_dropped = n - keep.len();
+        idx = keep;
+    }
+    Ok(fit)
+}
+
+/// The calibrated coefficient set: everything the analytic
+/// `CostModel`/`MemPlan` pair parameterizes, recovered from measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibratedProfile {
+    pub version: u32,
+    /// Model the trace was taken on (provenance; fits are per-hardware).
+    pub model: String,
+    /// Eq. 14: seconds = slope·FLOPs + intercept per kernel.
+    pub comp: Fit,
+    /// Eq. 16, intra-node (NVLink): seconds = slope·bytes + intercept per
+    /// collective.
+    pub comm: Fit,
+    /// Eq. 16, inter-node (IB).
+    pub comm_inter: Fit,
+    /// The inter fit was extrapolated from the intra fit (or vice versa)
+    /// by the NVLink→IB ratio because the trace had no samples of its own
+    /// for that class.
+    pub inter_extrapolated: bool,
+    /// Per-dispatch framework overhead (median over the trace).
+    pub step_overhead_s: f64,
+    /// Eq. 12: peak_bytes = slope·bucket_tokens + intercept — the memplan
+    /// activation α (slope) and the measured static bytes (intercept).
+    /// `None` when the trace ran a single bucket size (degenerate).
+    pub mem: Option<Fit>,
+    /// Records the fits consumed.
+    pub records: usize,
+}
+
+impl CalibratedProfile {
+    /// The simulator/scheduler cost model implied by the fits.  The
+    /// kernel-time curve `w/(peak·eff(w)) + launch` is affine in w, so a
+    /// synthesized [`Hardware`] with `eff_max = 1`, `peak = 1/slope` and
+    /// `w_half = intercept/slope` reproduces the fitted per-kernel line
+    /// exactly; comm models carry the fitted α/T_fixed directly.
+    pub fn cost_model(&self, spec: &ModelSpec) -> CostModel {
+        let slope = self.comp.slope.max(1e-30);
+        let intercept = self.comp.intercept.max(0.0);
+        let hw = Hardware {
+            peak_flops: 1.0 / slope,
+            eff_max: 1.0,
+            w_half: intercept / slope,
+            launch_overhead_s: 0.0,
+            step_overhead_s: self.step_overhead_s.max(0.0),
+        };
+        let comm = CommModel {
+            alpha_s_per_byte: self.comm.slope.max(0.0),
+            fixed_s: self.comm.intercept.max(1e-9),
+        };
+        let inter = CommModel {
+            alpha_s_per_byte: self.comm_inter.slope.max(0.0),
+            fixed_s: self.comm_inter.intercept.max(1e-9),
+        };
+        let mut cost = CostModel::new(spec, hw, comm);
+        cost.inter_comm = inter;
+        cost
+    }
+
+    /// The calibrated memory plan for a parallel layout, when the trace
+    /// supported a memory fit: measured static bytes + measured activation
+    /// slope against the configured HBM budget.
+    pub fn mem_plan(&self, spec: &ModelSpec, dp: usize, cp: usize, mem: &MemoryConfig) -> Option<MemPlan> {
+        let fit = self.mem.as_ref()?;
+        Some(MemPlan::new(spec, dp, cp, mem).with_calibrated(fit.slope, fit.intercept))
+    }
+
+    /// Sanity gate on the fitted coefficients themselves (the residual
+    /// gate lives in `calib::report::validate`).
+    pub fn validate(&self, min_r2: f64) -> Result<()> {
+        for (name, fit) in [("comp", &self.comp), ("comm", &self.comm), ("comm_inter", &self.comm_inter)] {
+            crate::ensure!(
+                fit.slope.is_finite() && fit.slope > 0.0,
+                "{name} fit: non-positive slope {}",
+                fit.slope
+            );
+            crate::ensure!(
+                fit.intercept.is_finite() && fit.intercept >= 0.0,
+                "{name} fit: negative intercept {}",
+                fit.intercept
+            );
+            crate::ensure!(
+                fit.r2.is_finite() && fit.r2 >= min_r2,
+                "{name} fit: r² {} below {min_r2}",
+                fit.r2
+            );
+        }
+        crate::ensure!(
+            self.step_overhead_s.is_finite() && self.step_overhead_s >= 0.0,
+            "negative step overhead {}",
+            self.step_overhead_s
+        );
+        if let Some(m) = &self.mem {
+            crate::ensure!(
+                m.slope.is_finite() && m.slope > 0.0,
+                "memory fit: non-positive bytes/token {}",
+                m.slope
+            );
+            crate::ensure!(
+                m.intercept.is_finite() && m.intercept >= 0.0,
+                "memory fit: negative static bytes {}",
+                m.intercept
+            );
+            crate::ensure!(m.r2 >= min_r2, "memory fit: r² {} below {min_r2}", m.r2);
+        }
+        Ok(())
+    }
+}
+
+/// Per-launch mean samples for one (seconds, bytes-or-flops, launches)
+/// column group.
+fn launch_means(
+    records: &[crate::calib::trace::TraceRecord],
+    select: impl Fn(&crate::calib::trace::TraceRecord) -> (f64, f64, f64),
+) -> (Vec<f64>, Vec<f64>) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for r in records {
+        let (feature, launches, seconds) = select(r);
+        if launches > 0.0 {
+            xs.push(feature / launches);
+            ys.push(seconds / launches);
+        }
+    }
+    (xs, ys)
+}
+
+/// Fit every coefficient the trace supports.
+pub fn calibrate(trace: &Trace) -> Result<CalibratedProfile> {
+    use crate::util::error::Context;
+    let recs = &trace.records;
+    crate::ensure!(!recs.is_empty(), "empty trace: nothing to calibrate");
+    crate::ensure!(
+        trace.header.version == crate::calib::trace::TRACE_SCHEMA_VERSION,
+        "trace schema v{} but this build reads v{}",
+        trace.header.version,
+        crate::calib::trace::TRACE_SCHEMA_VERSION
+    );
+
+    let (cx, cy) = launch_means(recs, |r| (r.comp_flops, r.comp_kernels, r.comp_seconds));
+    let comp = robust_fit(&cx, &cy).context("fitting T_comp = α·FLOPs + β (Eq. 14)")?;
+
+    let (ix, iy) = launch_means(recs, |r| (r.comm_bytes, r.comm_launches, r.comm_seconds));
+    let (xx, xy) = launch_means(recs, |r| (r.xcomm_bytes, r.xcomm_launches, r.xcomm_seconds));
+    let intra = robust_fit(&ix, &iy);
+    let inter = robust_fit(&xx, &xy);
+    let (comm, comm_inter, inter_extrapolated) = match (intra, inter) {
+        (Ok(a), Ok(b)) => (a, b, false),
+        (Ok(a), Err(_)) => {
+            let b = a.scaled(INTER_NODE_BW_RATIO, 2.0);
+            (a, b, true)
+        }
+        (Err(_), Ok(b)) => {
+            let a = b.scaled(1.0 / INTER_NODE_BW_RATIO, 0.5);
+            (a, b, true)
+        }
+        (Err(e), Err(_)) => {
+            return Err(e).context("fitting T_comm = α·V + T_fixed (Eq. 16): no usable samples in either bandwidth class")
+        }
+    };
+
+    let overheads: Vec<f64> = recs
+        .iter()
+        .filter(|r| r.dispatches > 0.0)
+        .map(|r| r.overhead_seconds / r.dispatches)
+        .collect();
+    crate::ensure!(
+        !overheads.is_empty(),
+        "no dispatched micro-batches in the trace: cannot fit the step overhead"
+    );
+    let step_overhead_s = median_of(&overheads);
+
+    let mx: Vec<f64> = recs.iter().map(|r| r.bucket_tokens as f64).collect();
+    let my: Vec<f64> = recs.iter().map(|r| r.peak_bytes).collect();
+    // a single bucket size cannot separate static bytes from the slope —
+    // that (and only that) degrades gracefully to a cost-only profile;
+    // any other memory-fit failure (corrupt peaks, too few records) is a
+    // real error the user must see, not a silent `None`
+    let mem = if x_spread_ok(&mx) {
+        Some(robust_fit(&mx, &my).context("fitting Peak = Static + α_act·C (Eq. 12)")?)
+    } else {
+        None
+    };
+
+    Ok(CalibratedProfile {
+        version: PROFILE_SCHEMA_VERSION,
+        model: trace.header.model.clone(),
+        comp,
+        comm,
+        comm_inter,
+        inter_extrapolated,
+        step_overhead_s,
+        mem,
+        records: recs.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn robust_fit_recovers_exact_line() {
+        let xs: Vec<f64> = (1..40).map(|i| i as f64 * 3.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0e-12 * x + 5.0e-5).collect();
+        let f = robust_fit(&xs, &ys).unwrap();
+        assert!((f.slope - 2.0e-12).abs() / 2.0e-12 < 1e-9);
+        assert!((f.intercept - 5.0e-5).abs() < 1e-12);
+        assert!(f.r2 > 0.999999);
+        assert_eq!(f.outliers_dropped, 0);
+        assert_eq!(f.n, xs.len());
+    }
+
+    #[test]
+    fn robust_fit_survives_injected_noise_and_outliers() {
+        // Property (satellite): over random true coefficients, Gaussian-ish
+        // noise and a few gross outliers, the trimmed refit recovers the
+        // coefficients within a few percent.
+        struct CoeffGen;
+        impl crate::util::proptest::Gen for CoeffGen {
+            type Value = (f64, f64, u64);
+            fn generate(&self, rng: &mut Rng) -> Self::Value {
+                let slope = 1e-12 * (0.2 + 5.0 * rng.f64());
+                let intercept = 1e-5 * (0.5 + 10.0 * rng.f64());
+                (slope, intercept, rng.next_u64())
+            }
+        }
+        forall(0xF17, 40, &CoeffGen, |&(slope, intercept, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let n = 60;
+            let mut xs = Vec::with_capacity(n);
+            let mut ys = Vec::with_capacity(n);
+            for i in 0..n {
+                let x = 1e6 * (1.0 + i as f64) * (0.8 + 0.4 * rng.f64());
+                let y_true = slope * x + intercept;
+                // ±0.5% multiplicative noise
+                let noise = 1.0 + 0.005 * (2.0 * rng.f64() - 1.0);
+                let mut y = y_true * noise;
+                // ~5% gross outliers (a profiler hiccup: 20x the true value)
+                if rng.f64() < 0.05 {
+                    y = y_true * 20.0;
+                }
+                xs.push(x);
+                ys.push(y);
+            }
+            let f = robust_fit(&xs, &ys).map_err(|e| e.to_string())?;
+            let ds = (f.slope - slope).abs() / slope;
+            if ds > 0.05 {
+                return Err(format!("slope off by {ds:.3}: {} vs {slope}", f.slope));
+            }
+            let di = (f.intercept - intercept).abs() / intercept;
+            if di > 0.25 {
+                return Err(format!("intercept off by {di:.3}: {} vs {intercept}", f.intercept));
+            }
+            if f.r2 < 0.99 {
+                return Err(format!("r² {} too low after trimming", f.r2));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn outlier_trim_beats_plain_least_squares() {
+        // One gross outlier at the far end tilts plain OLS visibly; the
+        // trimmed refit removes it.
+        let xs: Vec<f64> = (1..=30).map(|i| i as f64).collect();
+        let mut ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        // tiny jitter so sigma is non-zero and trimming engages
+        for (i, y) in ys.iter_mut().enumerate() {
+            *y += if i % 2 == 0 { 1e-3 } else { -1e-3 };
+        }
+        ys[29] = 3.0 * 30.0 * 10.0; // 10x hiccup on the last sample
+        let (plain_slope, _, _) = linear_fit(&xs, &ys);
+        let f = robust_fit(&xs, &ys).unwrap();
+        assert_eq!(f.outliers_dropped, 1);
+        assert!((f.slope - 3.0).abs() < 1e-2, "trimmed slope {}", f.slope);
+        assert!((plain_slope - 3.0).abs() > 0.5, "plain slope {plain_slope}");
+        assert!(f.slope_stderr < 1e-2);
+    }
+
+    #[test]
+    fn degenerate_and_tiny_inputs_error() {
+        assert!(robust_fit(&[1.0], &[2.0]).is_err());
+        // all abscissae identical: slope/intercept inseparable
+        assert!(robust_fit(&[5.0, 5.0, 5.0], &[1.0, 2.0, 3.0]).is_err());
+        assert!(robust_fit(&[1.0, f64::NAN], &[1.0, 2.0]).is_err());
+        assert!(robust_fit(&[1.0, 2.0], &[1.0, f64::INFINITY]).is_err());
+    }
+
+    #[test]
+    fn scaled_fit_carries_the_ratio() {
+        let f = Fit {
+            slope: 2.0,
+            intercept: 3.0,
+            r2: 0.99,
+            slope_stderr: 0.1,
+            intercept_stderr: 0.2,
+            n: 10,
+            outliers_dropped: 1,
+        };
+        let s = f.scaled(8.0, 2.0);
+        assert_eq!(s.slope, 16.0);
+        assert_eq!(s.intercept, 6.0);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.predict(1.0), 22.0);
+    }
+}

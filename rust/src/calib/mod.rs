@@ -1,0 +1,37 @@
+//! Calibration — from measured traces to calibrated cost/memory models.
+//!
+//! The scheduler's quality rests on estimator coefficients (Eq. 12/14/16
+//! α/β, memplan's activation α) that the rest of the repo derives from
+//! first principles against `Hardware::h100()`.  This subsystem closes
+//! the measurement loop:
+//!
+//! * [`trace`] — the versioned JSONL trace schema (per-step seq-len
+//!   composition, measured compute/comm/overhead seconds plus the
+//!   features they are affine in, peak bytes, dp/cp layout) and the
+//!   simulator-side calibration sweep that emits it; the reference
+//!   emitter itself lives in `cluster::run::simulate_run_traced`.
+//! * [`fit`] — robust fitting (outlier-trimmed least squares on
+//!   `util::stats::linear_fit`, per-coefficient stderr, R²) into a
+//!   [`CalibratedProfile`], convertible to a drop-in `CostModel` /
+//!   `MemPlan`.
+//! * [`profile_io`] — dependency-free JSONL/JSON parsing and rendering
+//!   for traces and profiles.
+//! * [`report`] — residual report + the `skrull calibrate --validate`
+//!   gate.
+//!
+//! The loop is self-validating: calibrating on a trace emitted by the
+//! analytic simulator reproduces the analytic model's per-iteration
+//! predictions (`rust/tests/calibration.rs`); the same machinery ingests
+//! externally measured DeepSpeed/Megatron traces unchanged.  Runs consume
+//! a profile through `config::CostSource::Calibrated`.
+
+pub mod fit;
+pub mod profile_io;
+pub mod report;
+pub mod trace;
+
+pub use fit::{calibrate, robust_fit, CalibratedProfile, Fit};
+pub use profile_io::{load_profile, read_trace, save_profile, write_trace};
+pub use trace::{
+    emit_calibration_sweep, EmitOptions, Trace, TraceHeader, TraceRecord, TRACE_SCHEMA_VERSION,
+};

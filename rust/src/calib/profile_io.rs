@@ -1,0 +1,574 @@
+//! Dependency-free (de)serialization for calibration artifacts: the JSONL
+//! trace (`*.jsonl`, one object per line, header first) and the fitted
+//! `CalibratedProfile` (a single flat JSON object).
+//!
+//! The parser is a small hand-rolled reader for the flat subset the
+//! schemas use — string/number/bool scalars and arrays of numbers — with
+//! line/byte-accurate errors.  No nesting, no serde, mirroring the repo's
+//! offline-build rule.
+
+use std::collections::BTreeMap;
+
+use crate::calib::fit::{CalibratedProfile, Fit, PROFILE_SCHEMA_VERSION};
+use crate::calib::trace::{Trace, TraceHeader, TraceRecord, TRACE_SCHEMA_VERSION};
+use crate::util::error::{Context, Result};
+
+/// A parsed flat JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Jval {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<f64>),
+}
+
+impl Jval {
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Jval::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(text: &'a str) -> Self {
+        Cursor { bytes: text.as_bytes(), pos: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        match self.peek() {
+            Some(b) if b == c => {
+                self.pos += 1;
+                Ok(())
+            }
+            other => crate::bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.pos,
+                other.map(|b| b as char)
+            ),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        while self.pos < self.bytes.len() {
+            match self.bytes[self.pos] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|e| crate::anyhow!("invalid utf-8 in string: {e}"))?;
+                    // the writers never emit escapes; reject rather than
+                    // silently mis-parse them
+                    crate::ensure!(!s.contains('\\'), "escape sequences unsupported: {s:?}");
+                    self.pos += 1;
+                    return Ok(s.to_string());
+                }
+                _ => self.pos += 1,
+            }
+        }
+        crate::bail!("unterminated string at byte {start}")
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'+' | b'-' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let raw = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        raw.parse::<f64>()
+            .map_err(|_| crate::anyhow!("invalid number {raw:?} at byte {start}"))
+    }
+
+    fn value(&mut self) -> Result<Jval> {
+        match self.peek() {
+            Some(b'"') => Ok(Jval::Str(self.string()?)),
+            Some(b't') => {
+                crate::ensure!(
+                    self.bytes[self.pos..].starts_with(b"true"),
+                    "bad literal at byte {}",
+                    self.pos
+                );
+                self.pos += 4;
+                Ok(Jval::Bool(true))
+            }
+            Some(b'f') => {
+                crate::ensure!(
+                    self.bytes[self.pos..].starts_with(b"false"),
+                    "bad literal at byte {}",
+                    self.pos
+                );
+                self.pos += 5;
+                Ok(Jval::Bool(false))
+            }
+            Some(b'[') => {
+                self.expect(b'[')?;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Jval::Arr(items));
+                }
+                loop {
+                    items.push(self.number()?);
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            break;
+                        }
+                        other => crate::bail!(
+                            "expected ',' or ']' in array at byte {}, found {:?}",
+                            self.pos,
+                            other.map(|b| b as char)
+                        ),
+                    }
+                }
+                Ok(Jval::Arr(items))
+            }
+            Some(_) => Ok(Jval::Num(self.number()?)),
+            None => crate::bail!("unexpected end of input"),
+        }
+    }
+}
+
+/// Parse one flat JSON object (`{"k": v, ...}`) into a key → value map.
+pub fn parse_object(text: &str) -> Result<BTreeMap<String, Jval>> {
+    let mut c = Cursor::new(text);
+    c.expect(b'{')?;
+    let mut map = BTreeMap::new();
+    if c.peek() == Some(b'}') {
+        c.pos += 1;
+        return Ok(map);
+    }
+    loop {
+        let key = c.string()?;
+        c.expect(b':')?;
+        let val = c.value()?;
+        map.insert(key, val);
+        match c.peek() {
+            Some(b',') => c.pos += 1,
+            Some(b'}') => {
+                c.pos += 1;
+                break;
+            }
+            other => crate::bail!(
+                "expected ',' or '}}' at byte {}, found {:?}",
+                c.pos,
+                other.map(|b| b as char)
+            ),
+        }
+    }
+    c.skip_ws();
+    crate::ensure!(c.pos == c.bytes.len(), "trailing garbage after object at byte {}", c.pos);
+    Ok(map)
+}
+
+fn need_f64(map: &BTreeMap<String, Jval>, key: &str) -> Result<f64> {
+    let x = map
+        .get(key)
+        .and_then(Jval::as_f64)
+        .with_context(|| format!("missing or non-numeric field {key:?}"))?;
+    // an overflowing literal (1e999) parses to ±inf; reject it here with
+    // the field name instead of letting it surface deep inside the fits
+    crate::ensure!(x.is_finite(), "field {key:?} is not finite ({x})");
+    Ok(x)
+}
+
+/// Count-like fields must be exact non-negative integers: a converter bug
+/// emitting `-8320` or `1e300` must fail the parse, not saturate through
+/// an `as` cast into the fits.
+fn need_uint(map: &BTreeMap<String, Jval>, key: &str) -> Result<u64> {
+    let x = need_f64(map, key)?;
+    crate::ensure!(
+        x.is_finite() && x >= 0.0 && x <= 2f64.powi(53) && x.fract() == 0.0,
+        "field {key:?} must be a non-negative integer, got {x}"
+    );
+    Ok(x as u64)
+}
+
+fn f64_or(map: &BTreeMap<String, Jval>, key: &str, default: f64) -> f64 {
+    map.get(key).and_then(Jval::as_f64).unwrap_or(default)
+}
+
+// ---------------------------------------------------------------------------
+// trace JSONL
+// ---------------------------------------------------------------------------
+
+fn render_record(r: &TraceRecord) -> String {
+    let lens: Vec<String> = r.seq_lens.iter().map(|l| l.to_string()).collect();
+    format!(
+        "{{\"iteration\": {}, \"dp\": {}, \"cp\": {}, \"seq_lens\": [{}], \
+         \"comp_flops\": {:e}, \"comp_kernels\": {}, \"comp_seconds\": {:e}, \
+         \"comm_bytes\": {:e}, \"comm_launches\": {}, \"comm_seconds\": {:e}, \
+         \"xcomm_bytes\": {:e}, \"xcomm_launches\": {}, \"xcomm_seconds\": {:e}, \
+         \"dispatches\": {}, \"overhead_seconds\": {:e}, \
+         \"bucket_tokens\": {}, \"peak_bytes\": {:e}, \"iteration_seconds\": {:e}}}",
+        r.iteration,
+        r.dp,
+        r.cp,
+        lens.join(", "),
+        r.comp_flops,
+        r.comp_kernels,
+        r.comp_seconds,
+        r.comm_bytes,
+        r.comm_launches,
+        r.comm_seconds,
+        r.xcomm_bytes,
+        r.xcomm_launches,
+        r.xcomm_seconds,
+        r.dispatches,
+        r.overhead_seconds,
+        r.bucket_tokens,
+        r.peak_bytes,
+        r.iteration_seconds,
+    )
+}
+
+/// Render a trace as JSONL text: header line, then one line per record.
+pub fn render_trace(trace: &Trace) -> String {
+    let mut out = format!(
+        "{{\"skrull_trace\": {}, \"model\": \"{}\"}}\n",
+        trace.header.version, trace.header.model
+    );
+    for r in &trace.records {
+        out.push_str(&render_record(r));
+        out.push('\n');
+    }
+    out
+}
+
+fn parse_record(map: &BTreeMap<String, Jval>) -> Result<TraceRecord> {
+    let seq_lens = match map.get("seq_lens") {
+        Some(Jval::Arr(xs)) => xs
+            .iter()
+            .map(|&x| {
+                crate::ensure!(
+                    x.is_finite() && (0.0..=u32::MAX as f64).contains(&x) && x.fract() == 0.0,
+                    "seq_lens entry {x} is not a u32"
+                );
+                Ok(x as u32)
+            })
+            .collect::<Result<Vec<u32>>>()?,
+        _ => crate::bail!("missing or non-array field \"seq_lens\""),
+    };
+    Ok(TraceRecord {
+        iteration: need_uint(map, "iteration")? as usize,
+        dp: need_uint(map, "dp")? as usize,
+        cp: need_uint(map, "cp")? as usize,
+        seq_lens,
+        comp_flops: need_f64(map, "comp_flops")?,
+        comp_kernels: need_f64(map, "comp_kernels")?,
+        comp_seconds: need_f64(map, "comp_seconds")?,
+        comm_bytes: need_f64(map, "comm_bytes")?,
+        comm_launches: need_f64(map, "comm_launches")?,
+        comm_seconds: need_f64(map, "comm_seconds")?,
+        xcomm_bytes: need_f64(map, "xcomm_bytes")?,
+        xcomm_launches: need_f64(map, "xcomm_launches")?,
+        xcomm_seconds: need_f64(map, "xcomm_seconds")?,
+        dispatches: need_f64(map, "dispatches")?,
+        overhead_seconds: need_f64(map, "overhead_seconds")?,
+        bucket_tokens: need_uint(map, "bucket_tokens")?,
+        peak_bytes: need_f64(map, "peak_bytes")?,
+        iteration_seconds: need_f64(map, "iteration_seconds")?,
+    })
+}
+
+/// Parse JSONL trace text (header line + records).
+pub fn parse_trace(text: &str) -> Result<Trace> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty());
+    let (_, first) = lines.next().context("empty trace file")?;
+    let head = parse_object(first).context("parsing trace header")?;
+    let version = need_f64(&head, "skrull_trace").context(
+        "first line is not a trace header (expected {\"skrull_trace\": 1, ...})",
+    )? as u32;
+    crate::ensure!(
+        version == TRACE_SCHEMA_VERSION,
+        "trace schema v{version}, this build reads v{TRACE_SCHEMA_VERSION}"
+    );
+    let model = match head.get("model") {
+        Some(Jval::Str(s)) => s.clone(),
+        _ => String::new(),
+    };
+    let mut records = Vec::new();
+    for (idx, line) in lines {
+        let map = parse_object(line).with_context(|| format!("trace line {}", idx + 1))?;
+        records.push(parse_record(&map).with_context(|| format!("trace line {}", idx + 1))?);
+    }
+    Ok(Trace { header: TraceHeader { version, model }, records })
+}
+
+/// Read a JSONL trace from disk.
+pub fn read_trace(path: &str) -> Result<Trace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_trace(&text).with_context(|| format!("parsing trace {path}"))
+}
+
+/// Write a trace to disk as JSONL.
+pub fn write_trace(path: &str, trace: &Trace) -> Result<()> {
+    std::fs::write(path, render_trace(trace)).with_context(|| format!("writing {path}"))
+}
+
+// ---------------------------------------------------------------------------
+// profile JSON
+// ---------------------------------------------------------------------------
+
+fn push_fit(out: &mut String, prefix: &str, fit: &Fit) {
+    use std::fmt::Write as _;
+    let _ = write!(
+        out,
+        "  \"{prefix}_slope\": {:e},\n  \"{prefix}_intercept\": {:e},\n  \
+         \"{prefix}_r2\": {:e},\n  \"{prefix}_slope_stderr\": {:e},\n  \
+         \"{prefix}_intercept_stderr\": {:e},\n  \"{prefix}_n\": {},\n  \
+         \"{prefix}_outliers\": {},\n",
+        fit.slope, fit.intercept, fit.r2, fit.slope_stderr, fit.intercept_stderr, fit.n,
+        fit.outliers_dropped,
+    );
+}
+
+fn pull_fit(map: &BTreeMap<String, Jval>, prefix: &str) -> Result<Fit> {
+    Ok(Fit {
+        slope: need_f64(map, &format!("{prefix}_slope"))?,
+        intercept: need_f64(map, &format!("{prefix}_intercept"))?,
+        r2: need_f64(map, &format!("{prefix}_r2"))?,
+        slope_stderr: f64_or(map, &format!("{prefix}_slope_stderr"), 0.0),
+        intercept_stderr: f64_or(map, &format!("{prefix}_intercept_stderr"), 0.0),
+        n: f64_or(map, &format!("{prefix}_n"), 0.0) as usize,
+        outliers_dropped: f64_or(map, &format!("{prefix}_outliers"), 0.0) as usize,
+    })
+}
+
+/// Render a fitted profile as a flat JSON object.
+pub fn render_profile(p: &CalibratedProfile) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"skrull_profile\": {},", p.version);
+    let _ = writeln!(out, "  \"model\": \"{}\",", p.model);
+    push_fit(&mut out, "comp", &p.comp);
+    push_fit(&mut out, "comm", &p.comm);
+    push_fit(&mut out, "xcomm", &p.comm_inter);
+    let _ = writeln!(out, "  \"xcomm_extrapolated\": {},", p.inter_extrapolated);
+    let _ = writeln!(out, "  \"step_overhead_s\": {:e},", p.step_overhead_s);
+    if let Some(m) = &p.mem {
+        push_fit(&mut out, "mem", m);
+    }
+    let _ = writeln!(out, "  \"records\": {}", p.records);
+    out.push_str("}\n");
+    out
+}
+
+/// Parse a profile from its JSON text.
+pub fn parse_profile(text: &str) -> Result<CalibratedProfile> {
+    let map = parse_object(text).context("parsing calibrated profile")?;
+    let version = need_f64(&map, "skrull_profile")? as u32;
+    crate::ensure!(
+        version == PROFILE_SCHEMA_VERSION,
+        "profile schema v{version}, this build reads v{PROFILE_SCHEMA_VERSION}"
+    );
+    let model = match map.get("model") {
+        Some(Jval::Str(s)) => s.clone(),
+        _ => String::new(),
+    };
+    let mem = if map.contains_key("mem_slope") { Some(pull_fit(&map, "mem")?) } else { None };
+    Ok(CalibratedProfile {
+        version,
+        model,
+        comp: pull_fit(&map, "comp")?,
+        comm: pull_fit(&map, "comm")?,
+        comm_inter: pull_fit(&map, "xcomm")?,
+        inter_extrapolated: matches!(map.get("xcomm_extrapolated"), Some(Jval::Bool(true))),
+        step_overhead_s: need_f64(&map, "step_overhead_s")?,
+        mem,
+        records: f64_or(&map, "records", 0.0) as usize,
+    })
+}
+
+/// Load a fitted profile from disk.
+pub fn load_profile(path: &str) -> Result<CalibratedProfile> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_profile(&text).with_context(|| format!("parsing profile {path}"))
+}
+
+/// Save a fitted profile to disk.
+pub fn save_profile(path: &str, p: &CalibratedProfile) -> Result<()> {
+    std::fs::write(path, render_profile(p)).with_context(|| format!("writing {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record(i: usize) -> TraceRecord {
+        let mut r = TraceRecord::empty(i, 4, 8);
+        r.seq_lens = vec![100 + i as u32, 2000, 30_000];
+        r.comp_flops = 1.5e12 * (i + 1) as f64;
+        r.comp_kernels = 96.0;
+        r.comp_seconds = 2e-15 * r.comp_flops + 1e-5 * r.comp_kernels;
+        r.comm_bytes = 5e8 * (i + 1) as f64;
+        r.comm_launches = 48.0;
+        r.comm_seconds = 1.25e-11 * r.comm_bytes + 2e-5 * r.comm_launches;
+        r.xcomm_bytes = 1e8;
+        r.xcomm_launches = 1.0;
+        r.xcomm_seconds = 1e-10 * r.xcomm_bytes + 4e-5;
+        r.dispatches = 4.0;
+        r.overhead_seconds = 0.012;
+        r.bucket_tokens = 26_624 + 1000 * i as u64;
+        r.peak_bytes = 6e9 + 5e4 * r.bucket_tokens as f64;
+        r.iteration_seconds = 0.8;
+        r
+    }
+
+    #[test]
+    fn trace_round_trips_exactly() {
+        let trace = Trace {
+            header: TraceHeader { version: TRACE_SCHEMA_VERSION, model: "qwen2.5-0.5b".into() },
+            records: (0..5).map(sample_record).collect(),
+        };
+        let text = render_trace(&trace);
+        let back = parse_trace(&text).unwrap();
+        assert_eq!(back, trace);
+        // empty record list still round-trips
+        let empty = Trace { header: trace.header.clone(), records: vec![] };
+        assert_eq!(parse_trace(&render_trace(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn profile_round_trips_exactly() {
+        let fit = |s: f64| Fit {
+            slope: s,
+            intercept: s * 0.5,
+            r2: 0.999,
+            slope_stderr: s * 1e-3,
+            intercept_stderr: s * 2e-3,
+            n: 42,
+            outliers_dropped: 3,
+        };
+        let p = CalibratedProfile {
+            version: PROFILE_SCHEMA_VERSION,
+            model: "qwen2.5-0.5b".into(),
+            comp: fit(2e-15),
+            comm: fit(1.25e-11),
+            comm_inter: fit(1e-10),
+            inter_extrapolated: true,
+            step_overhead_s: 3e-3,
+            mem: Some(fit(5e4)),
+            records: 54,
+        };
+        let text = render_profile(&p);
+        assert_eq!(parse_profile(&text).unwrap(), p);
+        // mem-less profiles round-trip to mem-less
+        let mut q = p.clone();
+        q.mem = None;
+        assert_eq!(parse_profile(&render_profile(&q)).unwrap(), q);
+    }
+
+    #[test]
+    fn parser_handles_the_flat_subset() {
+        let m = parse_object(
+            r#"{"a": 1.5, "b": "text", "c": true, "d": false, "e": [1, 2.5, 3e2], "f": -2e-3}"#,
+        )
+        .unwrap();
+        assert_eq!(m["a"], Jval::Num(1.5));
+        assert_eq!(m["b"], Jval::Str("text".into()));
+        assert_eq!(m["c"], Jval::Bool(true));
+        assert_eq!(m["d"], Jval::Bool(false));
+        assert_eq!(m["e"], Jval::Arr(vec![1.0, 2.5, 300.0]));
+        assert_eq!(m["f"], Jval::Num(-2e-3));
+        assert!(parse_object("{}").unwrap().is_empty());
+        // whitespace (including newlines) is insignificant
+        let m = parse_object("{\n  \"x\": 1,\n  \"y\": [ ]\n}\n").unwrap();
+        assert_eq!(m["x"], Jval::Num(1.0));
+        assert_eq!(m["y"], Jval::Arr(vec![]));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\" 1}",
+            "{\"a\": }",
+            "{\"a\": 1,}",
+            "{\"a\": [1, ]}",
+            "{\"a\": nope}",
+            "{\"a\": \"unterminated}",
+            "{\"a\": 1} trailing",
+        ] {
+            assert!(parse_object(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn count_fields_must_be_exact_non_negative_integers() {
+        // external converters can be buggy: saturating `as` casts would
+        // silently feed garbage abscissae into the fits
+        let good = render_trace(&Trace {
+            header: TraceHeader { version: TRACE_SCHEMA_VERSION, model: "m".into() },
+            records: vec![sample_record(0)],
+        });
+        assert!(parse_trace(&good).is_ok());
+        let tokens = format!("\"bucket_tokens\": {}", sample_record(0).bucket_tokens);
+        for bad in ["\"bucket_tokens\": -8320", "\"bucket_tokens\": 1.5", "\"bucket_tokens\": 1e300"] {
+            let broken = good.replace(&tokens, bad);
+            assert_ne!(broken, good, "mutation must apply");
+            assert!(parse_trace(&broken).is_err(), "accepted {bad}");
+        }
+        let broken = good.replace("\"dp\": 4", "\"dp\": -1");
+        assert!(parse_trace(&broken).is_err());
+        let broken = good.replace("\"dp\": 4", "\"dp\": 4.5");
+        assert!(parse_trace(&broken).is_err());
+        // an overflowing literal (→ inf) is rejected at the field, with
+        // its name in the error, not deep inside the fits
+        let secs = format!("\"comp_seconds\": {:e}", sample_record(0).comp_seconds);
+        let broken = good.replace(&secs, "\"comp_seconds\": 1e999");
+        assert_ne!(broken, good, "mutation must apply");
+        let err = parse_trace(&broken).unwrap_err().to_string();
+        assert!(err.contains("comp_seconds") && err.contains("finite"), "{err}");
+        // a negative seq_lens entry is rejected too
+        let lens = sample_record(0).seq_lens;
+        let needle = format!("{}, {}", lens[0], lens[1]);
+        let broken = good.replace(&needle, &format!("-{}, {}", lens[0], lens[1]));
+        assert_ne!(broken, good, "mutation must apply");
+        assert!(parse_trace(&broken).is_err());
+    }
+
+    #[test]
+    fn trace_parse_errors_name_the_line() {
+        let good = render_trace(&Trace {
+            header: TraceHeader { version: TRACE_SCHEMA_VERSION, model: "m".into() },
+            records: vec![sample_record(0)],
+        });
+        // break the record line
+        let broken = good.replace("\"comp_flops\"", "\"nope\"");
+        let err = parse_trace(&broken).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("comp_flops"), "{err}");
+        // wrong schema version is rejected
+        let v99 = good.replace("\"skrull_trace\": 1", "\"skrull_trace\": 99");
+        assert!(parse_trace(&v99).is_err());
+        // a non-header first line is rejected
+        assert!(parse_trace("{\"iteration\": 0}\n").is_err());
+    }
+}

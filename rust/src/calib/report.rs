@@ -1,0 +1,302 @@
+//! Residual reporting and the calibration validation gate.
+//!
+//! After fitting, every trace record is replayed through the fitted
+//! coefficients and compared against its measured seconds/bytes — the
+//! per-component relative residuals are what `skrull calibrate` prints
+//! and what `--validate` gates CI on: a calibration that cannot
+//! reproduce its own trace has no business steering the scheduler.
+
+use crate::calib::fit::{CalibratedProfile, Fit};
+use crate::calib::trace::Trace;
+use crate::util::error::Result;
+use crate::util::stats::median_of;
+
+/// Relative-residual summary of one fitted component over the trace.
+#[derive(Clone, Debug, Default)]
+pub struct ResidualStats {
+    /// Records that exercised this component.
+    pub n: usize,
+    pub mean_rel: f64,
+    pub median_rel: f64,
+    pub max_rel: f64,
+}
+
+impl ResidualStats {
+    fn from_rels(rels: &[f64]) -> Self {
+        if rels.is_empty() {
+            return ResidualStats::default();
+        }
+        ResidualStats {
+            n: rels.len(),
+            mean_rel: rels.iter().sum::<f64>() / rels.len() as f64,
+            median_rel: median_of(rels),
+            max_rel: rels.iter().copied().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// Residuals of every fitted component.
+#[derive(Clone, Debug)]
+pub struct ComponentResiduals {
+    pub comp: ResidualStats,
+    pub comm: ResidualStats,
+    pub xcomm: ResidualStats,
+    pub mem: ResidualStats,
+}
+
+fn rel_err(pred: f64, actual: f64) -> f64 {
+    (pred - actual).abs() / actual.abs().max(1e-30)
+}
+
+/// Replay the trace through the profile and summarize per-component
+/// relative residuals.
+pub fn residuals(trace: &Trace, p: &CalibratedProfile) -> ComponentResiduals {
+    let mut comp = Vec::new();
+    let mut comm = Vec::new();
+    let mut xcomm = Vec::new();
+    let mut mem = Vec::new();
+    for r in &trace.records {
+        if r.comp_kernels > 0.0 && r.comp_seconds > 0.0 {
+            let pred = p.comp.slope * r.comp_flops + p.comp.intercept * r.comp_kernels;
+            comp.push(rel_err(pred, r.comp_seconds));
+        }
+        if r.comm_launches > 0.0 && r.comm_seconds > 0.0 {
+            let pred = p.comm.slope * r.comm_bytes + p.comm.intercept * r.comm_launches;
+            comm.push(rel_err(pred, r.comm_seconds));
+        }
+        if r.xcomm_launches > 0.0 && r.xcomm_seconds > 0.0 {
+            let pred =
+                p.comm_inter.slope * r.xcomm_bytes + p.comm_inter.intercept * r.xcomm_launches;
+            xcomm.push(rel_err(pred, r.xcomm_seconds));
+        }
+        if let Some(m) = &p.mem {
+            if r.peak_bytes > 0.0 {
+                mem.push(rel_err(m.predict(r.bucket_tokens as f64), r.peak_bytes));
+            }
+        }
+    }
+    ComponentResiduals {
+        comp: ResidualStats::from_rels(&comp),
+        comm: ResidualStats::from_rels(&comm),
+        xcomm: ResidualStats::from_rels(&xcomm),
+        mem: ResidualStats::from_rels(&mem),
+    }
+}
+
+fn fit_row(
+    name: &str,
+    slope_unit: &str,
+    intercept_unit: &str,
+    fit: &Fit,
+    res: &ResidualStats,
+) -> Vec<String> {
+    vec![
+        name.to_string(),
+        format!("{:.4e} {slope_unit}", fit.slope),
+        format!("{:.4e} {intercept_unit}", fit.intercept),
+        format!("{:.6}", fit.r2),
+        format!("{:.1e}", fit.slope_stderr),
+        format!("{}", fit.n),
+        format!("{}", fit.outliers_dropped),
+        format!("{:.3}%", 100.0 * res.median_rel),
+        format!("{:.3}%", 100.0 * res.max_rel),
+    ]
+}
+
+/// Human-readable calibration report (coefficients + residuals).
+pub fn render_report(p: &CalibratedProfile, res: &ComponentResiduals) -> String {
+    use std::fmt::Write as _;
+    let mut table = crate::bench::TableBuilder::new(&format!(
+        "Calibration of {} ({} trace records)",
+        p.model, p.records
+    ))
+    .header(&[
+        "component",
+        "slope",
+        "intercept",
+        "r²",
+        "±slope",
+        "n",
+        "dropped",
+        "median err",
+        "max err",
+    ]);
+    table.row(&fit_row("comp (Eq.14)", "s/FLOP", "s", &p.comp, &res.comp));
+    table.row(&fit_row("comm intra (Eq.16)", "s/B", "s", &p.comm, &res.comm));
+    let inter_name = if p.inter_extrapolated {
+        "comm inter (scaled)"
+    } else {
+        "comm inter (Eq.16)"
+    };
+    table.row(&fit_row(inter_name, "s/B", "s", &p.comm_inter, &res.xcomm));
+    if let Some(m) = &p.mem {
+        table.row(&fit_row("memory (Eq.12)", "B/token", "B", m, &res.mem));
+    }
+    let mut out = table.render();
+    let _ = writeln!(out, "step overhead: {:.3e} s/dispatch", p.step_overhead_s);
+    if p.mem.is_none() {
+        let _ = writeln!(
+            out,
+            "memory fit: skipped (trace ran a single bucket size; sweep several \
+             with `skrull calibrate --emit`)"
+        );
+    }
+    out
+}
+
+/// The `--validate` gate: fitted coefficients must be sane (finite,
+/// positive, r² ≥ `min_r2`) and the fits must reproduce the trace — the
+/// median relative residual of every exercised component within
+/// `tolerance`.
+pub fn validate(
+    p: &CalibratedProfile,
+    res: &ComponentResiduals,
+    min_r2: f64,
+    tolerance: f64,
+) -> Result<()> {
+    p.validate(min_r2)?;
+    for (name, stats) in [
+        ("comp", &res.comp),
+        ("comm", &res.comm),
+        ("xcomm", &res.xcomm),
+        ("mem", &res.mem),
+    ] {
+        if stats.n == 0 {
+            continue;
+        }
+        crate::ensure!(
+            stats.median_rel.is_finite() && stats.median_rel <= tolerance,
+            "{name}: median relative residual {:.4} exceeds tolerance {tolerance}",
+            stats.median_rel
+        );
+    }
+    crate::ensure!(
+        res.comp.n > 0,
+        "trace exercised no compute kernels: nothing validated"
+    );
+    crate::ensure!(
+        p.mem.is_some(),
+        "no memory fit: the trace must sweep several bucket sizes to calibrate \
+         the memplan activation α"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::fit::calibrate;
+    use crate::calib::trace::{TraceHeader, TraceRecord, TRACE_SCHEMA_VERSION};
+
+    /// A synthetic trace lying exactly on known coefficient lines.
+    fn exact_trace(n: usize) -> Trace {
+        let records = (0..n)
+            .map(|i| {
+                let mut r = TraceRecord::empty(i, 4, 8);
+                r.seq_lens = vec![1000, 2000];
+                r.comp_kernels = 96.0;
+                r.comp_flops = 1e12 * (1 + i) as f64;
+                r.comp_seconds = 2e-15 * r.comp_flops + 1e-5 * r.comp_kernels;
+                r.comm_launches = 48.0;
+                r.comm_bytes = 4e8 * (1 + i) as f64;
+                r.comm_seconds = 1.25e-11 * r.comm_bytes + 2e-5 * r.comm_launches;
+                r.xcomm_launches = 2.0;
+                r.xcomm_bytes = 1e8 * (1 + i) as f64;
+                r.xcomm_seconds = 1e-10 * r.xcomm_bytes + 4e-5 * r.xcomm_launches;
+                r.dispatches = 4.0;
+                r.overhead_seconds = 3e-3 * r.dispatches;
+                r.bucket_tokens = 10_000 + 2_000 * i as u64;
+                r.peak_bytes = 6e9 + 5e4 * r.bucket_tokens as f64;
+                r.iteration_seconds = 1.0;
+                r
+            })
+            .collect();
+        Trace {
+            header: TraceHeader { version: TRACE_SCHEMA_VERSION, model: "test".into() },
+            records,
+        }
+    }
+
+    #[test]
+    fn exact_trace_calibrates_reports_and_validates() {
+        let trace = exact_trace(8);
+        let p = calibrate(&trace).unwrap();
+        assert!((p.comp.slope - 2e-15).abs() / 2e-15 < 1e-9);
+        assert!((p.comp.intercept - 1e-5).abs() < 1e-12);
+        assert!((p.comm.slope - 1.25e-11).abs() / 1.25e-11 < 1e-9);
+        assert!((p.comm_inter.slope - 1e-10).abs() / 1e-10 < 1e-9);
+        assert!(!p.inter_extrapolated);
+        assert!((p.step_overhead_s - 3e-3).abs() < 1e-15);
+        let m = p.mem.as_ref().expect("memory fit present");
+        assert!((m.slope - 5e4).abs() / 5e4 < 1e-9);
+        assert!((m.intercept - 6e9).abs() / 6e9 < 1e-9);
+        let res = residuals(&trace, &p);
+        assert_eq!(res.comp.n, 8);
+        assert!(res.comp.max_rel < 1e-9);
+        assert!(res.mem.max_rel < 1e-9);
+        validate(&p, &res, 0.99, 0.05).unwrap();
+        let rendered = render_report(&p, &res);
+        assert!(rendered.contains("comp (Eq.14)"));
+        assert!(rendered.contains("memory (Eq.12)"));
+        assert!(rendered.contains("step overhead"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_fits_and_residuals() {
+        let trace = exact_trace(8);
+        let good = calibrate(&trace).unwrap();
+        let res = residuals(&trace, &good);
+
+        // r² below the gate
+        let mut p = good.clone();
+        p.comp.r2 = 0.5;
+        assert!(validate(&p, &res, 0.99, 0.05).is_err());
+        // negative slope
+        let mut p = good.clone();
+        p.comm.slope = -1.0;
+        assert!(validate(&p, &res, 0.0, 1.0).is_err());
+        // missing memory fit
+        let mut p = good.clone();
+        p.mem = None;
+        assert!(validate(&p, &res, 0.99, 0.05).is_err());
+        // a profile that mis-predicts the trace fails the residual gate
+        let mut p = good.clone();
+        p.comp.slope *= 2.0;
+        let bad_res = residuals(&trace, &p);
+        assert!(bad_res.comp.median_rel > 0.05);
+        assert!(validate(&p, &bad_res, 0.0, 0.05).is_err());
+        // the honest profile still passes
+        validate(&good, &res, 0.99, 0.05).unwrap();
+    }
+
+    #[test]
+    fn corrupt_peak_bytes_is_a_real_error_not_a_skipped_memory_fit() {
+        // Regression: every memory-fit failure used to collapse into
+        // `mem: None`, telling the user to sweep bucket sizes when the
+        // actual problem was bad data.
+        let mut trace = exact_trace(8);
+        trace.records[3].peak_bytes = f64::NAN;
+        let err = calibrate(&trace).unwrap_err().to_string();
+        assert!(err.contains("Eq. 12"), "{err}");
+    }
+
+    #[test]
+    fn single_bucket_trace_loses_only_the_memory_fit() {
+        let mut trace = exact_trace(8);
+        for r in &mut trace.records {
+            r.bucket_tokens = 26_624;
+            r.peak_bytes = 6e9 + 5e4 * r.bucket_tokens as f64;
+        }
+        let p = calibrate(&trace).unwrap();
+        assert!(p.mem.is_none());
+        // cost fits are unaffected
+        assert!((p.comp.slope - 2e-15).abs() / 2e-15 < 1e-9);
+        let res = residuals(&trace, &p);
+        assert_eq!(res.mem.n, 0);
+        let rendered = render_report(&p, &res);
+        assert!(rendered.contains("memory fit: skipped"));
+        // and --validate demands the sweep
+        let err = validate(&p, &res, 0.99, 0.05).unwrap_err().to_string();
+        assert!(err.contains("bucket sizes"), "{err}");
+    }
+}

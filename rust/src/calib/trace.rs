@@ -1,0 +1,263 @@
+//! The versioned calibration trace schema (JSONL) and the simulator-side
+//! calibration sweep that emits it.
+//!
+//! A trace is the raw material calibration works from: one JSONL line per
+//! training step, carrying the step's sequence-length composition, its
+//! measured compute/communication/overhead seconds together with the
+//! *features* those seconds are affine in (aggregate kernel FLOPs and
+//! launch counts, collective bytes and launch counts), and the step's
+//! peak-memory observation.  `calib::fit` regresses seconds on features to
+//! recover the paper's Eq. 12/14/16 coefficients; because every field is a
+//! plain per-step aggregate a profiler can produce (kernel time + kernel
+//! count, collective time + collective count, allocator peak), externally
+//! measured DeepSpeed/Megatron traces convert into the same schema and
+//! flow through unchanged.
+//!
+//! The reference emitter lives in `cluster::run::simulate_run_traced`: it
+//! plays a run through the analytic cost model and records what a real
+//! cluster would have measured, which makes calibration self-validating —
+//! fitting on an emitted trace must reproduce the analytic model
+//! (`rust/tests/calibration.rs`).
+
+use crate::cluster::run::{simulate_run_traced, RunConfig};
+use crate::config::{ExperimentConfig, Policy};
+use crate::data::{Dataset, LengthDistribution};
+use crate::model::ModelSpec;
+use crate::util::error::{Context, Result};
+
+/// Version stamp of the JSONL trace schema (the header line's
+/// `skrull_trace` value).  Bump on any field change.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// The trace's header line: schema version + the model the trace was
+/// taken on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceHeader {
+    pub version: u32,
+    pub model: String,
+}
+
+/// One training step's measurements.  Seconds fields are *measured*
+/// aggregates; the paired feature fields are what those seconds are
+/// affine in under the Eq. 14/16 models:
+///
+/// * compute:  `comp_seconds  = α_comp·comp_flops + β_comp·comp_kernels`
+/// * comm:     `comm_seconds  = α_comm·comm_bytes + T_fixed·comm_launches`
+///   (split into intra-node `comm_*` and cross-node `xcomm_*` groups so
+///   NVLink and IB fits stay separate; the ZeRO-2 gradient reduce-scatter
+///   folds into whichever group its DP-group placement dictates)
+/// * overhead: `overhead_seconds = step_overhead·dispatches`
+/// * memory:   `peak_bytes    = static + α_mem·bucket_tokens`
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub iteration: usize,
+    /// DP × CP layout the step ran under.
+    pub dp: usize,
+    pub cp: usize,
+    /// Sequence-length composition of the global batch (provenance; lets
+    /// an ingester recompute FLOPs features under its own model).
+    pub seq_lens: Vec<u32>,
+    /// Σ per-layer-kernel FLOPs over every compute kernel launched.
+    pub comp_flops: f64,
+    /// Compute kernel launches (counts are f64: schema-wide numeric type).
+    pub comp_kernels: f64,
+    pub comp_seconds: f64,
+    /// Intra-node collectives: total bytes moved / launches / seconds.
+    pub comm_bytes: f64,
+    pub comm_launches: f64,
+    pub comm_seconds: f64,
+    /// Cross-node (IB) collectives.
+    pub xcomm_bytes: f64,
+    pub xcomm_launches: f64,
+    pub xcomm_seconds: f64,
+    /// Non-empty micro-batch dispatches and the framework overhead they
+    /// paid.
+    pub dispatches: f64,
+    pub overhead_seconds: f64,
+    /// Largest per-GPU executed bucket (tokens, padding included).
+    pub bucket_tokens: u64,
+    /// Largest per-GPU peak bytes observed this step.
+    pub peak_bytes: f64,
+    /// End-to-end step seconds (validation target, not a fit input).
+    pub iteration_seconds: f64,
+}
+
+impl TraceRecord {
+    /// An all-zero record for `iteration` under a dp×cp layout; the
+    /// emitter accumulates into it.
+    pub fn empty(iteration: usize, dp: usize, cp: usize) -> Self {
+        TraceRecord {
+            iteration,
+            dp,
+            cp,
+            seq_lens: Vec::new(),
+            comp_flops: 0.0,
+            comp_kernels: 0.0,
+            comp_seconds: 0.0,
+            comm_bytes: 0.0,
+            comm_launches: 0.0,
+            comm_seconds: 0.0,
+            xcomm_bytes: 0.0,
+            xcomm_launches: 0.0,
+            xcomm_seconds: 0.0,
+            dispatches: 0.0,
+            overhead_seconds: 0.0,
+            bucket_tokens: 0,
+            peak_bytes: 0.0,
+            iteration_seconds: 0.0,
+        }
+    }
+}
+
+/// A parsed trace: header + per-step records.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub header: TraceHeader,
+    pub records: Vec<TraceRecord>,
+}
+
+/// Parameters of the simulator-side calibration sweep.  Real offline
+/// profiling varies the workload to condition the fits (App. A profiles a
+/// ladder of sequence lengths); the sweep does the same by playing short
+/// runs across datasets, topologies and *bucket-size scales* — the scales
+/// are what give the memory fit distinct abscissae.
+#[derive(Clone, Debug)]
+pub struct EmitOptions {
+    pub model: ModelSpec,
+    pub datasets: Vec<String>,
+    /// (dp, cp) pairs; include one whose CP groups cross nodes to feed the
+    /// inter-node (IB) fit real samples.
+    pub topologies: Vec<(usize, usize)>,
+    /// Fractions of the paper bucket size to run at.
+    pub bucket_scales: Vec<f64>,
+    pub iterations: usize,
+    pub batch_size: usize,
+    pub dataset_samples: usize,
+    pub seed: u64,
+}
+
+impl EmitOptions {
+    /// The default sweep: 3 distributions × {node-contained, node-crossing}
+    /// topologies × 3 bucket scales, a few iterations each.
+    pub fn default_sweep(model: ModelSpec) -> Self {
+        EmitOptions {
+            model,
+            datasets: vec!["wikipedia".into(), "lmsys".into(), "chatqa2".into()],
+            topologies: vec![(4, 8), (2, 16)],
+            bucket_scales: vec![0.25, 0.5, 1.0],
+            iterations: 3,
+            batch_size: 16,
+            dataset_samples: 2_000,
+            seed: 42,
+        }
+    }
+}
+
+/// Run the calibration sweep against the analytic simulator and collect
+/// every step's record into one trace.
+pub fn emit_calibration_sweep(opts: &EmitOptions) -> Result<Trace> {
+    crate::ensure!(opts.iterations > 0, "calibration sweep needs at least 1 iteration");
+    crate::ensure!(!opts.datasets.is_empty(), "calibration sweep needs at least one dataset");
+    crate::ensure!(
+        !opts.topologies.is_empty(),
+        "calibration sweep needs at least one topology"
+    );
+    crate::ensure!(
+        opts.bucket_scales.iter().all(|&s| s > 0.0 && s <= 1.0),
+        "bucket scales must be in (0, 1]"
+    );
+    let mut records = Vec::new();
+    for &(dp, cp) in &opts.topologies {
+        for name in &opts.datasets {
+            let dist = LengthDistribution::by_name(name)
+                .with_context(|| format!("unknown dataset {name:?}"))?;
+            for &scale in &opts.bucket_scales {
+                let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
+                cfg.cluster.dp = dp;
+                cfg.cluster.cp = cp;
+                cfg.cluster.batch_size = opts.batch_size;
+                cfg.policy = Policy::Skrull;
+                cfg.seed = opts.seed;
+                cfg.bucket_size = ((cfg.bucket_size as f64 * scale) as u32).max(1024);
+                let ds = Dataset::synthesize(&dist, opts.dataset_samples, opts.seed ^ 0xD5)
+                    .truncated(cfg.bucket_size * cp as u32);
+                let cost = cfg.cost_model();
+                let run = RunConfig::new(opts.iterations, false);
+                let (_, recs) = simulate_run_traced(&ds, &cfg, &cost, &run).with_context(
+                    || format!("calibration run on {name} <DP={dp},CP={cp}> scale {scale}"),
+                )?;
+                records.extend(recs);
+            }
+        }
+    }
+    Ok(Trace {
+        header: TraceHeader {
+            version: TRACE_SCHEMA_VERSION,
+            model: opts.model.name.to_string(),
+        },
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sweep_emits_varied_conditioned_records() {
+        let mut opts = EmitOptions::default_sweep(ModelSpec::qwen2_5_0_5b());
+        // keep the unit test fast: one dataset, both topologies
+        opts.datasets = vec!["chatqa2".into()];
+        opts.iterations = 2;
+        opts.dataset_samples = 1_000;
+        let trace = emit_calibration_sweep(&opts).unwrap();
+        assert_eq!(trace.header.version, TRACE_SCHEMA_VERSION);
+        assert_eq!(trace.header.model, "qwen2.5-0.5b");
+        // 2 topologies × 3 scales × 2 iterations
+        assert_eq!(trace.records.len(), 12);
+        for r in &trace.records {
+            assert!(!r.seq_lens.is_empty());
+            assert!(r.comp_kernels > 0.0 && r.comp_seconds > 0.0);
+            assert!(r.dispatches > 0.0 && r.overhead_seconds > 0.0);
+            assert!(r.bucket_tokens > 0 && r.peak_bytes > 0.0);
+            assert!(r.iteration_seconds > 0.0);
+            // features and measurements are finite
+            for v in [
+                r.comp_flops,
+                r.comm_bytes,
+                r.comm_seconds,
+                r.xcomm_bytes,
+                r.xcomm_seconds,
+            ] {
+                assert!(v.is_finite() && v >= 0.0);
+            }
+        }
+        // the memory fit needs distinct abscissae: the bucket scales
+        // produce them
+        let mut tokens: Vec<u64> = trace.records.iter().map(|r| r.bucket_tokens).collect();
+        tokens.sort_unstable();
+        tokens.dedup();
+        assert!(tokens.len() >= 3, "bucket scales gave {} distinct sizes", tokens.len());
+        // the node-crossing <2,16> topology feeds the inter-node fit
+        assert!(trace.records.iter().any(|r| r.xcomm_launches > 0.0));
+        // and the node-contained <4,8> topology feeds the intra-node fit
+        assert!(trace.records.iter().any(|r| r.comm_launches > 0.0));
+    }
+
+    #[test]
+    fn bad_sweep_options_are_rejected() {
+        let base = EmitOptions::default_sweep(ModelSpec::qwen2_5_0_5b());
+        let mut o = base.clone();
+        o.iterations = 0;
+        assert!(emit_calibration_sweep(&o).is_err());
+        let mut o = base.clone();
+        o.datasets = vec!["imagenet".into()];
+        assert!(emit_calibration_sweep(&o).is_err());
+        let mut o = base.clone();
+        o.bucket_scales = vec![0.0];
+        assert!(emit_calibration_sweep(&o).is_err());
+        let mut o = base;
+        o.topologies = vec![];
+        assert!(emit_calibration_sweep(&o).is_err());
+    }
+}

@@ -76,13 +76,22 @@ pub fn simulate_iteration(sched: &IterationSchedule, cost: &CostModel, cp: usize
 
 /// Topology-aware iteration simulation: DP ranks whose CP group spans node
 /// boundaries (`Topology::cp_group_crosses_nodes`) pay inter-node (IB)
-/// bandwidth for their K/V exchanges; the rest keep NVLink.  Identical to
-/// [`simulate_iteration`] when no group crosses.
+/// bandwidth for their K/V exchanges, and a DP group that spans nodes
+/// (`Topology::any_dp_group_crosses_nodes`) prices the gradient
+/// reduce-scatter at IB too; the rest keep NVLink.  Identical to
+/// [`simulate_iteration`] when nothing crosses.
 pub fn simulate_iteration_on(
     sched: &IterationSchedule,
     cost: &CostModel,
     topo: &Topology,
 ) -> IterationSim {
+    // cross-node DP only re-prices the gradient sync; per-rank compute and
+    // K/V exchange times are unaffected by the flag
+    let base = if topo.any_dp_group_crosses_nodes() {
+        cost.with_cross_node_dp()
+    } else {
+        cost.clone()
+    };
     let costs: Vec<Option<CostModel>> = (0..sched.ranks.len())
         .map(|d| {
             if topo.cp > 1 && d < topo.dp && topo.cp_group_crosses_nodes(d) {
@@ -92,12 +101,13 @@ pub fn simulate_iteration_on(
             }
         })
         .collect();
-    simulate_iteration_with(sched, cost, |d| costs[d].as_ref(), topo.cp)
+    simulate_iteration_with(sched, &base, |d| costs[d].as_ref(), topo.cp)
 }
 
 /// Shared body: `cost_for(d)` overrides the cost model for DP rank `d`
 /// (`None` = use `base`).  Gradient sync stays on `base` — ZeRO's
-/// reduce-scatter runs over the DP group, whose pricing we keep uniform.
+/// reduce-scatter runs over the DP group, whose pricing we keep uniform
+/// (`base.cross_node_dp` decides NVLink vs IB for it).
 fn simulate_iteration_with<'c, F>(
     sched: &IterationSchedule,
     base: &'c CostModel,
@@ -326,14 +336,48 @@ mod tests {
             ],
         };
         let crossing = Topology::new(4, 8, 2, 16).unwrap();
-        let contained = Topology::new(2, 16, 2, 16).unwrap();
+        // a hypothetical single 32-GPU node: neither the CP rings nor the
+        // DP group leave the NVLink domain
+        let contained = Topology::new(1, 32, 2, 16).unwrap();
         assert!(crossing.cp_group_crosses_nodes(0));
         assert!(!contained.cp_group_crosses_nodes(0));
+        assert!(!contained.any_dp_group_crosses_nodes());
         let t_cross = simulate_iteration_on(&sched, &cost, &crossing).total_time;
         let t_local = simulate_iteration_on(&sched, &cost, &contained).total_time;
         assert!(t_cross > t_local, "cross {t_cross} vs local {t_local}");
         // no crossing ⇒ exactly the plain simulator
         assert_eq!(t_local, simulate_iteration(&sched, &cost, 16).total_time);
+    }
+
+    #[test]
+    fn cross_node_dp_group_pays_inter_node_grad_sync() {
+        // ROADMAP item: the paper testbed's <DP=4, CP=8> keeps every CP
+        // ring inside a node, but the DP peers sit one per node — the
+        // gradient reduce-scatter must be priced at IB, not NVLink.
+        use crate::cluster::topology::Topology;
+        let cost = cm();
+        let sched = IterationSchedule {
+            ranks: (0..4)
+                .map(|_| RankSchedule { micro_batches: vec![mb(&[4_000], vec![0])] })
+                .collect(),
+        };
+        let spread = Topology::paper_testbed(4, 8).unwrap();
+        let fat_node = Topology::new(1, 32, 4, 8).unwrap();
+        assert!(spread.any_dp_group_crosses_nodes());
+        assert!(!fat_node.any_dp_group_crosses_nodes());
+        let s_cross = simulate_iteration_on(&sched, &cost, &spread);
+        let s_local = simulate_iteration_on(&sched, &cost, &fat_node);
+        // only the grad sync differs: compute spans are identical
+        assert_eq!(s_cross.rank_spans, s_local.rank_spans);
+        assert!(
+            s_cross.grad_sync > s_local.grad_sync,
+            "cross {} vs local {}",
+            s_cross.grad_sync,
+            s_local.grad_sync
+        );
+        assert!(s_cross.total_time > s_local.total_time);
+        assert_eq!(s_cross.grad_sync, cost.with_cross_node_dp().grad_sync_time(4));
+        assert_eq!(s_local.grad_sync, cost.grad_sync_time(4));
     }
 
     #[test]

@@ -73,6 +73,27 @@ impl Topology {
         first != last
     }
 
+    /// Does the DP group of `cp_rank` span node boundaries?  DP peers sit
+    /// at a `cp` GPU stride (CP-major layout), so the ZeRO reduce-scatter
+    /// between them leaves the NVLink domain as soon as the dp·cp block
+    /// outgrows one node.  GPU ids are monotone in dp_rank, so comparing
+    /// the first and last member's node suffices.
+    pub fn dp_group_crosses_nodes(&self, cp_rank: usize) -> bool {
+        if self.dp <= 1 {
+            return false;
+        }
+        let first = self.gpu_of(0, cp_rank).0 / self.gpus_per_node;
+        let last = self.gpu_of(self.dp - 1, cp_rank).0 / self.gpus_per_node;
+        first != last
+    }
+
+    /// Any DP group crossing a node boundary means the gradient
+    /// reduce-scatter (one collective over all DP groups) pays inter-node
+    /// bandwidth — the uniform pricing `CostModel::grad_sync_time` applies.
+    pub fn any_dp_group_crosses_nodes(&self) -> bool {
+        self.dp > 1 && (0..self.cp).any(|j| self.dp_group_crosses_nodes(j))
+    }
+
     /// All (dp, cp) rank pairs.
     pub fn ranks(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
         (0..self.dp).flat_map(move |d| (0..self.cp).map(move |c| (d, c)))
@@ -116,6 +137,27 @@ mod tests {
             Topology::paper_testbed(2, 6),
             Err(TopologyError::BadCpDegree { cp: 6 })
         ));
+    }
+
+    #[test]
+    fn dp_groups_cross_nodes_on_the_paper_testbed() {
+        // <DP=4, CP=8> on 4×8: DP peers of cp-rank j sit at gpus
+        // {j, 8+j, 16+j, 24+j} — one per node, so the reduce-scatter
+        // crosses nodes even though every CP ring is node-contained.
+        let t = Topology::paper_testbed(4, 8).unwrap();
+        for j in 0..8 {
+            assert!(t.dp_group_crosses_nodes(j));
+        }
+        assert!(t.any_dp_group_crosses_nodes());
+        // a single 32-GPU node contains everything
+        let fat = Topology::new(1, 32, 4, 8).unwrap();
+        assert!(!fat.any_dp_group_crosses_nodes());
+        for j in 0..8 {
+            assert!(!fat.dp_group_crosses_nodes(j));
+        }
+        // dp=1 has no gradient peers at all
+        let solo = Topology::paper_testbed(1, 8).unwrap();
+        assert!(!solo.any_dp_group_crosses_nodes());
     }
 
     #[test]

@@ -4,10 +4,70 @@
 
 pub mod toml;
 
+use crate::calib::CalibratedProfile;
 use crate::cluster::topology::{Topology, TopologyError};
 use crate::memplan::{CapacitySource, MemPlan, MemoryConfig};
 use crate::model::ModelSpec;
+use crate::perfmodel::CostModel;
 use crate::scheduler::SchedError;
+
+/// Where the cost/memory model coefficients come from.
+///
+/// `Analytic` is the first-principles `Hardware::h100()` stack (the
+/// pre-calibration behaviour, byte-identical schedules).  `Calibrated`
+/// carries a fitted [`CalibratedProfile`], loaded and validated once at
+/// config-resolution time, that the loader, run engine, trainer and e2e
+/// sweep all consume.
+#[derive(Clone, Debug)]
+pub enum CostSource {
+    Analytic,
+    Calibrated {
+        /// Where the profile was loaded from (for reports).
+        path: String,
+        profile: CalibratedProfile,
+    },
+}
+
+impl CostSource {
+    /// Load and sanity-check a fitted profile from disk.
+    pub fn calibrated(path: &str) -> crate::util::error::Result<Self> {
+        use crate::util::error::Context;
+        let profile = crate::calib::load_profile(path)?;
+        profile
+            .validate(0.0)
+            .with_context(|| format!("profile {path} has unusable coefficients"))?;
+        Ok(CostSource::Calibrated { path: path.to_string(), profile })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostSource::Analytic => "analytic",
+            CostSource::Calibrated { .. } => "calibrated",
+        }
+    }
+
+    pub fn profile(&self) -> Option<&CalibratedProfile> {
+        match self {
+            CostSource::Analytic => None,
+            CostSource::Calibrated { profile, .. } => Some(profile),
+        }
+    }
+
+    /// Coefficients are per-(model, hardware): a profile fitted on one
+    /// model must not silently steer another model's memory plan (its
+    /// measured static bytes and activation slope would be wrong).
+    pub fn ensure_model(&self, model_name: &str) -> crate::util::error::Result<()> {
+        if let CostSource::Calibrated { path, profile } = self {
+            crate::ensure!(
+                profile.model == model_name,
+                "profile {path} was calibrated on {:?} but the experiment runs {model_name:?}; \
+                 re-run `skrull calibrate --emit` with --model {model_name}",
+                profile.model
+            );
+        }
+        Ok(())
+    }
+}
 
 /// Parallelism + batch settings of one training job.
 #[derive(Clone, Debug, PartialEq)]
@@ -94,6 +154,9 @@ pub struct ExperimentConfig {
     /// Memory subsystem: where capacity C comes from, HBM budget,
     /// recomputation policy (see `memplan`).
     pub memory: MemoryConfig,
+    /// Cost/memory coefficient source: analytic first-principles models or
+    /// a calibrated profile fitted from a measured trace (see `calib`).
+    pub cost: CostSource,
 }
 
 impl ExperimentConfig {
@@ -118,12 +181,30 @@ impl ExperimentConfig {
             pipelined: true,
             epoch: false,
             memory: MemoryConfig::default(),
+            cost: CostSource::Analytic,
+        }
+    }
+
+    /// The cost model simulations and cost-aware scheduling run against:
+    /// the analytic paper default, or the calibrated profile's drop-in
+    /// reconstruction.
+    pub fn cost_model(&self) -> CostModel {
+        match self.cost.profile() {
+            Some(p) => p.cost_model(&self.model),
+            None => CostModel::paper_default(&self.model),
         }
     }
 
     /// The memory plan for this experiment's model + parallel layout.
+    /// Under a calibrated cost source whose trace supported a memory fit,
+    /// the analytic activation curve and static bytes are replaced by the
+    /// measured ones.
     pub fn mem_plan(&self) -> MemPlan {
-        MemPlan::for_experiment(self)
+        let base = MemPlan::for_experiment(self);
+        match self.cost.profile().and_then(|p| p.mem.as_ref()) {
+            Some(m) => base.with_calibrated(m.slope, m.intercept),
+            None => base,
+        }
     }
 
     /// The token capacity C the schedulers must use: the hand-set
@@ -177,13 +258,51 @@ impl ExperimentConfig {
         let source = t.str_or("memory.capacity_source", cfg.memory.source.name());
         cfg.memory.source = CapacitySource::by_name(&source)
             .ok_or_else(|| crate::anyhow!("unknown capacity source {source:?}"))?;
-        cfg.memory.hbm_gb = t.f64_or("memory.hbm_gb", cfg.memory.hbm_gb);
+        // `hbm_gb` accepts a scalar (homogeneous cluster) or a per-node
+        // list (`hbm_gb = [80, 40, 80, 80]`) whose minimum governs the
+        // derived capacity and the OOM line
+        match t.get("memory.hbm_gb") {
+            None => {}
+            Some(toml::Value::Array(items)) => {
+                let nodes: Vec<f64> = items
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| crate::anyhow!("non-numeric hbm_gb entry")))
+                    .collect::<crate::util::error::Result<_>>()?;
+                crate::ensure!(!nodes.is_empty(), "memory.hbm_gb list is empty");
+                crate::ensure!(
+                    nodes.len() == cfg.cluster.nodes,
+                    "memory.hbm_gb lists {} nodes but the cluster has {}",
+                    nodes.len(),
+                    cfg.cluster.nodes
+                );
+                crate::ensure!(
+                    nodes.iter().all(|&g| g.is_finite() && g > 0.0),
+                    "memory.hbm_gb entries must be positive"
+                );
+                // the scalar is left alone: `effective_hbm_gb()` is the
+                // single authority for folding the list into a budget
+                cfg.memory.hbm_gb_nodes = Some(nodes);
+            }
+            Some(v) => {
+                cfg.memory.hbm_gb = v
+                    .as_f64()
+                    .ok_or_else(|| crate::anyhow!("memory.hbm_gb must be a number or list"))?;
+                cfg.memory.hbm_gb_nodes = None;
+            }
+        }
         let recompute = t.str_or("memory.recompute", cfg.memory.recompute.name());
         cfg.memory.recompute = crate::memplan::RecomputePolicy::by_name(&recompute)
             .ok_or_else(|| crate::anyhow!("unknown recompute policy {recompute:?}"))?;
         cfg.memory.peft_frac =
             t.get("memory.peft_frac").and_then(|v| v.as_f64()).or(cfg.memory.peft_frac);
         cfg.memory.headroom_frac = t.f64_or("memory.headroom_frac", cfg.memory.headroom_frac);
+        if let Some(v) = t.get("scheduler.cost_profile") {
+            let path = v
+                .as_str()
+                .ok_or_else(|| crate::anyhow!("scheduler.cost_profile must be a string path"))?;
+            cfg.cost = CostSource::calibrated(path)?;
+            cfg.cost.ensure_model(cfg.model.name)?;
+        }
         Ok(cfg)
     }
 
@@ -277,6 +396,82 @@ epoch = true
         assert!(ExperimentConfig::from_table(&t).is_err());
         let t = toml::parse("[memory]\nrecompute = \"sometimes\"\n").unwrap();
         assert!(ExperimentConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_hbm_list_parses_and_min_governs() {
+        let t = toml::parse("[memory]\nhbm_gb = [80.0, 40, 80.0, 80.0]\n").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.memory.hbm_gb_nodes, Some(vec![80.0, 40.0, 80.0, 80.0]));
+        // the list, not the scalar, is authoritative: the fold lives in
+        // effective_hbm_gb() alone
+        assert_eq!(c.memory.effective_hbm_gb(), 40.0);
+        // scalar form keeps the homogeneous path
+        let t = toml::parse("[memory]\nhbm_gb = 64.0\n").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.memory.hbm_gb, 64.0);
+        assert_eq!(c.memory.hbm_gb_nodes, None);
+        // wrong node count, empty list and bad entries are rejected
+        for bad in [
+            "[memory]\nhbm_gb = [80.0, 40.0]\n",
+            "[memory]\nhbm_gb = []\n",
+            "[memory]\nhbm_gb = [80.0, \"x\", 80.0, 80.0]\n",
+            "[memory]\nhbm_gb = [80.0, -1.0, 80.0, 80.0]\n",
+        ] {
+            let t = toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "{bad}");
+        }
+        // ... unless the cluster really has that many nodes
+        let t = toml::parse("[cluster]\nnodes = 2\n[memory]\nhbm_gb = [80.0, 40.0]\n").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.memory.effective_hbm_gb(), 40.0);
+    }
+
+    #[test]
+    fn cost_source_defaults_to_analytic() {
+        let c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+        assert_eq!(c.cost.name(), "analytic");
+        assert!(c.cost.profile().is_none());
+        // the analytic cost model is exactly the paper default
+        let m = c.cost_model();
+        let reference = crate::perfmodel::CostModel::paper_default(&c.model);
+        assert_eq!(m.hw.peak_flops, reference.hw.peak_flops);
+        assert_eq!(m.comm.alpha_s_per_byte, reference.comm.alpha_s_per_byte);
+        // a missing profile file is a clean error
+        let t = toml::parse("[scheduler]\ncost_profile = \"/no/such/profile.json\"\n").unwrap();
+        assert!(ExperimentConfig::from_table(&t).is_err());
+        assert!(CostSource::calibrated("/no/such/profile.json").is_err());
+    }
+
+    #[test]
+    fn calibrated_profile_must_match_the_experiment_model() {
+        use crate::calib::{CalibratedProfile, Fit};
+        let fit = Fit {
+            slope: 1.0,
+            intercept: 0.1,
+            r2: 1.0,
+            slope_stderr: 0.0,
+            intercept_stderr: 0.0,
+            n: 4,
+            outliers_dropped: 0,
+        };
+        let profile = CalibratedProfile {
+            version: crate::calib::fit::PROFILE_SCHEMA_VERSION,
+            model: "qwen2.5-0.5b".into(),
+            comp: fit.clone(),
+            comm: fit.clone(),
+            comm_inter: fit.clone(),
+            inter_extrapolated: false,
+            step_overhead_s: 1e-3,
+            mem: Some(fit),
+            records: 4,
+        };
+        let src = CostSource::Calibrated { path: "p.json".into(), profile };
+        src.ensure_model("qwen2.5-0.5b").unwrap();
+        let err = src.ensure_model("qwen2.5-7b").unwrap_err().to_string();
+        assert!(err.contains("calibrated on"), "{err}");
+        // analytic never cares
+        CostSource::Analytic.ensure_model("anything").unwrap();
     }
 
     #[test]

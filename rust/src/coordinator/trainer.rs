@@ -46,6 +46,10 @@ pub struct TrainerOptions {
     pub capacity: CapacitySource,
     /// HBM budget for `CapacitySource::HbmDerived`, in GiB
     pub hbm_gb: f64,
+    /// calibrated coefficients (`skrull calibrate`): when present and the
+    /// profile carries a memory fit, the HBM-derived capacity uses the
+    /// measured activation curve instead of the analytic one
+    pub profile: Option<crate::calib::CalibratedProfile>,
 }
 
 impl Default for TrainerOptions {
@@ -61,6 +65,7 @@ impl Default for TrainerOptions {
             clip_norm: None,
             capacity: CapacitySource::Fixed,
             hbm_gb: 80.0,
+            profile: None,
         }
     }
 }
@@ -104,8 +109,13 @@ impl Trainer {
             .context("no buckets in manifest")?;
         let mut opts = opts;
         if opts.capacity == CapacitySource::HbmDerived {
-            opts.bucket_capacity =
-                derived_bucket_capacity(&ModelSpec::tiny(), opts.workers, opts.hbm_gb, largest)?;
+            opts.bucket_capacity = derived_bucket_capacity(
+                &ModelSpec::tiny(),
+                opts.workers,
+                opts.hbm_gb,
+                largest,
+                opts.profile.as_ref(),
+            )?;
         }
         crate::ensure!(
             opts.bucket_capacity <= largest,
@@ -262,19 +272,25 @@ impl Trainer {
 /// Derive the trainer's bucket capacity from an HBM budget (memplan with
 /// dp=1 and the emulated workers as the CP footprint), clamped to the
 /// largest compiled artifact bucket — HLO shapes are static, so memory
-/// headroom beyond the biggest artifact cannot be used.
+/// headroom beyond the biggest artifact cannot be used.  A calibrated
+/// profile with a memory fit replaces the analytic activation curve and
+/// static bytes with the measured ones.
 pub fn derived_bucket_capacity(
     spec: &ModelSpec,
     workers: usize,
     hbm_gb: f64,
     largest_bucket: u32,
+    profile: Option<&crate::calib::CalibratedProfile>,
 ) -> Result<u32> {
     let mem = MemoryConfig {
         source: CapacitySource::HbmDerived,
         hbm_gb,
         ..Default::default()
     };
-    let plan = MemPlan::new(spec, 1, workers.max(1), &mem);
+    let mut plan = MemPlan::new(spec, 1, workers.max(1), &mem);
+    if let Some(m) = profile.and_then(|p| p.mem.as_ref()) {
+        plan = plan.with_calibrated(m.slope, m.intercept);
+    }
     let c = plan.derive_capacity().with_context(|| {
         format!("HBM budget of {hbm_gb} GiB cannot hold the {} static state", spec.name)
     })?;
@@ -401,13 +417,52 @@ params params.bin
         let spec = crate::model::ModelSpec::tiny();
         // a generous budget derives far more than any compiled bucket →
         // clamped to the artifact ceiling
-        assert_eq!(derived_bucket_capacity(&spec, 4, 1.0, 1024).unwrap(), 1024);
+        assert_eq!(derived_bucket_capacity(&spec, 4, 1.0, 1024, None).unwrap(), 1024);
         // a tight budget derives a real (smaller) capacity: tiny statics
         // are ~19 MB, so 32 MB leaves room for a few hundred tokens
-        let c = derived_bucket_capacity(&spec, 4, 0.03125, 1024).unwrap();
+        let c = derived_bucket_capacity(&spec, 4, 0.03125, 1024, None).unwrap();
         assert!(c >= 1 && c < 1024, "derived {c}");
         // and a budget below the static state is a clean error
-        assert!(derived_bucket_capacity(&spec, 4, 0.01, 1024).is_err());
+        assert!(derived_bucket_capacity(&spec, 4, 0.01, 1024, None).is_err());
+    }
+
+    #[test]
+    fn calibrated_profile_steers_derived_capacity() {
+        use crate::calib::{CalibratedProfile, Fit};
+        let spec = crate::model::ModelSpec::tiny();
+        let fit = |slope: f64, intercept: f64| Fit {
+            slope,
+            intercept,
+            r2: 1.0,
+            slope_stderr: 0.0,
+            intercept_stderr: 0.0,
+            n: 10,
+            outliers_dropped: 0,
+        };
+        // measured: 1 KB/token of activations over 16 MB of static state
+        let profile = CalibratedProfile {
+            version: crate::calib::fit::PROFILE_SCHEMA_VERSION,
+            model: "tiny".into(),
+            comp: fit(1e-15, 1e-6),
+            comm: fit(1e-11, 1e-5),
+            comm_inter: fit(8e-11, 2e-5),
+            inter_extrapolated: true,
+            step_overhead_s: 1e-3,
+            mem: Some(fit(1024.0, 16.0 * 1024.0 * 1024.0)),
+            records: 12,
+        };
+        // 0.0625 GiB = 64 MiB: usable 57.6 MiB − 16 MiB static = 41.6 MiB
+        // over 1 KiB/token ⇒ ~42K tokens, clamped to the artifact ceiling
+        let c = derived_bucket_capacity(&spec, 4, 0.0625, 1 << 20, Some(&profile)).unwrap();
+        let expect_tokens = (0.0625 * (1u64 << 30) as f64 * 0.9 - 16.0 * 1024.0 * 1024.0) / 1024.0;
+        assert_eq!(c, expect_tokens as u32);
+        // a memory-less profile falls back to the analytic curve
+        let mut no_mem = profile.clone();
+        no_mem.mem = None;
+        assert_eq!(
+            derived_bucket_capacity(&spec, 4, 1.0, 1024, Some(&no_mem)).unwrap(),
+            derived_bucket_capacity(&spec, 4, 1.0, 1024, None).unwrap()
+        );
     }
 
     #[test]

@@ -41,7 +41,9 @@ pub struct ScheduledLoader<'a> {
 impl<'a> ScheduledLoader<'a> {
     pub fn new(dataset: &'a Dataset, cfg: ExperimentConfig) -> Self {
         let flops = FlopsModel::new(&cfg.model);
-        let cost = CostModel::paper_default(&cfg.model);
+        // the cost-aware refinement (SkrullRefined) estimates with the
+        // configured cost source: analytic, or the calibrated profile
+        let cost = cfg.cost_model();
         let rng = Rng::seed_from_u64(cfg.seed);
         let capacity = cfg.resolved_bucket_size();
         ScheduledLoader {

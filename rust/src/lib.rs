@@ -13,6 +13,7 @@
 //!   kernel the train step calls.
 
 pub mod bench;
+pub mod calib;
 pub mod cli;
 pub mod cluster;
 pub mod config;

@@ -5,13 +5,16 @@
 //!   simulate  — run N simulated iterations under each policy, report speedup
 //!   e2e       — the end-to-end sweep: policies × distributions × topologies
 //!               through the run engine; writes BENCH_e2e.json
+//!   calibrate — trace → fitted coefficients: emit a calibration trace
+//!               (--emit), fit one (--trace), write the profile (--out),
+//!               gate it (--validate)
 //!   train     — end-to-end tiny-model training through PJRT artifacts
 //!   analyze   — dataset length-distribution report (Fig. 1a / Table 1)
 //!   profile   — print the offline-profiling fits (Appendix A)
 //!
 //! Configuration comes from `--config <file>` (TOML subset) or direct flags
 //! (--model, --dataset, --dp, --cp, --batch-size, --policy, --bucket-size,
-//! --iterations, --seed, --sync).
+//! --iterations, --seed, --sync, --cost-profile).
 
 use skrull::bail;
 use skrull::util::error::{Context, Result};
@@ -27,7 +30,7 @@ use skrull::coordinator::{Trainer, TrainerOptions};
 use skrull::data::loader::ScheduledLoader;
 use skrull::data::{Dataset, LengthDistribution};
 use skrull::model::ModelSpec;
-use skrull::perfmodel::{profile, CostModel};
+use skrull::perfmodel::profile;
 use skrull::rng::Rng;
 use skrull::util::stats::fraction_below;
 use skrull::util::{fmt_secs, fmt_tokens};
@@ -37,7 +40,27 @@ fn memory_from_args(args: &Args, mem: &mut skrull::memplan::MemoryConfig) -> Res
         mem.source = skrull::memplan::CapacitySource::by_name(c)
             .context("unknown --capacity (fixed | hbm-derived)")?;
     }
-    mem.hbm_gb = args.parse_or("hbm-gb", mem.hbm_gb)?;
+    // --hbm-gb accepts a scalar or a per-node list ("80,40,80,80"); the
+    // minimum-HBM node governs derived capacities and the OOM line
+    if args.get("hbm-gb").is_some() {
+        let nodes: Vec<f64> = args.list_or("hbm-gb", &[])?;
+        skrull::ensure!(
+            nodes.iter().all(|&g| g.is_finite() && g > 0.0),
+            "--hbm-gb entries must be positive"
+        );
+        match nodes.as_slice() {
+            [] => skrull::bail!("--hbm-gb needs at least one value"),
+            [one] => {
+                mem.hbm_gb = *one;
+                mem.hbm_gb_nodes = None;
+            }
+            many => {
+                // `effective_hbm_gb()` folds the list; the scalar keeps
+                // its default and is never read when a list is set
+                mem.hbm_gb_nodes = Some(many.to_vec());
+            }
+        }
+    }
     if let Some(r) = args.get("recompute") {
         mem.recompute = skrull::memplan::RecomputePolicy::by_name(r)
             .context("unknown --recompute (full | selective | none)")?;
@@ -68,7 +91,21 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(p) = args.get("policy") {
         cfg.policy = Policy::by_name(p).context("unknown --policy")?;
     }
+    if let Some(p) = args.get("cost-profile") {
+        cfg.cost = skrull::config::CostSource::calibrated(p)?;
+        cfg.cost.ensure_model(cfg.model.name)?;
+    }
     memory_from_args(args, &mut cfg.memory)?;
+    // same node-count check the TOML path enforces: a per-node HBM list
+    // must name every node of the cluster layout
+    if let Some(nodes) = &cfg.memory.hbm_gb_nodes {
+        skrull::ensure!(
+            nodes.len() == cfg.cluster.nodes,
+            "--hbm-gb lists {} nodes but the cluster has {}",
+            nodes.len(),
+            cfg.cluster.nodes
+        );
+    }
     // resolve the capacity authority once, up front: with --capacity
     // hbm-derived every downstream consumer (dataset truncation, loader,
     // run engine) sees the memplan-derived C
@@ -90,7 +127,7 @@ fn dataset_for(cfg: &ExperimentConfig, n: usize) -> Result<Dataset> {
 fn cmd_schedule(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let ds = dataset_for(&cfg, 100_000)?;
-    let cost = CostModel::paper_default(&cfg.model);
+    let cost = cfg.cost_model();
     let mut loader = ScheduledLoader::new(&ds, cfg.clone());
     let (batch, sched) = loader.next_iteration()?;
     let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
@@ -126,7 +163,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let ds = dataset_for(&cfg, 100_000)?;
-    let cost = CostModel::paper_default(&cfg.model);
+    let cost = cfg.cost_model();
     let run = if cfg.epoch {
         RunConfig::epoch(cfg.pipelined)
     } else {
@@ -168,9 +205,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
-    // validation-only mode (the CI gate)
-    if let Some(path) = args.get("validate") {
-        let text = std::fs::read_to_string(path)
+    // validation-only mode (the CI gate): `--validate=FILE`, or bare
+    // `--validate` with the file as a positional argument
+    let validate_path = args.get("validate").map(str::to_string).or_else(|| {
+        if args.flag("validate") {
+            args.positional.get(1).cloned()
+        } else {
+            None
+        }
+    });
+    if args.flag("validate") && validate_path.is_none() {
+        skrull::bail!("e2e --validate needs a file: `e2e --validate=BENCH_e2e.json`");
+    }
+    if let Some(path) = validate_path {
+        let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path}"))?;
         e2e::validate_json(&text).with_context(|| format!("{path} failed validation"))?;
         println!("{path}: ok");
@@ -222,7 +270,22 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     if args.flag("epoch") {
         opts.epoch = true;
     }
+    if let Some(p) = args.get("cost-profile") {
+        opts.cost = skrull::config::CostSource::calibrated(p)?;
+        opts.cost.ensure_model(opts.model.name)?;
+    }
     memory_from_args(args, &mut opts.memory)?;
+    // every sweep cell runs on the paper-default cluster layout; read the
+    // node count from the same config source run_sweep uses
+    if let Some(nodes) = &opts.memory.hbm_gb_nodes {
+        let testbed_nodes =
+            ExperimentConfig::paper_default(opts.model.clone(), "wikipedia").cluster.nodes;
+        skrull::ensure!(
+            nodes.len() == testbed_nodes,
+            "--hbm-gb lists {} nodes but the e2e testbed has {testbed_nodes}",
+            nodes.len()
+        );
+    }
 
     let iters_desc = if opts.epoch {
         "one epoch".to_string()
@@ -230,7 +293,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         format!("{} iterations", opts.iterations)
     };
     println!(
-        "e2e sweep: {} policies × {} datasets × {} topologies × {} seeds, {}, {} loader, capacity {}",
+        "e2e sweep: {} policies × {} datasets × {} topologies × {} seeds, {}, {} loader, capacity {}, cost {}",
         e2e::ALL_POLICIES.len(),
         opts.datasets.len(),
         opts.topologies.len(),
@@ -238,6 +301,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         iters_desc,
         if opts.pipelined { "pipelined" } else { "synchronous" },
         opts.memory.source.name(),
+        opts.cost.name(),
     );
     let sweep = e2e::run_sweep(&opts)?;
 
@@ -279,6 +343,57 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use skrull::calib;
+
+    let mut trace_path = args.get("trace").map(str::to_string);
+    if let Some(out) = args.get("emit") {
+        let model = ModelSpec::by_name(args.str_or("model", "qwen2.5-0.5b"))
+            .context("unknown --model (qwen2.5-0.5b | qwen2.5-7b | tiny)")?;
+        let mut opts = calib::EmitOptions::default_sweep(model);
+        opts.iterations = args.parse_or("iterations", opts.iterations)?;
+        opts.batch_size = args.parse_or("batch-size", opts.batch_size)?;
+        opts.dataset_samples = args.parse_or("samples", opts.dataset_samples)?;
+        opts.seed = args.parse_or("seed", opts.seed)?;
+        if let Some(d) = args.get("datasets") {
+            opts.datasets = d.split(',').map(|s| s.trim().to_string()).collect();
+        }
+        let trace = calib::emit_calibration_sweep(&opts)?;
+        calib::write_trace(out, &trace)?;
+        println!("emitted {} trace records to {out}", trace.records.len());
+        if trace_path.is_none() {
+            trace_path = Some(out.to_string());
+        }
+    }
+    let Some(trace_path) = trace_path else {
+        skrull::bail!("calibrate needs --trace FILE (or --emit FILE to generate one)")
+    };
+    let trace = calib::read_trace(&trace_path)?;
+    println!(
+        "calibrating from {} ({} records, model {})",
+        trace_path,
+        trace.records.len(),
+        trace.header.model
+    );
+    let profile = calib::calibrate(&trace)?;
+    let residuals = calib::report::residuals(&trace, &profile);
+    print!("{}", calib::report::render_report(&profile, &residuals));
+    if let Some(out) = args.get("out") {
+        calib::save_profile(out, &profile)?;
+        println!("wrote {out}");
+    }
+    // accept both the bare flag and the `--validate=...` form e2e uses,
+    // so muscle memory from one subcommand can't silently skip the gate
+    if args.flag("validate") || args.get("validate").is_some() {
+        let min_r2: f64 = args.parse_or("min-r2", 0.95)?;
+        let tolerance: f64 = args.parse_or("tolerance", 0.05)?;
+        calib::report::validate(&profile, &residuals, min_r2, tolerance)
+            .with_context(|| format!("{trace_path} failed calibration validation"))?;
+        println!("{trace_path}: calibration ok (r² ≥ {min_r2}, residuals ≤ {tolerance})");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let steps: usize = args.parse_or("steps", 100)?;
@@ -286,6 +401,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     // same --capacity / --hbm-gb surface as the simulation commands
     let mut mem = skrull::memplan::MemoryConfig::default();
     memory_from_args(args, &mut mem)?;
+    skrull::ensure!(
+        mem.hbm_gb_nodes.is_none(),
+        "per-node --hbm-gb lists are not supported by train (its CP ranks are \
+         time-sliced onto one device)"
+    );
+    // load through CostSource so the same sanity gates every other entry
+    // point applies (coefficient sanity + model match) run here too; the
+    // trainer always drives the tiny model
+    let profile = match args.get("cost-profile") {
+        Some(p) => {
+            let src = skrull::config::CostSource::calibrated(p)?;
+            src.ensure_model("tiny")?;
+            src.profile().cloned()
+        }
+        None => None,
+    };
     let opts = TrainerOptions {
         workers: args.parse_or("workers", 4)?,
         bucket_capacity: args.parse_or("bucket-size", 1024u32)?,
@@ -295,6 +426,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         batch_size: args.parse_or("batch-size", 16usize)?,
         capacity: mem.source,
         hbm_gb: mem.hbm_gb,
+        profile,
         ..Default::default()
     };
     let corpus_cfg = CorpusConfig::tiny(512);
@@ -383,17 +515,20 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: skrull <schedule|simulate|e2e|train|analyze|profile> [--options]
-  common: --config FILE | --model M --dataset D --dp N --cp N --batch-size K
-          --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
-  memory: --capacity (fixed|hbm-derived) --hbm-gb F --recompute (full|selective|none)
-  e2e:    --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
-          --seeds a,b,c --epoch --out FILE --smoke | --validate FILE
-  train:  --artifacts DIR --steps N --workers W --lr F --corpus-size K";
+const USAGE: &str = "usage: skrull <schedule|simulate|e2e|calibrate|train|analyze|profile> [--options]
+  common:    --config FILE | --model M --dataset D --dp N --cp N --batch-size K
+             --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
+             --cost-profile FILE (calibrated coefficients from `skrull calibrate`)
+  memory:    --capacity (fixed|hbm-derived) --hbm-gb F[,F,...] --recompute (full|selective|none)
+  e2e:       --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
+             --seeds a,b,c --epoch --out FILE --smoke | --validate=FILE
+  calibrate: --emit FILE (run the calibration sweep, write a JSONL trace)
+             --trace FILE [--out PROFILE.json] [--validate [--min-r2 R] [--tolerance T]]
+  train:     --artifacts DIR --steps N --workers W --lr F --corpus-size K";
 
 fn main() -> Result<()> {
     skrull::logging::init();
-    let args = Args::from_env(&["verbose", "sync", "smoke", "epoch"])?;
+    let args = Args::from_env(&["verbose", "sync", "smoke", "epoch", "validate"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -402,6 +537,7 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "simulate" => cmd_simulate(&args),
         "e2e" => cmd_e2e(&args),
+        "calibrate" => cmd_calibrate(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),
         "profile" => cmd_profile(&args),

@@ -50,6 +50,11 @@ pub struct MemoryConfig {
     pub source: CapacitySource,
     /// Per-GPU HBM in GiB (paper testbed: 80 GB H100).
     pub hbm_gb: f64,
+    /// Heterogeneous clusters: per-*node* HBM in GiB (`hbm_gb = [80, 40]`
+    /// in the `[memory]` table, or `--hbm-gb 80,40`).  A static bucket
+    /// must fit on every rank, so the minimum-HBM node governs both the
+    /// derived capacity and the OOM line; `None` = homogeneous `hbm_gb`.
+    pub hbm_gb_nodes: Option<Vec<f64>>,
     pub recompute: RecomputePolicy,
     /// `Some(frac)` = LoRA-style PEFT with `frac` of params trainable
     /// (frees the sharded optimizer state); `None` = full fine-tuning.
@@ -66,9 +71,24 @@ impl Default for MemoryConfig {
         MemoryConfig {
             source: CapacitySource::Fixed,
             hbm_gb: 80.0,
+            hbm_gb_nodes: None,
             recompute: RecomputePolicy::Selective,
             peft_frac: None,
             headroom_frac: 0.1,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// The per-GPU HBM budget the plan runs against: the smallest node's
+    /// HBM when a heterogeneous per-node list is set (the static bucket
+    /// must fit everywhere), the homogeneous `hbm_gb` otherwise.
+    pub fn effective_hbm_gb(&self) -> f64 {
+        match &self.hbm_gb_nodes {
+            Some(nodes) if !nodes.is_empty() => {
+                nodes.iter().copied().fold(f64::INFINITY, f64::min)
+            }
+            _ => self.hbm_gb,
         }
     }
 }
@@ -101,9 +121,24 @@ impl MemPlan {
         MemPlan {
             static_bytes,
             activation: ActivationModel::new(spec, mem.recompute, cp),
-            hbm_bytes: mem.hbm_gb.max(0.0) * GB,
+            hbm_bytes: mem.effective_hbm_gb().max(0.0) * GB,
             headroom_frac: mem.headroom_frac.clamp(0.0, 0.9),
         }
+    }
+
+    /// Replace the analytic curve with calibrated coefficients (the
+    /// `calib` subsystem's memory fit): measured static bytes and measured
+    /// activation bytes per bucket token.  The fitted slope already
+    /// includes whatever CP ring buffers the traced job carried, so the
+    /// ring term folds into `bytes_per_token`.
+    pub fn with_calibrated(&self, bytes_per_token: f64, static_bytes: f64) -> Self {
+        let mut p = self.clone();
+        p.static_bytes = static_bytes.max(0.0);
+        p.activation = ActivationModel {
+            bytes_per_token: bytes_per_token.max(0.0),
+            ring_bytes_per_token: 0.0,
+        };
+        p
     }
 
     /// The plan for an experiment's model + parallel layout.
@@ -263,6 +298,53 @@ mod tests {
         let sel = mk(RecomputePolicy::Selective);
         let none = mk(RecomputePolicy::None);
         assert!(full > sel && sel > none, "{full} > {sel} > {none}");
+    }
+
+    #[test]
+    fn smallest_hbm_node_governs_derived_capacity() {
+        // ROADMAP item: heterogeneous HBM per node — a single small-HBM
+        // node tightens the derived capacity to what *it* can hold.
+        let homogeneous = plan(80.0).derive_capacity().unwrap();
+        let mk = |nodes: Vec<f64>| {
+            let mem = MemoryConfig { hbm_gb_nodes: Some(nodes), ..Default::default() };
+            MemPlan::new(&ModelSpec::qwen2_5_0_5b(), 4, 8, &mem)
+        };
+        let mixed = mk(vec![80.0, 80.0, 40.0, 80.0]);
+        let tight = mixed.derive_capacity().unwrap();
+        assert!(tight < homogeneous, "mixed {tight} vs homogeneous {homogeneous}");
+        // the min node is authoritative: identical to an all-40 cluster
+        let all_small = mk(vec![40.0; 4]).derive_capacity().unwrap();
+        assert_eq!(tight, all_small);
+        // the OOM line tracks the small node too
+        assert!((mixed.hbm_bytes - 40.0 * GB).abs() < 1.0);
+        // an all-80 list is exactly the homogeneous default
+        assert_eq!(mk(vec![80.0; 4]).derive_capacity().unwrap(), homogeneous);
+        // effective budget helper
+        let mem = MemoryConfig { hbm_gb_nodes: Some(vec![80.0, 24.0]), ..Default::default() };
+        assert_eq!(mem.effective_hbm_gb(), 24.0);
+        let empty = MemoryConfig { hbm_gb_nodes: Some(vec![]), ..Default::default() };
+        assert_eq!(empty.effective_hbm_gb(), 80.0);
+        assert_eq!(MemoryConfig::default().effective_hbm_gb(), 80.0);
+    }
+
+    #[test]
+    fn calibrated_override_replaces_curve_and_static() {
+        let base = plan(80.0);
+        let cal = base.with_calibrated(5.0e4, 6.0e9);
+        assert_eq!(cal.static_bytes, 6.0e9);
+        assert_eq!(cal.activation.total_bytes_per_token(), 5.0e4);
+        assert_eq!(cal.activation.ring_bytes_per_token, 0.0);
+        // peak line follows the calibrated coefficients exactly
+        assert!((cal.peak_bytes(1000) - (6.0e9 + 5.0e4 * 1000.0)).abs() < 1e-3);
+        // the budget inversion uses them too
+        let c = cal.derive_capacity().unwrap();
+        let usable = cal.usable_bytes();
+        assert!(cal.peak_bytes(c as u64) <= usable);
+        assert!(cal.peak_bytes(c as u64 + 1) > usable);
+        // negative inputs are clamped, not propagated
+        let clamped = base.with_calibrated(-1.0, -1.0);
+        assert_eq!(clamped.static_bytes, 0.0);
+        assert_eq!(clamped.activation.total_bytes_per_token(), 0.0);
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct CostModel {
     pub inter_comm: CommModel,
     /// This model prices a CP group that spans node boundaries.
     pub cross_node_cp: bool,
+    /// This model prices a DP group that spans node boundaries: the ZeRO-2
+    /// gradient reduce-scatter runs at inter-node (IB) instead of
+    /// intra-node (NVLink) speed (`Topology::dp_group_crosses_nodes`).
+    pub cross_node_dp: bool,
     pub kv_hidden: u64,
     pub layers: u64,
     pub num_params: u64,
@@ -72,6 +76,7 @@ impl CostModel {
             comm,
             inter_comm: CommModel::paper_inter_node(),
             cross_node_cp: false,
+            cross_node_dp: false,
             pattern: CommPattern::Ulysses,
         }
     }
@@ -84,6 +89,15 @@ impl CostModel {
     pub fn with_cross_node_cp(&self) -> Self {
         let mut c = self.clone();
         c.cross_node_cp = true;
+        c
+    }
+
+    /// A copy of this model pricing a DP group that spans node boundaries:
+    /// the gradient reduce-scatter runs at inter-node (IB) speed.  Compute
+    /// and the CP K/V exchange are untouched.
+    pub fn with_cross_node_dp(&self) -> Self {
+        let mut c = self.clone();
+        c.cross_node_dp = true;
         c
     }
 
@@ -130,6 +144,15 @@ impl CostModel {
 
     /// T_comm(V) for the distributed tokens of a micro-batch (Eq. 5/16):
     /// one K/V collective per layer.
+    ///
+    /// NOTE: the launch structure here is mirrored by
+    /// [`CostModel::kv_launches_and_bytes`] (the calibration emitter's
+    /// feature decomposition).  They are kept as two copies deliberately —
+    /// rewriting this in terms of the decomposition would change fp
+    /// rounding and perturb SkrullRefined's cost comparisons — so any
+    /// change to the pattern math or the bf16/tensor constants must touch
+    /// both; the `kv_launches_and_bytes_mirror_t_comm_dist` test fails on
+    /// drift.
     pub fn t_comm_dist(&self, total_dist_tokens: u64) -> f64 {
         if total_dist_tokens == 0 {
             return 0.0;
@@ -153,6 +176,29 @@ impl CostModel {
             }
         };
         self.layers as f64 * per_layer
+    }
+
+    /// Mirror of [`CostModel::t_comm_dist`]'s launch structure: the total
+    /// number of collective launches and the total bytes they move across
+    /// all layers for a micro-batch's distributed tokens.  The calibration
+    /// trace emitter records these so `T_comm(V) = α·V + T_fixed` can be
+    /// re-fit from the trace (each launch pays α·bytes + fixed, so the
+    /// aggregate is α·total_bytes + fixed·launches).
+    pub fn kv_launches_and_bytes(&self, total_dist_tokens: u64) -> (f64, f64) {
+        if total_dist_tokens == 0 {
+            return (0.0, 0.0);
+        }
+        const BYTES: f64 = 2.0; // bf16
+        const KV_TENSORS: f64 = 2.0;
+        let v_layer = total_dist_tokens as f64 * self.kv_hidden as f64 * BYTES * KV_TENSORS;
+        let l = self.layers as f64;
+        match self.pattern {
+            CommPattern::Ulysses => (2.0 * l, l * v_layer),
+            CommPattern::Ring { cp } => {
+                let n = cp.max(2) as f64;
+                ((n - 1.0) * l, l * (n - 1.0) * v_layer / n)
+            }
+        }
     }
 
     /// Per-rank Eq. 2 decomposition for a planned micro-batch.  Non-empty
@@ -184,14 +230,24 @@ impl CostModel {
             .fold(0.0, f64::max)
     }
 
+    /// Bytes the ZeRO-2 gradient reduce-scatter moves per iteration.
+    pub fn grad_sync_bytes(&self, dp: usize) -> f64 {
+        if dp <= 1 {
+            return 0.0;
+        }
+        self.num_params as f64 * 2.0 * (dp as f64 - 1.0) / dp as f64
+    }
+
     /// ZeRO-2 gradient synchronization per iteration: reduce-scatter of
     /// bf16 gradients across the DP group (identical for every policy).
+    /// Priced at inter-node bandwidth when `cross_node_dp` is set, i.e.
+    /// when `Topology::any_dp_group_crosses_nodes` holds for the layout.
     pub fn grad_sync_time(&self, dp: usize) -> f64 {
         if dp <= 1 {
             return 0.0;
         }
-        let bytes = self.num_params as f64 * 2.0 * (dp as f64 - 1.0) / dp as f64;
-        self.comm.latency(bytes)
+        let comm = if self.cross_node_dp { &self.inter_comm } else { &self.comm };
+        comm.latency(self.grad_sync_bytes(dp))
     }
 
     /// Eq. 8 over pre-computed per-rank micro-batch times: the iteration is
@@ -332,6 +388,50 @@ mod tests {
             }
             // computation is untouched: only the exchange slows down
             assert_eq!(x.t_comp_local(4096), m.t_comp_local(4096));
+        }
+    }
+
+    #[test]
+    fn cross_node_dp_grad_sync_is_strictly_slower() {
+        // ROADMAP item: a DP group spanning node boundaries pays IB for the
+        // ZeRO-2 reduce-scatter, like PR 3 did for CP rings.
+        let m = cm();
+        let x = m.with_cross_node_dp();
+        assert!(x.cross_node_dp && !m.cross_node_dp);
+        for dp in [2usize, 4, 8] {
+            assert!(
+                x.grad_sync_time(dp) > m.grad_sync_time(dp),
+                "dp={dp}: {} vs {}",
+                x.grad_sync_time(dp),
+                m.grad_sync_time(dp)
+            );
+        }
+        // dp=1 has no collective either way
+        assert_eq!(x.grad_sync_time(1), 0.0);
+        // the K/V exchange and compute are untouched by the DP flag
+        assert_eq!(x.t_comm_dist(10_000), m.t_comm_dist(10_000));
+        assert_eq!(x.t_comp_local(4096), m.t_comp_local(4096));
+    }
+
+    #[test]
+    fn kv_launches_and_bytes_mirror_t_comm_dist() {
+        // The emitter's (launches, bytes) decomposition must reproduce the
+        // charged latency exactly: seconds = α·bytes + fixed·launches.
+        let mut ring = cm();
+        ring.pattern = CommPattern::Ring { cp: 8 };
+        let ulysses = cm();
+        for m in [&ulysses, &ring] {
+            for tokens in [1u64, 512, 10_000, 1_000_000] {
+                let (launches, bytes) = m.kv_launches_and_bytes(tokens);
+                let rebuilt = m.comm.alpha_s_per_byte * bytes + m.comm.fixed_s * launches;
+                let charged = m.t_comm_dist(tokens);
+                assert!(
+                    (rebuilt - charged).abs() <= 1e-12 * charged.max(1e-30),
+                    "{:?} tokens {tokens}: {rebuilt} vs {charged}",
+                    m.pattern
+                );
+            }
+            assert_eq!(m.kv_launches_and_bytes(0), (0.0, 0.0));
         }
     }
 

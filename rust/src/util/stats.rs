@@ -1,10 +1,18 @@
 //! Summary statistics + least-squares fitting used by the offline profiler
-//! (Appendix A: fit alpha/beta of Eq. 12/14/16) and the bench reports.
+//! (Appendix A: fit alpha/beta of Eq. 12/14/16), the calibration subsystem
+//! (`calib::fit` builds its robust fits on [`linear_fit`]) and the bench
+//! reports.
+
+use std::cell::OnceCell;
 
 /// Running summary of a sample set.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     xs: Vec<f64>,
+    /// Sorted view, computed lazily on first quantile request and reused
+    /// until the next `push` (the bench reports ask for several quantiles
+    /// of the same sample; re-sorting per call was O(n log n) each).
+    sorted: OnceCell<Vec<f64>>,
 }
 
 impl Summary {
@@ -14,6 +22,8 @@ impl Summary {
 
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
+        // invalidate the cached sorted view
+        self.sorted.take();
     }
 
     pub fn len(&self) -> usize {
@@ -40,12 +50,32 @@ impl Summary {
             .sqrt()
     }
 
+    /// Smallest sample; 0.0 on an empty summary (consistent with `mean` /
+    /// `std` — a bare fold used to return +∞, which leaked non-finite
+    /// values into JSON reports the validator rejects).
     pub fn min(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
         self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0.0 on an empty summary (see [`Summary::min`]).
     pub fn max(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
         self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sorted view of the sample, computed once and cached until the next
+    /// `push`.
+    pub fn sorted(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut v = self.xs.clone();
+            v.sort_by(f64::total_cmp);
+            v
+        })
     }
 
     /// Quantile via linear interpolation on the sorted sample.
@@ -54,8 +84,7 @@ impl Summary {
         if self.xs.is_empty() {
             return 0.0;
         }
-        let mut sorted = self.xs.clone();
-        sorted.sort_by(f64::total_cmp);
+        let sorted = self.sorted();
         let pos = q * (sorted.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -74,6 +103,21 @@ pub fn fraction_below(xs: &[u32], threshold: u32) -> f64 {
         return 0.0;
     }
     xs.iter().filter(|&&x| x < threshold).count() as f64 / xs.len() as f64
+}
+
+/// Median of a sample (by value); 0.0 on an empty slice.
+pub fn median_of(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let mid = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        0.5 * (v[mid - 1] + v[mid])
+    }
 }
 
 /// Ordinary least squares for y = a*x + b.  Returns (a, b, r2).
@@ -117,6 +161,43 @@ mod tests {
         assert_eq!(s.quantile(0.5), 3.0);
         assert_eq!(s.quantile(0.0), 1.0);
         assert_eq!(s.quantile(1.0), 5.0);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zeros() {
+        // Regression: min/max used to return ±∞ on an empty sample,
+        // inconsistent with mean/std and non-finite in JSON reports.
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert!(s.min().is_finite() && s.max().is_finite());
+    }
+
+    #[test]
+    fn quantile_cache_invalidates_on_push() {
+        let mut s = Summary::new();
+        s.push(1.0);
+        s.push(3.0);
+        assert_eq!(s.quantile(1.0), 3.0);
+        assert_eq!(s.sorted(), &[1.0, 3.0]);
+        // a later push must not serve the stale sorted view
+        s.push(2.0);
+        assert_eq!(s.quantile(0.5), 2.0);
+        assert_eq!(s.quantile(1.0), 3.0);
+        assert_eq!(s.sorted(), &[1.0, 2.0, 3.0]);
+        // repeated quantile calls agree (served from the cache)
+        assert_eq!(s.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn median_of_odd_even_and_empty() {
+        assert_eq!(median_of(&[]), 0.0);
+        assert_eq!(median_of(&[5.0]), 5.0);
+        assert_eq!(median_of(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_of(&[4.0, 1.0, 3.0, 2.0]), 2.5);
     }
 
     #[test]

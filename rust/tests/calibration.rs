@@ -1,0 +1,169 @@
+//! Calibration round-trip integration tests (the PR's acceptance
+//! criteria): fitting on a trace emitted by the analytic simulator must
+//! reproduce the analytic cost model's per-iteration predictions, the
+//! checked-in fixture must calibrate and validate, and the e2e sweep must
+//! run end-to-end under `CostSource::Calibrated` with schema-v3 output.
+
+use skrull::bench::e2e::{self, E2eOptions};
+use skrull::calib::{self, EmitOptions};
+use skrull::cluster::run::{simulate_run, RunConfig};
+use skrull::config::{CostSource, ExperimentConfig, Policy};
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::memplan::MemoryConfig;
+use skrull::model::ModelSpec;
+
+fn small_sweep() -> EmitOptions {
+    let mut opts = EmitOptions::default_sweep(ModelSpec::qwen2_5_0_5b());
+    opts.iterations = 2;
+    opts.dataset_samples = 1_500;
+    opts
+}
+
+/// Emit → fit → serialize → parse: the profile as a run would load it.
+fn calibrated_profile() -> calib::CalibratedProfile {
+    let trace = calib::emit_calibration_sweep(&small_sweep()).unwrap();
+    let profile = calib::calibrate(&trace).unwrap();
+    // exercise the serialized form, not just the in-memory fit
+    let text = calib::profile_io::render_profile(&profile);
+    calib::profile_io::parse_profile(&text).unwrap()
+}
+
+#[test]
+fn round_trip_calibration_reproduces_analytic_predictions_within_5_percent() {
+    let profile = calibrated_profile();
+    profile.validate(0.99).unwrap();
+    let calibrated_cost_by_model = profile.cost_model(&ModelSpec::qwen2_5_0_5b());
+
+    // across the e2e sweep's distributions: same schedules, analytic vs
+    // calibrated per-iteration execution predictions
+    for dataset in ["wikipedia", "lmsys", "chatqa2"] {
+        let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), dataset);
+        cfg.policy = Policy::Skrull;
+        cfg.cluster.batch_size = 16;
+        let dist = LengthDistribution::by_name(dataset).unwrap();
+        let ds = Dataset::synthesize(&dist, 2_000, 11)
+            .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+        let analytic = cfg.cost_model();
+        let run = RunConfig::new(4, false);
+        let truth = simulate_run(&ds, &cfg, &analytic, &run).unwrap();
+        let cal = simulate_run(&ds, &cfg, &calibrated_cost_by_model, &run).unwrap();
+        assert_eq!(truth.iterations.len(), cal.iterations.len());
+        for (i, (t, c)) in truth.iterations.iter().zip(&cal.iterations).enumerate() {
+            let rel = (c.exec_seconds - t.exec_seconds).abs() / t.exec_seconds;
+            assert!(
+                rel < 0.05,
+                "{dataset} iter {i}: calibrated {} vs analytic {} ({rel:.4} rel)",
+                c.exec_seconds,
+                t.exec_seconds
+            );
+        }
+        // the aggregate prediction is tight too
+        let rel = (cal.exec_seconds - truth.exec_seconds).abs() / truth.exec_seconds;
+        assert!(rel < 0.05, "{dataset}: total rel err {rel}");
+    }
+
+    // the calibrated memory fit recovers the memplan activation curve:
+    // derived capacity from measurement matches the analytic derivation
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+    let analytic_c = cfg.mem_plan().derive_capacity().unwrap();
+    let m = profile.mem.as_ref().expect("memory fit present");
+    let cal_plan = cfg.mem_plan().with_calibrated(m.slope, m.intercept);
+    let cal_c = cal_plan.derive_capacity().unwrap();
+    let rel = (cal_c as f64 - analytic_c as f64).abs() / analytic_c as f64;
+    assert!(rel < 0.05, "derived capacity {cal_c} vs analytic {analytic_c}");
+}
+
+#[test]
+fn checked_in_sample_trace_calibrates_and_validates() {
+    // the CI fixture: `skrull calibrate --trace ... --validate` must pass
+    let trace = calib::read_trace("rust/tests/data/sample_trace.jsonl").unwrap();
+    assert_eq!(trace.header.version, calib::TRACE_SCHEMA_VERSION);
+    assert_eq!(trace.header.model, "qwen2.5-0.5b");
+    assert_eq!(trace.records.len(), 12);
+    let profile = calib::calibrate(&trace).unwrap();
+    // golden coefficients the fixture was built from
+    assert!((profile.comp.slope - 2.0e-15).abs() / 2.0e-15 < 1e-6, "{}", profile.comp.slope);
+    assert!((profile.comp.intercept - 1.0e-5).abs() < 1e-10);
+    assert!((profile.comm.slope - 1.25e-11).abs() / 1.25e-11 < 1e-6);
+    assert!((profile.comm.intercept - 2.0e-5).abs() < 1e-10);
+    assert!((profile.comm_inter.slope - 1.0e-10).abs() / 1.0e-10 < 1e-6);
+    assert!((profile.comm_inter.intercept - 4.0e-5).abs() < 1e-10);
+    assert!(!profile.inter_extrapolated);
+    assert!((profile.step_overhead_s - 3.0e-3).abs() < 1e-12);
+    let mem = profile.mem.as_ref().expect("memory fit");
+    assert!((mem.slope - 5.0e4).abs() / 5.0e4 < 1e-6);
+    assert!((mem.intercept - 6.0e9).abs() / 6.0e9 < 1e-6);
+    // the validation gate the CI step runs
+    let residuals = calib::report::residuals(&trace, &profile);
+    calib::report::validate(&profile, &residuals, 0.95, 0.05).unwrap();
+}
+
+#[test]
+fn e2e_sweep_under_calibrated_cost_source_emits_valid_schema_v3() {
+    let profile = calibrated_profile();
+    let opts = E2eOptions {
+        model: ModelSpec::qwen2_5_0_5b(),
+        datasets: vec!["chatqa2".into()],
+        topologies: vec![(4, 8)],
+        iterations: 2,
+        batch_size: Some(16),
+        dataset_samples: 2_000,
+        seeds: vec![11],
+        pipelined: true,
+        epoch: false,
+        memory: MemoryConfig::default(),
+        cost: CostSource::Calibrated { path: "<in-memory>".into(), profile },
+    };
+    let sweep = e2e::run_sweep(&opts).unwrap();
+    assert_eq!(sweep.cost_source, "calibrated");
+    for c in &sweep.cells {
+        // the acceptance bar: calibrated predictions track the analytic
+        // ground truth within 5% in every cell
+        assert!(
+            c.estimator_error <= e2e::CALIBRATED_ESTIMATOR_ERROR_MAX,
+            "{}: estimator_error {}",
+            c.policy.name(),
+            c.estimator_error
+        );
+        assert!(c.report.wall_seconds() > 0.0);
+    }
+    // skrull still beats the baseline under the calibrated model
+    let sk = sweep.cell(Policy::Skrull, "chatqa2", 4, 8).unwrap();
+    assert!(sk.speedup_vs_baseline > 1.0, "{}", sk.speedup_vs_baseline);
+    // schema-v3 output validates (including the calibrated gate)
+    let json = e2e::render_json(&sweep);
+    assert!(json.contains("\"schema_version\": 3"));
+    assert!(json.contains("\"cost_source\": \"calibrated\""));
+    assert!(json.contains("\"estimator_error\""));
+    e2e::validate_json(&json).unwrap();
+}
+
+#[test]
+fn analytic_cost_source_keeps_pre_calibration_schedules_byte_identical() {
+    // acceptance criterion: CostSource::Analytic output is byte-identical
+    // to the pre-PR engine — the loader still schedules with the paper
+    // cost model, so schedules (and the sim's busy accounting) match a
+    // from-scratch paper_default run exactly
+    let cfg = {
+        let mut c = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+        c.policy = Policy::SkrullRefined; // the one policy that consults the cost model
+        c.cluster.batch_size = 16;
+        c
+    };
+    assert!(matches!(cfg.cost, CostSource::Analytic));
+    let dist = LengthDistribution::by_name("chatqa2").unwrap();
+    let ds = Dataset::synthesize(&dist, 2_000, 11)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let cost = cfg.cost_model();
+    let run = RunConfig::new(3, true);
+    let a = simulate_run(&ds, &cfg, &cost, &run).unwrap();
+    let b = simulate_run(&ds, &cfg, &cost, &run).unwrap();
+    assert_eq!(a.exec_seconds, b.exec_seconds);
+    assert_eq!(a.data_tokens, b.data_tokens);
+    assert_eq!(a.rank_busy, b.rank_busy);
+    for (x, y) in a.iterations.iter().zip(&b.iterations) {
+        assert_eq!(x.exec_seconds, y.exec_seconds);
+        assert_eq!(x.micro_batches, y.micro_batches);
+        assert_eq!(x.padded_tokens, y.padded_tokens);
+    }
+}
