@@ -42,7 +42,7 @@ fn main() -> skrull::util::error::Result<()> {
     // one iteration, in detail, under Skrull
     let mut skrull_cfg = cfg.clone();
     skrull_cfg.policy = Policy::Skrull;
-    let mut loader = ScheduledLoader::new(&ds, skrull_cfg);
+    let mut loader = ScheduledLoader::new(&ds, &skrull_cfg);
     let (batch, sched) = loader.next_iteration()?;
     let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
 
@@ -92,7 +92,7 @@ fn main() -> skrull::util::error::Result<()> {
     for policy in [Policy::Baseline, Policy::DacpOnly, Policy::Skrull, Policy::SortedBatching] {
         let mut pcfg = cfg.clone();
         pcfg.policy = policy;
-        let mut loader = ScheduledLoader::new(&ds, pcfg);
+        let mut loader = ScheduledLoader::new(&ds, &pcfg);
         let mut total = 0.0;
         let mut util = 0.0;
         for _ in 0..15 {

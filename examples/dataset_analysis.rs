@@ -62,7 +62,7 @@ fn main() -> skrull::util::error::Result<()> {
         for policy in [Policy::Baseline, Policy::Skrull] {
             let mut cfg = cfg0.clone();
             cfg.policy = policy;
-            let mut loader = ScheduledLoader::new(&ds, cfg);
+            let mut loader = ScheduledLoader::new(&ds, &cfg);
             let (batch, sched) = loader.next_iteration()?;
             let mbs = sched.num_micro_batches();
             let sharded: usize = sched

@@ -8,9 +8,8 @@
 //! schedules, different exposed scheduling time), and writes a multi-
 //! iteration chrome trace with the dataloader lane.
 
-use skrull::cluster::run::{simulate_run, RunConfig};
+use skrull::cluster::run::{build_run, price_run, simulate_run, RunConfig};
 use skrull::config::{ExperimentConfig, Policy};
-use skrull::data::loader::ScheduledLoader;
 use skrull::data::{Dataset, LengthDistribution};
 use skrull::model::ModelSpec;
 use skrull::perfmodel::CostModel;
@@ -73,15 +72,27 @@ fn main() -> skrull::util::error::Result<()> {
         );
     }
 
-    // multi-iteration chrome trace (run engine timing + dataloader lane)
+    // build once, price many: one scheduling pass produces the report,
+    // a what-if repricing under a degraded interconnect, and the chrome
+    // trace — no loader replays
     let n_trace = iterations.min(3);
-    let mut scheds = Vec::new();
-    let mut loader = ScheduledLoader::new(&ds, cfg.clone());
-    loader.run_synchronous(n_trace, |_, _, sched, _| scheds.push(sched.clone()))?;
-    let report = simulate_run(&ds, &cfg, &cost, &RunConfig::new(n_trace, true))?;
-    let trace = skrull::cluster::trace::run_trace(&scheds, &report, &cost);
+    let built = build_run(&ds, &cfg, &RunConfig::new(n_trace, true))?;
+    let report = price_run(&built, &cost, &built.topology);
+    let degraded = price_run(&built, &cost.with_cross_node_cp(), &built.topology);
+    println!(
+        "\nbuild-once/price-many ({} scheduling passes for {} pricings):",
+        built.sched_invocations,
+        2
+    );
+    println!(
+        "  NVLink CP rings: exec {}   all-IB what-if: exec {}  ({:.2}x slower)",
+        fmt_secs(report.exec_seconds),
+        fmt_secs(degraded.exec_seconds),
+        degraded.exec_seconds / report.exec_seconds,
+    );
+    let trace = skrull::cluster::trace::run_trace_built(&built, &report, &cost);
     let path = std::env::temp_dir().join("skrull_run_trace.json");
     std::fs::write(&path, trace)?;
-    println!("\n{n_trace}-iteration chrome trace written to {}", path.display());
+    println!("{n_trace}-iteration chrome trace written to {}", path.display());
     Ok(())
 }

@@ -43,7 +43,7 @@ fn main() -> skrull::util::error::Result<()> {
     for policy in [Policy::Baseline, Policy::DacpOnly, Policy::Skrull] {
         let mut pcfg = cfg.clone();
         pcfg.policy = policy;
-        let mut loader = ScheduledLoader::new(&dataset, pcfg);
+        let mut loader = ScheduledLoader::new(&dataset, &pcfg);
         let (_batch, sched) = loader.next_iteration()?;
         let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
         let speedup = baseline_time

@@ -200,7 +200,7 @@ fn ablation_step_by_step() {
     ] {
         let mut pcfg = cfg.clone();
         pcfg.policy = policy;
-        let mut loader = ScheduledLoader::new(&ds, pcfg);
+        let mut loader = ScheduledLoader::new(&ds, &pcfg);
         let mut total = 0.0;
         for _ in 0..20 {
             let (_, sched) = loader.next_iteration().unwrap();

@@ -35,7 +35,7 @@ fn run_config(model: ModelSpec, dataset: &str, iters: usize) -> (ExperimentConfi
         .map(|policy| {
             let mut pcfg = cfg.clone();
             pcfg.policy = policy;
-            let mut loader = ScheduledLoader::new(&ds, pcfg);
+            let mut loader = ScheduledLoader::new(&ds, &pcfg);
             let mut total = 0.0;
             let mut util = 0.0;
             for _ in 0..iters {

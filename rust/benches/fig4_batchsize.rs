@@ -13,7 +13,7 @@ use skrull::model::ModelSpec;
 use skrull::perfmodel::CostModel;
 
 fn mean_iter_time(cfg: &ExperimentConfig, ds: &Dataset, cost: &CostModel, iters: usize) -> f64 {
-    let mut loader = ScheduledLoader::new(ds, cfg.clone());
+    let mut loader = ScheduledLoader::new(ds, cfg);
     let mut total = 0.0;
     for _ in 0..iters {
         let (_, sched) = loader.next_iteration().expect("schedule");

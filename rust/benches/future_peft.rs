@@ -20,7 +20,7 @@ use skrull::perfmodel::{CostModel, MemoryModel};
 const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
 fn mean_iter(cfg: &ExperimentConfig, ds: &Dataset, cost: &CostModel, iters: usize) -> f64 {
-    let mut loader = ScheduledLoader::new(ds, cfg.clone());
+    let mut loader = ScheduledLoader::new(ds, cfg);
     let mut total = 0.0;
     for _ in 0..iters {
         let (_, sched) = loader.next_iteration().expect("schedule");

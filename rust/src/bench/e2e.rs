@@ -5,14 +5,25 @@
 //! DeepSpeed-like baseline, utilization, exposed-scheduling-overhead
 //! fraction and — since the memplan subsystem — peak-memory fraction and
 //! modeled OOM count.  A seed list turns every cell into a mean/stddev
-//! pair so trajectory comparisons are noise-aware.  Emits the
-//! machine-readable `BENCH_e2e.json` that tracks the repo's headline
-//! number across PRs (`skrull e2e`), and validates it for CI
+//! pair so trajectory comparisons are noise-aware.
+//!
+//! The sweep is **build-once/price-many** (`cluster::run::{build_run,
+//! price_run}`): each cell drives the scheduler exactly once — per-cell
+//! `sched_invocations` makes that machine-visible — and a calibrated sweep
+//! computes `estimator_error` by *repricing* the already-built schedules
+//! under the analytic model instead of re-running GDS/DACP.  Cells fan out
+//! over `opts.jobs` scoped worker threads (`util::par::map_up_to`,
+//! `--jobs`); results are reduced serially in grid order, so the emitted
+//! JSON is byte-identical regardless of job count (measured wall-clock
+//! aside — pin it with `deterministic_timing` for exact comparisons).
+//! Emits the machine-readable `BENCH_e2e.json` that tracks the repo's
+//! headline number across PRs (`skrull e2e`), and validates it for CI
 //! (`skrull e2e --validate`).
 
 use std::fmt::Write as _;
+use std::time::Instant;
 
-use crate::cluster::run::{simulate_run, RunConfig, RunReport};
+use crate::cluster::run::{build_run, price_run, RunConfig, RunReport};
 use crate::cluster::Topology;
 use crate::config::{CostSource, ExperimentConfig, Policy};
 use crate::data::{Dataset, LengthDistribution};
@@ -20,6 +31,7 @@ use crate::memplan::MemoryConfig;
 use crate::model::ModelSpec;
 use crate::perfmodel::CostModel;
 use crate::util::error::{Context, Result};
+use crate::util::par;
 use crate::util::stats::Summary;
 
 /// Sweep order: the baseline must come first so every other cell of the
@@ -31,6 +43,11 @@ pub const ALL_POLICIES: [Policy; 5] = [
     Policy::Skrull,
     Policy::SkrullRefined,
 ];
+
+/// Per-iteration scheduling wall-clock substituted under
+/// `E2eOptions::deterministic_timing` (1 µs — small enough to keep the
+/// near-zero-overhead picture, nonzero so the exposure math still runs).
+pub const DETERMINISTIC_SCHED_SECONDS: f64 = 1e-6;
 
 /// Sweep parameters.
 #[derive(Clone, Debug)]
@@ -59,8 +76,24 @@ pub struct E2eOptions {
     /// `CostSource::Calibrated` each cell additionally reports
     /// `estimator_error` — the mean per-iteration relative deviation of
     /// the calibrated model's predictions from the analytic ground truth
-    /// on the same schedules (the round-trip quality metric).
+    /// on the same schedules (the round-trip quality metric), computed by
+    /// repricing the cell's built schedules, not by re-running them.
     pub cost: CostSource,
+    /// Worker threads for the cell fan-out (`--jobs` / `run.jobs`);
+    /// clamped ≥ 1, where 1 is the serial path.  Every cell is an
+    /// independent (topology, dataset, seed, policy) unit, so the job
+    /// count changes wall-clock only, never results.  With jobs > 1 each
+    /// cell's scheduler runs single-threaded (`RunConfig::
+    /// serial_scheduler`) so nested fan-outs don't oversubscribe the
+    /// cores or inflate the measured `sched_seconds`; jobs == 1 keeps
+    /// the scheduler's own per-rank fan-out, the pre-split behaviour.
+    pub jobs: usize,
+    /// Replace each cell's *measured* scheduling wall-clock with
+    /// [`DETERMINISTIC_SCHED_SECONDS`] and report `sweep_seconds` as 0 —
+    /// the only nondeterministic inputs pinned, so two sweeps (any job
+    /// counts) emit byte-identical `BENCH_e2e.json`.  For determinism
+    /// tests/CI; production sweeps keep real measurements.
+    pub deterministic_timing: bool,
 }
 
 impl E2eOptions {
@@ -78,6 +111,8 @@ impl E2eOptions {
             epoch: false,
             memory: MemoryConfig::default(),
             cost: CostSource::Analytic,
+            jobs: par::max_threads().max(1),
+            deterministic_timing: false,
         }
     }
 
@@ -128,6 +163,10 @@ pub struct E2eSweep {
     /// `"analytic"` or `"calibrated"` — decides the validator's
     /// `estimator_error` gate.
     pub cost_source: String,
+    /// measured wall-clock of the whole sweep (0.0 under
+    /// `deterministic_timing`) — the harness's own speed, tracked across
+    /// PRs alongside the numbers it produces
+    pub sweep_seconds: f64,
     pub cells: Vec<E2eCell>,
 }
 
@@ -139,9 +178,104 @@ impl E2eSweep {
     }
 }
 
+/// One fanned-out unit of sweep work: a (topology, dataset, seed, policy)
+/// cell-run, independent of every other unit.
+#[derive(Clone, Copy)]
+struct CellJob {
+    ti: usize,
+    di: usize,
+    si: usize,
+    pi: usize,
+}
+
+/// What one cell-run produced (moved out of the fan-out by the reducer).
+struct CellRun {
+    report: RunReport,
+    wall: f64,
+    batch_size: usize,
+    estimator_error: f64,
+}
+
+/// One cell group's shared experiment config (everything but the policy);
+/// capacity resolution and workload truncation derive from it and are
+/// policy-independent, so they are hoisted out of the per-policy cells.
+fn cell_config(
+    opts: &E2eOptions,
+    name: &str,
+    (dp, cp): (usize, usize),
+    seed: u64,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
+    cfg.cluster.dp = dp;
+    cfg.cluster.cp = cp;
+    if let Some(b) = opts.batch_size {
+        cfg.cluster.batch_size = b;
+    }
+    cfg.seed = seed;
+    cfg.pipelined = opts.pipelined;
+    cfg.memory = opts.memory.clone();
+    cfg.cost = opts.cost.clone();
+    cfg
+}
+
+/// Build + price one cell: exactly one scheduling pass, however many
+/// pricings the cost source needs.  `ds` arrives already truncated to the
+/// group's resolved capacity.
+fn run_cell(
+    opts: &E2eOptions,
+    ds: &Dataset,
+    name: &str,
+    (dp, cp): (usize, usize),
+    seed: u64,
+    policy: Policy,
+    primary: bool,
+) -> Result<CellRun> {
+    let mut cfg = cell_config(opts, name, (dp, cp), seed);
+    cfg.policy = policy;
+    let cost = cfg.cost_model();
+    let mut run = if opts.epoch {
+        RunConfig::epoch(opts.pipelined)
+    } else {
+        RunConfig::new(opts.iterations, opts.pipelined)
+    };
+    // the sweep already parallelizes across cells: keep each cell's
+    // scheduler single-threaded so jobs × per-rank fan-outs don't
+    // oversubscribe the cores and inflate the measured sched_seconds.
+    // --jobs 1 keeps the scheduler's own fan-out, i.e. today's serial
+    // sweep behaves exactly as before the cell fan-out existed.
+    run.serial_scheduler = opts.jobs > 1;
+    let mut built = build_run(ds, &cfg, &run).with_context(|| {
+        format!("{} on {name} <DP={dp},CP={cp}> seed {seed}", policy.name())
+    })?;
+    if opts.deterministic_timing {
+        built.pin_sched_seconds(DETERMINISTIC_SCHED_SECONDS);
+    }
+    let report = price_run(&built, &cost, &built.topology);
+    // calibration quality: *reprice* the same built schedules under the
+    // analytic ground truth and compare per-iteration execution
+    // predictions — zero additional GDS/DACP work (the pre-split engine
+    // re-ran the whole scheduler here, ~2x scheduling per calibrated cell)
+    let estimator_err = if primary && opts.cost.profile().is_some() {
+        let analytic = CostModel::paper_default(&cfg.model);
+        let truth = price_run(&built, &analytic, &built.topology);
+        estimator_error(&report, &truth)
+    } else {
+        0.0
+    };
+    Ok(CellRun {
+        wall: report.wall_seconds(),
+        batch_size: cfg.cluster.batch_size,
+        report,
+        estimator_error: estimator_err,
+    })
+}
+
 /// Run the full sweep: for each (topology, dataset, seed), all policies
-/// over the *same* synthesized workload, baseline first.
+/// over the *same* synthesized workload, baseline first.  Cell-runs fan
+/// out over `opts.jobs` workers; the reduction is serial and in grid
+/// order, so output does not depend on the job count.
 pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
+    let t_sweep = Instant::now();
     crate::ensure!(
         opts.epoch || opts.iterations > 0,
         "e2e sweep needs at least 1 iteration (or --epoch)"
@@ -151,76 +285,112 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
     crate::ensure!(!opts.seeds.is_empty(), "e2e sweep needs at least one seed");
     // a profile fitted on another model must not steer this sweep
     opts.cost.ensure_model(opts.model.name)?;
-    let np = ALL_POLICIES.len();
-    let mut cells = Vec::new();
     for &(dp, cp) in &opts.topologies {
         // the paper's testbed bounds + power-of-two CP check
         Topology::paper_testbed(dp, cp)
             .with_context(|| format!("invalid topology dp={dp} cp={cp}"))?;
+    }
+    let dists: Vec<LengthDistribution> = opts
+        .datasets
+        .iter()
+        .map(|name| {
+            LengthDistribution::by_name(name)
+                .with_context(|| format!("unknown dataset {name:?}"))
+        })
+        .collect::<Result<_>>()?;
+
+    let np = ALL_POLICIES.len();
+    let ns = opts.seeds.len();
+    let jobs = opts.jobs.max(1);
+
+    // hoisted per-(dataset, seed) dataset construction: the same untruncated
+    // workload feeds every topology and policy (the per-topology loop used
+    // to re-synthesize it); indexed di * ns + si
+    let ds_keys: Vec<(usize, usize)> = (0..opts.datasets.len())
+        .flat_map(|di| (0..ns).map(move |si| (di, si)))
+        .collect();
+    let base_datasets: Vec<Dataset> = par::map_up_to(jobs, &ds_keys, |_, &(di, si)| {
+        Dataset::synthesize(&dists[di], opts.dataset_samples, opts.seeds[si] ^ 0xD5)
+    });
+
+    // hoisted per-(topology, dataset, seed) capacity resolution +
+    // truncation: both are policy-independent, so one truncated workload
+    // serves a group's five policy cells; indexed (ti * nd + di) * ns + si
+    let nd = opts.datasets.len();
+    let trunc_keys: Vec<(usize, usize, usize)> = (0..opts.topologies.len())
+        .flat_map(|ti| (0..nd).flat_map(move |di| (0..ns).map(move |si| (ti, di, si))))
+        .collect();
+    let truncated: Vec<Dataset> = par::map_up_to(jobs, &trunc_keys, |_, &(ti, di, si)| {
+        let (dp, cp) = opts.topologies[ti];
+        let name = &opts.datasets[di];
+        let cfg = cell_config(opts, name, (dp, cp), opts.seeds[si])
+            .resolve_capacity()
+            .with_context(|| format!("resolving capacity for {name} <DP={dp},CP={cp}>"))?;
+        Ok(base_datasets[di * ns + si].truncated(cfg.bucket_size * cp as u32))
+    })
+    .into_iter()
+    .collect::<Result<_>>()?;
+
+    // one job per (topology, dataset, seed, policy), in grid order — the
+    // same order the serial reduction below consumes them in
+    let cell_jobs: Vec<CellJob> = (0..opts.topologies.len())
+        .flat_map(|ti| {
+            (0..opts.datasets.len()).flat_map(move |di| {
+                (0..ns).flat_map(move |si| (0..np).map(move |pi| CellJob { ti, di, si, pi }))
+            })
+        })
+        .collect();
+    // round-robin permutation before the contiguous-chunking fan-out:
+    // each worker's chunk takes a *strided* slice of the grid, so
+    // heterogeneous cell costs (a slow topology or dataset clustered
+    // together in grid order) spread evenly instead of serializing on one
+    // worker.  Results are scattered back to grid order, so the output is
+    // independent of both the permutation and the job count.
+    let n_cells = cell_jobs.len();
+    let stride = jobs.min(n_cells).max(1);
+    let order: Vec<usize> = (0..stride)
+        .flat_map(|c| (c..n_cells).step_by(stride))
+        .collect();
+    let permuted: Vec<CellJob> = order.iter().map(|&gi| cell_jobs[gi]).collect();
+    let permuted_results = par::map_up_to(jobs, &permuted, |_, job| {
+        let &CellJob { ti, di, si, pi } = job;
+        Some(run_cell(
+            opts,
+            &truncated[(ti * nd + di) * ns + si],
+            &opts.datasets[di],
+            opts.topologies[ti],
+            opts.seeds[si],
+            ALL_POLICIES[pi],
+            si == 0,
+        ))
+    });
+    let mut results: Vec<Option<Result<CellRun>>> = (0..n_cells).map(|_| None).collect();
+    for (&gi, r) in order.iter().zip(permuted_results) {
+        results[gi] = r;
+    }
+
+    // serial reduction in grid order: baselines, speedups, cross-seed
+    // statistics, cells
+    let mut cells = Vec::new();
+    let mut idx = 0usize;
+    for &(dp, cp) in &opts.topologies {
         for name in &opts.datasets {
-            let dist = LengthDistribution::by_name(name)
-                .with_context(|| format!("unknown dataset {name:?}"))?;
             let mut walls: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
             let mut speedups: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
             let mut primaries: Vec<Option<(RunReport, f64, usize, f64)>> =
                 (0..np).map(|_| None).collect();
-            for (si, &seed) in opts.seeds.iter().enumerate() {
-                let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
-                cfg.cluster.dp = dp;
-                cfg.cluster.cp = cp;
-                if let Some(b) = opts.batch_size {
-                    cfg.cluster.batch_size = b;
-                }
-                cfg.seed = seed;
-                cfg.pipelined = opts.pipelined;
-                cfg.memory = opts.memory.clone();
-                cfg.cost = opts.cost.clone();
-                // resolve the capacity authority so the dataset truncation
-                // below sees the same C the schedulers will use
-                let cfg = cfg
-                    .resolve_capacity()
-                    .with_context(|| format!("resolving capacity for {name} <DP={dp},CP={cp}>"))?;
-                let ds = Dataset::synthesize(&dist, opts.dataset_samples, seed ^ 0xD5)
-                    .truncated(cfg.bucket_size * cp as u32);
-                let cost = cfg.cost_model();
-                let run = if opts.epoch {
-                    RunConfig::epoch(opts.pipelined)
-                } else {
-                    RunConfig::new(opts.iterations, opts.pipelined)
-                };
-
+            for si in 0..ns {
                 let mut baseline_wall = None;
-                for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
-                    let mut pcfg = cfg.clone();
-                    pcfg.policy = policy;
-                    let report = simulate_run(&ds, &pcfg, &cost, &run).with_context(|| {
-                        format!("{} on {name} <DP={dp},CP={cp}> seed {seed}", policy.name())
-                    })?;
-                    let wall = report.wall_seconds();
-                    let base = *baseline_wall.get_or_insert(wall);
-                    let speedup = if wall > 0.0 { base / wall } else { f64::INFINITY };
-                    walls[pi].push(wall);
+                for pi in 0..np {
+                    let r = results[idx].take().expect("each job reduced once")?;
+                    idx += 1;
+                    let base = *baseline_wall.get_or_insert(r.wall);
+                    let speedup = if r.wall > 0.0 { base / r.wall } else { f64::INFINITY };
+                    walls[pi].push(r.wall);
                     speedups[pi].push(speedup);
                     if si == 0 {
-                        // calibration quality: replay the same schedules
-                        // through the analytic ground truth and compare
-                        // per-iteration execution predictions.  This
-                        // re-runs the scheduler per cell (schedules are
-                        // deterministic so both runs agree); repricing the
-                        // already-built schedules would halve the cost of
-                        // calibrated sweeps but needs the run engine to
-                        // expose them — a deliberate simplicity tradeoff.
-                        let est_err = if opts.cost.profile().is_some() {
-                            let analytic = CostModel::paper_default(&cfg.model);
-                            let truth =
-                                simulate_run(&ds, &pcfg, &analytic, &run).with_context(|| {
-                                    format!("analytic reference for {}", policy.name())
-                                })?;
-                            estimator_error(&report, &truth)
-                        } else {
-                            0.0
-                        };
-                        primaries[pi] = Some((report, speedup, pcfg.cluster.batch_size, est_err));
+                        primaries[pi] =
+                            Some((r.report, speedup, r.batch_size, r.estimator_error));
                     }
                 }
             }
@@ -240,7 +410,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                     wall_std: walls[pi].std(),
                     speedup_mean: speedups[pi].mean(),
                     speedup_std: speedups[pi].std(),
-                    runs: opts.seeds.len(),
+                    runs: ns,
                 });
             }
         }
@@ -252,6 +422,11 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
         epoch: opts.epoch,
         seeds: opts.seeds.clone(),
         cost_source: opts.cost.name().to_string(),
+        sweep_seconds: if opts.deterministic_timing {
+            0.0
+        } else {
+            t_sweep.elapsed().as_secs_f64()
+        },
         cells,
     })
 }
@@ -283,12 +458,13 @@ pub fn render_json(sweep: &E2eSweep) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"bench\": \"e2e\",");
-    let _ = writeln!(out, "  \"schema_version\": 3,");
+    let _ = writeln!(out, "  \"schema_version\": 4,");
     let _ = writeln!(out, "  \"model\": \"{}\",", json_str(&sweep.model));
     let _ = writeln!(out, "  \"iterations\": {},", sweep.iterations);
     let _ = writeln!(out, "  \"pipelined\": {},", sweep.pipelined);
     let _ = writeln!(out, "  \"epoch\": {},", sweep.epoch);
     let _ = writeln!(out, "  \"cost_source\": \"{}\",", json_str(&sweep.cost_source));
+    let _ = writeln!(out, "  \"sweep_seconds\": {:e},", sweep.sweep_seconds);
     let seeds: Vec<String> = sweep.seeds.iter().map(|s| s.to_string()).collect();
     let _ = writeln!(out, "  \"seeds\": [{}],", seeds.join(", "));
     out.push_str("  \"cells\": [\n");
@@ -306,7 +482,8 @@ pub fn render_json(sweep: &E2eSweep) -> String {
              \"speedup_std\": {:.4}, \"runs\": {}, \"utilization\": {:.4}, \
              \"effective_utilization\": {:.4}, \"sched_overhead_fraction\": {:e}, \
              \"padding_fraction\": {:.4}, \"peak_mem_fraction\": {:.6}, \
-             \"oom_count\": {}, \"dp_imbalance\": {:.4}, \"micro_batches\": {}}}{}",
+             \"oom_count\": {}, \"dp_imbalance\": {:.4}, \"micro_batches\": {}, \
+             \"sched_invocations\": {}}}{}",
             json_str(c.policy.name()),
             json_str(&c.dataset),
             c.dp,
@@ -333,6 +510,7 @@ pub fn render_json(sweep: &E2eSweep) -> String {
             r.oom_count(),
             r.mean_dp_imbalance(),
             r.total_micro_batches(),
+            r.sched_invocations,
             if i + 1 == sweep.cells.len() { "" } else { "," }
         );
     }
@@ -341,7 +519,7 @@ pub fn render_json(sweep: &E2eSweep) -> String {
 }
 
 /// Top-level keys every `BENCH_e2e.json` must carry.
-const REQUIRED_TOP_KEYS: [&str; 8] = [
+const REQUIRED_TOP_KEYS: [&str; 9] = [
     "\"bench\"",
     "\"schema_version\"",
     "\"model\"",
@@ -349,11 +527,12 @@ const REQUIRED_TOP_KEYS: [&str; 8] = [
     "\"seeds\"",
     "\"epoch\"",
     "\"cost_source\"",
+    "\"sweep_seconds\"",
     "\"cells\"",
 ];
 
 /// Per-cell keys; the numeric ones are additionally checked for finiteness.
-const REQUIRED_CELL_KEYS: [&str; 15] = [
+const REQUIRED_CELL_KEYS: [&str; 16] = [
     "policy",
     "dataset",
     "dp",
@@ -369,6 +548,7 @@ const REQUIRED_CELL_KEYS: [&str; 15] = [
     "speedup_mean",
     "speedup_std",
     "peak_mem_fraction",
+    "sched_invocations",
 ];
 
 const FINITE_CELL_KEYS: [&str; 10] = [
@@ -403,14 +583,31 @@ fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
 }
 
 /// CI gate: does `text` look like a complete, sane `BENCH_e2e.json`?
-/// Checks required top-level and per-cell keys, rejects non-finite (or
-/// unparsable) values for every speedup/time/utilization/memory field,
-/// and enforces the memory-model consistency rule: a cell with no modeled
-/// OOM must report `peak_mem_fraction` in (0, 1].
+/// Checks required top-level and per-cell keys (schema v4: `sweep_seconds`
+/// and per-cell `sched_invocations`), rejects non-finite (or unparsable)
+/// values for every speedup/time/utilization/memory field, and enforces
+/// two consistency rules: an OOM-free cell must report
+/// `peak_mem_fraction` in (0, 1], and — the build-once guarantee — every
+/// non-epoch cell's `sched_invocations` must equal the sweep's iteration
+/// count exactly (one GDS/DACP pass per played iteration, no 2x work).
 pub fn validate_json(text: &str) -> Result<()> {
     for key in REQUIRED_TOP_KEYS {
         crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
     }
+    // schema v4 or later
+    let version: u64 = values_after(text, "schema_version")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable schema_version"))?;
+    crate::ensure!(version >= 4, "schema_version {version} predates v4");
+    let sweep_s: f64 = values_after(text, "sweep_seconds")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable sweep_seconds"))?;
+    crate::ensure!(
+        sweep_s.is_finite() && sweep_s >= 0.0,
+        "sweep_seconds {sweep_s} is not a finite non-negative number"
+    );
     let n_cells = values_after(text, "policy").len();
     crate::ensure!(n_cells > 0, "no cells in BENCH_e2e.json");
     for key in REQUIRED_CELL_KEYS {
@@ -446,6 +643,32 @@ pub fn validate_json(text: &str) -> Result<()> {
             crate::ensure!(
                 frac > 0.0 && frac <= 1.0,
                 "cell {i}: peak_mem_fraction {frac} outside (0, 1] with no OOM flagged"
+            );
+        }
+    }
+    // the build-once gate: every cell scheduled exactly once per played
+    // iteration.  Outside epoch mode the iteration count is the top-level
+    // `iterations`; in epoch mode it is per-cell (the epoch length), so
+    // only positivity can be checked from the file alone.
+    let epoch = values_after(text, "epoch")
+        .first()
+        .map(|v| *v == "true")
+        .unwrap_or(false);
+    let iterations: u64 = values_after(text, "iterations")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable top-level iterations"))?;
+    for (i, v) in values_after(text, "sched_invocations").iter().enumerate() {
+        let n: u64 = v.parse().map_err(|_| {
+            crate::anyhow!("cell {i}: \"sched_invocations\" value {v:?} is not an integer")
+        })?;
+        if epoch {
+            crate::ensure!(n >= 1, "cell {i}: sched_invocations {n} < 1");
+        } else {
+            crate::ensure!(
+                n == iterations,
+                "cell {i}: sched_invocations {n} != iterations {iterations} — \
+                 the one-pass-per-iteration guarantee is broken"
             );
         }
     }
@@ -495,6 +718,8 @@ mod tests {
             epoch: false,
             memory: MemoryConfig::default(),
             cost: CostSource::Analytic,
+            jobs: 1,
+            deterministic_timing: false,
         }
     }
 
@@ -503,6 +728,7 @@ mod tests {
         let sweep = run_sweep(&tiny_opts()).unwrap();
         assert_eq!(sweep.cells.len(), ALL_POLICIES.len());
         assert_eq!(sweep.cost_source, "analytic");
+        assert!(sweep.sweep_seconds > 0.0);
         let base = sweep.cell(Policy::Baseline, "chatqa2", 4, 8).unwrap();
         assert!((base.speedup_vs_baseline - 1.0).abs() < 1e-12);
         for c in &sweep.cells {
@@ -510,6 +736,8 @@ mod tests {
             assert!(c.report.wall_seconds() > 0.0);
             // analytic ground truth deviates from itself by nothing
             assert_eq!(c.estimator_error, 0.0);
+            // build-once: one scheduling pass per played iteration
+            assert_eq!(c.report.sched_invocations, 2);
             // single-seed sweep: means collapse onto the primary run
             assert_eq!(c.runs, 1);
             assert_eq!(c.wall_mean, c.report.wall_seconds());
@@ -530,6 +758,24 @@ mod tests {
             "skrull speedup {} ≤ 1.0",
             sk.speedup_vs_baseline
         );
+    }
+
+    #[test]
+    fn parallel_sweep_emits_byte_identical_json() {
+        // the --jobs knob is a wall-clock lever only: with measured timing
+        // pinned, any worker count produces the same file byte for byte
+        let mut o = tiny_opts();
+        o.deterministic_timing = true;
+        o.seeds = vec![11, 12];
+        o.jobs = 1;
+        let serial = render_json(&run_sweep(&o).unwrap());
+        for jobs in [2, 4, 16] {
+            o.jobs = jobs;
+            let parallel = render_json(&run_sweep(&o).unwrap());
+            assert_eq!(serial, parallel, "jobs={jobs} diverged from serial");
+        }
+        validate_json(&serial).unwrap();
+        assert!(serial.contains("\"sweep_seconds\": 0e0"));
     }
 
     #[test]
@@ -615,6 +861,8 @@ mod tests {
         for c in &sweep.cells {
             assert_eq!(c.report.iterations.len(), 100usize.div_ceil(16));
             assert_eq!(c.report.data_tokens, ds.total_tokens(), "{}", c.policy.name());
+            // epoch cells schedule once per epoch batch
+            assert_eq!(c.report.sched_invocations, 100usize.div_ceil(16));
         }
         let json = render_json(&sweep);
         assert!(json.contains("\"epoch\": true"));
@@ -659,13 +907,34 @@ mod tests {
         let broken = json.replacen("\"oom_count\": 0", "\"oom_count\": 0.5", 1);
         assert_ne!(broken, json, "mutation must apply");
         assert!(validate_json(&broken).is_err());
-        // schema v3: estimator_error and cost_source are mandatory
-        assert!(json.contains("\"schema_version\": 3"));
+        // schema v4: cost_source, sweep_seconds and sched_invocations are
+        // mandatory, and the version itself is gated
+        assert!(json.contains("\"schema_version\": 4"));
         assert!(json.contains("\"cost_source\": \"analytic\""));
+        assert!(json.contains("\"sweep_seconds\""));
         let broken = json.replace("\"estimator_error\"", "\"est_err\"");
         assert!(validate_json(&broken).is_err());
         let broken = json.replace("\"cost_source\"", "\"cost_src\"");
         assert!(validate_json(&broken).is_err());
+        let broken = json.replace("\"schema_version\": 4", "\"schema_version\": 3");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replace("\"sweep_seconds\"", "\"sweep_secs\"");
+        assert!(validate_json(&broken).is_err());
+        let sweep_sample = values_after(&json, "sweep_seconds")[0].to_string();
+        let broken = json.replacen(
+            &format!("\"sweep_seconds\": {sweep_sample}"),
+            "\"sweep_seconds\": -1.0",
+            1,
+        );
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // the one-pass gate: sched_invocations must equal iterations (2)
+        let broken = json.replace("\"sched_invocations\"", "\"sched_invoc\"");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replacen("\"sched_invocations\": 2", "\"sched_invocations\": 4", 1);
+        assert_ne!(broken, json, "mutation must apply");
+        let err = validate_json(&broken).unwrap_err().to_string();
+        assert!(err.contains("one-pass-per-iteration"), "{err}");
         // a calibrated sweep is gated on estimator_error ≤ 5%; an analytic
         // one carries the same field ungated
         let sample = values_after(&json, "estimator_error")[0].to_string();
@@ -718,6 +987,9 @@ mod tests {
         let mut o = tiny_opts();
         o.memory.source = CapacitySource::HbmDerived;
         o.memory.hbm_gb = 0.25;
+        assert!(run_sweep(&o).is_err());
+        // ... also when the cells run on worker threads
+        o.jobs = 4;
         assert!(run_sweep(&o).is_err());
     }
 }

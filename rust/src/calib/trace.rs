@@ -166,11 +166,20 @@ pub fn emit_calibration_sweep(opts: &EmitOptions) -> Result<Trace> {
         opts.bucket_scales.iter().all(|&s| s > 0.0 && s <= 1.0),
         "bucket scales must be in (0, 1]"
     );
-    let mut records = Vec::new();
-    for &(dp, cp) in &opts.topologies {
-        for name in &opts.datasets {
+    // hoisted per-dataset synthesis: the same untruncated workload feeds
+    // every (topology, bucket-scale) combination
+    let base_datasets: Vec<Dataset> = opts
+        .datasets
+        .iter()
+        .map(|name| {
             let dist = LengthDistribution::by_name(name)
                 .with_context(|| format!("unknown dataset {name:?}"))?;
+            Ok(Dataset::synthesize(&dist, opts.dataset_samples, opts.seed ^ 0xD5))
+        })
+        .collect::<Result<_>>()?;
+    let mut records = Vec::new();
+    for &(dp, cp) in &opts.topologies {
+        for (name, base) in opts.datasets.iter().zip(&base_datasets) {
             for &scale in &opts.bucket_scales {
                 let mut cfg = ExperimentConfig::paper_default(opts.model.clone(), name);
                 cfg.cluster.dp = dp;
@@ -179,8 +188,7 @@ pub fn emit_calibration_sweep(opts: &EmitOptions) -> Result<Trace> {
                 cfg.policy = Policy::Skrull;
                 cfg.seed = opts.seed;
                 cfg.bucket_size = ((cfg.bucket_size as f64 * scale) as u32).max(1024);
-                let ds = Dataset::synthesize(&dist, opts.dataset_samples, opts.seed ^ 0xD5)
-                    .truncated(cfg.bucket_size * cp as u32);
+                let ds = base.truncated(cfg.bucket_size * cp as u32);
                 let cost = cfg.cost_model();
                 let run = RunConfig::new(opts.iterations, false);
                 let (_, recs) = simulate_run_traced(&ds, &cfg, &cost, &run).with_context(

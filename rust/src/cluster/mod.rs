@@ -9,6 +9,9 @@ pub mod sim;
 pub mod topology;
 pub mod trace;
 
-pub use run::{simulate_run, BatchSource, IterationRecord, LoaderMode, RunConfig, RunReport};
+pub use run::{
+    build_run, price_run, price_run_traced, simulate_run, simulate_run_traced, BatchSource,
+    BuiltIteration, BuiltRun, IterationRecord, LoaderMode, RunConfig, RunReport,
+};
 pub use sim::{simulate_iteration, simulate_iteration_on, IterationSim, MicroBatchSim};
 pub use topology::Topology;

@@ -2,10 +2,29 @@
 //! paper's headline claim (3.76x mean / 7.54x max over DeepSpeed on real
 //! Long-SFT runs, Section 5).
 //!
-//! Plays N consecutive global batches drawn from a [`ScheduledLoader`]
-//! through the per-iteration cost model ([`simulate_iteration`]),
-//! accumulating total wall-clock, per-GPU busy/idle, padding waste and
-//! scheduling overhead.  Two loader modes:
+//! The engine is split into two phases with a first-class intermediate:
+//!
+//! * [`build_run`] drives the scheduling [`ScheduledLoader`] exactly once
+//!   and captures everything the scheduler produced — per-iteration global
+//!   batches, their [`IterationSchedule`]s, the measured scheduling
+//!   wall-clock, and the loader's invocation counter — into a
+//!   [`BuiltRun`].  Building is the only phase that performs GDS/DACP
+//!   work.
+//! * [`price_run`] replays a `BuiltRun` through a cost model on a
+//!   topology: pure, deterministic, allocation-lean pricing that produces
+//!   the full [`RunReport`] (wall-clock, per-GPU busy, padding, exposed
+//!   scheduling, per-rank peak memory + OOM events).
+//!   [`price_run_traced`] additionally emits the calibration-trace lane
+//!   from the same pass.
+//!
+//! Build once, price many: the calibrated e2e sweep prices each built
+//! schedule under both the calibrated and the analytic model to compute
+//! `estimator_error` without a second scheduling pass, and the chrome
+//! trace (`cluster::trace::run_trace_built`) renders from the same
+//! `BuiltRun`.  [`simulate_run`] / [`simulate_run_traced`] are the
+//! one-shot compositions.
+//!
+//! Two loader modes:
 //!
 //! * **Synchronous** — schedule, then execute: every scheduling call is on
 //!   the critical path, so overhead is additive.
@@ -25,7 +44,7 @@ use crate::cluster::topology::Topology;
 use crate::config::ExperimentConfig;
 use crate::data::loader::ScheduledLoader;
 use crate::data::{Dataset, Sequence};
-use crate::memplan::{self, CapacitySource, IterationMemory, OomEvent};
+use crate::memplan::{self, CapacitySource, IterationMemory, MemPlan, OomEvent};
 use crate::perfmodel::CostModel;
 use crate::scheduler::plan::{IterationSchedule, MicroBatch, SchedError};
 
@@ -67,6 +86,13 @@ pub struct RunConfig {
     pub iterations: usize,
     pub mode: LoaderMode,
     pub source: BatchSource,
+    /// Disable the scheduler's *internal* thread fan-out (GDS per-rank /
+    /// refinement threads) for this run.  Set by callers that already
+    /// parallelize at a coarser grain — the e2e sweep's per-cell workers —
+    /// so nested fan-outs don't oversubscribe the cores and contaminate
+    /// the measured `sched_seconds`.  Schedules are byte-identical either
+    /// way (gds oracle tests).
+    pub serial_scheduler: bool,
 }
 
 impl RunConfig {
@@ -75,6 +101,7 @@ impl RunConfig {
             iterations,
             mode: if pipelined { LoaderMode::Pipelined } else { LoaderMode::Synchronous },
             source: BatchSource::Sampled,
+            serial_scheduler: false,
         }
     }
 
@@ -83,6 +110,69 @@ impl RunConfig {
         let mut run = Self::new(0, pipelined);
         run.source = BatchSource::Epoch;
         run
+    }
+}
+
+/// One iteration as the scheduler produced it: the sampled global batch,
+/// its schedule, the measured scheduling wall-clock, and every piece of
+/// per-iteration accounting that does *not* depend on the cost model —
+/// computed once at build time so repricing is pure cost arithmetic.
+#[derive(Clone, Debug)]
+pub struct BuiltIteration {
+    pub batch: Vec<Sequence>,
+    pub schedule: IterationSchedule,
+    /// measured wall-clock of this iteration's scheduling call
+    pub sched_seconds: f64,
+    /// real data tokens in the global batch
+    pub data_tokens: u64,
+    /// padding tokens under static per-rank C-token buckets
+    pub padded_tokens: u64,
+    /// total bucket tokens executed (data + padding)
+    pub bucket_tokens: u64,
+    pub micro_batches: usize,
+    /// memplan peak-memory simulation of this iteration (per-GPU peaks +
+    /// OOM events) — a function of the schedule and the memory plan only
+    pub memory: IterationMemory,
+}
+
+/// Everything one pass of the scheduling DataLoader produced, ready to be
+/// priced under any cost model/topology pair (see the module docs).
+#[derive(Clone, Debug)]
+pub struct BuiltRun {
+    pub dp: usize,
+    pub cp: usize,
+    /// resolved token capacity C the schedules were built against
+    pub bucket_size: u32,
+    pub mode: LoaderMode,
+    /// where `bucket_size` came from (hand-set vs memplan-derived)
+    pub capacity_source: CapacitySource,
+    /// the physical layout the run's config mapped onto — the canonical
+    /// topology [`simulate_run`] prices under
+    pub topology: Topology,
+    /// the experiment's resolved memory plan (calibrated activation curve
+    /// when the config carried a profile with a memory fit)
+    pub mem: MemPlan,
+    pub iterations: Vec<BuiltIteration>,
+    /// GDS/DACP passes the loader performed building this run — pricing
+    /// performs none, so this is the run's *total* scheduling work
+    pub sched_invocations: usize,
+}
+
+impl BuiltRun {
+    /// The built schedules, in iteration order.
+    pub fn schedules(&self) -> impl ExactSizeIterator<Item = &IterationSchedule> + '_ {
+        self.iterations.iter().map(|it| &it.schedule)
+    }
+
+    /// Overwrite every iteration's *measured* scheduling wall-clock with a
+    /// fixed value.  Measured time is the one nondeterministic input to
+    /// pricing; pinning it makes a priced report (and everything rendered
+    /// from it) byte-identical across repeat runs and thread counts — the
+    /// e2e sweep's determinism mode and test harnesses use this.
+    pub fn pin_sched_seconds(&mut self, per_iteration: f64) {
+        for it in &mut self.iterations {
+            it.sched_seconds = per_iteration;
+        }
     }
 }
 
@@ -141,6 +231,9 @@ pub struct RunReport {
     pub rank_peak_bytes: Vec<f64>,
     /// every modeled OOM across the run, with coordinates
     pub oom_events: Vec<OomEvent>,
+    /// GDS/DACP passes performed building this run's schedules — exactly
+    /// one per played iteration; repricing the same [`BuiltRun`] adds none
+    pub sched_invocations: usize,
 }
 
 impl RunReport {
@@ -250,12 +343,12 @@ impl RunReport {
 /// Padding accounting for one micro-batch under static per-rank buckets:
 /// every CP rank executes a C-token buffer; whatever its local sequences
 /// plus its 1/N shard of the distributed sequences don't fill is padding.
-/// The fill rule itself lives in [`MicroBatch::rank_used_tokens`], shared
-/// with memplan's peak-memory simulation.
+/// The fill rule itself lives in [`MicroBatch::rank_used_tokens_iter`],
+/// shared with memplan's peak-memory simulation.
 fn micro_batch_padding(mb: &MicroBatch, bucket_size: u32, cp: usize) -> (u64, u64) {
     let mut padded = 0u64;
     let mut bucket = 0u64;
-    for used in mb.rank_used_tokens(cp) {
+    for used in mb.rank_used_tokens_iter(cp) {
         // a baseline policy may overfill C; charge what actually runs
         let cap = (bucket_size as u64).max(used);
         padded += cap - used;
@@ -363,7 +456,7 @@ fn trace_record_for(
     let mut max_tokens = 0u64;
     for rank in &sched.ranks {
         for mb in &rank.micro_batches {
-            for used in mb.rank_used_tokens(cp) {
+            for used in mb.rank_used_tokens_iter(cp) {
                 max_tokens = max_tokens.max((bucket_size as u64).max(used));
             }
         }
@@ -374,20 +467,241 @@ fn trace_record_for(
     r
 }
 
-/// Play `run.iterations` consecutive global batches from a fresh
-/// [`ScheduledLoader`] over `ds` through the cost model.
+/// Drive the scheduling DataLoader once over `ds` and capture everything
+/// it produced.  This is the *only* phase that performs GDS/DACP work;
+/// the result can be priced any number of times by [`price_run`].
 ///
 /// `run.mode` is authoritative for the loader mode; `cfg.pipelined` is
 /// only the config-surface default callers feed into [`RunConfig::new`]
 /// (passing a different mode is how the e2e example contrasts the two
 /// modes on one config).
+pub fn build_run(
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    run: &RunConfig,
+) -> Result<BuiltRun, SchedError> {
+    // resolve the capacity authority up front: under HbmDerived the bucket
+    // size below is the memplan-derived C, and an infeasible HBM budget is
+    // an error before any scheduling happens
+    let cfg = cfg.resolve_capacity()?;
+    // cross-node CP groups pay inter-node bandwidth in the simulator; a
+    // layout the topology model cannot place (oversubscribed ranks, bad CP
+    // degree) is a configuration error, not a silent NVLink fallback
+    let topology = match cfg.cluster.topology() {
+        Ok(t) => t,
+        Err(e) => return Err(SchedError::BadTopology { reason: e.to_string() }),
+    };
+    let mem = cfg.mem_plan();
+    let (bucket_size, cp) = (cfg.bucket_size, cfg.cluster.cp);
+    let epoch_batches = match run.source {
+        BatchSource::Epoch => Some(ds.epoch_batches(cfg.cluster.batch_size, cfg.seed)),
+        BatchSource::Sampled => None,
+    };
+    let iterations = epoch_batches.as_ref().map_or(run.iterations, Vec::len);
+    let mut built: Vec<BuiltIteration> = Vec::with_capacity(iterations);
+    let sched_invocations;
+    {
+        // capture the iteration plus every cost-model-independent piece of
+        // accounting (padding, token sums, memory simulation) so pricing
+        // passes never recompute them
+        let mut capture = |i: usize, batch: &[Sequence], sched: &IterationSchedule, sched_s: f64| {
+            let mut padded = 0u64;
+            let mut bucket = 0u64;
+            let mut n_mb = 0usize;
+            for rank in &sched.ranks {
+                for mb in &rank.micro_batches {
+                    let (p, b) = micro_batch_padding(mb, bucket_size, cp);
+                    padded += p;
+                    bucket += b;
+                    n_mb += 1;
+                }
+            }
+            built.push(BuiltIteration {
+                batch: batch.to_vec(),
+                schedule: sched.clone(),
+                sched_seconds: sched_s,
+                data_tokens: batch.iter().map(|s| s.len as u64).sum(),
+                padded_tokens: padded,
+                bucket_tokens: bucket,
+                micro_batches: n_mb,
+                memory: memplan::iteration_memory(sched, &mem, bucket_size, cp, i),
+            });
+        };
+        let mut loader = ScheduledLoader::new(ds, &cfg);
+        loader.sched_parallel = !run.serial_scheduler;
+        sched_invocations = match (run.mode, &epoch_batches) {
+            (LoaderMode::Synchronous, None) => {
+                let mut loader = loader;
+                loader.run_synchronous(iterations, &mut capture)?;
+                loader.sched_invocations
+            }
+            (LoaderMode::Synchronous, Some(batches)) => {
+                let mut loader = loader;
+                loader.run_synchronous_batches(batches, &mut capture)?;
+                loader.sched_invocations
+            }
+            (LoaderMode::Pipelined, None) => {
+                loader.run_pipelined(iterations, &mut capture)?.sched_invocations
+            }
+            (LoaderMode::Pipelined, Some(batches)) => {
+                loader.run_pipelined_batches(batches, &mut capture)?.sched_invocations
+            }
+        };
+    }
+    Ok(BuiltRun {
+        dp: cfg.cluster.dp,
+        cp,
+        bucket_size,
+        mode: run.mode,
+        capacity_source: cfg.memory.source,
+        topology,
+        mem,
+        iterations: built,
+        sched_invocations,
+    })
+}
+
+/// Price a [`BuiltRun`] under a cost model on a topology: pure,
+/// deterministic (given the built run's captured scheduling wall-clock),
+/// and schedule-free — no GDS/DACP work happens here, so repricing under
+/// as many models as needed costs only simulation arithmetic.
+pub fn price_run(built: &BuiltRun, cost: &CostModel, topo: &Topology) -> RunReport {
+    price_run_impl(built, cost, topo, None)
+}
+
+/// [`price_run`] with the calibration trace emitter attached: alongside
+/// the report, returns one [`TraceRecord`] per iteration in the
+/// `calib::trace` schema — the measurements a real cluster's profiler
+/// would have produced for this run — from the same pricing pass.
+pub fn price_run_traced(
+    built: &BuiltRun,
+    cost: &CostModel,
+    topo: &Topology,
+) -> (RunReport, Vec<TraceRecord>) {
+    let mut records = Vec::with_capacity(built.iterations.len());
+    let report = price_run_impl(built, cost, topo, Some(&mut records));
+    (report, records)
+}
+
+fn price_run_impl(
+    built: &BuiltRun,
+    cost: &CostModel,
+    topo: &Topology,
+    mut trace: Option<&mut Vec<TraceRecord>>,
+) -> RunReport {
+    // pricing under a *differently-laid-out* topology (node-contained vs
+    // node-crossing) is the point of the API; pricing under a different
+    // dp×cp shape would silently drop all cross-node pricing via the
+    // defensive per-iteration fallback below — refuse loudly instead
+    // (PR 3 made unplaceable layouts a hard error for the same reason)
+    assert!(
+        topo.dp == built.dp && topo.cp == built.cp,
+        "price_run: topology is {}x{} but the built run is {}x{} — \
+         schedules can only be priced on the dp×cp shape they were built for",
+        topo.dp,
+        topo.cp,
+        built.dp,
+        built.cp,
+    );
+    let dp = built.dp;
+    let cp = built.cp;
+    let bucket_size = built.bucket_size;
+    let mem = &built.mem;
+    let mut records: Vec<IterationRecord> = Vec::with_capacity(built.iterations.len());
+    let mut rank_busy = vec![0.0f64; dp * cp];
+    let mut rank_peak = vec![0.0f64; dp * cp];
+    let mut oom_events: Vec<OomEvent> = Vec::new();
+
+    for (i, it) in built.iterations.iter().enumerate() {
+        let sched = &it.schedule;
+        let sim = if topo.dp == sched.ranks.len() {
+            simulate_iteration_on(sched, cost, topo)
+        } else {
+            simulate_iteration(sched, cost, cp)
+        };
+        // padding, token sums and the memory simulation are cost-model
+        // independent — read them off the built run instead of redoing
+        // the work on every pricing
+        let imem = &it.memory;
+        if let Some(out) = trace.as_deref_mut() {
+            let ctx = TraceCtx { cost, topo, bucket_size, cp };
+            out.push(trace_record_for(i, &it.batch, sched, &sim, imem, &ctx));
+        }
+        for (d, sims) in sim.micro_batches.iter().enumerate() {
+            for mbs in sims {
+                for (j, &busy) in mbs.busy.iter().enumerate() {
+                    rank_busy[d * cp + j] += busy;
+                }
+            }
+        }
+        for (g, &p) in imem.rank_peak_bytes.iter().enumerate() {
+            if p > rank_peak[g] {
+                rank_peak[g] = p;
+            }
+        }
+        oom_events.extend(imem.events.iter().cloned());
+        records.push(IterationRecord {
+            exec_seconds: sim.total_time,
+            grad_sync_seconds: sim.grad_sync,
+            sched_seconds: it.sched_seconds,
+            exposed_sched_seconds: 0.0, // finalized below, mode-dependent
+            utilization: sim.compute_utilization,
+            dp_imbalance: sim.dp_imbalance,
+            micro_batches: it.micro_batches,
+            data_tokens: it.data_tokens,
+            padded_tokens: it.padded_tokens,
+            bucket_tokens: it.bucket_tokens,
+            peak_mem_fraction: mem.fraction_of_hbm(imem.peak_bytes()),
+            rank_peak_bytes: imem.rank_peak_bytes.clone(),
+            oom_events: imem.events.len(),
+        });
+    }
+
+    // finalize exposed scheduling time: synchronous keeps everything on
+    // the critical path; pipelined hides sched(i+1) behind exec(i), so
+    // only the pipeline fill (iteration 0) and any sched time exceeding
+    // the previous iteration's execution are exposed
+    let mut prev_exec: Option<f64> = None;
+    for rec in &mut records {
+        rec.exposed_sched_seconds = match (built.mode, prev_exec) {
+            (LoaderMode::Synchronous, _) | (LoaderMode::Pipelined, None) => rec.sched_seconds,
+            (LoaderMode::Pipelined, Some(prev)) => (rec.sched_seconds - prev).max(0.0),
+        };
+        prev_exec = Some(rec.exec_seconds);
+    }
+
+    RunReport {
+        dp,
+        cp,
+        bucket_size,
+        mode: built.mode,
+        exec_seconds: records.iter().map(|r| r.exec_seconds).sum(),
+        sched_seconds: records.iter().map(|r| r.sched_seconds).sum(),
+        exposed_sched_seconds: records.iter().map(|r| r.exposed_sched_seconds).sum(),
+        data_tokens: records.iter().map(|r| r.data_tokens).sum(),
+        padded_tokens: records.iter().map(|r| r.padded_tokens).sum(),
+        bucket_tokens: records.iter().map(|r| r.bucket_tokens).sum(),
+        iterations: records,
+        rank_busy,
+        capacity_source: built.capacity_source,
+        hbm_bytes: mem.hbm_bytes,
+        rank_peak_bytes: rank_peak,
+        oom_events,
+        sched_invocations: built.sched_invocations,
+    }
+}
+
+/// Play `run.iterations` consecutive global batches from a fresh
+/// [`ScheduledLoader`] over `ds` through the cost model — the one-shot
+/// composition `price_run(build_run(..))`.
 pub fn simulate_run(
     ds: &Dataset,
     cfg: &ExperimentConfig,
     cost: &CostModel,
     run: &RunConfig,
 ) -> Result<RunReport, SchedError> {
-    simulate_run_impl(ds, cfg, cost, run, None)
+    let built = build_run(ds, cfg, run)?;
+    Ok(price_run(&built, cost, &built.topology))
 }
 
 /// [`simulate_run`] with the calibration trace emitter attached: alongside
@@ -400,148 +714,8 @@ pub fn simulate_run_traced(
     cost: &CostModel,
     run: &RunConfig,
 ) -> Result<(RunReport, Vec<TraceRecord>), SchedError> {
-    let mut records = Vec::new();
-    let report = simulate_run_impl(ds, cfg, cost, run, Some(&mut records))?;
-    Ok((report, records))
-}
-
-fn simulate_run_impl(
-    ds: &Dataset,
-    cfg: &ExperimentConfig,
-    cost: &CostModel,
-    run: &RunConfig,
-    mut trace: Option<&mut Vec<TraceRecord>>,
-) -> Result<RunReport, SchedError> {
-    // resolve the capacity authority up front: under HbmDerived the bucket
-    // size below is the memplan-derived C, and an infeasible HBM budget is
-    // an error before any scheduling happens
-    let cfg = cfg.resolve_capacity()?;
-    let dp = cfg.cluster.dp;
-    let cp = cfg.cluster.cp;
-    let bucket_size = cfg.bucket_size;
-    let mem = cfg.mem_plan();
-    // cross-node CP groups pay inter-node bandwidth in the simulator; a
-    // layout the topology model cannot place (oversubscribed ranks, bad CP
-    // degree) is a configuration error, not a silent NVLink fallback
-    let topo = match cfg.cluster.topology() {
-        Ok(t) => t,
-        Err(e) => return Err(SchedError::BadTopology { reason: e.to_string() }),
-    };
-    let epoch_batches = match run.source {
-        BatchSource::Epoch => Some(ds.epoch_batches(cfg.cluster.batch_size, cfg.seed)),
-        BatchSource::Sampled => None,
-    };
-    let iterations = epoch_batches.as_ref().map_or(run.iterations, Vec::len);
-    let mut records: Vec<IterationRecord> = Vec::with_capacity(iterations);
-    let mut rank_busy = vec![0.0f64; dp * cp];
-    let mut rank_peak = vec![0.0f64; dp * cp];
-    let mut oom_events: Vec<OomEvent> = Vec::new();
-
-    {
-        // shared per-iteration accounting for both loader modes
-        let mut record = |i: usize, batch: &[Sequence], sched: &IterationSchedule, sched_s: f64| {
-            let sim = if topo.dp == sched.ranks.len() {
-                simulate_iteration_on(sched, cost, &topo)
-            } else {
-                simulate_iteration(sched, cost, cp)
-            };
-            let imem = memplan::iteration_memory(sched, &mem, bucket_size, cp, i);
-            if let Some(out) = trace.as_deref_mut() {
-                let ctx = TraceCtx { cost, topo: &topo, bucket_size, cp };
-                out.push(trace_record_for(i, batch, sched, &sim, &imem, &ctx));
-            }
-            let mut padded = 0u64;
-            let mut bucket = 0u64;
-            let mut n_mb = 0usize;
-            for rank in &sched.ranks {
-                for mb in &rank.micro_batches {
-                    let (p, b) = micro_batch_padding(mb, bucket_size, cp);
-                    padded += p;
-                    bucket += b;
-                    n_mb += 1;
-                }
-            }
-            for (d, sims) in sim.micro_batches.iter().enumerate() {
-                for mbs in sims {
-                    for (j, &busy) in mbs.busy.iter().enumerate() {
-                        rank_busy[d * cp + j] += busy;
-                    }
-                }
-            }
-            for (g, &p) in imem.rank_peak_bytes.iter().enumerate() {
-                if p > rank_peak[g] {
-                    rank_peak[g] = p;
-                }
-            }
-            let n_oom = imem.events.len();
-            oom_events.extend(imem.events);
-            records.push(IterationRecord {
-                exec_seconds: sim.total_time,
-                grad_sync_seconds: sim.grad_sync,
-                sched_seconds: sched_s,
-                exposed_sched_seconds: 0.0, // finalized below, mode-dependent
-                utilization: sim.compute_utilization,
-                dp_imbalance: sim.dp_imbalance,
-                micro_batches: n_mb,
-                data_tokens: batch.iter().map(|s| s.len as u64).sum(),
-                padded_tokens: padded,
-                bucket_tokens: bucket,
-                peak_mem_fraction: mem.fraction_of_hbm(imem.peak_bytes()),
-                rank_peak_bytes: imem.rank_peak_bytes,
-                oom_events: n_oom,
-            });
-        };
-
-        let loader = ScheduledLoader::new(ds, cfg.clone());
-        match (run.mode, &epoch_batches) {
-            (LoaderMode::Synchronous, None) => {
-                let mut loader = loader;
-                loader.run_synchronous(iterations, &mut record)?;
-            }
-            (LoaderMode::Synchronous, Some(batches)) => {
-                let mut loader = loader;
-                loader.run_synchronous_batches(batches, &mut record)?;
-            }
-            (LoaderMode::Pipelined, None) => {
-                loader.run_pipelined(iterations, &mut record)?;
-            }
-            (LoaderMode::Pipelined, Some(batches)) => {
-                loader.run_pipelined_batches(batches, &mut record)?;
-            }
-        }
-    }
-
-    // finalize exposed scheduling time: synchronous keeps everything on
-    // the critical path; pipelined hides sched(i+1) behind exec(i), so
-    // only the pipeline fill (iteration 0) and any sched time exceeding
-    // the previous iteration's execution are exposed
-    let mut prev_exec: Option<f64> = None;
-    for rec in &mut records {
-        rec.exposed_sched_seconds = match (run.mode, prev_exec) {
-            (LoaderMode::Synchronous, _) | (LoaderMode::Pipelined, None) => rec.sched_seconds,
-            (LoaderMode::Pipelined, Some(prev)) => (rec.sched_seconds - prev).max(0.0),
-        };
-        prev_exec = Some(rec.exec_seconds);
-    }
-
-    Ok(RunReport {
-        dp,
-        cp,
-        bucket_size,
-        mode: run.mode,
-        exec_seconds: records.iter().map(|r| r.exec_seconds).sum(),
-        sched_seconds: records.iter().map(|r| r.sched_seconds).sum(),
-        exposed_sched_seconds: records.iter().map(|r| r.exposed_sched_seconds).sum(),
-        data_tokens: records.iter().map(|r| r.data_tokens).sum(),
-        padded_tokens: records.iter().map(|r| r.padded_tokens).sum(),
-        bucket_tokens: records.iter().map(|r| r.bucket_tokens).sum(),
-        iterations: records,
-        rank_busy,
-        capacity_source: cfg.memory.source,
-        hbm_bytes: mem.hbm_bytes,
-        rank_peak_bytes: rank_peak,
-        oom_events,
-    })
+    let built = build_run(ds, cfg, run)?;
+    Ok(price_run_traced(&built, cost, &built.topology))
 }
 
 #[cfg(test)]
@@ -596,11 +770,115 @@ mod tests {
         assert!(f > 0.0 && f <= 1.0, "peak fraction {f}");
         assert_eq!(r.oom_count(), 0);
         assert_eq!(r.capacity_source, crate::memplan::CapacitySource::Fixed);
+        // one GDS/DACP pass per played iteration, no more
+        assert_eq!(r.sched_invocations, 4);
         for rec in &r.iterations {
             assert!(rec.peak_mem_fraction > 0.0);
             assert_eq!(rec.rank_peak_bytes.len(), r.rank_peak_bytes.len());
             assert_eq!(rec.oom_events, 0);
         }
+    }
+
+    #[test]
+    fn build_once_captures_schedules_and_counts_invocations() {
+        let (ds, cfg, cost) = setup(Policy::Skrull);
+        let built = build_run(&ds, &cfg, &RunConfig::new(5, true)).unwrap();
+        assert_eq!(built.iterations.len(), 5);
+        // exactly one scheduling pass per iteration — the "no 2x work"
+        // guarantee as an assertion
+        assert_eq!(built.sched_invocations, 5);
+        assert_eq!(built.dp, cfg.cluster.dp);
+        assert_eq!(built.cp, cfg.cluster.cp);
+        assert_eq!(built.bucket_size, cfg.bucket_size);
+        assert_eq!(built.schedules().len(), 5);
+        for it in &built.iterations {
+            assert_eq!(it.batch.len(), cfg.cluster.batch_size);
+            assert!(it.sched_seconds >= 0.0);
+            let mut expect: Vec<u64> = it.batch.iter().map(|s| s.id).collect();
+            expect.sort_unstable();
+            assert_eq!(it.schedule.assigned_ids(), expect);
+        }
+        // pricing performs no scheduling: the counter is stable across
+        // arbitrarily many pricings of the same built run
+        let a = price_run(&built, &cost, &built.topology);
+        let b = price_run(&built, &cost, &built.topology);
+        assert_eq!(a.sched_invocations, 5);
+        assert_eq!(b.sched_invocations, 5);
+        assert_eq!(built.sched_invocations, 5);
+    }
+
+    #[test]
+    fn pricing_is_pure_same_built_run_same_report() {
+        let (ds, cfg, cost) = setup(Policy::SkrullRefined);
+        let built = build_run(&ds, &cfg, &RunConfig::new(3, true)).unwrap();
+        let a = price_run(&built, &cost, &built.topology);
+        let b = price_run(&built, &cost, &built.topology);
+        assert_eq!(a.exec_seconds, b.exec_seconds);
+        assert_eq!(a.sched_seconds, b.sched_seconds);
+        assert_eq!(a.exposed_sched_seconds, b.exposed_sched_seconds);
+        assert_eq!(a.rank_busy, b.rank_busy);
+        assert_eq!(a.rank_peak_bytes, b.rank_peak_bytes);
+        assert_eq!(a.data_tokens, b.data_tokens);
+        assert_eq!(a.padded_tokens, b.padded_tokens);
+    }
+
+    #[test]
+    fn repricing_under_another_model_changes_exec_not_schedules() {
+        // build once, price many: the same built run priced under a
+        // degraded interconnect is strictly slower, with identical
+        // scheduling accounting — no GDS/DACP rerun needed
+        let (ds, cfg, cost) = setup(Policy::Skrull);
+        let built = build_run(&ds, &cfg, &RunConfig::new(3, false)).unwrap();
+        let fast = price_run(&built, &cost, &built.topology);
+        let slow_cost = cost.with_cross_node_cp();
+        let slow = price_run(&built, &slow_cost, &built.topology);
+        assert!(slow.exec_seconds > fast.exec_seconds);
+        assert_eq!(slow.sched_seconds, fast.sched_seconds);
+        assert_eq!(slow.data_tokens, fast.data_tokens);
+        assert_eq!(slow.padded_tokens, fast.padded_tokens);
+        assert_eq!(slow.sched_invocations, fast.sched_invocations);
+        // memory is cost-model independent
+        assert_eq!(slow.rank_peak_bytes, fast.rank_peak_bytes);
+    }
+
+    #[test]
+    fn pricing_under_an_alternate_same_shape_topology_is_a_what_if() {
+        // a 4x8 run can be priced on a hypothetical single fat node (same
+        // dp×cp, different layout): the DP-group gradient sync drops from
+        // IB to NVLink, so the what-if is strictly faster
+        let (ds, cfg, cost) = setup(Policy::Skrull);
+        let built = build_run(&ds, &cfg, &RunConfig::new(2, false)).unwrap();
+        let spread = price_run(&built, &cost, &built.topology);
+        let fat = Topology::new(1, 32, cfg.cluster.dp, cfg.cluster.cp).unwrap();
+        let contained = price_run(&built, &cost, &fat);
+        assert!(contained.exec_seconds < spread.exec_seconds);
+        assert_eq!(contained.data_tokens, spread.data_tokens);
+    }
+
+    #[test]
+    #[should_panic(expected = "price_run: topology is")]
+    fn pricing_under_a_mismatched_topology_shape_panics() {
+        // a different dp×cp shape cannot place the built schedules; the
+        // old engine would silently fall back to intra-node pricing
+        let (ds, cfg, cost) = setup(Policy::Skrull);
+        let built = build_run(&ds, &cfg, &RunConfig::new(1, false)).unwrap();
+        let other = Topology::new(4, 8, 2, 16).unwrap();
+        let _ = price_run(&built, &cost, &other);
+    }
+
+    #[test]
+    fn pinned_sched_seconds_make_reports_deterministic() {
+        let (ds, cfg, cost) = setup(Policy::Skrull);
+        let mut b1 = build_run(&ds, &cfg, &RunConfig::new(3, true)).unwrap();
+        let mut b2 = build_run(&ds, &cfg, &RunConfig::new(3, true)).unwrap();
+        b1.pin_sched_seconds(1e-6);
+        b2.pin_sched_seconds(1e-6);
+        let r1 = price_run(&b1, &cost, &b1.topology);
+        let r2 = price_run(&b2, &cost, &b2.topology);
+        assert_eq!(r1.sched_seconds, r2.sched_seconds);
+        assert_eq!(r1.exposed_sched_seconds, r2.exposed_sched_seconds);
+        assert_eq!(r1.wall_seconds(), r2.wall_seconds());
+        assert_eq!(r1.exec_seconds, r2.exec_seconds);
     }
 
     #[test]
@@ -650,6 +928,7 @@ mod tests {
         assert_eq!(r.sched_overhead_fraction(), 0.0);
         assert_eq!(r.padding_fraction(), 0.0);
         assert_eq!(r.mean_dp_imbalance(), 1.0);
+        assert_eq!(r.sched_invocations, 0);
     }
 
     #[test]
@@ -665,6 +944,8 @@ mod tests {
         // ceil(100 / 16) batches, tail kept
         assert_eq!(r.iterations.len(), 7);
         assert_eq!(r.data_tokens, ds.total_tokens());
+        // epoch runs schedule once per epoch batch
+        assert_eq!(r.sched_invocations, 7);
         // pipelined and synchronous epoch runs agree on everything but
         // overhead exposure
         let s = simulate_run(&ds, &cfg, &cost, &RunConfig::epoch(false)).unwrap();
@@ -705,6 +986,11 @@ mod tests {
         cfg.cluster.dp = 8; // 8×8 = 64 ranks on the 32-GPU testbed
         assert!(matches!(
             simulate_run(&ds, &cfg, &cost, &RunConfig::new(1, true)),
+            Err(SchedError::BadTopology { .. })
+        ));
+        // the build phase rejects it too — there is nothing to price
+        assert!(matches!(
+            build_run(&ds, &cfg, &RunConfig::new(1, true)),
             Err(SchedError::BadTopology { .. })
         ));
     }
@@ -770,6 +1056,17 @@ mod tests {
         let grad_bytes = cost.grad_sync_bytes(cfg.cluster.dp);
         for r in &records {
             assert!(r.xcomm_bytes >= grad_bytes);
+        }
+        // the traced pricing is the same pricing: price_run_traced on the
+        // same built run reproduces both halves exactly
+        let built = build_run(&ds, &cfg, &run).unwrap();
+        let (rep2, recs2) = price_run_traced(&built, &cost, &built.topology);
+        assert_eq!(rep2.exec_seconds, report.exec_seconds);
+        for (a, b) in recs2.iter().zip(&records) {
+            assert_eq!(a.comp_seconds, b.comp_seconds);
+            assert_eq!(a.comm_seconds, b.comm_seconds);
+            assert_eq!(a.xcomm_seconds, b.xcomm_seconds);
+            assert_eq!(a.iteration_seconds, b.iteration_seconds);
         }
     }
 

@@ -147,13 +147,34 @@ pub fn run_trace(
     report: &crate::cluster::run::RunReport,
     cost: &CostModel,
 ) -> String {
+    run_trace_iter(scheds.iter(), report, cost)
+}
+
+/// [`run_trace`] straight off a [`BuiltRun`]: the chrome-trace lane renders
+/// from the same built schedules the report was priced from — no second
+/// loader replay to collect them.
+///
+/// [`BuiltRun`]: crate::cluster::run::BuiltRun
+pub fn run_trace_built(
+    built: &crate::cluster::run::BuiltRun,
+    report: &crate::cluster::run::RunReport,
+    cost: &CostModel,
+) -> String {
+    run_trace_iter(built.schedules(), report, cost)
+}
+
+fn run_trace_iter<'a>(
+    scheds: impl ExactSizeIterator<Item = &'a IterationSchedule>,
+    report: &crate::cluster::run::RunReport,
+    cost: &CostModel,
+) -> String {
     assert_eq!(scheds.len(), report.iterations.len());
     let cp = report.cp;
     let loader_pid = report.dp; // one row past the last DP rank
     let mut events = Vec::new();
     let mut extra: Vec<String> = Vec::new();
     let mut clock_us = 0.0f64;
-    for (i, (sched, rec)) in scheds.iter().zip(&report.iterations).enumerate() {
+    for (i, (sched, rec)) in scheds.zip(&report.iterations).enumerate() {
         // scheduling of iteration i starts when the overlap window opens:
         // at the start of the previous iteration's execution (pipelined)
         // or right before its own execution (synchronous)
@@ -284,7 +305,7 @@ mod tests {
 
         // collect the schedules by replaying the same loader sequence
         let mut scheds = Vec::new();
-        let mut loader = crate::data::loader::ScheduledLoader::new(&ds, cfg.clone());
+        let mut loader = crate::data::loader::ScheduledLoader::new(&ds, &cfg);
         loader
             .run_synchronous(3, |_, _, sched, _| scheds.push(sched.clone()))
             .unwrap();
@@ -298,6 +319,14 @@ mod tests {
             assert!(json.contains(&format!("it{i} mb0")), "iter {i} exec events");
         }
         assert!(json.contains("grad-sync iter0"));
+        // the BuiltRun path renders the identical trace without a second
+        // loader replay: same schedules, same report, same bytes
+        let built =
+            crate::cluster::run::build_run(&ds, &cfg, &RunConfig::new(3, true)).unwrap();
+        let report2 = crate::cluster::run::price_run(&built, &cost, &built.topology);
+        let from_built = run_trace_built(&built, &report2, &cost);
+        let collected: Vec<IterationSchedule> = built.schedules().cloned().collect();
+        assert_eq!(from_built, run_trace(&collected, &report2, &cost));
         // the memory lane rides along: one counter per (iteration, dp rank)
         assert_eq!(
             json.matches("\"peak_mem_frac\"").count(),
@@ -327,7 +356,7 @@ mod tests {
             .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
         let cost = CostModel::paper_default(&cfg.model);
         let mut scheds = Vec::new();
-        let mut loader = crate::data::loader::ScheduledLoader::new(&ds, cfg.clone());
+        let mut loader = crate::data::loader::ScheduledLoader::new(&ds, &cfg);
         loader
             .run_synchronous(2, |_, _, sched, _| scheds.push(sched.clone()))
             .unwrap();

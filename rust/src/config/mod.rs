@@ -157,6 +157,12 @@ pub struct ExperimentConfig {
     /// Cost/memory coefficient source: analytic first-principles models or
     /// a calibrated profile fitted from a measured trace (see `calib`).
     pub cost: CostSource,
+    /// Worker threads for sweep-level fan-out (`run.jobs`, consumed by
+    /// `skrull e2e --config` into `bench::e2e::E2eOptions::jobs`; `--jobs`
+    /// overrides).  Defaults to the machine's available parallelism,
+    /// clamped ≥ 1; 1 = fully serial.  A job count never changes results,
+    /// only wall-clock.
+    pub jobs: usize,
 }
 
 impl ExperimentConfig {
@@ -182,6 +188,7 @@ impl ExperimentConfig {
             epoch: false,
             memory: MemoryConfig::default(),
             cost: CostSource::Analytic,
+            jobs: crate::util::par::max_threads().max(1),
         }
     }
 
@@ -255,6 +262,12 @@ impl ExperimentConfig {
         cfg.seed = t.i64_or("run.seed", cfg.seed as i64) as u64;
         cfg.pipelined = t.bool_or("run.pipelined", cfg.pipelined);
         cfg.epoch = t.bool_or("run.epoch", cfg.epoch);
+        // 0 (or negative) means "auto": the machine's available
+        // parallelism — same semantics as `--jobs 0`
+        let jobs = t.i64_or("run.jobs", cfg.jobs as i64);
+        if jobs > 0 {
+            cfg.jobs = jobs as usize;
+        }
         let source = t.str_or("memory.capacity_source", cfg.memory.source.name());
         cfg.memory.source = CapacitySource::by_name(&source)
             .ok_or_else(|| crate::anyhow!("unknown capacity source {source:?}"))?;
@@ -360,6 +373,22 @@ pipelined = false
         // defaults to pipelined when the key is absent
         let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
         assert!(d.pipelined);
+    }
+
+    #[test]
+    fn run_jobs_key_parses_and_zero_means_auto() {
+        let auto = crate::util::par::max_threads().max(1);
+        let t = toml::parse("[run]\njobs = 3\n").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().jobs, 3);
+        // 0 (and negatives) mean "auto", same as --jobs 0 — never 0 workers
+        let t = toml::parse("[run]\njobs = 0\n").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().jobs, auto);
+        let t = toml::parse("[run]\njobs = -4\n").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().jobs, auto);
+        // absent: the machine's available parallelism, at least 1
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert!(d.jobs >= 1);
+        assert_eq!(d.jobs, auto);
     }
 
     #[test]

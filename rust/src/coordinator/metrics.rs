@@ -12,6 +12,10 @@ pub struct TrainMetrics {
     pub loss_tokens: u64,
     pub micro_batches_executed: usize,
     pub sched_seconds: f64,
+    /// GDS/DACP passes performed — one per optimizer step (the trainer
+    /// schedules each sampled batch exactly once, mirroring the run
+    /// engine's `BuiltRun::sched_invocations` accounting)
+    pub sched_invocations: usize,
 }
 
 impl TrainMetrics {

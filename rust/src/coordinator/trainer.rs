@@ -21,10 +21,10 @@ use crate::coordinator::state::TrainState;
 use crate::data::packing::{pack, PackedBucket, TokenSeq};
 use crate::data::Sequence;
 use crate::model::ModelSpec;
-use crate::perfmodel::FlopsModel;
+use crate::perfmodel::{CostModel, FlopsModel};
 use crate::rng::Rng;
 use crate::runtime::{Manifest, Runtime};
-use crate::scheduler::{baseline, gds};
+use crate::scheduler::{dispatch, gds};
 
 #[derive(Clone, Debug)]
 pub struct TrainerOptions {
@@ -97,6 +97,12 @@ pub struct Trainer {
     opt: Adam,
     opts: TrainerOptions,
     flops: FlopsModel,
+    /// analytic tiny-model cost model, built once — only the cost-aware
+    /// refinement (SkrullRefined) consults it
+    cost: CostModel,
+    /// scheduler scratch arena, reused across steps like the run engine's
+    /// DataLoader (the per-step throwaway arena was a hidden allocation)
+    ctx: gds::SchedCtx,
     rng: Rng,
 }
 
@@ -125,8 +131,18 @@ impl Trainer {
         let params = runtime.initial_params()?;
         let opt = Adam::new(params.data.len(), opts.lr);
         let flops = FlopsModel::new(&ModelSpec::tiny());
+        let cost = CostModel::paper_default(&ModelSpec::tiny());
         let rng = Rng::seed_from_u64(opts.seed);
-        Ok(Trainer { runtime, params, opt, opts, flops, rng })
+        Ok(Trainer {
+            runtime,
+            params,
+            opt,
+            opts,
+            flops,
+            cost,
+            ctx: gds::SchedCtx::default(),
+            rng,
+        })
     }
 
     /// Build the iteration's packed buckets from a schedule: each CP rank's
@@ -145,22 +161,17 @@ impl Trainer {
         &mut self,
         batch: &[Sequence],
     ) -> Result<crate::scheduler::IterationSchedule> {
-        let c = self.opts.bucket_capacity;
-        let n = self.opts.workers;
-        let sched = match self.opts.policy {
-            Policy::Baseline => baseline::deepspeed(batch, 1, n),
-            Policy::DacpOnly => baseline::dacp_only(batch, 1, n, c, &self.flops)?,
-            Policy::Skrull => {
-                let cfg = gds::GdsConfig::new(c, n, 1);
-                gds::schedule(batch, &cfg, &self.flops)?
-            }
-            Policy::SkrullRefined => {
-                let cfg = gds::GdsConfig::new(c, n, 1);
-                let cost = crate::perfmodel::CostModel::paper_default(&ModelSpec::tiny());
-                gds::schedule_refined(batch, &cfg, &cost)?
-            }
-            Policy::SortedBatching => baseline::sorted_batching(batch, 1, n, c),
-        };
+        // one dispatch shared with the scheduling DataLoader: dp=1, the
+        // emulated workers as the CP footprint
+        let gcfg = gds::GdsConfig::new(self.opts.bucket_capacity, self.opts.workers, 1);
+        let sched = dispatch::schedule_policy(
+            self.opts.policy,
+            batch,
+            &gcfg,
+            &self.flops,
+            &self.cost,
+            &mut self.ctx,
+        )?;
         Ok(sched)
     }
 
@@ -186,6 +197,7 @@ impl Trainer {
             let t_sched = std::time::Instant::now();
             let sched = self.schedule(&batch)?;
             metrics.sched_seconds += t_sched.elapsed().as_secs_f64();
+            metrics.sched_invocations += 1;
 
             let buckets = self.buckets_for_iteration(corpus, &sched)?;
             let t0 = std::time::Instant::now();

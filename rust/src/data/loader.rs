@@ -7,18 +7,20 @@
 
 use std::time::Instant;
 
-use crate::config::{ExperimentConfig, Policy};
+use crate::config::ExperimentConfig;
 use crate::data::{Dataset, Sequence};
 use crate::perfmodel::{CostModel, FlopsModel};
 use crate::rng::Rng;
-use crate::scheduler::{baseline, gds, IterationSchedule, SchedError};
+use crate::scheduler::{dispatch, gds, IterationSchedule, SchedError};
 
 /// One produced iteration: the global batch plus its schedule.
 type LoaderItem = (Vec<Sequence>, IterationSchedule);
 
 pub struct ScheduledLoader<'a> {
     dataset: &'a Dataset,
-    cfg: ExperimentConfig,
+    /// borrowed, not cloned: a loader is created per run and the config
+    /// (with its possibly multi-KB calibrated profile) stays the caller's
+    cfg: &'a ExperimentConfig,
     flops: FlopsModel,
     cost: CostModel,
     rng: Rng,
@@ -34,12 +36,22 @@ pub struct ScheduledLoader<'a> {
     pub sched_seconds: f64,
     /// iterations that yielded a schedule (failed calls are not served)
     pub iterations_served: usize,
+    /// every GDS/DACP pass this loader performed, Ok or Err — the
+    /// scheduling-work counter behind the run engine's one-pass-per-
+    /// iteration guarantee (`BuiltRun::sched_invocations`)
+    pub sched_invocations: usize,
+    /// whether the scheduler may use its internal thread fan-out (GDS
+    /// per-rank / refinement threads).  Callers that already parallelize
+    /// at a coarser grain (the e2e sweep's per-cell workers) turn this
+    /// off so nested fan-outs don't oversubscribe the cores; schedules
+    /// are byte-identical either way (gds oracle tests).
+    pub sched_parallel: bool,
     /// wall-clock of the most recent `schedule_batch` call, Ok or Err
     last_sched_seconds: f64,
 }
 
 impl<'a> ScheduledLoader<'a> {
-    pub fn new(dataset: &'a Dataset, cfg: ExperimentConfig) -> Self {
+    pub fn new(dataset: &'a Dataset, cfg: &'a ExperimentConfig) -> Self {
         let flops = FlopsModel::new(&cfg.model);
         // the cost-aware refinement (SkrullRefined) estimates with the
         // configured cost source: analytic, or the calibrated profile
@@ -56,6 +68,8 @@ impl<'a> ScheduledLoader<'a> {
             capacity,
             sched_seconds: 0.0,
             iterations_served: 0,
+            sched_invocations: 0,
+            sched_parallel: true,
             last_sched_seconds: 0.0,
         }
     }
@@ -73,21 +87,17 @@ impl<'a> ScheduledLoader<'a> {
         };
         let t0 = Instant::now();
         let c = &self.cfg.cluster;
-        let out = match self.cfg.policy {
-            Policy::Baseline => Ok(baseline::deepspeed(batch, c.dp, c.cp)),
-            Policy::DacpOnly => baseline::dacp_only(batch, c.dp, c.cp, bucket, &self.flops),
-            Policy::Skrull => {
-                let gcfg = gds::GdsConfig::new(bucket, c.cp, c.dp);
-                gds::schedule_with_ctx(batch, &gcfg, &self.flops, &mut self.ctx)
-            }
-            Policy::SkrullRefined => {
-                let gcfg = gds::GdsConfig::new(bucket, c.cp, c.dp);
-                gds::schedule_refined_with_ctx(batch, &gcfg, &self.cost, &mut self.ctx)
-            }
-            Policy::SortedBatching => {
-                Ok(baseline::sorted_batching(batch, c.dp, c.cp, bucket))
-            }
-        };
+        let mut gcfg = gds::GdsConfig::new(bucket, c.cp, c.dp);
+        gcfg.parallel = gcfg.parallel && self.sched_parallel;
+        self.sched_invocations += 1;
+        let out = dispatch::schedule_policy(
+            self.cfg.policy,
+            batch,
+            &gcfg,
+            &self.flops,
+            &self.cost,
+            &mut self.ctx,
+        );
         self.last_sched_seconds = t0.elapsed().as_secs_f64();
         // only successfully served iterations count toward the overhead
         // metrics — an Err yields no schedule, so folding its wall-clock
@@ -256,6 +266,7 @@ impl<'a> ScheduledLoader<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Policy;
     use crate::data::LengthDistribution;
     use crate::model::ModelSpec;
 
@@ -271,7 +282,7 @@ mod tests {
         for policy in [Policy::Baseline, Policy::DacpOnly, Policy::Skrull, Policy::SkrullRefined, Policy::SortedBatching] {
             let (ds, cfg) = setup(policy);
             let bs = cfg.cluster.batch_size;
-            let mut loader = ScheduledLoader::new(&ds, cfg);
+            let mut loader = ScheduledLoader::new(&ds, &cfg);
             let (batch, sched) = loader.next_iteration().unwrap();
             assert_eq!(batch.len(), bs);
             let mut expect: Vec<u64> = batch.iter().map(|s| s.id).collect();
@@ -283,8 +294,8 @@ mod tests {
     #[test]
     fn loader_is_deterministic_per_seed() {
         let (ds, cfg) = setup(Policy::Skrull);
-        let mut l1 = ScheduledLoader::new(&ds, cfg.clone());
-        let mut l2 = ScheduledLoader::new(&ds, cfg);
+        let mut l1 = ScheduledLoader::new(&ds, &cfg);
+        let mut l2 = ScheduledLoader::new(&ds, &cfg);
         for _ in 0..3 {
             let (b1, s1) = l1.next_iteration().unwrap();
             let (b2, s2) = l2.next_iteration().unwrap();
@@ -305,13 +316,15 @@ mod tests {
         let cap = cfg.bucket_size as u64 * cfg.cluster.cp as u64;
         let ds = Dataset { name: "oversized".into(), lengths: vec![cap as u32 + 1] };
         cfg.cluster.batch_size = 1;
-        let mut loader = ScheduledLoader::new(&ds, cfg);
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         assert!(loader.next_iteration().is_err());
         assert_eq!(loader.iterations_served, 0);
         assert_eq!(loader.sched_seconds, 0.0);
         assert_eq!(loader.mean_sched_seconds(), 0.0);
-        // the attempt itself is still observable for run-engine accounting
+        // the attempt itself is still observable for run-engine accounting:
+        // the invocation counter tracks work *performed*, Ok or Err
         assert!(loader.last_sched_seconds() >= 0.0);
+        assert_eq!(loader.sched_invocations, 1);
     }
 
     #[test]
@@ -323,7 +336,7 @@ mod tests {
             let iters = 4;
 
             let mut sync_out: Vec<(Vec<Sequence>, IterationSchedule)> = Vec::new();
-            let mut sync_loader = ScheduledLoader::new(&ds, cfg.clone());
+            let mut sync_loader = ScheduledLoader::new(&ds, &cfg);
             sync_loader
                 .run_synchronous(iters, |_, batch, sched, _| {
                     sync_out.push((batch.to_vec(), sched.clone()));
@@ -331,7 +344,7 @@ mod tests {
                 .unwrap();
 
             let mut pipe_out: Vec<(Vec<Sequence>, IterationSchedule)> = Vec::new();
-            let pipe_loader = ScheduledLoader::new(&ds, cfg)
+            let pipe_loader = ScheduledLoader::new(&ds, &cfg)
                 .run_pipelined(iters, |i, batch, sched, sched_s| {
                     assert!(sched_s >= 0.0);
                     assert_eq!(i, pipe_out.len());
@@ -351,7 +364,7 @@ mod tests {
         let cap = cfg.bucket_size as u64 * cfg.cluster.cp as u64;
         let ds = Dataset { name: "oversized".into(), lengths: vec![cap as u32 + 1] };
         cfg.cluster.batch_size = 1;
-        let r = ScheduledLoader::new(&ds, cfg).run_pipelined(3, |_, _, _, _| {
+        let r = ScheduledLoader::new(&ds, &cfg).run_pipelined(3, |_, _, _, _| {
             panic!("no iteration should be consumable");
         });
         assert!(r.is_err());
@@ -368,7 +381,7 @@ mod tests {
         let batches = &batches[..n];
 
         let mut sync_out: Vec<IterationSchedule> = Vec::new();
-        let mut sync_loader = ScheduledLoader::new(&ds, cfg.clone());
+        let mut sync_loader = ScheduledLoader::new(&ds, &cfg);
         sync_loader
             .run_synchronous_batches(batches, |i, batch, sched, _| {
                 assert_eq!(batch, &batches[i][..]);
@@ -377,7 +390,7 @@ mod tests {
             .unwrap();
 
         let mut pipe_out: Vec<IterationSchedule> = Vec::new();
-        let pipe_loader = ScheduledLoader::new(&ds, cfg)
+        let pipe_loader = ScheduledLoader::new(&ds, &cfg)
             .run_pipelined_batches(batches, |i, batch, sched, sched_s| {
                 assert!(sched_s >= 0.0);
                 assert_eq!(batch, &batches[i][..]);
@@ -395,7 +408,7 @@ mod tests {
         use crate::memplan::CapacitySource;
         let (ds, mut cfg) = setup(Policy::Skrull);
         cfg.memory.source = CapacitySource::HbmDerived;
-        let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         let derived = *loader.capacity().as_ref().unwrap();
         // 80 GB admits far more than the hand-set 26K bucket on the 0.5B
         assert!(derived > cfg.bucket_size, "derived {derived}");
@@ -414,7 +427,7 @@ mod tests {
         let (ds, mut cfg) = setup(Policy::Skrull);
         cfg.memory.source = CapacitySource::HbmDerived;
         cfg.memory.hbm_gb = 0.5; // cannot hold the 0.5B static state
-        let mut loader = ScheduledLoader::new(&ds, cfg);
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         assert!(loader.capacity().is_err());
         assert!(matches!(
             loader.next_iteration(),
@@ -426,11 +439,13 @@ mod tests {
     #[test]
     fn scheduler_overhead_is_tracked() {
         let (ds, cfg) = setup(Policy::Skrull);
-        let mut loader = ScheduledLoader::new(&ds, cfg);
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         for _ in 0..3 {
             loader.next_iteration().unwrap();
         }
         assert_eq!(loader.iterations_served, 3);
+        // exactly one GDS/DACP pass per served iteration
+        assert_eq!(loader.sched_invocations, 3);
         assert!(loader.sched_seconds > 0.0);
         assert!(loader.mean_sched_seconds() > 0.0);
     }

@@ -128,7 +128,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let ds = dataset_for(&cfg, 100_000)?;
     let cost = cfg.cost_model();
-    let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+    let mut loader = ScheduledLoader::new(&ds, &cfg);
     let (batch, sched) = loader.next_iteration()?;
     let sim = simulate_iteration(&sched, &cost, cfg.cluster.cp);
 
@@ -270,6 +270,32 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     if args.flag("epoch") {
         opts.epoch = true;
     }
+    // worker count: `[run] jobs` from --config seeds the default, the
+    // --jobs flag wins; 0 means "auto" (available parallelism).  The e2e
+    // grid is fixed by its own flags, so jobs is the only config key this
+    // subcommand reads — any other key in the file is rejected rather
+    // than silently ignored.
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let table =
+            skrull::config::toml::parse(&text).map_err(|e| skrull::anyhow!("{path}: {e}"))?;
+        for key in table.entries.keys() {
+            skrull::ensure!(
+                key == "run.jobs",
+                "e2e --config reads only the `[run] jobs` key, but {path} sets {key:?}; \
+                 pass the rest as e2e flags (see usage)"
+            );
+        }
+        // one parser for the key's semantics (0/negative = auto)
+        opts.jobs = ExperimentConfig::from_table(&table)?.jobs;
+    }
+    opts.jobs = match args.parse_or("jobs", opts.jobs)? {
+        0 => E2eOptions::paper_default().jobs,
+        n => n,
+    };
+    if args.flag("deterministic-timing") {
+        opts.deterministic_timing = true;
+    }
     if let Some(p) = args.get("cost-profile") {
         opts.cost = skrull::config::CostSource::calibrated(p)?;
         opts.cost.ensure_model(opts.model.name)?;
@@ -293,7 +319,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         format!("{} iterations", opts.iterations)
     };
     println!(
-        "e2e sweep: {} policies × {} datasets × {} topologies × {} seeds, {}, {} loader, capacity {}, cost {}",
+        "e2e sweep: {} policies × {} datasets × {} topologies × {} seeds, {}, {} loader, capacity {}, cost {}, {} job{}",
         e2e::ALL_POLICIES.len(),
         opts.datasets.len(),
         opts.topologies.len(),
@@ -302,8 +328,15 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         if opts.pipelined { "pipelined" } else { "synchronous" },
         opts.memory.source.name(),
         opts.cost.name(),
+        opts.jobs,
+        if opts.jobs == 1 { "" } else { "s" },
     );
     let sweep = e2e::run_sweep(&opts)?;
+    println!(
+        "sweep finished in {} ({} cells, one scheduling pass per cell)",
+        fmt_secs(sweep.sweep_seconds),
+        sweep.cells.len(),
+    );
 
     let mut table = TableBuilder::new("End-to-end simulated runs").header(&[
         "topology",
@@ -521,14 +554,22 @@ const USAGE: &str = "usage: skrull <schedule|simulate|e2e|calibrate|train|analyz
              --cost-profile FILE (calibrated coefficients from `skrull calibrate`)
   memory:    --capacity (fixed|hbm-derived) --hbm-gb F[,F,...] --recompute (full|selective|none)
   e2e:       --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
-             --seeds a,b,c --epoch --out FILE --smoke | --validate=FILE
+             --seeds a,b,c --epoch --jobs N (0 = auto) --deterministic-timing
+             --config FILE ([run] jobs key only) --out FILE --smoke | --validate=FILE
   calibrate: --emit FILE (run the calibration sweep, write a JSONL trace)
              --trace FILE [--out PROFILE.json] [--validate [--min-r2 R] [--tolerance T]]
   train:     --artifacts DIR --steps N --workers W --lr F --corpus-size K";
 
 fn main() -> Result<()> {
     skrull::logging::init();
-    let args = Args::from_env(&["verbose", "sync", "smoke", "epoch", "validate"])?;
+    let args = Args::from_env(&[
+        "verbose",
+        "sync",
+        "smoke",
+        "epoch",
+        "validate",
+        "deterministic-timing",
+    ])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());

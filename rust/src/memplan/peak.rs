@@ -75,9 +75,9 @@ pub fn iteration_memory(
     for (d, rank) in sched.ranks.iter().enumerate() {
         for (m, mb) in rank.micro_batches.iter().enumerate() {
             // the rank executes its C-token bucket; an overfilling baseline
-            // runs what it scheduled (MicroBatch::rank_used_tokens is the
-            // one fill rule, shared with the run engine's padding)
-            for (j, used) in mb.rank_used_tokens(cp).into_iter().enumerate() {
+            // runs what it scheduled (MicroBatch::rank_used_tokens_iter is
+            // the one fill rule, shared with the run engine's padding)
+            for (j, used) in mb.rank_used_tokens_iter(cp).enumerate() {
                 let bucket_tokens = (bucket_size as u64).max(used);
                 let peak = plan.peak_bytes(bucket_tokens);
                 let slot = &mut rank_peak_bytes[d * cp + j];

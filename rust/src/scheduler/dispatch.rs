@@ -1,0 +1,76 @@
+//! Single policy → scheduler dispatch.
+//!
+//! Every entry point that turns a global batch into an
+//! [`IterationSchedule`] under a [`Policy`] — the scheduling DataLoader
+//! (`data::loader`) and the real-workload trainer (`coordinator::trainer`)
+//! — routes through this one match, so the policy set cannot drift between
+//! the simulation and training paths and both reuse the fast path's
+//! scratch arena across calls.
+
+use crate::config::Policy;
+use crate::data::Sequence;
+use crate::perfmodel::{CostModel, FlopsModel};
+use crate::scheduler::{baseline, gds, IterationSchedule, SchedError};
+
+/// Schedule `batch` under `policy` onto the `dp × cp` layout carried by
+/// `gcfg` (which also holds the per-rank token capacity C).  `flops`
+/// drives the FLOPs-balancing policies, `cost` only the cost-aware
+/// refinement (`Policy::SkrullRefined`), and `ctx` is the reusable GDS
+/// scratch arena (byte-identical results to the throwaway-arena paths,
+/// enforced by the gds oracle tests).
+pub fn schedule_policy(
+    policy: Policy,
+    batch: &[Sequence],
+    gcfg: &gds::GdsConfig,
+    flops: &FlopsModel,
+    cost: &CostModel,
+    ctx: &mut gds::SchedCtx,
+) -> Result<IterationSchedule, SchedError> {
+    let (dp, cp, bucket) = (gcfg.dp, gcfg.cp, gcfg.bucket_size);
+    match policy {
+        Policy::Baseline => Ok(baseline::deepspeed(batch, dp, cp)),
+        Policy::DacpOnly => baseline::dacp_only(batch, dp, cp, bucket, flops),
+        Policy::Skrull => gds::schedule_with_ctx(batch, gcfg, flops, ctx),
+        Policy::SkrullRefined => gds::schedule_refined_with_ctx(batch, gcfg, cost, ctx),
+        Policy::SortedBatching => Ok(baseline::sorted_batching(batch, dp, cp, bucket)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    #[test]
+    fn dispatch_matches_direct_scheduler_calls_for_every_policy() {
+        let spec = ModelSpec::qwen2_5_0_5b();
+        let flops = FlopsModel::new(&spec);
+        let cost = CostModel::paper_default(&spec);
+        let (dp, cp, bucket) = (2usize, 4usize, 8_192u32);
+        let gcfg = gds::GdsConfig::new(bucket, cp, dp);
+        let batch: Vec<Sequence> = [3_000u32, 500, 7_000, 1_200, 9_000, 64]
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect();
+        let mut ctx = gds::SchedCtx::default();
+        for policy in [
+            Policy::Baseline,
+            Policy::DacpOnly,
+            Policy::Skrull,
+            Policy::SkrullRefined,
+            Policy::SortedBatching,
+        ] {
+            let via_dispatch =
+                schedule_policy(policy, &batch, &gcfg, &flops, &cost, &mut ctx).unwrap();
+            let direct = match policy {
+                Policy::Baseline => baseline::deepspeed(&batch, dp, cp),
+                Policy::DacpOnly => baseline::dacp_only(&batch, dp, cp, bucket, &flops).unwrap(),
+                Policy::Skrull => gds::schedule(&batch, &gcfg, &flops).unwrap(),
+                Policy::SkrullRefined => gds::schedule_refined(&batch, &gcfg, &cost).unwrap(),
+                Policy::SortedBatching => baseline::sorted_batching(&batch, dp, cp, bucket),
+            };
+            assert_eq!(via_dispatch, direct, "{policy:?}");
+        }
+    }
+}

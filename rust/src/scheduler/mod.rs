@@ -12,8 +12,10 @@
 pub mod baseline;
 pub mod binpack;
 pub mod dacp;
+pub mod dispatch;
 pub mod gds;
 pub mod plan;
 pub mod solver;
 
+pub use dispatch::schedule_policy;
 pub use plan::{DacpPlan, IterationSchedule, MicroBatch, RankSchedule, SchedError};

@@ -139,21 +139,29 @@ impl MicroBatch {
     /// local sequences plus its ceil(1/N) share of every distributed
     /// sequence.  The single source of the static-bucket fill rule — both
     /// the run engine's padding accounting and memplan's peak-memory
-    /// simulation build on it, so they cannot drift apart.
-    pub fn rank_used_tokens(&self, cp: usize) -> Vec<u64> {
+    /// simulation build on it, so they cannot drift apart.  Allocation-free
+    /// (the run engine walks it once per micro-batch per iteration); use
+    /// [`rank_used_tokens`] when a `Vec` is more convenient.
+    ///
+    /// [`rank_used_tokens`]: MicroBatch::rank_used_tokens
+    pub fn rank_used_tokens_iter(&self, cp: usize) -> impl Iterator<Item = u64> + '_ {
         let cp = cp.max(1);
         let dist_share: u64 = self
             .plan
             .distributed()
             .map(|i| (self.seqs[i].len as u64).div_ceil(cp as u64))
             .sum();
-        (0..cp)
-            .map(|j| {
-                let local: u64 =
-                    self.plan.locals_of(j).map(|i| self.seqs[i].len as u64).sum();
-                local + dist_share
-            })
-            .collect()
+        (0..cp).map(move |j| {
+            let local: u64 = self.plan.locals_of(j).map(|i| self.seqs[i].len as u64).sum();
+            local + dist_share
+        })
+    }
+
+    /// [`rank_used_tokens_iter`] collected into a `Vec`.
+    ///
+    /// [`rank_used_tokens_iter`]: MicroBatch::rank_used_tokens_iter
+    pub fn rank_used_tokens(&self, cp: usize) -> Vec<u64> {
+        self.rank_used_tokens_iter(cp).collect()
     }
 }
 
@@ -239,6 +247,9 @@ mod tests {
             plan: DacpPlan { assign: vec![DISTRIBUTED] },
         };
         assert_eq!(mb.rank_used_tokens(2), vec![51, 51]);
+        // the allocation-free iterator is the same rule, element for element
+        assert_eq!(mb.rank_used_tokens_iter(2).collect::<Vec<_>>(), mb.rank_used_tokens(2));
+        assert_eq!(mb.rank_used_tokens_iter(3).collect::<Vec<_>>(), mb.rank_used_tokens(3));
     }
 
     #[test]

@@ -84,6 +84,21 @@ where
     out
 }
 
+/// `out[i] = f(i, &items[i])` with an explicit worker cap — the
+/// scratch-free sibling of [`map_with_scratch_up_to`] for fan-outs whose
+/// work items carry no per-item state (the e2e sweep's `--jobs` knob).
+/// Contiguous chunking, deterministic output order: results are identical
+/// to the serial loop byte for byte regardless of `limit`.
+pub fn map_up_to<A, R, F>(limit: usize, items: &[A], f: F) -> Vec<R>
+where
+    A: Sync,
+    R: Send,
+    F: Fn(usize, &A) -> R + Sync,
+{
+    let mut scratch = vec![(); items.len()];
+    map_with_scratch_up_to(limit, items, &mut scratch, |i, a, _| f(i, a))
+}
+
 /// In-place parallel `for`: `f(i, &mut items[i])` over contiguous chunks.
 pub fn for_each_mut<T, F>(items: &mut [T], f: F)
 where
@@ -136,6 +151,16 @@ mod tests {
         assert!(out.is_empty());
         let mut s = [0u8];
         assert_eq!(map_with_scratch(&[5u8], &mut s, |_, &x, _| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn map_up_to_is_limit_invariant() {
+        let items: Vec<u64> = (0..97).collect();
+        let serial = map_up_to(1, &items, |i, &x| i as u64 * 31 + x * x);
+        for limit in [2, 3, 4, 8, 128] {
+            assert_eq!(map_up_to(limit, &items, |i, &x| i as u64 * 31 + x * x), serial);
+        }
+        assert!(map_up_to(4, &[] as &[u8], |_, _| 0u8).is_empty());
     }
 
     #[test]

@@ -11,6 +11,7 @@ use skrull::config::{CostSource, ExperimentConfig, Policy};
 use skrull::data::{Dataset, LengthDistribution};
 use skrull::memplan::MemoryConfig;
 use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
 
 fn small_sweep() -> EmitOptions {
     let mut opts = EmitOptions::default_sweep(ModelSpec::qwen2_5_0_5b());
@@ -99,7 +100,7 @@ fn checked_in_sample_trace_calibrates_and_validates() {
 }
 
 #[test]
-fn e2e_sweep_under_calibrated_cost_source_emits_valid_schema_v3() {
+fn e2e_sweep_under_calibrated_cost_source_emits_valid_schema_v4() {
     let profile = calibrated_profile();
     let opts = E2eOptions {
         model: ModelSpec::qwen2_5_0_5b(),
@@ -112,7 +113,9 @@ fn e2e_sweep_under_calibrated_cost_source_emits_valid_schema_v3() {
         pipelined: true,
         epoch: false,
         memory: MemoryConfig::default(),
-        cost: CostSource::Calibrated { path: "<in-memory>".into(), profile },
+        cost: CostSource::Calibrated { path: "<in-memory>".into(), profile: profile.clone() },
+        jobs: 2,
+        deterministic_timing: false,
     };
     let sweep = e2e::run_sweep(&opts).unwrap();
     assert_eq!(sweep.cost_source, "calibrated");
@@ -126,15 +129,54 @@ fn e2e_sweep_under_calibrated_cost_source_emits_valid_schema_v3() {
             c.estimator_error
         );
         assert!(c.report.wall_seconds() > 0.0);
+        // a calibrated cell schedules exactly once per iteration — the
+        // estimator_error comes from *repricing* the built schedules, not
+        // from a second GDS/DACP pass (the pre-split engine's ~2x work)
+        assert_eq!(
+            c.report.sched_invocations, 2,
+            "{}: calibrated cell scheduled more than once per iteration",
+            c.policy.name()
+        );
+    }
+    // the repriced estimator_error equals the old double-run computation:
+    // re-run the engine under the analytic model on an identically
+    // constructed workload and compare per-iteration execution exactly
+    {
+        let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+        cfg.cluster.batch_size = 16;
+        cfg.seed = 11;
+        cfg.policy = Policy::Skrull;
+        cfg.cost = CostSource::Calibrated { path: "<in-memory>".into(), profile };
+        let dist = LengthDistribution::by_name("chatqa2").unwrap();
+        let ds = Dataset::synthesize(&dist, 2_000, 11 ^ 0xD5)
+            .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+        let run = RunConfig::new(2, true);
+        let calibrated = simulate_run(&ds, &cfg, &cfg.cost_model(), &run).unwrap();
+        let analytic = CostModel::paper_default(&cfg.model);
+        let truth = simulate_run(&ds, &cfg, &analytic, &run).unwrap();
+        let double_run_err = calibrated
+            .iterations
+            .iter()
+            .zip(&truth.iterations)
+            .map(|(a, b)| (a.exec_seconds - b.exec_seconds).abs() / b.exec_seconds)
+            .sum::<f64>()
+            / calibrated.iterations.len() as f64;
+        let cell = sweep.cell(Policy::Skrull, "chatqa2", 4, 8).unwrap();
+        assert_eq!(
+            cell.estimator_error, double_run_err,
+            "repriced estimator_error diverged from the double-run value"
+        );
     }
     // skrull still beats the baseline under the calibrated model
     let sk = sweep.cell(Policy::Skrull, "chatqa2", 4, 8).unwrap();
     assert!(sk.speedup_vs_baseline > 1.0, "{}", sk.speedup_vs_baseline);
-    // schema-v3 output validates (including the calibrated gate)
+    // schema-v4 output validates (including the calibrated gate)
     let json = e2e::render_json(&sweep);
-    assert!(json.contains("\"schema_version\": 3"));
+    assert!(json.contains("\"schema_version\": 4"));
     assert!(json.contains("\"cost_source\": \"calibrated\""));
     assert!(json.contains("\"estimator_error\""));
+    assert!(json.contains("\"sweep_seconds\""));
+    assert!(json.contains("\"sched_invocations\": 2"));
     e2e::validate_json(&json).unwrap();
 }
 

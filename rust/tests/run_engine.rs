@@ -1,0 +1,258 @@
+//! Build-once/price-many regression tests: the split run engine
+//! (`build_run` + `price_run`) must reproduce the pre-refactor
+//! `simulate_run` accounting byte-identically for every policy and
+//! topology, repricing must equal re-running, and the parallel e2e sweep
+//! must emit byte-identical output regardless of the `--jobs` count.
+
+use skrull::bench::e2e::{self, E2eOptions};
+use skrull::cluster::run::{build_run, price_run, simulate_run, RunConfig, RunReport};
+use skrull::cluster::simulate_iteration;
+use skrull::cluster::sim::simulate_iteration_on;
+use skrull::config::{CostSource, ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::memplan::{self, MemoryConfig};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::CostModel;
+
+const POLICIES: [Policy; 5] = [
+    Policy::Baseline,
+    Policy::SortedBatching,
+    Policy::DacpOnly,
+    Policy::Skrull,
+    Policy::SkrullRefined,
+];
+
+fn workload(policy: Policy, dp: usize, cp: usize) -> (Dataset, ExperimentConfig, CostModel) {
+    let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+    cfg.policy = policy;
+    cfg.cluster.dp = dp;
+    cfg.cluster.cp = cp;
+    cfg.cluster.batch_size = 16;
+    let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 2_000, 11)
+        .truncated(cfg.bucket_size * cp as u32);
+    let cost = CostModel::paper_default(&cfg.model);
+    (ds, cfg, cost)
+}
+
+/// The pre-refactor engine, transcribed: drive a fresh loader
+/// synchronously and accumulate per-iteration pricing inline — the oracle
+/// `price_run(build_run(..))` is checked against.
+struct LegacyRun {
+    exec_seconds: Vec<f64>,
+    grad_sync: Vec<f64>,
+    utilization: Vec<f64>,
+    dp_imbalance: Vec<f64>,
+    micro_batches: Vec<usize>,
+    data_tokens: u64,
+    padded_tokens: u64,
+    bucket_tokens: u64,
+    rank_busy: Vec<f64>,
+    rank_peak: Vec<f64>,
+    oom_count: usize,
+}
+
+fn legacy_run(
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    cost: &CostModel,
+    iterations: usize,
+) -> LegacyRun {
+    let cfg = cfg.resolve_capacity().unwrap();
+    let (dp, cp, bucket) = (cfg.cluster.dp, cfg.cluster.cp, cfg.bucket_size);
+    let mem = cfg.mem_plan();
+    let topo = cfg.cluster.topology().unwrap();
+    let mut out = LegacyRun {
+        exec_seconds: Vec::new(),
+        grad_sync: Vec::new(),
+        utilization: Vec::new(),
+        dp_imbalance: Vec::new(),
+        micro_batches: Vec::new(),
+        data_tokens: 0,
+        padded_tokens: 0,
+        bucket_tokens: 0,
+        rank_busy: vec![0.0; dp * cp],
+        rank_peak: vec![0.0; dp * cp],
+        oom_count: 0,
+    };
+    let mut loader = ScheduledLoader::new(ds, &cfg);
+    loader
+        .run_synchronous(iterations, |i, batch, sched, _| {
+            let sim = if topo.dp == sched.ranks.len() {
+                simulate_iteration_on(sched, cost, &topo)
+            } else {
+                simulate_iteration(sched, cost, cp)
+            };
+            let imem = memplan::iteration_memory(sched, &mem, bucket, cp, i);
+            let mut n_mb = 0;
+            for rank in &sched.ranks {
+                for mb in &rank.micro_batches {
+                    n_mb += 1;
+                    for used in mb.rank_used_tokens(cp) {
+                        let cap = (bucket as u64).max(used);
+                        out.padded_tokens += cap - used;
+                        out.bucket_tokens += cap;
+                    }
+                }
+            }
+            for (d, sims) in sim.micro_batches.iter().enumerate() {
+                for mbs in sims {
+                    for (j, &busy) in mbs.busy.iter().enumerate() {
+                        out.rank_busy[d * cp + j] += busy;
+                    }
+                }
+            }
+            for (g, &p) in imem.rank_peak_bytes.iter().enumerate() {
+                if p > out.rank_peak[g] {
+                    out.rank_peak[g] = p;
+                }
+            }
+            out.oom_count += imem.events.len();
+            out.data_tokens += batch.iter().map(|s| s.len as u64).sum::<u64>();
+            out.exec_seconds.push(sim.total_time);
+            out.grad_sync.push(sim.grad_sync);
+            out.utilization.push(sim.compute_utilization);
+            out.dp_imbalance.push(sim.dp_imbalance);
+            out.micro_batches.push(n_mb);
+        })
+        .unwrap();
+    out
+}
+
+fn assert_matches_legacy(r: &RunReport, legacy: &LegacyRun, tag: &str) {
+    assert_eq!(r.iterations.len(), legacy.exec_seconds.len(), "{tag}");
+    for (i, rec) in r.iterations.iter().enumerate() {
+        assert_eq!(rec.exec_seconds, legacy.exec_seconds[i], "{tag} iter {i}");
+        assert_eq!(rec.grad_sync_seconds, legacy.grad_sync[i], "{tag} iter {i}");
+        assert_eq!(rec.utilization, legacy.utilization[i], "{tag} iter {i}");
+        assert_eq!(rec.dp_imbalance, legacy.dp_imbalance[i], "{tag} iter {i}");
+        assert_eq!(rec.micro_batches, legacy.micro_batches[i], "{tag} iter {i}");
+    }
+    assert_eq!(r.data_tokens, legacy.data_tokens, "{tag}");
+    assert_eq!(r.padded_tokens, legacy.padded_tokens, "{tag}");
+    assert_eq!(r.bucket_tokens, legacy.bucket_tokens, "{tag}");
+    assert_eq!(r.rank_busy, legacy.rank_busy, "{tag}");
+    assert_eq!(r.rank_peak_bytes, legacy.rank_peak, "{tag}");
+    assert_eq!(r.oom_count(), legacy.oom_count, "{tag}");
+}
+
+#[test]
+fn price_of_built_run_reproduces_the_legacy_engine_for_every_policy_and_topology() {
+    for &(dp, cp) in &[(4usize, 8usize), (2, 16)] {
+        for policy in POLICIES {
+            let (ds, cfg, cost) = workload(policy, dp, cp);
+            let tag = format!("{} <DP={dp},CP={cp}>", policy.name());
+            let legacy = legacy_run(&ds, &cfg, &cost, 3);
+            // the composed one-shot path ...
+            let via_simulate =
+                simulate_run(&ds, &cfg, &cost, &RunConfig::new(3, false)).unwrap();
+            assert_matches_legacy(&via_simulate, &legacy, &tag);
+            // ... and the explicit build → price split, pipelined too
+            // (schedules are byte-identical across loader modes)
+            for pipelined in [false, true] {
+                let built = build_run(&ds, &cfg, &RunConfig::new(3, pipelined)).unwrap();
+                assert_eq!(built.sched_invocations, 3, "{tag}");
+                let priced = price_run(&built, &cost, &built.topology);
+                assert_matches_legacy(&priced, &legacy, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn repricing_equals_rerunning_for_estimator_error() {
+    // the calibrated sweep's estimator_error used to come from a second
+    // full scheduler run under the reference model; repricing the built
+    // schedules must give exactly the same per-iteration numbers
+    let (ds, cfg, cost_a) = workload(Policy::SkrullRefined, 4, 8);
+    let cost_b = cost_a.with_cross_node_cp(); // any second model will do
+    let run = RunConfig::new(4, false);
+
+    // old path: two independent engine runs (the loader schedules twice)
+    let rerun_a = simulate_run(&ds, &cfg, &cost_a, &run).unwrap();
+    let rerun_b = simulate_run(&ds, &cfg, &cost_b, &run).unwrap();
+
+    // new path: one build, two pricings
+    let built = build_run(&ds, &cfg, &run).unwrap();
+    let price_a = price_run(&built, &cost_a, &built.topology);
+    let price_b = price_run(&built, &cost_b, &built.topology);
+
+    let err = |x: &RunReport, y: &RunReport| -> f64 {
+        x.iterations
+            .iter()
+            .zip(&y.iterations)
+            .map(|(a, b)| (a.exec_seconds - b.exec_seconds).abs() / b.exec_seconds)
+            .sum::<f64>()
+            / x.iterations.len() as f64
+    };
+    for (reprice, rerun) in [(&price_a, &rerun_a), (&price_b, &rerun_b)] {
+        for (p, r) in reprice.iterations.iter().zip(&rerun.iterations) {
+            assert_eq!(p.exec_seconds, r.exec_seconds);
+            assert_eq!(p.data_tokens, r.data_tokens);
+        }
+    }
+    assert_eq!(err(&price_b, &price_a), err(&rerun_b, &rerun_a));
+    // and the scheduling-work ledger shows why the split wins: the old
+    // path scheduled 2 × 4 times, the new one exactly 4
+    assert_eq!(built.sched_invocations, 4);
+    assert_eq!(rerun_a.sched_invocations + rerun_b.sched_invocations, 8);
+}
+
+#[test]
+fn sweep_output_is_byte_identical_across_job_counts() {
+    // --jobs is a wall-clock lever only: with the one nondeterministic
+    // input (measured scheduling time) pinned, serial and parallel sweeps
+    // emit the same BENCH_e2e.json byte for byte
+    let mut opts = E2eOptions {
+        model: ModelSpec::qwen2_5_0_5b(),
+        datasets: vec!["chatqa2".into(), "wikipedia".into()],
+        topologies: vec![(4, 8), (2, 16)],
+        iterations: 2,
+        batch_size: Some(16),
+        dataset_samples: 1_500,
+        seeds: vec![11, 12],
+        pipelined: true,
+        epoch: false,
+        memory: MemoryConfig::default(),
+        cost: CostSource::Analytic,
+        jobs: 1,
+        deterministic_timing: true,
+    };
+    let serial = e2e::render_json(&e2e::run_sweep(&opts).unwrap());
+    e2e::validate_json(&serial).unwrap();
+    opts.jobs = 4;
+    let parallel = e2e::render_json(&e2e::run_sweep(&opts).unwrap());
+    assert_eq!(serial, parallel, "--jobs 4 diverged from --jobs 1");
+    // schema v4 markers are present in the pinned output too
+    assert!(serial.contains("\"schema_version\": 4"));
+    assert!(serial.contains("\"sweep_seconds\": 0e0"));
+    assert!(serial.contains("\"sched_invocations\": 2"));
+}
+
+#[test]
+fn analytic_sweep_cells_schedule_exactly_once_per_iteration() {
+    let opts = E2eOptions {
+        model: ModelSpec::qwen2_5_0_5b(),
+        datasets: vec!["chatqa2".into()],
+        topologies: vec![(4, 8)],
+        iterations: 3,
+        batch_size: Some(16),
+        dataset_samples: 1_500,
+        seeds: vec![7],
+        pipelined: true,
+        epoch: false,
+        memory: MemoryConfig::default(),
+        cost: CostSource::Analytic,
+        jobs: 2,
+        deterministic_timing: false,
+    };
+    let sweep = e2e::run_sweep(&opts).unwrap();
+    for c in &sweep.cells {
+        assert_eq!(
+            c.report.sched_invocations, 3,
+            "{}: expected one GDS/DACP pass per iteration",
+            c.policy.name()
+        );
+    }
+    assert!(sweep.sweep_seconds > 0.0);
+}

@@ -30,7 +30,7 @@ fn full_pipeline_invariants_all_policies_all_datasets() {
                 cfg.policy = policy;
                 let cp = cfg.cluster.cp;
                 let bucket = cfg.bucket_size;
-                let mut loader = ScheduledLoader::new(&ds, cfg);
+                let mut loader = ScheduledLoader::new(&ds, &cfg);
                 for _ in 0..3 {
                     let (batch, sched) = loader.next_iteration().expect("schedule");
                     // Eq. 9: every sequence exactly once
@@ -63,7 +63,7 @@ fn skrull_never_loses_to_baseline_in_simulation() {
         for policy in [Policy::Baseline, Policy::Skrull] {
             let mut cfg = cfg0.clone();
             cfg.policy = policy;
-            let mut loader = ScheduledLoader::new(&ds, cfg);
+            let mut loader = ScheduledLoader::new(&ds, &cfg);
             let mut total = 0.0;
             for _ in 0..8 {
                 let (_, sched) = loader.next_iteration().unwrap();
@@ -91,7 +91,7 @@ fn utilization_improves_under_skrull() {
     for policy in [Policy::Baseline, Policy::Skrull] {
         let mut cfg = cfg0.clone();
         cfg.policy = policy;
-        let mut loader = ScheduledLoader::new(&ds, cfg);
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         let mut u = 0.0;
         for _ in 0..5 {
             let (_, sched) = loader.next_iteration().unwrap();
@@ -174,7 +174,7 @@ fn seeded_determinism_end_to_end() {
     let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 10_000, 1);
     let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
     let run = || {
-        let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         let cost = CostModel::paper_default(&cfg.model);
         let mut times = Vec::new();
         for _ in 0..4 {
@@ -200,7 +200,7 @@ fn bigger_bucket_never_hurts_with_refinement() {
         let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
         cfg.bucket_size = c;
         cfg.policy = Policy::SkrullRefined;
-        let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+        let mut loader = ScheduledLoader::new(&ds, &cfg);
         let mut total = 0.0;
         for _ in 0..5 {
             let (_, sched) = loader.next_iteration().unwrap();
@@ -222,7 +222,7 @@ fn refined_policy_never_loses_to_plain_skrull() {
         for policy in [Policy::Skrull, Policy::SkrullRefined] {
             let mut cfg = cfg0.clone();
             cfg.policy = policy;
-            let mut loader = ScheduledLoader::new(&ds, cfg);
+            let mut loader = ScheduledLoader::new(&ds, &cfg);
             let mut total = 0.0;
             for _ in 0..6 {
                 let (_, sched) = loader.next_iteration().unwrap();
@@ -254,7 +254,7 @@ fn fixed_capacity_source_reproduces_hand_set_schedules_byte_identically() {
     assert_eq!(cfg.memory.source, CapacitySource::Fixed);
     let ds = ds.truncated(cfg.bucket_size * cfg.cluster.cp as u32);
     let flops = FlopsModel::new(&cfg.model);
-    let mut loader = ScheduledLoader::new(&ds, cfg.clone());
+    let mut loader = ScheduledLoader::new(&ds, &cfg);
     assert_eq!(*loader.capacity().as_ref().unwrap(), cfg.bucket_size);
 
     // replicate the loader's sampling stream independently
