@@ -29,18 +29,26 @@ fn ablation_solver_gap() {
     let mut gaps = Vec::new();
     let mut gaps_refined = Vec::new();
     let mut nodes_total = 0u64;
+    let mut nodes_warm_total = 0u64;
     let trials = 40;
     for _ in 0..trials {
         let k = 3 + rng.usize_below(6); // K in 3..8
         let lens: Vec<u32> = (0..k).map(|_| dist.sample(&mut rng).min(c * n as u32)).collect();
         let Ok(hplan) = dacp::schedule(&lens, &cfg, &flops) else { continue };
         let Some(sol) = solver::solve(&lens, c, n, &cost, 5_000_000) else { continue };
+        // warm-starting from the heuristic incumbent prunes the search
+        // without moving the optimum (solver property tests pin this)
+        let warm = solver::solve_warm(&lens, c, n, &cost, 5_000_000, Some(&hplan))
+            .expect("warm search explores a subset of the cold search");
+        assert!((warm.cost - sol.cost).abs() <= 1e-9 * sol.cost.max(1.0));
+        assert!(warm.nodes <= sol.nodes);
         let h = cost.tdacp(&lens, &hplan, n);
         let refined = dacp::refine_multistart(&hplan, &lens, &cfg, &cost);
         let hr = cost.tdacp(&lens, &refined, n);
         gaps.push(h / sol.cost);
         gaps_refined.push(hr / sol.cost);
         nodes_total += sol.nodes;
+        nodes_warm_total += warm.nodes;
     }
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
     let worst = gaps.iter().cloned().fold(0.0, f64::max);
@@ -54,7 +62,11 @@ fn ablation_solver_gap() {
         "+ cost-aware refine:    mean TDACP ratio {:.4}, worst {worst_r:.3}   (our extension)",
         mean(&gaps_refined)
     );
-    println!("solver nodes explored: {nodes_total}");
+    println!(
+        "solver nodes explored: {nodes_total} cold, {nodes_warm_total} warm-started \
+         ({:.0}% pruned by the heuristic incumbent)",
+        100.0 * (1.0 - nodes_warm_total as f64 / nodes_total.max(1) as f64)
+    );
     println!(
         "finding: Alg.1's avoid-sharding principle leaves isolated long locals\n\
          dominating the makespan; one greedy demote/migrate pass closes most of the gap."

@@ -1,161 +1,31 @@
-//! Section 4.3's "near-zero cost online scheduling" claim: wall-clock of
-//! the full GDS+DACP scheduler per iteration vs the simulated iteration
-//! time it schedules, across batch sizes (and a large-K stress sweep).
-//!
-//! Pass criterion (paper's claim): scheduling < 1% of iteration time at
-//! the paper's settings.
-//!
-//! Besides the human-readable table this bench emits
-//! `BENCH_sched_overhead.json` (per-K mean/p50 scheduling time, overhead
-//! ratio, and fast-path-vs-reference speedup) so the perf trajectory is
-//! machine-trackable across PRs.
+//! Thin wrapper over `bench::sched_overhead` (also reachable as
+//! `skrull sched-bench`): run the overhead + K-scaling sweeps at paper
+//! scale, emit `BENCH_sched_overhead.json`, and self-validate it with the
+//! same gate CI uses.
 
-use std::fmt::Write as _;
-
-use skrull::bench::{measure, Measurement, TableBuilder};
-use skrull::cluster::simulate_iteration;
-use skrull::config::ExperimentConfig;
-use skrull::data::{Dataset, LengthDistribution};
-use skrull::model::ModelSpec;
-use skrull::perfmodel::{CostModel, FlopsModel};
+use skrull::bench::{measure, sched_overhead};
+use skrull::perfmodel::FlopsModel;
 use skrull::rng::Rng;
-use skrull::scheduler::gds::{self, GdsConfig, SchedCtx};
-
-struct Row {
-    k: usize,
-    fast: Measurement,
-    refined: Measurement,
-    reference: Measurement,
-    iter_time_s: f64,
-    overhead_ratio: f64,
-}
-
-fn json_escape_free(s: &str) -> &str {
-    // all strings we emit are identifier-ish; keep the writer honest
-    assert!(!s.contains(['"', '\\', '\n']), "unescapable: {s}");
-    s
-}
-
-fn write_json(cfg: &ExperimentConfig, rows: &[Row], worst_ratio: f64) -> String {
-    let mut out = String::new();
-    out.push_str("{\n");
-    let _ = writeln!(out, "  \"bench\": \"sched_overhead\",");
-    let _ = writeln!(out, "  \"schema_version\": 1,");
-    let _ = writeln!(
-        out,
-        "  \"config\": {{\"model\": \"{}\", \"dataset\": \"{}\", \"dp\": {}, \"cp\": {}, \"bucket_size\": {}}},",
-        json_escape_free(&cfg.model.name),
-        json_escape_free(&cfg.dataset),
-        cfg.cluster.dp,
-        cfg.cluster.cp,
-        cfg.bucket_size
-    );
-    out.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        let _ = writeln!(
-            out,
-            "    {{\"k\": {}, \"sched_mean_s\": {:e}, \"sched_p50_s\": {:e}, \"refine_mean_s\": {:e}, \
-             \"reference_mean_s\": {:e}, \"speedup_vs_reference\": {:.3}, \"iter_time_s\": {:e}, \
-             \"overhead_ratio\": {:e}}}{}",
-            r.k,
-            r.fast.mean_s(),
-            r.fast.samples.quantile(0.5),
-            r.refined.mean_s(),
-            r.reference.mean_s(),
-            r.reference.mean_s() / r.fast.mean_s().max(1e-12),
-            r.iter_time_s,
-            r.overhead_ratio,
-            if i + 1 == rows.len() { "" } else { "," }
-        );
-    }
-    out.push_str("  ],\n");
-    let _ = writeln!(out, "  \"worst_paper_scale_ratio\": {:e},", worst_ratio);
-    let _ = writeln!(
-        out,
-        "  \"near_zero_overhead_pass\": {}",
-        worst_ratio < 0.01
-    );
-    out.push_str("}\n");
-    out
-}
 
 fn main() {
-    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
-    let dist = LengthDistribution::wikipedia();
-    let ds = Dataset::synthesize(&dist, 100_000, 7).truncated(cfg.bucket_size * 8);
-    let cost = CostModel::paper_default(&cfg.model);
-    let flops = FlopsModel::new(&cfg.model);
-    let gcfg = GdsConfig::new(cfg.bucket_size, cfg.cluster.cp, cfg.cluster.dp);
+    let opts = sched_overhead::SchedBenchOptions::paper_default();
+    let report = sched_overhead::run(&opts).expect("sched_overhead bench");
+    sched_overhead::print_report(&report);
 
-    let mut table = TableBuilder::new("Scheduler overhead (GDS+DACP, Qwen2.5-0.5B, wikipedia)")
-        .header(&["BatchSize K", "sched time", "+refine", "reference", "speedup", "iter time (sim)", "overhead"]);
-
-    let mut rng = Rng::seed_from_u64(99);
-    let mut worst_ratio: f64 = 0.0;
-    let mut rows: Vec<Row> = Vec::new();
-    let mut ctx = SchedCtx::default();
-    for k in [16usize, 64, 256, 1024, 4096] {
-        let batch = ds.sample_batch(&mut rng, k);
-        // fewer samples at stress scale — the reference path is the
-        // pre-fast-path scheduler and is deliberately slow there
-        let (warmup, samples) = if k <= 256 { (3, 20) } else { (1, 5) };
-        let m = measure(&format!("gds k={k}"), warmup, samples, || {
-            let _ = gds::schedule_with_ctx(&batch, &gcfg, &flops, &mut ctx).expect("schedule");
-        });
-        let m_ref = measure(&format!("gds+refine k={k}"), warmup, samples, || {
-            let _ = gds::schedule_refined_with_ctx(&batch, &gcfg, &cost, &mut ctx)
-                .expect("schedule");
-        });
-        let m_reference = measure(&format!("gds reference k={k}"), warmup.min(1), samples.min(5), || {
-            let _ = gds::schedule_reference(&batch, &gcfg, &flops).expect("schedule");
-        });
-        let sched = gds::schedule(&batch, &gcfg, &flops).unwrap();
-        let iter_time = simulate_iteration(&sched, &cost, cfg.cluster.cp).total_time;
-        let ratio = m.mean_s() / iter_time;
-        if k <= 64 {
-            worst_ratio = worst_ratio.max(ratio);
-        }
-        table.row(&[
-            k.to_string(),
-            skrull::util::fmt_secs(m.mean_s()),
-            skrull::util::fmt_secs(m_ref.mean_s()),
-            skrull::util::fmt_secs(m_reference.mean_s()),
-            format!("{:.1}x", m_reference.mean_s() / m.mean_s().max(1e-12)),
-            skrull::util::fmt_secs(iter_time),
-            format!("{:.3}%", 100.0 * ratio),
-        ]);
-        rows.push(Row {
-            k,
-            fast: m,
-            refined: m_ref,
-            reference: m_reference,
-            iter_time_s: iter_time,
-            overhead_ratio: ratio,
-        });
-    }
-    table.print();
-    println!("worst overhead at paper-scale batches (K≤64): {:.3}%", 100.0 * worst_ratio);
-    if let Some(stress) = rows.last() {
-        println!(
-            "fast-path speedup vs reference at K={}: {:.1}x",
-            stress.k,
-            stress.reference.mean_s() / stress.fast.mean_s().max(1e-12)
-        );
-    }
-
-    let json = write_json(&cfg, &rows, worst_ratio);
+    let json = sched_overhead::render_json(&report);
     std::fs::write("BENCH_sched_overhead.json", &json).expect("write BENCH_sched_overhead.json");
     println!("wrote BENCH_sched_overhead.json");
-
-    assert!(
-        worst_ratio < 0.01,
-        "near-zero-overhead claim violated: {:.3}%",
-        100.0 * worst_ratio
-    );
-    println!("near-zero-overhead claim holds (<1%)");
+    sched_overhead::validate_json(&json).expect("BENCH_sched_overhead.json failed its own gate");
+    println!("near-zero-overhead claim holds (<1%) and K-scaling is near-linear");
 
     // component microbenches
     println!();
+    let cfg = report.cfg;
+    let dist = skrull::data::LengthDistribution::wikipedia();
+    let ds = skrull::data::Dataset::synthesize(&dist, 100_000, 7)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let flops = FlopsModel::new(&cfg.model);
+    let mut rng = Rng::seed_from_u64(99);
     let batch = ds.sample_batch(&mut rng, 64);
     let lens: Vec<u32> = batch.iter().map(|s| s.len).collect();
     let dcfg = skrull::scheduler::dacp::DacpConfig::new(cfg.bucket_size, cfg.cluster.cp);

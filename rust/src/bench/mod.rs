@@ -5,6 +5,7 @@
 
 pub mod e2e;
 pub mod harness;
+pub mod sched_overhead;
 pub mod table;
 
 pub use harness::{measure, Measurement};

@@ -1,0 +1,547 @@
+//! Scheduler-overhead benchmark behind `skrull sched-bench` and
+//! `benches/sched_overhead.rs`.
+//!
+//! Two sweeps share one report:
+//!
+//! * **Overhead rows** — Section 4.3's "near-zero cost online scheduling"
+//!   claim: wall-clock of the full GDS+DACP pass per iteration vs the
+//!   simulated iteration time it schedules, across paper-scale batch
+//!   sizes, with the pre-fast-path reference as the speedup baseline.
+//! * **Scaling rows** — the million-sequence curve: scheduling time at
+//!   K = 2^12 … 2^20 through the sharded hot path (no reference timing
+//!   there — the reference is deliberately quadratic-ish and exists for
+//!   oracle tests, not for stress scale), plus the incremental-mode
+//!   steady-state time on a repeated batch.
+//!
+//! `render_json` emits `BENCH_sched_overhead.json` (schema v2) and
+//! `validate_json` is the CI gate: required keys, finite values, strictly
+//! increasing K, a near-linear K-scaling bound, and the <1% overhead
+//! claim itself.
+
+use std::fmt::Write as _;
+
+use crate::bench::{measure, Measurement, TableBuilder};
+use crate::cluster::simulate_iteration;
+use crate::config::ExperimentConfig;
+use crate::data::{Dataset, LengthDistribution};
+use crate::model::ModelSpec;
+use crate::perfmodel::{CostModel, FlopsModel};
+use crate::rng::Rng;
+use crate::scheduler::gds::{self, GdsConfig, SchedCtx};
+use crate::util::error::Result;
+
+/// What one bench run measures.
+#[derive(Clone, Debug)]
+pub struct SchedBenchOptions {
+    pub model: ModelSpec,
+    pub dataset: String,
+    /// Batch sizes for the overhead sweep (fast vs refined vs reference,
+    /// overhead ratio against the simulated iteration).
+    pub overhead_ks: Vec<usize>,
+    /// Batch sizes for the K-scaling curve (sharded fast path only).
+    pub scaling_ks: Vec<usize>,
+    /// Shard count for the scaling sweep; 0 = auto (one per core).
+    pub shards: usize,
+    /// (warmup, samples) for the scaling sweep — kept small, the larger
+    /// K's already take O(seconds) per call.
+    pub scaling_reps: (usize, usize),
+}
+
+impl SchedBenchOptions {
+    /// The paper-scale run: overhead at K ≤ 4096, scaling to K = 2^20.
+    pub fn paper_default() -> Self {
+        SchedBenchOptions {
+            model: ModelSpec::qwen2_5_0_5b(),
+            dataset: "wikipedia".to_string(),
+            overhead_ks: vec![16, 64, 256, 1024, 4096],
+            // 2^12 … 2^20 in 4x steps — the near-linear claim's x-axis
+            scaling_ks: vec![1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20],
+            shards: 0,
+            scaling_reps: (1, 3),
+        }
+    }
+
+    /// CI smoke: same shape, reduced K so the gate runs in seconds.
+    pub fn smoke() -> Self {
+        SchedBenchOptions {
+            overhead_ks: vec![16, 64, 256],
+            scaling_ks: vec![1 << 12, 1 << 14, 1 << 16],
+            scaling_reps: (1, 2),
+            ..Self::paper_default()
+        }
+    }
+}
+
+/// One overhead-sweep batch size.
+#[derive(Clone, Debug)]
+pub struct OverheadRow {
+    pub k: usize,
+    pub fast: Measurement,
+    pub refined: Measurement,
+    pub reference: Measurement,
+    pub iter_time_s: f64,
+    pub overhead_ratio: f64,
+}
+
+/// One K-scaling batch size (sharded fast path; no reference timing).
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub k: usize,
+    pub shards: usize,
+    pub sched_mean_s: f64,
+    pub per_seq_us: f64,
+    /// steady-state time on a repeated batch with `incremental = true`
+    /// (partition replay + per-rank cache hits)
+    pub incremental_mean_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedBenchReport {
+    pub cfg: ExperimentConfig,
+    pub rows: Vec<OverheadRow>,
+    pub scaling: Vec<ScalingRow>,
+    /// worst sched/iter ratio across paper-scale batches (K ≤ 64)
+    pub worst_paper_scale_ratio: f64,
+}
+
+/// Slack factor for the near-linear gate: end-to-end time may grow at
+/// most `slack × (k_max / k_min)` across the scaling curve.  Generous on
+/// purpose — it forbids quadratic blow-up, not cache effects or timer
+/// noise.
+pub const NEAR_LINEAR_SLACK: f64 = 8.0;
+
+/// Run both sweeps.  Everything is deterministic except the wall-clock
+/// readings themselves.
+pub fn run(opts: &SchedBenchOptions) -> Result<SchedBenchReport> {
+    let cfg = ExperimentConfig::paper_default(opts.model.clone(), &opts.dataset);
+    let dist = LengthDistribution::by_name(&opts.dataset)
+        .ok_or_else(|| crate::anyhow!("unknown dataset {:?}", opts.dataset))?;
+    let ds = Dataset::synthesize(&dist, 100_000, 7).truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let cost = CostModel::paper_default(&cfg.model);
+    let flops = FlopsModel::new(&cfg.model);
+    let gcfg = GdsConfig::new(cfg.bucket_size, cfg.cluster.cp, cfg.cluster.dp);
+
+    let mut rng = Rng::seed_from_u64(99);
+    let mut worst_ratio: f64 = 0.0;
+    let mut rows: Vec<OverheadRow> = Vec::new();
+    let mut ctx = SchedCtx::default();
+    for &k in &opts.overhead_ks {
+        let batch = ds.sample_batch(&mut rng, k);
+        // fewer samples at stress scale — the reference path is the
+        // pre-fast-path scheduler and is deliberately slow there
+        let (warmup, samples) = if k <= 256 { (3, 20) } else { (1, 5) };
+        let fast = measure(&format!("gds k={k}"), warmup, samples, || {
+            let _ = gds::schedule_with_ctx(&batch, &gcfg, &flops, &mut ctx).expect("schedule");
+        });
+        let refined = measure(&format!("gds+refine k={k}"), warmup, samples, || {
+            let _ =
+                gds::schedule_refined_with_ctx(&batch, &gcfg, &cost, &mut ctx).expect("schedule");
+        });
+        let reference =
+            measure(&format!("gds reference k={k}"), warmup.min(1), samples.min(5), || {
+                let _ = gds::schedule_reference(&batch, &gcfg, &flops).expect("schedule");
+            });
+        let sched = gds::schedule(&batch, &gcfg, &flops)?;
+        let iter_time = simulate_iteration(&sched, &cost, cfg.cluster.cp).total_time;
+        let overhead_ratio = fast.mean_s() / iter_time;
+        if k <= 64 {
+            worst_ratio = worst_ratio.max(overhead_ratio);
+        }
+        rows.push(OverheadRow { k, fast, refined, reference, iter_time_s: iter_time, overhead_ratio });
+    }
+
+    let shards = if opts.shards == 0 {
+        crate::util::par::max_threads().max(1)
+    } else {
+        opts.shards
+    };
+    let (warmup, samples) = opts.scaling_reps;
+    let mut scaling: Vec<ScalingRow> = Vec::new();
+    // fresh arenas per mode so the plain sweep can't warm the incremental
+    // one (or vice versa)
+    let mut sctx = SchedCtx::default();
+    let mut ictx = SchedCtx::default();
+    let mut sharded_cfg = gcfg.clone();
+    sharded_cfg.shards = shards;
+    let mut inc_cfg = sharded_cfg.clone();
+    inc_cfg.incremental = true;
+    for &k in &opts.scaling_ks {
+        let batch = ds.sample_batch(&mut rng, k);
+        let m = measure(&format!("gds sharded k={k}"), warmup, samples, || {
+            let _ = gds::schedule_with_ctx(&batch, &sharded_cfg, &flops, &mut sctx)
+                .expect("schedule");
+        });
+        // warmup ≥ 1 means the measured calls all replay the cached
+        // solution — this is the steady-state repeated-batch number
+        let m_inc = measure(&format!("gds incremental k={k}"), warmup.max(1), samples, || {
+            let _ =
+                gds::schedule_with_ctx(&batch, &inc_cfg, &flops, &mut ictx).expect("schedule");
+        });
+        scaling.push(ScalingRow {
+            k,
+            shards,
+            sched_mean_s: m.mean_s(),
+            per_seq_us: m.mean_s() * 1e6 / k as f64,
+            incremental_mean_s: m_inc.mean_s(),
+        });
+    }
+
+    Ok(SchedBenchReport { cfg, rows, scaling, worst_paper_scale_ratio: worst_ratio })
+}
+
+/// Print both sweeps as human-readable tables.
+pub fn print_report(r: &SchedBenchReport) {
+    let fmt = crate::util::fmt_secs;
+    let mut table = TableBuilder::new("Scheduler overhead (GDS+DACP)").header(&[
+        "BatchSize K",
+        "sched time",
+        "+refine",
+        "reference",
+        "speedup",
+        "iter time (sim)",
+        "overhead",
+    ]);
+    for row in &r.rows {
+        table.row(&[
+            row.k.to_string(),
+            fmt(row.fast.mean_s()),
+            fmt(row.refined.mean_s()),
+            fmt(row.reference.mean_s()),
+            format!("{:.1}x", row.reference.mean_s() / row.fast.mean_s().max(1e-12)),
+            fmt(row.iter_time_s),
+            format!("{:.3}%", 100.0 * row.overhead_ratio),
+        ]);
+    }
+    table.print();
+    println!(
+        "worst overhead at paper-scale batches (K≤64): {:.3}%",
+        100.0 * r.worst_paper_scale_ratio
+    );
+    println!();
+    let mut table = TableBuilder::new(&format!(
+        "K-scaling, sharded fast path ({} shard{})",
+        r.scaling.first().map_or(0, |s| s.shards),
+        if r.scaling.first().map_or(0, |s| s.shards) == 1 { "" } else { "s" }
+    ))
+    .header(&["BatchSize K", "sched time", "per-seq", "incremental (repeat)"]);
+    for row in &r.scaling {
+        table.row(&[
+            row.k.to_string(),
+            fmt(row.sched_mean_s),
+            format!("{:.2}us", row.per_seq_us),
+            fmt(row.incremental_mean_s),
+        ]);
+    }
+    table.print();
+}
+
+fn json_escape_free(s: &str) -> &str {
+    // all strings we emit are identifier-ish; keep the writer honest
+    assert!(!s.contains(['"', '\\', '\n']), "unescapable: {s}");
+    s
+}
+
+/// Render the machine-trackable `BENCH_sched_overhead.json` (schema v2:
+/// v1's overhead rows plus the `scaling_rows` curve).
+pub fn render_json(r: &SchedBenchReport) -> String {
+    let cfg = &r.cfg;
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"sched_overhead\",");
+    let _ = writeln!(out, "  \"schema_version\": 2,");
+    let _ = writeln!(
+        out,
+        "  \"config\": {{\"model\": \"{}\", \"dataset\": \"{}\", \"dp\": {}, \"cp\": {}, \"bucket_size\": {}}},",
+        json_escape_free(&cfg.model.name),
+        json_escape_free(&cfg.dataset),
+        cfg.cluster.dp,
+        cfg.cluster.cp,
+        cfg.bucket_size
+    );
+    out.push_str("  \"rows\": [\n");
+    for (i, row) in r.rows.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    {{\"k\": {}, \"sched_mean_s\": {:e}, \"sched_p50_s\": {:e}, \"refine_mean_s\": {:e}, \
+             \"reference_mean_s\": {:e}, \"speedup_vs_reference\": {:.3}, \"iter_time_s\": {:e}, \
+             \"overhead_ratio\": {:e}}}{}",
+            row.k,
+            row.fast.mean_s(),
+            row.fast.samples.quantile(0.5),
+            row.refined.mean_s(),
+            row.reference.mean_s(),
+            row.reference.mean_s() / row.fast.mean_s().max(1e-12),
+            row.iter_time_s,
+            row.overhead_ratio,
+            if i + 1 == r.rows.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  ],\n");
+    // scaling keys are all "scaling_"-prefixed so the key-occurrence
+    // scans below never mix the two row kinds
+    out.push_str("  \"scaling_rows\": [\n");
+    for (i, row) in r.scaling.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    {{\"scaling_k\": {}, \"scaling_shards\": {}, \"scaling_sched_mean_s\": {:e}, \
+             \"scaling_per_seq_us\": {:e}, \"scaling_incremental_mean_s\": {:e}}}{}",
+            row.k,
+            row.shards,
+            row.sched_mean_s,
+            row.per_seq_us,
+            row.incremental_mean_s,
+            if i + 1 == r.scaling.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  ],\n");
+    let _ = writeln!(out, "  \"worst_paper_scale_ratio\": {:e},", r.worst_paper_scale_ratio);
+    let _ =
+        writeln!(out, "  \"near_zero_overhead_pass\": {}", r.worst_paper_scale_ratio < 0.01);
+    out.push_str("}\n");
+    out
+}
+
+const REQUIRED_TOP_KEYS: [&str; 7] = [
+    "\"bench\"",
+    "\"schema_version\"",
+    "\"config\"",
+    "\"rows\"",
+    "\"scaling_rows\"",
+    "\"worst_paper_scale_ratio\"",
+    "\"near_zero_overhead_pass\"",
+];
+
+const REQUIRED_ROW_KEYS: [&str; 8] = [
+    "k",
+    "sched_mean_s",
+    "sched_p50_s",
+    "refine_mean_s",
+    "reference_mean_s",
+    "speedup_vs_reference",
+    "iter_time_s",
+    "overhead_ratio",
+];
+
+const REQUIRED_SCALING_KEYS: [&str; 5] = [
+    "scaling_k",
+    "scaling_shards",
+    "scaling_sched_mean_s",
+    "scaling_per_seq_us",
+    "scaling_incremental_mean_s",
+];
+
+/// Every value token following `"key":` occurrences, in file order.
+fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
+    let needle = format!("\"{key}\":");
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find(&needle) {
+        rest = &rest[pos + needle.len()..];
+        let tail = rest.trim_start();
+        let end = tail.find([',', '}', '\n']).unwrap_or(tail.len());
+        out.push(tail[..end].trim());
+    }
+    out
+}
+
+fn finite_values(text: &str, key: &str) -> Result<Vec<f64>> {
+    values_after(text, key)
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let x: f64 = v
+                .parse()
+                .map_err(|_| crate::anyhow!("row {i}: \"{key}\" value {v:?} is not a number"))?;
+            crate::ensure!(x.is_finite(), "row {i}: \"{key}\" = {v} is not finite");
+            Ok(x)
+        })
+        .collect()
+}
+
+/// CI gate: does `text` look like a complete, sane
+/// `BENCH_sched_overhead.json`?  Checks required top-level / per-row
+/// keys, finiteness everywhere, strictly increasing K in both sweeps, the
+/// near-linear K-scaling bound (`NEAR_LINEAR_SLACK`), and the near-zero-
+/// overhead claim (`worst_paper_scale_ratio < 1%`, `near_zero_overhead_pass`
+/// true).
+pub fn validate_json(text: &str) -> Result<()> {
+    for key in REQUIRED_TOP_KEYS {
+        crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
+    }
+    let version: u64 = values_after(text, "schema_version")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable schema_version"))?;
+    crate::ensure!(version >= 2, "schema_version {version} predates v2");
+
+    // overhead rows
+    let n_rows = values_after(text, "k").len();
+    crate::ensure!(n_rows > 0, "no overhead rows");
+    for key in REQUIRED_ROW_KEYS {
+        let n = values_after(text, key).len();
+        crate::ensure!(n == n_rows, "row key \"{key}\" appears {n} times, expected {n_rows}");
+    }
+    for key in ["sched_mean_s", "refine_mean_s", "reference_mean_s", "iter_time_s", "overhead_ratio"]
+    {
+        for x in finite_values(text, key)? {
+            crate::ensure!(x >= 0.0, "\"{key}\" = {x} is negative");
+        }
+    }
+    let ks = finite_values(text, "k")?;
+    crate::ensure!(ks.windows(2).all(|w| w[0] < w[1]), "overhead K values not increasing");
+
+    // scaling rows
+    let n_scaling = values_after(text, "scaling_k").len();
+    crate::ensure!(n_scaling >= 2, "need at least 2 scaling rows, got {n_scaling}");
+    for key in REQUIRED_SCALING_KEYS {
+        let n = values_after(text, key).len();
+        crate::ensure!(n == n_scaling, "scaling key \"{key}\" appears {n} times, expected {n_scaling}");
+    }
+    let sks = finite_values(text, "scaling_k")?;
+    crate::ensure!(sks.windows(2).all(|w| w[0] < w[1]), "scaling K values not increasing");
+    let times = finite_values(text, "scaling_sched_mean_s")?;
+    finite_values(text, "scaling_per_seq_us")?;
+    finite_values(text, "scaling_incremental_mean_s")?;
+    crate::ensure!(times.iter().all(|&t| t > 0.0), "non-positive scaling time");
+    let (k_lo, k_hi) = (sks[0], sks[sks.len() - 1]);
+    crate::ensure!(k_hi / k_lo >= 4.0, "scaling curve spans < 4x in K — no linearity signal");
+    // near-linear gate: growth bounded by slack × the K ratio, end to end
+    // and between consecutive points (the latter catches a superlinear
+    // knee that end-to-end slack would forgive)
+    let grow = times[times.len() - 1] / times[0];
+    crate::ensure!(
+        grow <= NEAR_LINEAR_SLACK * (k_hi / k_lo),
+        "scheduling time grew {grow:.1}x over a {:.0}x K range — not near-linear",
+        k_hi / k_lo
+    );
+    for i in 1..times.len() {
+        let g = times[i] / times[i - 1];
+        crate::ensure!(
+            g <= NEAR_LINEAR_SLACK * (sks[i] / sks[i - 1]),
+            "scheduling time jumped {g:.1}x from K={} to K={}",
+            sks[i - 1],
+            sks[i]
+        );
+    }
+
+    // the claim itself
+    let worst: f64 = values_after(text, "worst_paper_scale_ratio")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable worst_paper_scale_ratio"))?;
+    crate::ensure!(
+        worst.is_finite() && (0.0..0.01).contains(&worst),
+        "worst_paper_scale_ratio {worst} violates the <1% overhead claim"
+    );
+    crate::ensure!(
+        values_after(text, "near_zero_overhead_pass").first() == Some(&"true"),
+        "near_zero_overhead_pass is not true"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A structurally complete report with hand-set timings — the
+    /// validator is pure text, so golden JSON keeps these tests free of
+    /// wall-clock noise (debug-build timings would trip the <1% gate).
+    fn golden() -> String {
+        let mut r = SchedBenchReport {
+            cfg: ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia"),
+            rows: Vec::new(),
+            scaling: Vec::new(),
+            worst_paper_scale_ratio: 0.002,
+        };
+        for (i, k) in [16usize, 64].into_iter().enumerate() {
+            let m = |name: &str, s: f64| {
+                let mut sum = crate::util::stats::Summary::new();
+                sum.push(s);
+                Measurement { name: name.to_string(), samples: sum }
+            };
+            r.rows.push(OverheadRow {
+                k,
+                fast: m("fast", 1e-4 * (i + 1) as f64),
+                refined: m("refined", 2e-4),
+                reference: m("reference", 5e-3),
+                iter_time_s: 2.0,
+                overhead_ratio: 0.002,
+            });
+        }
+        for (i, k) in [4096usize, 16384, 65536].into_iter().enumerate() {
+            let t = 1e-3 * 4f64.powi(i as i32); // exactly linear in K
+            r.scaling.push(ScalingRow {
+                k,
+                shards: 4,
+                sched_mean_s: t,
+                per_seq_us: t * 1e6 / k as f64,
+                incremental_mean_s: t / 10.0,
+            });
+        }
+        render_json(&r)
+    }
+
+    #[test]
+    fn golden_report_renders_and_validates() {
+        let json = golden();
+        assert!(json.contains("\"schema_version\": 2"));
+        assert!(json.contains("\"scaling_k\": 65536"));
+        validate_json(&json).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_missing_keys_and_bad_values() {
+        let json = golden();
+        // dropped top-level key
+        let broken = json.replace("\"scaling_rows\"", "\"scaling_rowz\"");
+        assert!(validate_json(&broken).is_err());
+        // a scaling row loses a field
+        let broken = json.replacen("\"scaling_shards\"", "\"scaling_shardz\"", 1);
+        assert!(validate_json(&broken).is_err());
+        // non-finite timing
+        let sample = values_after(&json, "scaling_sched_mean_s")[0].to_string();
+        let broken = json.replacen(&sample, "NaN", 1);
+        assert!(validate_json(&broken).is_err());
+        // overhead claim violated
+        let broken = json
+            .replace("\"near_zero_overhead_pass\": true", "\"near_zero_overhead_pass\": false");
+        assert!(validate_json(&broken).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_superlinear_scaling() {
+        let json = golden();
+        // blow up the largest-K time far past slack × K-ratio
+        let last = values_after(&json, "scaling_sched_mean_s")[2].to_string();
+        let broken = json.replacen(&last, "1e3", 1);
+        assert!(validate_json(&broken).is_err());
+    }
+
+    #[test]
+    fn tiny_live_run_produces_structurally_valid_rows() {
+        // real measurements at toy K — checks run()'s plumbing without
+        // gating on debug-build wall-clock ratios
+        let opts = SchedBenchOptions {
+            overhead_ks: vec![8, 16],
+            scaling_ks: vec![32, 128],
+            shards: 2,
+            scaling_reps: (0, 1),
+            ..SchedBenchOptions::smoke()
+        };
+        let r = run(&opts).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.scaling.len(), 2);
+        assert!(r.scaling.iter().all(|s| s.shards == 2));
+        assert!(r.scaling.iter().all(|s| {
+            s.sched_mean_s > 0.0
+                && s.per_seq_us.is_finite()
+                && s.incremental_mean_s > 0.0
+        }));
+        assert!(r.rows.iter().all(|row| row.overhead_ratio.is_finite()));
+        // the rendered text carries both row kinds
+        let json = render_json(&r);
+        assert_eq!(values_after(&json, "k").len(), 2);
+        assert_eq!(values_after(&json, "scaling_k").len(), 2);
+    }
+}

@@ -163,6 +163,18 @@ pub struct ExperimentConfig {
     /// clamped ≥ 1; 1 = fully serial.  A job count never changes results,
     /// only wall-clock.
     pub jobs: usize,
+    /// Shared-nothing scheduler shards (`scheduler.shards`, `--shards`):
+    /// persistent worker threads the GDS hot path partitions DP ranks
+    /// across (see `scheduler::shard`).  1 = the in-thread fast path;
+    /// 0 (or negative in TOML) = auto, one shard per available core.
+    /// Byte-identical output at every shard count (oracle-tested).
+    pub shards: usize,
+    /// Incremental re-scheduling (`scheduler.incremental`,
+    /// `--incremental`): reuse the previous iteration's rank partition and
+    /// per-rank solutions when the batch composition is unchanged.
+    /// Byte-identical to fresh scheduling — reuse is gated on exact
+    /// equality of lengths, model and knobs.
+    pub incremental: bool,
 }
 
 impl ExperimentConfig {
@@ -189,6 +201,8 @@ impl ExperimentConfig {
             memory: MemoryConfig::default(),
             cost: CostSource::Analytic,
             jobs: crate::util::par::max_threads().max(1),
+            shards: 1,
+            incremental: false,
         }
     }
 
@@ -268,6 +282,14 @@ impl ExperimentConfig {
         if jobs > 0 {
             cfg.jobs = jobs as usize;
         }
+        // same auto convention as run.jobs: 0 / negative = one shard per core
+        let shards = t.i64_or("scheduler.shards", cfg.shards as i64);
+        cfg.shards = if shards > 0 {
+            shards as usize
+        } else {
+            crate::util::par::max_threads().max(1)
+        };
+        cfg.incremental = t.bool_or("scheduler.incremental", cfg.incremental);
         let source = t.str_or("memory.capacity_source", cfg.memory.source.name());
         cfg.memory.source = CapacitySource::by_name(&source)
             .ok_or_else(|| crate::anyhow!("unknown capacity source {source:?}"))?;
@@ -389,6 +411,24 @@ pipelined = false
         let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
         assert!(d.jobs >= 1);
         assert_eq!(d.jobs, auto);
+    }
+
+    #[test]
+    fn scheduler_shards_and_incremental_keys_parse() {
+        let auto = crate::util::par::max_threads().max(1);
+        let t = toml::parse("[scheduler]\nshards = 4\nincremental = true\n").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.shards, 4);
+        assert!(c.incremental);
+        // 0 / negative = auto (one shard per core), same as run.jobs
+        let t = toml::parse("[scheduler]\nshards = 0\n").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().shards, auto);
+        let t = toml::parse("[scheduler]\nshards = -2\n").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().shards, auto);
+        // absent: single shard, incremental off — the PR-5 behaviour
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.shards, 1);
+        assert!(!d.incremental);
     }
 
     #[test]

@@ -89,6 +89,8 @@ impl<'a> ScheduledLoader<'a> {
         let c = &self.cfg.cluster;
         let mut gcfg = gds::GdsConfig::new(bucket, c.cp, c.dp);
         gcfg.parallel = gcfg.parallel && self.sched_parallel;
+        gcfg.shards = self.cfg.shards.max(1);
+        gcfg.incremental = self.cfg.incremental;
         self.sched_invocations += 1;
         let out = dispatch::schedule_policy(
             self.cfg.policy,
@@ -131,6 +133,19 @@ impl<'a> ScheduledLoader<'a> {
     /// Wall-clock of the most recent scheduling call (Ok or Err).
     pub fn last_sched_seconds(&self) -> f64 {
         self.last_sched_seconds
+    }
+
+    /// Iterations where incremental mode replayed the previous rank
+    /// partition outright (see `gds::SchedCtx::partition_reuses`).
+    pub fn sched_partition_reuses(&self) -> u64 {
+        self.ctx.partition_reuses()
+    }
+
+    /// Per-rank incremental cache hits (see `gds::SchedCtx::rank_cache_hits`;
+    /// shard workers keep thread-local caches, so observe this with
+    /// `shards = 1`).
+    pub fn sched_rank_cache_hits(&self) -> u64 {
+        self.ctx.rank_cache_hits()
     }
 
     /// Drive `iterations` iterations synchronously: schedule, then hand the

@@ -88,6 +88,16 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("epoch") {
         cfg.epoch = true;
     }
+    // scheduler scaling knobs: --shards 0 = auto (one per core), same
+    // convention as the TOML key; --incremental turns on reuse of the
+    // previous iteration's solution (byte-identical either way)
+    match args.parse_or("shards", cfg.shards)? {
+        0 => cfg.shards = skrull::util::par::max_threads().max(1),
+        n => cfg.shards = n,
+    }
+    if args.flag("incremental") {
+        cfg.incremental = true;
+    }
     if let Some(p) = args.get("policy") {
         cfg.policy = Policy::by_name(p).context("unknown --policy")?;
     }
@@ -376,6 +386,60 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sched_bench(args: &Args) -> Result<()> {
+    use skrull::bench::sched_overhead as sb;
+
+    // validation-only mode (the CI gate), same calling convention as
+    // `e2e --validate`
+    let validate_path = args.get("validate").map(str::to_string).or_else(|| {
+        if args.flag("validate") {
+            args.positional.get(1).cloned()
+        } else {
+            None
+        }
+    });
+    if args.flag("validate") && validate_path.is_none() {
+        skrull::bail!(
+            "sched-bench --validate needs a file: `sched-bench --validate=BENCH_sched_overhead.json`"
+        );
+    }
+    if let Some(path) = validate_path {
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        sb::validate_json(&text).with_context(|| format!("{path} failed validation"))?;
+        println!("{path}: ok");
+        return Ok(());
+    }
+
+    let mut opts = if args.flag("smoke") {
+        sb::SchedBenchOptions::smoke()
+    } else {
+        sb::SchedBenchOptions::paper_default()
+    };
+    if let Some(m) = args.get("model") {
+        opts.model = ModelSpec::by_name(m).context("unknown --model")?;
+    }
+    if let Some(d) = args.get("dataset") {
+        opts.dataset = d.to_string();
+    }
+    opts.shards = args.parse_or("shards", opts.shards)?;
+    println!(
+        "sched-bench: overhead at K={:?}, scaling at K={:?}, {} shard(s)",
+        opts.overhead_ks,
+        opts.scaling_ks,
+        if opts.shards == 0 { "auto".to_string() } else { opts.shards.to_string() },
+    );
+    let report = sb::run(&opts)?;
+    sb::print_report(&report);
+
+    let out_path = args.str_or("out", "BENCH_sched_overhead.json");
+    let json = sb::render_json(&report);
+    sb::validate_json(&json).context("self-check of rendered BENCH_sched_overhead.json")?;
+    std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 fn cmd_calibrate(args: &Args) -> Result<()> {
     use skrull::calib;
 
@@ -548,14 +612,17 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: skrull <schedule|simulate|e2e|calibrate|train|analyze|profile> [--options]
+const USAGE: &str = "usage: skrull <schedule|simulate|e2e|sched-bench|calibrate|train|analyze|profile> [--options]
   common:    --config FILE | --model M --dataset D --dp N --cp N --batch-size K
              --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
+             --shards N (scheduler shards, 0 = auto) --incremental
              --cost-profile FILE (calibrated coefficients from `skrull calibrate`)
   memory:    --capacity (fixed|hbm-derived) --hbm-gb F[,F,...] --recompute (full|selective|none)
   e2e:       --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
              --seeds a,b,c --epoch --jobs N (0 = auto) --deterministic-timing
              --config FILE ([run] jobs key only) --out FILE --smoke | --validate=FILE
+  sched-bench: overhead + K-scaling sweep -> BENCH_sched_overhead.json
+             --smoke --shards N (0 = auto) --out FILE | --validate=FILE
   calibrate: --emit FILE (run the calibration sweep, write a JSONL trace)
              --trace FILE [--out PROFILE.json] [--validate [--min-r2 R] [--tolerance T]]
   train:     --artifacts DIR --steps N --workers W --lr F --corpus-size K";
@@ -569,6 +636,7 @@ fn main() -> Result<()> {
         "epoch",
         "validate",
         "deterministic-timing",
+        "incremental",
     ])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
@@ -578,6 +646,7 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "simulate" => cmd_simulate(&args),
         "e2e" => cmd_e2e(&args),
+        "sched-bench" => cmd_sched_bench(&args),
         "calibrate" => cmd_calibrate(&args),
         "train" => cmd_train(&args),
         "analyze" => cmd_analyze(&args),

@@ -9,8 +9,10 @@
 
 use crate::model::ModelSpec;
 
-/// FLOPs estimation for one model configuration.
-#[derive(Clone, Debug)]
+/// FLOPs estimation for one model configuration.  `PartialEq` is exact
+/// (bitwise field equality) — the scheduler's incremental caches use it to
+/// gate solution reuse on the model being unchanged.
+#[derive(Clone, Debug, PartialEq)]
 pub struct FlopsModel {
     pub hidden: f64,
     pub kv_hidden: f64,

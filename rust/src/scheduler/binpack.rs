@@ -14,7 +14,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 /// `f64` with the IEEE 754 total order, for heap keys.
-#[derive(Clone, Copy, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 struct TotalF64(f64);
 
 impl Eq for TotalF64 {}
@@ -31,23 +31,65 @@ impl Ord for TotalF64 {
     }
 }
 
+/// Reusable working buffers for [`balance_into`]: the LPT order and the
+/// (load, bin) min-heap.  Thread one through repeated calls and the
+/// steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct BinpackScratch {
+    order: Vec<usize>,
+    heap: BinaryHeap<Reverse<(TotalF64, usize)>>,
+}
+
 /// Distribute weighted items over `bins` bins, minimizing the max bin
 /// weight.  Returns per-bin item lists; items keep their payloads.
 pub fn balance<T: Copy>(items: &[(T, f64)], bins: usize) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let mut placed = Vec::new();
+    balance_into(items, bins, &mut BinpackScratch::default(), &mut out, &mut placed);
+    out
+}
+
+/// [`balance`] into caller-owned bins: identical placements, but the bin
+/// `Vec`s, the LPT order and the heap are all recycled across calls.
+/// `placed[j]` records the item *indices* routed to bin `j`, in placement
+/// (descending-weight) order — the incremental scheduler replays it to
+/// reproduce this exact partition without re-running LPT.
+pub fn balance_into<T: Copy>(
+    items: &[(T, f64)],
+    bins: usize,
+    scratch: &mut BinpackScratch,
+    out: &mut Vec<Vec<T>>,
+    placed: &mut Vec<Vec<usize>>,
+) {
     assert!(bins > 0);
-    let mut order: Vec<usize> = (0..items.len()).collect();
-    order.sort_by(|&a, &b| items[b].1.total_cmp(&items[a].1));
-    let mut out: Vec<Vec<T>> = vec![Vec::new(); bins];
+    out.resize_with(bins, Vec::new);
+    placed.resize_with(bins, Vec::new);
+    for b in out.iter_mut() {
+        b.clear();
+    }
+    for p in placed.iter_mut() {
+        p.clear();
+    }
+    scratch.order.clear();
+    scratch.order.extend(0..items.len());
+    // descending weight with an ascending-index tiebreak: a strict total
+    // order, so the allocation-free unstable sort reproduces the stable
+    // `sort_by` ordering the reference uses
+    scratch
+        .order
+        .sort_unstable_by(|&a, &b| items[b].1.total_cmp(&items[a].1).then(a.cmp(&b)));
     // min-heap over (load, bin index): equal loads pop the lowest index,
     // matching the reference min-scan's first-minimum rule
-    let mut heap: BinaryHeap<Reverse<(TotalF64, usize)>> =
-        (0..bins).map(|j| Reverse((TotalF64(0.0), j))).collect();
-    for idx in order {
-        let Reverse((TotalF64(load), j)) = heap.pop().expect("bins > 0");
-        out[j].push(items[idx].0);
-        heap.push(Reverse((TotalF64(load + items[idx].1), j)));
+    scratch.heap.clear();
+    for j in 0..bins {
+        scratch.heap.push(Reverse((TotalF64(0.0), j)));
     }
-    out
+    for &idx in &scratch.order {
+        let Reverse((TotalF64(load), j)) = scratch.heap.pop().expect("bins > 0");
+        out[j].push(items[idx].0);
+        placed[j].push(idx);
+        scratch.heap.push(Reverse((TotalF64(load + items[idx].1), j)));
+    }
 }
 
 /// The original O(items × bins) min-scan LPT — oracle for [`balance`].
@@ -173,6 +215,31 @@ mod tests {
                     "bins={bins} n={n}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn balance_into_reuse_matches_reference_and_replays() {
+        // one scratch + bin arena threaded through many differently-sized
+        // calls must keep matching the reference, and the recorded
+        // placements must replay to the identical partition
+        let mut rng = Rng::seed_from_u64(0x51);
+        let mut scratch = BinpackScratch::default();
+        let mut out: Vec<Vec<usize>> = Vec::new();
+        let mut placed: Vec<Vec<usize>> = Vec::new();
+        for trial in 0..30 {
+            let n = 1 + (trial * 17) % 83;
+            let bins = 1 + trial % 6;
+            let items: Vec<(usize, f64)> = (0..n)
+                .map(|i| (i, if i % 4 == 0 { 8.0 } else { rng.lognormal(2.0, 1.0) }))
+                .collect();
+            balance_into(&items, bins, &mut scratch, &mut out, &mut placed);
+            assert_eq!(out, balance_reference(&items, bins), "trial {trial}");
+            let replayed: Vec<Vec<usize>> = placed
+                .iter()
+                .map(|p| p.iter().map(|&idx| items[idx].0).collect())
+                .collect();
+            assert_eq!(replayed, out, "trial {trial}");
         }
     }
 

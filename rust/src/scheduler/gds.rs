@@ -71,6 +71,16 @@ pub struct GdsConfig {
     pub parallel: bool,
     /// Micro-batch-count search strategy (fast path only).
     pub search: MbSearch,
+    /// Shared-nothing scheduler shards (≥ 2 routes [`schedule_with_ctx`]
+    /// through the persistent shard pool in scheduler::shard; 1 keeps the
+    /// in-process path).  Output is byte-identical for every value.
+    pub shards: usize,
+    /// Incremental re-scheduling: when batch composition repeats between
+    /// iterations, replay the previous LPT partition and per-rank
+    /// micro-batch structure instead of re-deriving them.  Reuse is gated
+    /// on *exact* length equality, so the output is byte-identical to a
+    /// fresh schedule by construction.
+    pub incremental: bool,
 }
 
 impl GdsConfig {
@@ -83,6 +93,8 @@ impl GdsConfig {
             interleave: true,
             parallel: true,
             search: MbSearch::Gallop,
+            shards: 1,
+            incremental: false,
         }
     }
 
@@ -95,10 +107,18 @@ impl GdsConfig {
 
 /// Per-rank scratch arena: every buffer the micro-batch-count retry loop
 /// needs, reused across candidates, ranks (when serial) and iterations.
+/// Struct-of-arrays throughout — sequence metadata lives in flat `u32`/
+/// `u64`/`i32` arrays (lens, packed sort keys, concatenated assignments)
+/// so the steady state performs zero heap allocations beyond the returned
+/// schedule itself.
 #[derive(Debug, Default)]
 pub struct RankCtx {
     /// the rank's subset, ascending by length
     sorted: Vec<Sequence>,
+    /// packed `(len << 32) | original_index` sort keys: strictly distinct,
+    /// so the allocation-free unstable sort reproduces the reference's
+    /// stable sort-by-length byte for byte
+    keys: Vec<u64>,
     /// lengths of `sorted` (contiguous, cache-friendly for the prechecks)
     lens: Vec<u32>,
     /// prefix token sums of `lens` (chunked precheck)
@@ -107,27 +127,84 @@ pub struct RankCtx {
     subset_tokens: Vec<u64>,
     /// lengths of the subset currently handed to DACP
     lens_buf: Vec<u32>,
-    /// accepted per-subset plans for the candidate under trial
-    plans: Vec<DacpPlan>,
+    /// flat plan arena: accepted per-subset assignments for the candidate
+    /// under trial, concatenated in subset order …
+    plan_assign: Vec<i32>,
+    /// … with `plan_offsets[j]..plan_offsets[j+1]` delimiting subset j
+    plan_offsets: Vec<usize>,
     /// DACP's own working buffers
     dacp: DacpScratch,
     /// per-subset length buffers for the parallel inner DACP fan-out
     lens_pool: Vec<Vec<u32>>,
     /// per-subset DACP scratches for the parallel inner fan-out
     dacp_pool: Vec<DacpScratch>,
+    /// previous successful solution, for incremental re-scheduling
+    cache: RankCache,
+    /// how many times the incremental cache short-circuited the search
+    cache_hits: u64,
+}
+
+/// A rank's previous solution, cached for incremental re-scheduling.  A
+/// hit requires the *exact* sorted length multiset plus every config knob
+/// that can influence the solution to match; the post-sort schedule is a
+/// pure function of those, so replaying the cached micro-batch structure
+/// over the freshly sorted sequences is byte-identical to a fresh solve.
+#[derive(Debug, Default)]
+struct RankCache {
+    valid: bool,
+    bucket_size: u32,
+    cp: usize,
+    interleave: bool,
+    rollback_largest: bool,
+    flops: Option<FlopsModel>,
+    /// sorted lengths the cached solution was derived from
+    lens: Vec<u32>,
+    /// accepted micro-batch count
+    n_mb: usize,
+    /// concatenated per-subset assignments (same layout as the plan arena)
+    assign: Vec<i32>,
+    offsets: Vec<usize>,
+}
+
+impl RankCache {
+    fn matches(&self, cfg: &GdsConfig, flops: &FlopsModel, sorted_lens: &[u32]) -> bool {
+        self.valid
+            && self.bucket_size == cfg.bucket_size
+            && self.cp == cfg.cp
+            && self.interleave == cfg.interleave
+            && self.rollback_largest == cfg.rollback_largest
+            && self.flops.as_ref() == Some(flops)
+            && self.lens == sorted_lens
+    }
 }
 
 /// Below this many sequences on a rank, the inner per-subset DACP fan-out
 /// is not worth the thread spawns; the candidate runs serially.
 const PAR_SUBSET_MIN_SEQS: usize = 512;
 
-/// Scratch arena for a full [`schedule_with_ctx`] call: per-rank contexts
-/// plus the weighted-sequence buffer the bin-packer consumes.  Hold one
-/// per loader/caller and reuse it every iteration.
+/// Scratch arena for a full [`schedule_with_ctx`] call: per-rank contexts,
+/// the weighted-sequence and bin arenas the bin-packer consumes, the
+/// incremental-partition cache, and (lazily) the shard worker pool.  Hold
+/// one per loader/caller and reuse it every iteration.
 #[derive(Debug, Default)]
 pub struct SchedCtx {
     ranks: Vec<RankCtx>,
     weighted: Vec<(Sequence, f64)>,
+    /// per-DP-rank subset arena (recycled bin `Vec`s)
+    bins: Vec<Vec<Sequence>>,
+    /// batch positions routed to each bin, in LPT placement order — the
+    /// incremental mode replays this to reproduce the exact partition
+    placed: Vec<Vec<usize>>,
+    binpack: binpack::BinpackScratch,
+    /// batch lengths the cached partition was derived from
+    prev_lens: Vec<u32>,
+    prev_dp: usize,
+    prev_flops: Option<FlopsModel>,
+    prev_valid: bool,
+    partition_reuses: u64,
+    /// persistent shared-nothing worker pool (created on first sharded
+    /// call, recreated when the shard count or rank capacity changes)
+    pool: Option<crate::scheduler::shard::ShardPool>,
 }
 
 impl SchedCtx {
@@ -135,6 +212,20 @@ impl SchedCtx {
         if self.ranks.len() < dp {
             self.ranks.resize_with(dp, RankCtx::default);
         }
+    }
+
+    /// How many calls replayed the previous LPT partition instead of
+    /// re-running the bin-packer (incremental mode only).
+    pub fn partition_reuses(&self) -> u64 {
+        self.partition_reuses
+    }
+
+    /// How many per-rank solves were short-circuited by the incremental
+    /// cache.  Counts the in-process paths; shard workers keep their
+    /// caches (and counters) thread-local, so run shard-count 1 when a
+    /// test needs to observe this.
+    pub fn rank_cache_hits(&self) -> u64 {
+        self.ranks.iter().map(|r| r.cache_hits).sum()
     }
 }
 
@@ -243,11 +334,24 @@ pub fn schedule_rank_with_ctx(
     schedule_rank_inner(subset, cfg, flops, rctx, 1)
 }
 
+/// Materialize one micro-batch's sequence list from the sorted arena —
+/// the strided (or chunked) slice `Subset[j::n_mb]`.  These `Vec`s are
+/// part of the returned schedule; they are the only allocations the
+/// steady-state serial path performs.
+fn subset_seqs(sorted: &[Sequence], j: usize, n_mb: usize, chunk: usize, interleave: bool) -> Vec<Sequence> {
+    if interleave {
+        sorted.iter().skip(j).step_by(n_mb).copied().collect()
+    } else {
+        sorted.iter().skip(j * chunk).take(chunk).copied().collect()
+    }
+}
+
 /// The rank scheduler body.  `outer_fanout` is how many sibling rank
 /// schedulers are running concurrently (1 when standalone): the inner
 /// per-subset DACP fan-out claims only its `1/outer_fanout` share of the
-/// core budget so the nested parallelism cannot oversubscribe.
-fn schedule_rank_inner(
+/// core budget so the nested parallelism cannot oversubscribe.  Shard
+/// workers (scheduler::shard) call this directly with their own arenas.
+pub(crate) fn schedule_rank_inner(
     subset: &[Sequence],
     cfg: &GdsConfig,
     flops: &FlopsModel,
@@ -265,13 +369,41 @@ fn schedule_rank_inner(
         }
     }
 
-    // line 3: ascending sort (into the reusable arena)
+    // line 3: ascending sort (into the reusable arena).  Packed
+    // (len, original index) keys are strictly distinct, so the in-place
+    // unstable sort reproduces the reference's stable sort exactly while
+    // allocating nothing.
+    rctx.keys.clear();
+    rctx.keys
+        .extend(subset.iter().enumerate().map(|(i, s)| ((s.len as u64) << 32) | i as u64));
+    rctx.keys.sort_unstable();
     rctx.sorted.clear();
-    rctx.sorted.extend_from_slice(subset);
-    rctx.sorted.sort_by_key(|s| s.len);
+    rctx.sorted
+        .extend(rctx.keys.iter().map(|&key| subset[(key & u32::MAX as u64) as usize]));
     let k = rctx.sorted.len();
     rctx.lens.clear();
-    rctx.lens.extend(rctx.sorted.iter().map(|s| s.len));
+    rctx.lens.extend(rctx.keys.iter().map(|&key| (key >> 32) as u32));
+
+    // incremental re-scheduling: an exact match on the sorted lengths (and
+    // every knob the solution depends on) means the fresh solve below
+    // would reproduce the cached structure verbatim — replay it over the
+    // freshly sorted sequences and skip the search + DACP entirely.
+    if cfg.incremental && rctx.cache.matches(cfg, flops, &rctx.lens) {
+        rctx.cache_hits += 1;
+        let n_mb = rctx.cache.n_mb;
+        let chunk = k.div_ceil(n_mb);
+        let active = rctx.cache.offsets.len() - 1;
+        let mut mbs = Vec::with_capacity(active);
+        for j in 0..active {
+            let (a, b) = (rctx.cache.offsets[j], rctx.cache.offsets[j + 1]);
+            mbs.push(MicroBatch {
+                seqs: subset_seqs(&rctx.sorted, j, n_mb, chunk, cfg.interleave),
+                plan: DacpPlan { assign: rctx.cache.assign[a..b].to_vec() },
+            });
+        }
+        return Ok(RankSchedule { micro_batches: mbs });
+    }
+
     if !cfg.interleave {
         rctx.prefix.clear();
         rctx.prefix.reserve(k + 1);
@@ -304,7 +436,9 @@ fn schedule_rank_inner(
     'outer: loop {
         let active = active_mbs(k, n_mb, cfg.interleave);
         let chunk = k.div_ceil(n_mb);
-        rctx.plans.clear();
+        rctx.plan_assign.clear();
+        rctx.plan_offsets.clear();
+        rctx.plan_offsets.push(0);
         let mut dacp_failed = false;
         let inner_limit = (par::max_threads() / outer_fanout.max(1)).max(1);
         if cfg.parallel && active >= 2 && inner_limit >= 2 && k >= PAR_SUBSET_MIN_SEQS {
@@ -331,15 +465,13 @@ fn schedule_rank_inner(
                 inner_limit,
                 &rctx.lens_pool[..active],
                 &mut rctx.dacp_pool[..active],
-                |_, lens, scratch| dacp::schedule_with_scratch(lens, &dacp_cfg, flops, scratch),
+                |_, lens, scratch| dacp::schedule_into(lens, &dacp_cfg, flops, scratch),
             );
-            for r in results {
-                match r {
-                    Ok(plan) => rctx.plans.push(plan),
-                    Err(_) => {
-                        dacp_failed = true;
-                        break;
-                    }
+            dacp_failed = results.iter().any(|r| r.is_err());
+            if !dacp_failed {
+                for scratch in &rctx.dacp_pool[..active] {
+                    rctx.plan_assign.extend_from_slice(scratch.assign());
+                    rctx.plan_offsets.push(rctx.plan_assign.len());
                 }
             }
         } else {
@@ -351,9 +483,11 @@ fn schedule_rank_inner(
                 } else {
                     rctx.lens_buf.extend(rctx.lens.iter().skip(j * chunk).take(chunk));
                 }
-                match dacp::schedule_with_scratch(&rctx.lens_buf, &dacp_cfg, flops, &mut rctx.dacp)
-                {
-                    Ok(plan) => rctx.plans.push(plan),
+                match dacp::schedule_into(&rctx.lens_buf, &dacp_cfg, flops, &mut rctx.dacp) {
+                    Ok(()) => {
+                        rctx.plan_assign.extend_from_slice(rctx.dacp.assign());
+                        rctx.plan_offsets.push(rctx.plan_assign.len());
+                    }
                     Err(_) => {
                         dacp_failed = true;
                         break;
@@ -376,16 +510,32 @@ fn schedule_rank_inner(
                 }
             }
         }
-        // all subsets scheduled: materialize the rank plan (the only
-        // allocations that escape the arena are the returned micro-batches)
+        // all subsets scheduled: remember the structure for incremental
+        // replay, then materialize the rank plan (the only allocations
+        // that escape the arena are the returned micro-batches)
+        if cfg.incremental {
+            let cache = &mut rctx.cache;
+            cache.valid = true;
+            cache.bucket_size = cfg.bucket_size;
+            cache.cp = cfg.cp;
+            cache.interleave = cfg.interleave;
+            cache.rollback_largest = cfg.rollback_largest;
+            cache.flops = Some(flops.clone());
+            cache.lens.clear();
+            cache.lens.extend_from_slice(&rctx.lens);
+            cache.n_mb = n_mb;
+            cache.assign.clear();
+            cache.assign.extend_from_slice(&rctx.plan_assign);
+            cache.offsets.clear();
+            cache.offsets.extend_from_slice(&rctx.plan_offsets);
+        }
         let mut mbs = Vec::with_capacity(active);
-        for (j, plan) in rctx.plans.drain(..).enumerate() {
-            let seqs: Vec<Sequence> = if cfg.interleave {
-                rctx.sorted.iter().skip(j).step_by(n_mb).copied().collect()
-            } else {
-                rctx.sorted.iter().skip(j * chunk).take(chunk).copied().collect()
-            };
-            mbs.push(MicroBatch { seqs, plan });
+        for j in 0..active {
+            let (a, b) = (rctx.plan_offsets[j], rctx.plan_offsets[j + 1]);
+            mbs.push(MicroBatch {
+                seqs: subset_seqs(&rctx.sorted, j, n_mb, chunk, cfg.interleave),
+                plan: DacpPlan { assign: rctx.plan_assign[a..b].to_vec() },
+            });
         }
         return Ok(RankSchedule { micro_batches: mbs });
     }
@@ -402,31 +552,78 @@ pub fn schedule_rank(
 
 /// Full GDS fast path: bin-pack the global batch over DP ranks by FLOPs
 /// (Algorithm 2, line 1), then schedule each rank — in parallel when
-/// `cfg.parallel` — reusing the caller's scratch arena.
+/// `cfg.parallel`, across the shared-nothing shard pool when
+/// `cfg.shards > 1` — reusing the caller's scratch arena.  All routes are
+/// byte-identical to [`schedule_reference`].
 pub fn schedule_with_ctx(
     global_batch: &[Sequence],
     cfg: &GdsConfig,
     flops: &FlopsModel,
     ctx: &mut SchedCtx,
 ) -> Result<IterationSchedule, SchedError> {
-    ctx.weighted.clear();
-    ctx.weighted
-        .extend(global_batch.iter().map(|&s| (s, flops.seq(s.len))));
-    let bins = binpack::balance(&ctx.weighted, cfg.dp);
+    assert!(cfg.dp > 0, "dp must be positive");
     ctx.ensure_ranks(cfg.dp);
-    let results: Vec<Result<RankSchedule, SchedError>> = if cfg.parallel && cfg.dp > 1 {
-        let outer = cfg.dp.min(par::max_threads());
-        par::map_with_scratch(&bins, &mut ctx.ranks[..cfg.dp], move |_, subset, rctx| {
-            schedule_rank_inner(subset, cfg, flops, rctx, outer)
-        })
+    // step (i): FLOPs-balancing LPT partition — replayed from the cached
+    // placement when incremental mode sees the exact same batch lengths
+    // (equal lens + equal FLOPs model ⇒ equal weights ⇒ LPT would make
+    // identical decisions, so the replay is byte-identical by construction)
+    let reuse = cfg.incremental
+        && ctx.prev_valid
+        && ctx.prev_dp == cfg.dp
+        && ctx.prev_flops.as_ref() == Some(flops)
+        && ctx.prev_lens.len() == global_batch.len()
+        && ctx.prev_lens.iter().zip(global_batch).all(|(&l, s)| l == s.len);
+    if reuse {
+        for (bin, placed) in ctx.bins.iter_mut().zip(&ctx.placed) {
+            bin.clear();
+            bin.extend(placed.iter().map(|&i| global_batch[i]));
+        }
+        ctx.partition_reuses += 1;
     } else {
-        bins.iter()
-            .zip(ctx.ranks.iter_mut())
-            .map(|(subset, rctx)| schedule_rank_inner(subset, cfg, flops, rctx, 1))
-            .collect()
-    };
-    let ranks = results.into_iter().collect::<Result<Vec<_>, _>>()?;
-    Ok(IterationSchedule { ranks })
+        ctx.weighted.clear();
+        ctx.weighted
+            .extend(global_batch.iter().map(|&s| (s, flops.seq(s.len))));
+        binpack::balance_into(
+            &ctx.weighted,
+            cfg.dp,
+            &mut ctx.binpack,
+            &mut ctx.bins,
+            &mut ctx.placed,
+        );
+        if cfg.incremental {
+            ctx.prev_valid = true;
+            ctx.prev_dp = cfg.dp;
+            ctx.prev_flops = Some(flops.clone());
+            ctx.prev_lens.clear();
+            ctx.prev_lens.extend(global_batch.iter().map(|s| s.len));
+        } else {
+            ctx.prev_valid = false;
+        }
+    }
+    // step (ii)+(iii): schedule each rank's subset
+    let shards = cfg.shards.max(1).min(cfg.dp);
+    let SchedCtx { ranks, bins, pool, .. } = ctx;
+    if shards > 1 {
+        let pool = crate::scheduler::shard::ensure_pool(pool, shards, cfg.dp);
+        return pool.run(bins, cfg, flops);
+    }
+    if cfg.parallel && cfg.dp > 1 {
+        let outer = cfg.dp.min(par::max_threads());
+        let results: Vec<Result<RankSchedule, SchedError>> =
+            par::map_with_scratch(&bins[..cfg.dp], &mut ranks[..cfg.dp], move |_, subset, rctx| {
+                schedule_rank_inner(subset, cfg, flops, rctx, outer)
+            });
+        let ranks = results.into_iter().collect::<Result<Vec<_>, _>>()?;
+        return Ok(IterationSchedule { ranks });
+    }
+    // serial path: build the output directly — together with the arenas
+    // above this keeps the steady state at zero allocations beyond the
+    // returned schedule (asserted by tests/alloc_audit.rs)
+    let mut out = Vec::with_capacity(cfg.dp);
+    for (subset, rctx) in bins[..cfg.dp].iter().zip(ranks.iter_mut()) {
+        out.push(schedule_rank_inner(subset, cfg, flops, rctx, 1)?);
+    }
+    Ok(IterationSchedule { ranks: out })
 }
 
 /// Full GDS fast path with a throwaway scratch arena.
@@ -827,6 +1024,125 @@ mod tests {
         let reference = schedule_rank_reference(&subset, &cfg, &flops).unwrap();
         assert_eq!(fast, reference);
         assert_eq!(fast.micro_batches.len(), 4);
+    }
+
+    /// The sharded and incremental routes are the same function: every
+    /// combination of shard count × incremental mode must match the
+    /// reference byte for byte, with the arenas (and shard pool) reused
+    /// across all cases.
+    #[test]
+    fn property_sharded_and_incremental_match_reference() {
+        let flops = fm();
+        let gen = SeqLensGen { min_k: 1, max_k: 48, max_len: 120_000 };
+        let mut ctx = SchedCtx::default();
+        forall(0x5AAD, 60, &gen, |lens| {
+            let batch = seqs(lens);
+            for &(c, cp, dp) in &[(26 * 1024u32, 8usize, 4usize), (2 * 1024, 2, 3)] {
+                let mut cfg = GdsConfig::new(c, cp, dp);
+                let reference = schedule_reference(&batch, &cfg, &flops);
+                for shards in [2usize, 3] {
+                    for incremental in [false, true] {
+                        cfg.shards = shards;
+                        cfg.incremental = incremental;
+                        // twice per case: the second call exercises the
+                        // warm arenas — and, when incremental, the cached
+                        // partition + per-rank replay path
+                        for round in 0..2 {
+                            let fast = schedule_with_ctx(&batch, &cfg, &flops, &mut ctx);
+                            let agree = match (&reference, &fast) {
+                                (Ok(a), Ok(b)) => a == b,
+                                (Err(a), Err(b)) => a == b,
+                                _ => false,
+                            };
+                            if !agree {
+                                return Err(format!(
+                                    "mismatch (C={c} cp={cp} dp={dp} shards={shards} inc={incremental} round={round})"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_repeat_batch_hits_both_caches() {
+        let flops = fm();
+        let mut cfg = GdsConfig::new(8 * 1024, 4, 2);
+        cfg.parallel = false; // in-process rank path so the counters are visible
+        cfg.incremental = true;
+        let a = seqs(&[100, 9_000, 250, 30_000, 90, 800, 12_000, 400]);
+        let mut ctx = SchedCtx::default();
+        let first = schedule_with_ctx(&a, &cfg, &flops, &mut ctx).unwrap();
+        assert_eq!(ctx.partition_reuses(), 0);
+        assert_eq!(ctx.rank_cache_hits(), 0);
+        let again = schedule_with_ctx(&a, &cfg, &flops, &mut ctx).unwrap();
+        assert_eq!(first, again);
+        assert_eq!(ctx.partition_reuses(), 1);
+        assert_eq!(ctx.rank_cache_hits(), cfg.dp as u64);
+        // a changed batch must invalidate both caches, not replay stale state
+        let b = seqs(&[100, 9_000, 250, 30_000, 90, 800, 12_000, 500]);
+        let fresh = schedule_with_ctx(&b, &cfg, &flops, &mut ctx).unwrap();
+        assert_eq!(ctx.partition_reuses(), 1);
+        assert_eq!(fresh, schedule_reference(&b, &cfg, &flops).unwrap());
+    }
+
+    #[test]
+    fn incremental_cache_respects_knob_and_model_changes() {
+        let flops = fm();
+        let mut cfg = GdsConfig::new(8 * 1024, 4, 1);
+        cfg.parallel = false;
+        cfg.incremental = true;
+        let a = seqs(&[100, 9_000, 250, 30_000, 90, 800, 12_000, 400]);
+        let mut ctx = SchedCtx::default();
+        let _ = schedule_with_ctx(&a, &cfg, &flops, &mut ctx).unwrap();
+        // same batch, different bucket size: the rank cache must miss and
+        // the answer must equal a fresh reference under the new knob (the
+        // LPT partition legitimately replays — it never reads the bucket)
+        cfg.bucket_size = 4 * 1024;
+        let shrunk = schedule_with_ctx(&a, &cfg, &flops, &mut ctx).unwrap();
+        assert_eq!(ctx.rank_cache_hits(), 0);
+        assert_eq!(ctx.partition_reuses(), 1);
+        assert_eq!(shrunk, schedule_reference(&a, &cfg, &flops).unwrap());
+        // different FLOPs model: LPT weights change, so the partition
+        // cache must miss too
+        let other = FlopsModel::new(&ModelSpec::qwen2_5_7b());
+        let under_other = schedule_with_ctx(&a, &cfg, &other, &mut ctx).unwrap();
+        assert_eq!(ctx.partition_reuses(), 1);
+        assert_eq!(ctx.rank_cache_hits(), 0);
+        assert_eq!(under_other, schedule_reference(&a, &cfg, &other).unwrap());
+    }
+
+    /// Overflow hardening at million-sequence scale: the strided precheck
+    /// accumulates `K × max_len` tokens — 2^20 sequences of 128K tokens is
+    /// ~2^37, far past u32 — and must stay exact in u64.
+    #[test]
+    fn strided_precheck_is_exact_at_extreme_k() {
+        let k: usize = 1 << 20;
+        let len: u32 = 128 * 1024;
+        let lens = vec![len; k];
+        let mut sums = Vec::new();
+        // one subset: the sum is K·len = 2^37 exactly
+        assert!(interleaved_feasible(&lens, 1, (k as u64) * len as u64, &mut sums));
+        assert_eq!(sums, vec![(k as u64) * len as u64]);
+        assert!(!interleaved_feasible(&lens, 1, (k as u64) * len as u64 - 1, &mut sums));
+        // 2^10 subsets of 2^10 sequences each: per-subset sum 2^27
+        let per = (k as u64 / 1024) * len as u64;
+        assert!(interleaved_feasible(&lens, 1024, per, &mut sums));
+        assert!(!interleaved_feasible(&lens, 1024, per - 1, &mut sums));
+        // chunked counterpart over prefix sums (u64 end to end)
+        let mut prefix = Vec::with_capacity(k + 1);
+        prefix.push(0u64);
+        let mut acc = 0u64;
+        for &l in &lens {
+            acc += l as u64;
+            prefix.push(acc);
+        }
+        assert_eq!(acc, (k as u64) * len as u64);
+        assert!(chunked_feasible(&prefix, 1024, per));
+        assert!(!chunked_feasible(&prefix, 1024, per - 1));
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! * `baseline` — the comparators of Fig. 3 (DeepSpeed-like, DACP-only,
 //!   LongAlign sorted batching).
 //! * `solver` — exact branch-and-bound DACP for heuristic-gap ablations.
+//! * `shard` — shared-nothing shard pool behind `GdsConfig::shards`:
+//!   persistent per-core workers owning their rank arenas, fed over
+//!   bounded SPSC queues, byte-identical to the single-shard path.
 
 pub mod baseline;
 pub mod binpack;
@@ -15,6 +18,7 @@ pub mod dacp;
 pub mod dispatch;
 pub mod gds;
 pub mod plan;
+pub mod shard;
 pub mod solver;
 
 pub use dispatch::schedule_policy;

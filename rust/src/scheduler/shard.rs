@@ -1,0 +1,253 @@
+//! Shared-nothing scheduler shards.
+//!
+//! [`ShardPool`] partitions the DP ranks of one [`gds::schedule_with_ctx`]
+//! call across persistent worker threads.  Each worker owns its per-rank
+//! [`gds::RankCtx`] arenas outright — no scheduling state is ever shared
+//! mutably — and talks to the dispatcher through exactly two bounded SPSC
+//! queues (util::par::bounded): a job queue in, a result queue out.  Job
+//! payloads are owned (`Vec<Sequence>` bins travel out with the job and
+//! come back with the result), so the bin allocations are recycled across
+//! iterations just like the single-shard arenas.
+//!
+//! Determinism / byte-identity: shard `s` owns the contiguous rank range
+//! `[s·chunk, (s+1)·chunk)`, workers process their queue FIFO, and the
+//! dispatcher gathers results shard by shard in that same order — so the
+//! ranks come back in global rank order and the assembled schedule (and
+//! its first-error-in-rank-order failure behaviour) is byte-identical to
+//! the serial walk, which the property tests pin against
+//! [`gds::schedule_reference`].  The only knob the shard route changes is
+//! `outer_fanout`, which bounds the *inner* DACP fan-out's thread budget
+//! and never affects output.
+//!
+//! Unlike the scoped-thread fan-out in util::par, the workers persist
+//! across iterations: their arenas stay warm, thread spawns are paid once
+//! per pool, and per-worker incremental caches survive from one batch to
+//! the next.
+
+use std::thread::JoinHandle;
+
+use crate::data::Sequence;
+use crate::perfmodel::FlopsModel;
+use crate::scheduler::gds::{self, GdsConfig};
+use crate::scheduler::plan::{IterationSchedule, RankSchedule, SchedError};
+use crate::util::par::{bounded, Receiver, Sender};
+
+/// One rank's worth of work, owned outright by the receiving shard.
+struct Job {
+    rank: usize,
+    /// index into the worker's private arena vector (stable across
+    /// iterations while dp and shard count are unchanged, which keeps the
+    /// arenas and incremental caches warm)
+    slot: usize,
+    bin: Vec<Sequence>,
+    cfg: GdsConfig,
+    flops: FlopsModel,
+    outer: usize,
+}
+
+/// A finished rank: the result plus the bin buffer, returned for reuse.
+struct Done {
+    rank: usize,
+    bin: Vec<Sequence>,
+    result: Result<RankSchedule, SchedError>,
+}
+
+struct Shard {
+    /// `None` once the pool is shutting down (closing the queue is what
+    /// tells the worker to exit)
+    jobs: Option<Sender<Job>>,
+    done: Receiver<Done>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Persistent pool of shared-nothing scheduler shards.  Created lazily by
+/// [`gds::SchedCtx`] on the first sharded call and kept for the arena (and
+/// thread) reuse; recreated only when the shard count or the per-shard
+/// rank capacity changes.
+pub struct ShardPool {
+    shards: Vec<Shard>,
+    queue_cap: usize,
+}
+
+impl std::fmt::Debug for ShardPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardPool")
+            .field("shards", &self.shards.len())
+            .field("queue_cap", &self.queue_cap)
+            .finish()
+    }
+}
+
+fn worker(jobs: Receiver<Job>, done: Sender<Done>) {
+    // the worker's private arenas, one per rank slot it owns
+    let mut ctxs: Vec<gds::RankCtx> = Vec::new();
+    while let Some(job) = jobs.recv() {
+        if ctxs.len() <= job.slot {
+            ctxs.resize_with(job.slot + 1, gds::RankCtx::default);
+        }
+        let result =
+            gds::schedule_rank_inner(&job.bin, &job.cfg, &job.flops, &mut ctxs[job.slot], job.outer);
+        if done.send(Done { rank: job.rank, bin: job.bin, result }).is_err() {
+            break; // pool dropped mid-flight
+        }
+    }
+}
+
+impl ShardPool {
+    pub(crate) fn new(shards: usize, queue_cap: usize) -> Self {
+        let shards = shards.max(1);
+        let queue_cap = queue_cap.max(1);
+        let mut v = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let (jtx, jrx) = bounded::<Job>(queue_cap);
+            let (dtx, drx) = bounded::<Done>(queue_cap);
+            let handle = std::thread::Builder::new()
+                .name(format!("skrull-shard-{i}"))
+                .spawn(move || worker(jrx, dtx))
+                .expect("failed to spawn scheduler shard");
+            v.push(Shard { jobs: Some(jtx), done: drx, handle: Some(handle) });
+        }
+        ShardPool { shards: v, queue_cap }
+    }
+
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub(crate) fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Dispatch one iteration's rank subsets across the shards and gather
+    /// the per-rank schedules in global rank order.  Each queue can hold a
+    /// full shard's worth of jobs (`queue_cap ≥ chunk`), so the scatter
+    /// phase never blocks and the scatter→gather cycle cannot deadlock.
+    pub(crate) fn run(
+        &mut self,
+        bins: &mut [Vec<Sequence>],
+        cfg: &GdsConfig,
+        flops: &FlopsModel,
+    ) -> Result<IterationSchedule, SchedError> {
+        let dp = cfg.dp;
+        let shards_used = self.shards.len().min(dp).max(1);
+        let chunk = dp.div_ceil(shards_used);
+        assert!(chunk <= self.queue_cap, "shard queues undersized for dp={dp}");
+        for s in 0..shards_used {
+            let lo = s * chunk;
+            let hi = ((s + 1) * chunk).min(dp);
+            for rank in lo..hi {
+                let job = Job {
+                    rank,
+                    slot: rank - lo,
+                    bin: std::mem::take(&mut bins[rank]),
+                    cfg: cfg.clone(),
+                    flops: flops.clone(),
+                    outer: shards_used,
+                };
+                let sent = self.shards[s].jobs.as_ref().expect("pool closed").send(job);
+                assert!(sent.is_ok(), "scheduler shard worker died");
+            }
+        }
+        let mut results: Vec<Result<RankSchedule, SchedError>> = Vec::with_capacity(dp);
+        for s in 0..shards_used {
+            let lo = s * chunk;
+            let hi = ((s + 1) * chunk).min(dp);
+            for _ in lo..hi {
+                let d = self.shards[s].done.recv().expect("scheduler shard worker died");
+                bins[d.rank] = d.bin;
+                results.push(d.result);
+            }
+        }
+        let ranks = results.into_iter().collect::<Result<Vec<_>, _>>()?;
+        Ok(IterationSchedule { ranks })
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for s in &mut self.shards {
+            s.jobs = None; // close the job queue → worker sees end-of-stream
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Get (or lazily create / recreate) the pool for `shards` shards able to
+/// carry `dp` ranks.  Over-provisions the queue capacity a little so
+/// small dp fluctuations don't churn worker threads and their warm arenas.
+pub(crate) fn ensure_pool<'a>(
+    slot: &'a mut Option<ShardPool>,
+    shards: usize,
+    dp: usize,
+) -> &'a mut ShardPool {
+    let need = dp.div_ceil(shards.max(1)).max(1);
+    let stale = match slot.as_ref() {
+        Some(p) => p.shard_count() != shards || p.queue_cap() < need,
+        None => true,
+    };
+    if stale {
+        *slot = Some(ShardPool::new(shards, need.max(16)));
+    }
+    slot.as_mut().expect("just ensured")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    fn seqs(lens: &[u32]) -> Vec<Sequence> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &len)| Sequence { id: i as u64, len })
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_reference_and_recycles_bins() {
+        let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+        let mut cfg = GdsConfig::new(8 * 1024, 4, 4);
+        cfg.shards = 3;
+        let batch = seqs(&[100, 9_000, 250, 30_000, 90, 800, 12_000, 400, 7_000, 50]);
+        let reference = gds::schedule_reference(&batch, &cfg, &flops).unwrap();
+        let mut ctx = gds::SchedCtx::default();
+        // two calls through the same pool: identical both times, and the
+        // second proves the bins/arenas survive the round trip
+        for _ in 0..2 {
+            let sharded = gds::schedule_with_ctx(&batch, &cfg, &flops, &mut ctx).unwrap();
+            assert_eq!(sharded, reference);
+        }
+    }
+
+    #[test]
+    fn pool_survives_dp_and_shard_changes() {
+        let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+        let batch = seqs(&[5_000; 24]);
+        let mut ctx = gds::SchedCtx::default();
+        for (shards, dp) in [(2usize, 2usize), (2, 6), (4, 6), (4, 3), (7, 5)] {
+            let mut cfg = GdsConfig::new(8 * 1024, 4, dp);
+            cfg.shards = shards;
+            let sharded = gds::schedule_with_ctx(&batch, &cfg, &flops, &mut ctx).unwrap();
+            let reference = gds::schedule_reference(&batch, &cfg, &flops).unwrap();
+            assert_eq!(sharded, reference, "shards={shards} dp={dp}");
+        }
+    }
+
+    #[test]
+    fn pool_reports_errors_like_the_serial_path() {
+        let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+        let mut cfg = GdsConfig::new(1024, 2, 4);
+        cfg.shards = 2;
+        // one sequence above the C·N cap → the same TooLong error the
+        // reference produces, from whichever rank sees it first
+        let batch = seqs(&[100, 300_000, 200, 400]);
+        let mut ctx = gds::SchedCtx::default();
+        let sharded = gds::schedule_with_ctx(&batch, &cfg, &flops, &mut ctx);
+        let reference = gds::schedule_reference(&batch, &cfg, &flops);
+        assert_eq!(sharded.unwrap_err(), reference.unwrap_err());
+    }
+}

@@ -144,6 +144,25 @@ pub fn solve(
     cost: &CostModel,
     node_limit: u64,
 ) -> Option<Solved> {
+    solve_warm(lens, bucket_size, n, cost, node_limit, None)
+}
+
+/// [`solve`] with an incumbent warm start: a previous iteration's (or the
+/// heuristic's) feasible plan seeds `best`/`best_cost`, so the bound
+/// pruning bites from the first node instead of only after the DFS finds
+/// its own incumbent.  The returned cost is still the true optimum — a
+/// valid incumbent only tightens the strict `<` pruning, never excludes a
+/// better assignment — but on repeat batch compositions the search
+/// explores a fraction of the nodes.  An infeasible or mismatched warm
+/// plan is ignored.
+pub fn solve_warm(
+    lens: &[u32],
+    bucket_size: u32,
+    n: usize,
+    cost: &CostModel,
+    node_limit: u64,
+    warm: Option<&DacpPlan>,
+) -> Option<Solved> {
     // order longest-first: decisions about big sequences prune hardest
     let mut order: Vec<usize> = (0..lens.len()).collect();
     order.sort_by_key(|&i| std::cmp::Reverse(lens[i]));
@@ -173,6 +192,14 @@ pub fn solve(
         nodes: 0,
         node_limit,
     };
+    if let Some(w) = warm {
+        if w.assign.len() == lens.len() && w.validate(lens, bucket_size, n).is_ok() {
+            // permute the incumbent into search (longest-first) order so a
+            // DFS improvement overwrites it shape-compatibly
+            s2.best_cost = cost.tdacp(lens, w, n);
+            s2.best = Some(order.iter().map(|&i| w.assign[i]).collect());
+        }
+    }
     s2.dfs(0);
     let best = s2.best?;
     // un-permute the assignment back to the original order
@@ -277,6 +304,56 @@ mod tests {
                 )),
             }
         });
+    }
+
+    #[test]
+    fn warm_start_preserves_optimum_and_never_explores_more() {
+        let cost = cm();
+        let gen = SeqLensGen { min_k: 1, max_k: 8, max_len: 30_000 };
+        let cfg = DacpConfig::new(16 * 1024, 4);
+        forall(0x3A12, 60, &gen, |lens| {
+            let cold = solve(lens, cfg.bucket_size, cfg.cp_degree, &cost, 2_000_000);
+            let warm_plan = dacp::schedule(lens, &cfg, &cost.flops).ok();
+            let warm = solve_warm(
+                lens,
+                cfg.bucket_size,
+                cfg.cp_degree,
+                &cost,
+                2_000_000,
+                warm_plan.as_ref(),
+            );
+            match (&cold, &warm) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    if (a.cost - b.cost).abs() > 1e-9 * a.cost.max(1.0) {
+                        return Err(format!("warm cost {} vs cold {}", b.cost, a.cost));
+                    }
+                    // a valid incumbent can only tighten the pruning
+                    if warm_plan.is_some() && b.nodes > a.nodes {
+                        return Err(format!("warm explored {} > cold {}", b.nodes, a.nodes));
+                    }
+                    b.plan
+                        .validate(lens, cfg.bucket_size, cfg.cp_degree)
+                        .map_err(|e| e.to_string())
+                }
+                _ => Err(format!(
+                    "feasibility mismatch: cold {:?} warm {:?}",
+                    cold.is_some(),
+                    warm.is_some()
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn warm_start_ignores_bogus_plans() {
+        let cost = cm();
+        let lens = [500, 600, 700, 800];
+        // wrong length and an infeasible assignment must both be ignored
+        let wrong_len = DacpPlan { assign: vec![0] };
+        let sol = solve_warm(&lens, 10_000, 2, &cost, 1_000_000, Some(&wrong_len)).unwrap();
+        let cold = solve(&lens, 10_000, 2, &cost, 1_000_000).unwrap();
+        assert!((sol.cost - cold.cost).abs() <= 1e-12);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Scoped-thread fan-out helpers (the offline build has no rayon).
+//! Scoped-thread fan-out helpers (the offline build has no rayon), plus
+//! the bounded SPSC channel the sharded scheduler's shard workers use.
 //!
 //! The scheduler's unit of parallelism is coarse — one DP rank, one
 //! micro-batch refinement — so plain `std::thread::scope` with contiguous
@@ -6,8 +7,15 @@
 //! results identical to the serial loop byte for byte.  Threads are
 //! spawned per call; at the scheduler's call rates (once per iteration)
 //! spawn cost is noise next to the work each chunk carries.
+//!
+//! The channel ([`bounded`]) backs the shared-nothing shard pool
+//! (scheduler::shard): each shard worker owns its arenas outright and
+//! talks to the dispatcher only through one job queue and one result
+//! queue, so no scheduling state is ever shared mutably across shards.
 
+use std::collections::VecDeque;
 use std::num::NonZeroUsize;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Worker budget: `SKRULL_THREADS` override, else available parallelism.
 pub fn max_threads() -> usize {
@@ -126,6 +134,110 @@ where
     });
 }
 
+// ---------------------------------------------------------------------------
+// Bounded SPSC channel.
+//
+// A deliberately small blocking queue: one producer, one consumer, fixed
+// capacity chosen at creation.  The buffer is allocated once up front
+// (`VecDeque::with_capacity`) and never grows past `cap`, so steady-state
+// sends and receives perform zero heap allocations.  Backpressure is
+// blocking: `send` waits while the queue is full, `recv` waits while it is
+// empty.  Dropping the `Sender` wakes the receiver with end-of-stream;
+// dropping the `Receiver` makes further sends fail fast.
+
+struct ChannelState<T> {
+    buf: VecDeque<T>,
+    sender_alive: bool,
+    receiver_alive: bool,
+}
+
+struct Channel<T> {
+    state: Mutex<ChannelState<T>>,
+    cap: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Producing half of a [`bounded`] channel.
+pub struct Sender<T> {
+    ch: Arc<Channel<T>>,
+}
+
+/// Consuming half of a [`bounded`] channel.
+pub struct Receiver<T> {
+    ch: Arc<Channel<T>>,
+}
+
+/// Create a bounded single-producer/single-consumer channel holding at
+/// most `cap` in-flight items (`cap` is clamped to ≥ 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let cap = cap.max(1);
+    let ch = Arc::new(Channel {
+        state: Mutex::new(ChannelState {
+            buf: VecDeque::with_capacity(cap),
+            sender_alive: true,
+            receiver_alive: true,
+        }),
+        cap,
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { ch: Arc::clone(&ch) }, Receiver { ch })
+}
+
+impl<T> Sender<T> {
+    /// Block until there is room, then enqueue.  Returns the item back as
+    /// `Err` if the receiver is gone.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.ch.state.lock().expect("channel poisoned");
+        loop {
+            if !st.receiver_alive {
+                return Err(item);
+            }
+            if st.buf.len() < self.ch.cap {
+                st.buf.push_back(item);
+                self.ch.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.ch.not_full.wait(st).expect("channel poisoned");
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.ch.state.lock().expect("channel poisoned");
+        st.sender_alive = false;
+        self.ch.not_empty.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until an item arrives; `None` once the sender is gone and the
+    /// queue has drained (end of stream).
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.ch.state.lock().expect("channel poisoned");
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.ch.not_full.notify_one();
+                return Some(item);
+            }
+            if !st.sender_alive {
+                return None;
+            }
+            st = self.ch.not_empty.wait(st).expect("channel poisoned");
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.ch.state.lock().expect("channel poisoned");
+        st.receiver_alive = false;
+        self.ch.not_full.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +291,53 @@ mod tests {
         let par: Vec<f64> = map_with_scratch(&items, &mut s1, |_, &x, _| x.sin() * x.cos());
         let ser: Vec<f64> = items.iter().map(|&x| x.sin() * x.cos()).collect();
         assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn channel_is_fifo_within_capacity() {
+        let (tx, rx) = bounded::<u32>(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn channel_end_of_stream_after_sender_drop() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn channel_send_fails_after_receiver_drop() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_then_drains_across_threads() {
+        // capacity 1: the producer must block on the second send until the
+        // consumer drains — all 100 items still arrive in order
+        let (tx, rx) = bounded::<u64>(1);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,100 @@
+//! Steady-state allocation audit for the scheduling hot path.
+//!
+//! A counting `#[global_allocator]` measures one warm
+//! `ScheduledLoader::schedule_batch` call on the serial in-process path
+//! (shards = 1, `sched_parallel = false`).  After warm-up, the arenas in
+//! `SchedCtx`/`RankCtx`/`DacpScratch`/`BinpackScratch` must absorb all
+//! scheduler-internal work: the only allocations left are the returned
+//! schedule itself — 1 (ranks Vec) + dp (micro-batch Vecs) + 2 per
+//! micro-batch (seqs + plan assignment) — plus a small slack.
+//!
+//! This file is its own test binary with EXACTLY ONE test: the global
+//! allocator is process-wide, so a sibling test running on another thread
+//! would pollute the counter.  Keep it that way.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use skrull::config::ExperimentConfig;
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a realloc is a fresh acquisition from the arena's point of view
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warm_schedule_batch_allocates_only_the_returned_schedule() {
+    let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+    let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 20_000, 7)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let mut loader = ScheduledLoader::new(&ds, &cfg);
+    loader.sched_parallel = false; // serial in-process path (shards = 1)
+
+    let mut rng = Rng::seed_from_u64(0xA110C);
+    let batch = ds.sample_batch(&mut rng, cfg.cluster.batch_size);
+
+    // warm the arenas: after a few calls every scratch buffer has reached
+    // its high-water mark for this batch
+    for _ in 0..3 {
+        let _ = loader.schedule_batch(&batch).unwrap();
+    }
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let sched = loader.schedule_batch(&batch).unwrap();
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    let dp = cfg.cluster.dp as u64;
+    let n_mbs: u64 = sched
+        .ranks
+        .iter()
+        .map(|r| r.micro_batches.len() as u64)
+        .sum();
+    assert!(n_mbs > 0, "empty schedule proves nothing");
+    // 1 ranks Vec + dp micro-batch Vecs + (seqs + plan) per micro-batch,
+    // with a small slack for harness noise; anything materially above
+    // this means a scratch buffer stopped being reused
+    let budget = 1 + dp + 2 * n_mbs + 8;
+    assert!(
+        allocs <= budget,
+        "warm schedule_batch made {allocs} allocations, budget {budget} \
+         (dp={dp}, micro-batches={n_mbs}) — the steady state is supposed to \
+         allocate only the returned schedule"
+    );
+}

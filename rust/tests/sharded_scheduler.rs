@@ -1,0 +1,190 @@
+//! Shard-count invariance and incremental re-scheduling equivalence — the
+//! acceptance gates of the shared-nothing scheduler:
+//!
+//! * 1, 2 and N shards are byte-identical to `gds::schedule_reference`
+//!   across ≥200 random workloads (arenas and pools reused throughout);
+//! * incremental re-scheduling through the loader equals fresh scheduling
+//!   iteration by iteration, and actually reuses work on repeats;
+//! * the extreme-K regime (2^16 sequences, 128K-token outliers) agrees
+//!   across shard counts without overflow.
+
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::loader::ScheduledLoader;
+use skrull::data::{Dataset, LengthDistribution, Sequence};
+use skrull::model::ModelSpec;
+use skrull::perfmodel::FlopsModel;
+use skrull::rng::Rng;
+use skrull::scheduler::gds;
+
+fn shard_counts() -> [usize; 3] {
+    [1, 2, skrull::util::par::max_threads().max(3)]
+}
+
+#[test]
+fn shard_count_invariance_on_200_workloads() {
+    let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+    let mut rng = Rng::seed_from_u64(0x5A4D);
+    // one persistent ctx (arena + pool) per shard count — recreating the
+    // pool per workload would hide reuse bugs
+    let mut ctxs: Vec<gds::SchedCtx> = shard_counts().iter().map(|_| Default::default()).collect();
+    let mut compared = 0usize;
+    for name in ["wikipedia", "lmsys", "chatqa2"] {
+        let ds = Dataset::synthesize(&LengthDistribution::by_name(name).unwrap(), 20_000, 21)
+            .truncated(26 * 1024 * 8);
+        for trial in 0..70 {
+            let k = [6usize, 16, 48, 128][trial % 4];
+            let batch = ds.sample_batch(&mut rng, k);
+            let mut cfg = gds::GdsConfig::new(26 * 1024, 8, 4);
+            if trial % 5 == 0 {
+                cfg.bucket_size = 4 * 1024; // memory-pressure regime
+            }
+            if trial % 3 == 0 {
+                cfg.dp = 3; // dp not divisible by every shard count
+            }
+            let reference = gds::schedule_reference(&batch, &cfg, &flops);
+            for (ctx, &shards) in ctxs.iter_mut().zip(shard_counts().iter()) {
+                cfg.shards = shards;
+                let got = gds::schedule_with_ctx(&batch, &cfg, &flops, ctx);
+                match (&reference, &got) {
+                    (Ok(a), Ok(b)) => assert_eq!(a, b, "{name} trial {trial} shards={shards}"),
+                    (Err(a), Err(b)) => assert_eq!(a, b, "{name} trial {trial} shards={shards}"),
+                    _ => panic!(
+                        "{name} trial {trial} shards={shards}: feasibility mismatch \
+                         ref={:?} sharded={:?}",
+                        reference.is_ok(),
+                        got.is_ok()
+                    ),
+                }
+            }
+            compared += 1;
+        }
+    }
+    assert!(compared >= 200, "only {compared} workloads compared");
+}
+
+#[test]
+fn incremental_loader_equals_fresh_loader_iteration_by_iteration() {
+    let cfg0 = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "lmsys");
+    let ds = Dataset::synthesize(&LengthDistribution::by_name("lmsys").unwrap(), 20_000, 5)
+        .truncated(cfg0.bucket_size * cfg0.cluster.cp as u32);
+    for policy in [Policy::Skrull, Policy::SkrullRefined] {
+        let mut fresh_cfg = cfg0.clone();
+        fresh_cfg.policy = policy;
+        let mut inc_cfg = fresh_cfg.clone();
+        inc_cfg.incremental = true;
+        let mut fresh = ScheduledLoader::new(&ds, &fresh_cfg);
+        let mut inc = ScheduledLoader::new(&ds, &inc_cfg);
+        for it in 0..5 {
+            // same seed → same sampling stream; schedules must agree even
+            // though the incremental loader carries caches between calls
+            let (batch_f, sched_f) = fresh.next_iteration().unwrap();
+            let (batch_i, sched_i) = inc.next_iteration().unwrap();
+            assert_eq!(batch_f, batch_i, "{policy:?} iteration {it}");
+            assert_eq!(sched_f, sched_i, "{policy:?} iteration {it}");
+        }
+    }
+}
+
+#[test]
+fn incremental_loader_reuses_work_on_repeated_batches() {
+    let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia");
+    cfg.incremental = true;
+    cfg.shards = 1; // in-process path so the counters are observable
+    let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 20_000, 7)
+        .truncated(cfg.bucket_size * cfg.cluster.cp as u32);
+    let mut loader = ScheduledLoader::new(&ds, &cfg);
+    loader.sched_parallel = false;
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let batch = ds.sample_batch(&mut rng, cfg.cluster.batch_size);
+    let first = loader.schedule_batch(&batch).unwrap();
+    assert_eq!(loader.sched_partition_reuses(), 0);
+    for round in 1..4 {
+        let again = loader.schedule_batch(&batch).unwrap();
+        assert_eq!(first, again, "round {round}");
+    }
+    assert_eq!(loader.sched_partition_reuses(), 3);
+    assert_eq!(loader.sched_rank_cache_hits(), 3 * cfg.cluster.dp as u64);
+    // partially changed batch: caches miss, result still correct
+    let mut changed = batch.clone();
+    let last = changed.len() - 1;
+    changed[last].len = (changed[last].len / 2).max(1);
+    let flops = FlopsModel::new(&cfg.model);
+    let gcfg = gds::GdsConfig::new(cfg.bucket_size, cfg.cluster.cp, cfg.cluster.dp);
+    let expect = gds::schedule_reference(&changed, &gcfg, &flops).unwrap();
+    assert_eq!(loader.schedule_batch(&changed).unwrap(), expect);
+    assert_eq!(loader.sched_partition_reuses(), 3);
+}
+
+#[test]
+fn extreme_k_with_long_outliers_agrees_across_shard_counts() {
+    // 2^16 sequences with 128K-token outliers: token sums overflow u32 by
+    // orders of magnitude, so this doubles as the overflow regression at
+    // integration level (cap = 26K·8 = 212992 > 131072, so the outliers
+    // are schedulable).
+    let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+    let k: usize = 1 << 16;
+    let mut rng = Rng::seed_from_u64(0x1046);
+    let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 50_000, 13)
+        .truncated(26 * 1024 * 8);
+    let mut batch = ds.sample_batch(&mut rng, k);
+    for i in 0..64 {
+        // sprinkle maximal outliers across the batch
+        batch[i * (k / 64)].len = 128 * 1024;
+    }
+    let mut cfg = gds::GdsConfig::new(26 * 1024, 8, 4);
+    let mut baseline: Option<skrull::scheduler::plan::IterationSchedule> = None;
+    for shards in shard_counts() {
+        cfg.shards = shards;
+        let mut ctx = gds::SchedCtx::default();
+        let got = gds::schedule_with_ctx(&batch, &cfg, &flops, &mut ctx).unwrap();
+        // exactly-once at scale, and every micro-batch under the cap
+        let cap = cfg.bucket_size as u64 * cfg.cp as u64;
+        let n_assigned: usize = got.ranks.iter().map(|r| {
+            r.micro_batches.iter().map(|mb| mb.seqs.len()).sum::<usize>()
+        }).sum();
+        assert_eq!(n_assigned, k, "shards={shards}");
+        for r in &got.ranks {
+            for mb in &r.micro_batches {
+                assert!(mb.total_tokens() <= cap, "shards={shards}");
+            }
+        }
+        match &baseline {
+            None => baseline = Some(got),
+            Some(b) => assert_eq!(&got, b, "shards={shards} diverged from shards=1"),
+        }
+    }
+}
+
+#[test]
+fn shard_knob_rides_through_the_loader() {
+    // cfg.shards > 1 through ScheduledLoader must not change schedules
+    let cfg0 = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+    let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 20_000, 3)
+        .truncated(cfg0.bucket_size * cfg0.cluster.cp as u32);
+    let mut sharded_cfg = cfg0.clone();
+    sharded_cfg.shards = 3;
+    let mut plain = ScheduledLoader::new(&ds, &cfg0);
+    let mut sharded = ScheduledLoader::new(&ds, &sharded_cfg);
+    for it in 0..3 {
+        let (batch_p, sched_p) = plain.next_iteration().unwrap();
+        let (batch_s, sched_s) = sharded.next_iteration().unwrap();
+        assert_eq!(batch_p, batch_s, "iteration {it}");
+        assert_eq!(sched_p, sched_s, "iteration {it}");
+    }
+}
+
+#[test]
+fn sequences_keep_identity_through_the_sharded_path() {
+    // ids survive the ownership round trip through the shard queues
+    let flops = FlopsModel::new(&ModelSpec::qwen2_5_0_5b());
+    let batch: Vec<Sequence> = (0..40)
+        .map(|i| Sequence { id: 1000 + i as u64, len: 100 + 700 * (i as u32 % 7) })
+        .collect();
+    let mut cfg = gds::GdsConfig::new(8 * 1024, 4, 4);
+    cfg.shards = 2;
+    let mut ctx = gds::SchedCtx::default();
+    let sched = gds::schedule_with_ctx(&batch, &cfg, &flops, &mut ctx).unwrap();
+    let mut ids = sched.assigned_ids();
+    ids.sort_unstable();
+    assert_eq!(ids, (1000..1040).collect::<Vec<u64>>());
+}
