@@ -1,0 +1,219 @@
+//! The lint engine: walk a source tree, lex each file, run the rule
+//! catalog, then resolve `// skrull-lint: allow(<rule>) -- <reason>`
+//! suppressions.  A suppression on line L covers findings on L (trailing
+//! comment) and L+1 (standalone comment above the offending line), must
+//! name a known rule, and must carry a `-- reason`; violations of those
+//! requirements are themselves findings (`malformed-suppression`,
+//! `unused-suppression`) so a typo can never silently disable a rule.
+
+use std::path::{Path, PathBuf};
+
+use crate::analysis::lexer::{self, Suppression};
+use crate::analysis::rules;
+use crate::util::error::{Context, Result};
+
+/// One resolved finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+    pub suppressed: bool,
+    /// The justification, for suppressed findings.
+    pub reason: Option<String>,
+}
+
+/// The result of linting a tree (or a single source text).
+#[derive(Clone, Debug, Default)]
+pub struct LintOutcome {
+    /// All findings, sorted by (file, line, col, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintOutcome {
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.iter().filter(|f| !f.suppressed).count()
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.findings.len() - self.unsuppressed()
+    }
+}
+
+/// Lint one file's source text.  `rel` is its path relative to the scan
+/// root (`/`-separated) — rule scopes key off it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let raw = rules::check_file(rel, &lexed.tokens);
+    let mut used = vec![false; lexed.suppressions.len()];
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        let sup = lexed.suppressions.iter().enumerate().find(|(_, s)| {
+            s.rule.as_deref() == Some(f.rule) && (s.line == f.line || s.line + 1 == f.line)
+        });
+        let (suppressed, reason) = match sup {
+            // a reason-less directive stays malformed; it must not
+            // silence anything
+            Some((si, s)) if s.reason.is_some() => {
+                used[si] = true;
+                (true, s.reason.clone())
+            }
+            _ => (false, None),
+        };
+        out.push(Finding {
+            rule: f.rule.to_string(),
+            file: rel.to_string(),
+            line: f.line,
+            col: f.col,
+            message: f.message,
+            suppressed,
+            reason,
+        });
+    }
+    for (si, s) in lexed.suppressions.iter().enumerate() {
+        if let Some(meta) = audit_suppression(s, used[si]) {
+            out.push(Finding {
+                rule: meta.0.to_string(),
+                file: rel.to_string(),
+                line: s.line,
+                col: 1,
+                message: meta.1,
+                suppressed: false,
+                reason: None,
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.col, &a.rule).cmp(&(b.line, b.col, &b.rule)));
+    out
+}
+
+/// Decide whether a suppression directive is itself a finding.
+fn audit_suppression(s: &Suppression, used: bool) -> Option<(&'static str, String)> {
+    match &s.rule {
+        None => Some((
+            "malformed-suppression",
+            "unparseable skrull-lint directive; want `skrull-lint: allow(<rule>) -- <reason>`"
+                .to_string(),
+        )),
+        Some(rule) if !rules::is_known_rule(rule) => Some((
+            "malformed-suppression",
+            format!("suppression names unknown rule {rule:?}"),
+        )),
+        Some(rule) if s.reason.is_none() => Some((
+            "malformed-suppression",
+            format!("suppression of {rule} lacks the required `-- <reason>` justification"),
+        )),
+        Some(rule) if !used => {
+            Some(("unused-suppression", format!("suppression of {rule} matches no finding")))
+        }
+        Some(_) => None,
+    }
+}
+
+/// Recursively collect `*.rs` files under `root`, sorted by relative
+/// path so output is deterministic on any filesystem.
+fn collect_sources(root: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let mut stack = vec![root.to_path_buf()];
+    let mut files = Vec::new();
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading directory {}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.with_context(|| format!("reading entry in {}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                files.push((rel, path));
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `*.rs` file under `root`.
+pub fn lint_tree(root: &Path) -> Result<LintOutcome> {
+    let files = collect_sources(root)?;
+    let mut outcome = LintOutcome { findings: Vec::new(), files_scanned: files.len() };
+    for (rel, path) in files {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        outcome.findings.extend(lint_source(&rel, &src));
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_with_reason_covers_same_and_next_line() {
+        let src = "
+            // skrull-lint: allow(panic-in-lib) -- invariant: x is Some here
+            fn f() { x.unwrap(); }
+            fn g() { y.unwrap(); } // skrull-lint: allow(panic-in-lib) -- join propagates panics
+        ";
+        let fs = lint_source("scheduler/x.rs", src);
+        assert_eq!(fs.len(), 2);
+        assert!(fs.iter().all(|f| f.suppressed), "{fs:?}");
+        assert!(fs.iter().all(|f| f.reason.is_some()));
+    }
+
+    #[test]
+    fn reasonless_suppression_is_malformed_and_does_not_silence() {
+        let src = "
+            // skrull-lint: allow(panic-in-lib)
+            fn f() { x.unwrap(); }
+        ";
+        let fs = lint_source("scheduler/x.rs", src);
+        let rules: Vec<&str> = fs.iter().map(|f| f.rule.as_str()).collect();
+        assert_eq!(rules, ["malformed-suppression", "panic-in-lib"]);
+        assert!(fs.iter().all(|f| !f.suppressed));
+    }
+
+    #[test]
+    fn unknown_rule_and_unused_suppressions_are_findings() {
+        let src = "
+            // skrull-lint: allow(no-such-rule) -- because
+            // skrull-lint: allow(panic-in-lib) -- nothing to suppress here
+            fn f() {}
+        ";
+        let rules: Vec<String> =
+            lint_source("scheduler/x.rs", src).into_iter().map(|f| f.rule).collect();
+        assert_eq!(rules, ["malformed-suppression", "unused-suppression"]);
+    }
+
+    #[test]
+    fn wrong_rule_suppression_does_not_cover() {
+        let src = "
+            // skrull-lint: allow(truncating-cast) -- wrong rule named
+            fn f() { x.unwrap(); }
+        ";
+        let fs = lint_source("scheduler/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "panic-in-lib" && !f.suppressed));
+        assert!(fs.iter().any(|f| f.rule == "unused-suppression"));
+    }
+
+    #[test]
+    fn one_suppression_covers_multiple_same_rule_findings_on_its_line() {
+        let src = "
+            // skrull-lint: allow(panic-in-lib) -- both guarded by the assert above
+            fn f() { x.unwrap(); y.unwrap(); }
+        ";
+        let fs = lint_source("scheduler/x.rs", src);
+        assert_eq!(fs.len(), 2);
+        assert!(fs.iter().all(|f| f.suppressed));
+    }
+}

@@ -1,0 +1,460 @@
+//! A minimal Rust lexer for `skrull lint` — just enough token structure
+//! for the rule engine: identifiers, numbers, string/char literals,
+//! lifetimes and single-character punctuation, with comments consumed
+//! (line comments are scanned for `skrull-lint:` suppression directives)
+//! and `#[cfg(test)]` / `#[test]` items marked so rules can skip test
+//! code.  Hand-rolled in the `calib::profile_io` byte-cursor idiom: `syn`
+//! is unavailable offline, and the rules below only need token shapes,
+//! not a parse tree.
+
+/// What a [`Token`] is.  String/char literals carry no text — no rule
+/// inspects literal contents, and dropping them keeps tokens cheap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token.  `text` borrows from the source for `Ident`,
+/// `Number`, `Lifetime` and `Punct`; literals get `""`.
+#[derive(Clone, Copy, Debug)]
+pub struct Token<'a> {
+    pub kind: TokKind,
+    pub text: &'a str,
+    pub line: u32,
+    pub col: u32,
+    /// Inside a `#[cfg(test)]` / `#[test]` item — rules skip these.
+    pub in_test: bool,
+}
+
+/// A `// skrull-lint: allow(<rule>) -- <reason>` directive, or a comment
+/// that tried to be one.  `rule` is `None` when the directive failed to
+/// parse at all (the engine reports that as `malformed-suppression`
+/// rather than silently ignoring a typo).
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub line: u32,
+    pub rule: Option<String>,
+    pub reason: Option<String>,
+}
+
+/// Lexer output: the token stream plus every suppression directive seen.
+#[derive(Debug, Default)]
+pub struct Lexed<'a> {
+    pub tokens: Vec<Token<'a>>,
+    pub suppressions: Vec<Suppression>,
+}
+
+const DIRECTIVE: &str = "skrull-lint";
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+struct Scanner<'a> {
+    src: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Scanner<'a> {
+    fn new(src: &'a str) -> Self {
+        Scanner { src, bytes: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.bytes.get(self.pos + ahead).copied()
+    }
+
+    /// Advance one byte, tracking line/col.  Multi-byte UTF-8 sequences
+    /// advance col once per byte — columns are byte offsets, which is
+    /// what editors jumping to `file:line:col` expect for ASCII source.
+    fn bump(&mut self) {
+        if self.peek(0) == Some(b'\n') {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        self.pos += 1;
+    }
+
+    fn bump_n(&mut self, n: usize) {
+        for _ in 0..n {
+            self.bump();
+        }
+    }
+}
+
+/// Parse a line comment as a suppression directive.  Only a comment whose
+/// body *starts* with the marker counts (prose merely mentioning
+/// `skrull-lint` mid-sentence is not a directive); returns `None` for
+/// everything else.  An attempted directive that fails to parse comes
+/// back with `rule: None` so the engine can flag it.
+fn parse_directive(comment: &str, line: u32) -> Option<Suppression> {
+    // strip the `//` / `///` / `//!` opener, then leading whitespace
+    let body = comment.trim_start_matches('/').trim_start_matches('!').trim_start();
+    let rest = body.strip_prefix(DIRECTIVE)?.trim_start();
+    let malformed = Suppression { line, rule: None, reason: None };
+    let Some(rest) = rest.strip_prefix(':') else {
+        return Some(malformed);
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Some(malformed);
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(malformed);
+    };
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return Some(malformed);
+    }
+    let tail = rest[close + 1..].trim();
+    let reason = tail
+        .strip_prefix("--")
+        .map(str::trim)
+        .filter(|r| !r.is_empty())
+        .map(str::to_string);
+    Some(Suppression { line, rule: Some(rule), reason })
+}
+
+/// Lex `src` into tokens + suppression directives.  Never fails: anything
+/// unrecognized becomes single-byte punctuation, and unterminated
+/// literals/comments run to end of input (the rules only need to stay
+/// aligned on well-formed source, which `cargo build` guarantees).
+pub fn lex(src: &str) -> Lexed<'_> {
+    let mut s = Scanner::new(src);
+    let mut out = Lexed::default();
+    while let Some(c) = s.peek(0) {
+        if c.is_ascii_whitespace() {
+            s.bump();
+            continue;
+        }
+        // line comment — scan for a suppression directive
+        if c == b'/' && s.peek(1) == Some(b'/') {
+            let (start, line) = (s.pos, s.line);
+            while s.peek(0).is_some_and(|b| b != b'\n') {
+                s.bump();
+            }
+            if let Some(d) = parse_directive(&s.src[start..s.pos], line) {
+                out.suppressions.push(d);
+            }
+            continue;
+        }
+        // block comment, nested per Rust rules
+        if c == b'/' && s.peek(1) == Some(b'*') {
+            let mut depth = 0usize;
+            while s.peek(0).is_some() {
+                if s.peek(0) == Some(b'/') && s.peek(1) == Some(b'*') {
+                    depth += 1;
+                    s.bump_n(2);
+                } else if s.peek(0) == Some(b'*') && s.peek(1) == Some(b'/') {
+                    depth -= 1;
+                    s.bump_n(2);
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    s.bump();
+                }
+            }
+            continue;
+        }
+        // raw strings r"…" / r#"…"# / br"…", and raw identifiers r#ident
+        if c == b'r' || c == b'b' {
+            let after_prefix =
+                if c == b'b' && s.peek(1) == Some(b'r') { 2usize } else { 1 };
+            let raw = c == b'r' || (c == b'b' && s.peek(1) == Some(b'r'));
+            if raw && matches!(s.peek(after_prefix), Some(b'#') | Some(b'"')) {
+                let mut hashes = 0usize;
+                while s.peek(after_prefix + hashes) == Some(b'#') {
+                    hashes += 1;
+                }
+                if s.peek(after_prefix + hashes) == Some(b'"') {
+                    // raw string: body ends at `"` + the same hash count
+                    let (line, col) = (s.line, s.col);
+                    s.bump_n(after_prefix + hashes + 1);
+                    let mut close = String::from('"');
+                    for _ in 0..hashes {
+                        close.push('#');
+                    }
+                    let end = s.src[s.pos..].find(&close).map(|r| r + close.len());
+                    s.bump_n(end.unwrap_or(s.bytes.len() - s.pos));
+                    let tok = Token { kind: TokKind::Str, text: "", line, col, in_test: false };
+                    out.tokens.push(tok);
+                    continue;
+                }
+                if c == b'r' && hashes == 1 && s.peek(2).is_some_and(is_ident_start) {
+                    // raw identifier r#ident — token text excludes `r#`
+                    let (line, col) = (s.line, s.col);
+                    s.bump_n(2);
+                    let start = s.pos;
+                    while s.peek(0).is_some_and(is_ident_cont) {
+                        s.bump();
+                    }
+                    let text = &s.src[start..s.pos];
+                    let tok = Token { kind: TokKind::Ident, text, line, col, in_test: false };
+                    out.tokens.push(tok);
+                    continue;
+                }
+            }
+            // otherwise: an ordinary identifier starting with r/b
+        }
+        if is_ident_start(c) {
+            let (line, col, start) = (s.line, s.col, s.pos);
+            while s.peek(0).is_some_and(is_ident_cont) {
+                s.bump();
+            }
+            let text = &s.src[start..s.pos];
+            out.tokens.push(Token { kind: TokKind::Ident, text, line, col, in_test: false });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (line, col, start) = (s.line, s.col, s.pos);
+            while let Some(b) = s.peek(0) {
+                // stop before `..` so ranges stay punctuation
+                if b == b'.' && s.peek(1) == Some(b'.') {
+                    break;
+                }
+                if !(is_ident_cont(b) || b == b'.') {
+                    break;
+                }
+                s.bump();
+            }
+            let text = &s.src[start..s.pos];
+            out.tokens.push(Token { kind: TokKind::Number, text, line, col, in_test: false });
+            continue;
+        }
+        if c == b'"' {
+            let (line, col) = (s.line, s.col);
+            s.bump();
+            while let Some(b) = s.peek(0) {
+                if b == b'\\' {
+                    s.bump_n(2);
+                } else if b == b'"' {
+                    s.bump();
+                    break;
+                } else {
+                    s.bump();
+                }
+            }
+            out.tokens.push(Token { kind: TokKind::Str, text: "", line, col, in_test: false });
+            continue;
+        }
+        if c == b'\'' {
+            let (line, col) = (s.line, s.col);
+            // `'a` (lifetime) vs `'a'` (char): a lifetime is a quote +
+            // ident with no closing quote right after the first char
+            if s.peek(1).is_some_and(is_ident_start) && s.peek(2) != Some(b'\'') {
+                s.bump();
+                let start = s.pos;
+                while s.peek(0).is_some_and(is_ident_cont) {
+                    s.bump();
+                }
+                let text = &s.src[start..s.pos];
+                out.tokens.push(Token { kind: TokKind::Lifetime, text, line, col, in_test: false });
+                continue;
+            }
+            s.bump();
+            while let Some(b) = s.peek(0) {
+                if b == b'\\' {
+                    s.bump_n(2);
+                } else if b == b'\'' {
+                    s.bump();
+                    break;
+                } else {
+                    s.bump();
+                }
+            }
+            out.tokens.push(Token { kind: TokKind::Char, text: "", line, col, in_test: false });
+            continue;
+        }
+        let (line, col, start) = (s.line, s.col, s.pos);
+        s.bump();
+        let text = &s.src[start..s.pos];
+        out.tokens.push(Token { kind: TokKind::Punct, text, line, col, in_test: false });
+    }
+    mark_test_items(&mut out.tokens);
+    out
+}
+
+/// Mark every token inside a `#[cfg(test)]` / `#[test]` item.  The walk
+/// is token-shaped, not tree-shaped: on a test-ish attribute it skips any
+/// further attributes, finds the item's `{` (bailing on `;` — a braceless
+/// item like `#[cfg(test)] use …;`), and brace-matches to the item's end.
+fn mark_test_items(tokens: &mut [Token<'_>]) {
+    let n = tokens.len();
+    let mut i = 0;
+    while i < n {
+        if !(tokens[i].text == "#" && i + 1 < n && tokens[i + 1].text == "[") {
+            i += 1;
+            continue;
+        }
+        // collect the attribute's ident sequence up to the matching `]`
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < n && depth > 0 {
+            match tokens[j].text {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            if tokens[j].kind == TokKind::Ident {
+                idents.push(tokens[j].text);
+            }
+            j += 1;
+        }
+        let is_test = idents.as_slice() == ["test"]
+            || (idents.len() >= 2
+                && idents[0] == "cfg"
+                && idents[1..].contains(&"test")
+                && !idents[1..].contains(&"not"));
+        if !is_test {
+            i = j + 1;
+            continue;
+        }
+        // skip any further attributes on the same item
+        let mut k = j + 1;
+        while k + 1 < n && tokens[k].text == "#" && tokens[k + 1].text == "[" {
+            let mut d = 1usize;
+            k += 2;
+            while k < n && d > 0 {
+                match tokens[k].text {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+        while k < n && tokens[k].text != "{" && tokens[k].text != ";" {
+            k += 1;
+        }
+        if k >= n || tokens[k].text == ";" {
+            i = k + 1;
+            continue;
+        }
+        let mut d = 0usize;
+        let mut m = k;
+        while m < n {
+            match tokens[m].text {
+                "{" => d += 1,
+                "}" => {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            m += 1;
+        }
+        for t in tokens.iter_mut().take((m + 1).min(n)).skip(i) {
+            t.in_test = true;
+        }
+        i = m + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<&str> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn literals_and_comments_hide_tokens() {
+        let src = r##"
+            let a = "partial_cmp inside a string";
+            // partial_cmp inside a comment
+            /* nested /* partial_cmp */ still comment */
+            let b = r#"raw partial_cmp"#;
+            let c = 'x';
+            fn real() -> Ordering { a.partial_cmp(&b) }
+        "##;
+        let ids = idents(src);
+        assert_eq!(ids.iter().filter(|t| **t == "partial_cmp").count(), 1);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'b' }").tokens;
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text).collect();
+        assert_eq!(lifetimes, ["a", "a"]);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        assert!(idents("let r#type = 1;").contains(&"type"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let src = "
+            fn lib_code() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                fn t() { y.unwrap(); }
+            }
+        ";
+        let toks = lex(src).tokens;
+        let unwraps: Vec<bool> =
+            toks.iter().filter(|t| t.text == "unwrap").map(|t| t.in_test).collect();
+        assert_eq!(unwraps, [false, true]);
+    }
+
+    #[test]
+    fn braceless_cfg_test_item_does_not_swallow_next_item() {
+        let src = "
+            #[cfg(test)]
+            use super::*;
+            fn lib_code() { x.unwrap(); }
+        ";
+        let toks = lex(src).tokens;
+        assert!(toks.iter().filter(|t| t.text == "unwrap").all(|t| !t.in_test));
+    }
+
+    #[test]
+    fn directives_parse_with_and_without_reasons() {
+        let src = "
+            // skrull-lint: allow(panic-in-lib) -- invariant: guarded above
+            // skrull-lint: allow(truncating-cast)
+            // skrull-lint: typo(panic-in-lib)
+            // plain comment
+            // docs that mention the skrull-lint: allow(...) syntax mid-sentence
+        ";
+        let sups = lex(src).suppressions;
+        assert_eq!(sups.len(), 3, "prose mentioning the marker is not a directive");
+        assert_eq!(sups[0].rule.as_deref(), Some("panic-in-lib"));
+        assert_eq!(sups[0].reason.as_deref(), Some("invariant: guarded above"));
+        assert_eq!(sups[1].rule.as_deref(), Some("truncating-cast"));
+        assert_eq!(sups[1].reason, None);
+        assert_eq!(sups[2].rule, None, "unparseable directive is kept as malformed");
+    }
+}

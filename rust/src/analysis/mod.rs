@@ -1,0 +1,33 @@
+//! `skrull lint` — a repo-aware static analysis pass that turns the
+//! scheduler's invariants into enforceable source-tree properties.
+//!
+//! Every rule encodes an invariant a past PR fixed or audits dynamically:
+//! * `nan-unsafe-ord` — the PR 1 `partial_cmp().unwrap()` sort class;
+//!   `f64::total_cmp` is the convention.
+//! * `truncating-cast` — the PR 6 overflow class: narrowing `as` casts in
+//!   scheduler/perfmodel/memplan/config accumulation paths.
+//! * `hot-path-alloc` — the static complement of `tests/alloc_audit.rs`:
+//!   allocation-capable constructs inside the declared hot-path set.
+//! * `nondet-iteration` — HashMap/HashSet where byte-identical schedules
+//!   and reports are load-bearing (PR 5/6 determinism gates).
+//! * `wall-clock-in-pure-code` — `Instant`/`SystemTime` outside the
+//!   sanctioned timing sites (the `--deterministic-timing` contract).
+//! * `panic-in-lib` — `unwrap`/`expect`/`panic!` in library modules where
+//!   `SchedError`/`Result` propagation is the convention (the PR 2
+//!   `capacity_for` panic class).
+//!
+//! Deliberate exceptions are inline, auditable, and justified:
+//! `// skrull-lint: allow(<rule>) -- <reason>` covers its own line and
+//! the next; the reason is mandatory, unknown rules and unused or
+//! reason-less directives are findings themselves.  The pass is
+//! dependency-free (hand-rolled lexer — `syn` is unavailable offline)
+//! and deterministic: files sorted by path, findings by position.
+
+pub mod engine;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use engine::{lint_source, lint_tree, Finding, LintOutcome};
+pub use report::{parse_report, render_human, render_json, validate_json};
+pub use rules::{HOT_FUNCTIONS, RULES};

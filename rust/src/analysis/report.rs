@@ -1,0 +1,449 @@
+//! Rendering and validation of lint results: a human-readable listing
+//! for the terminal and a JSON report (`LINT_REPORT.json`) for CI.  The
+//! JSON reader here is a small nested-value parser in the
+//! `calib::profile_io` cursor idiom (`profile_io` itself only parses the
+//! flat subset its schemas need; the lint report nests findings inside
+//! an array of objects).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::analysis::engine::{Finding, LintOutcome};
+use crate::util::error::{Context, Result};
+
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Human-readable listing: one `file:line:col rule message` per finding,
+/// suppressed ones annotated with their justification, then a summary.
+pub fn render_human(outcome: &LintOutcome) -> String {
+    let mut s = String::new();
+    for f in &outcome.findings {
+        let _ = write!(s, "{}:{}:{} [{}] {}", f.file, f.line, f.col, f.rule, f.message);
+        match &f.reason {
+            Some(reason) if f.suppressed => {
+                let _ = writeln!(s, " (suppressed: {reason})");
+            }
+            _ => {
+                let _ = writeln!(s);
+            }
+        }
+    }
+    let _ = writeln!(
+        s,
+        "{} files scanned: {} finding(s), {} unsuppressed, {} suppressed",
+        outcome.files_scanned,
+        outcome.findings.len(),
+        outcome.unsuppressed(),
+        outcome.suppressed(),
+    );
+    s
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the JSON report (schema v1).
+pub fn render_json(outcome: &LintOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema_version\": {SCHEMA_VERSION},");
+    let _ = writeln!(s, "  \"tool\": \"skrull-lint\",");
+    let _ = writeln!(s, "  \"files_scanned\": {},", outcome.files_scanned);
+    let _ = writeln!(s, "  \"total\": {},", outcome.findings.len());
+    let _ = writeln!(s, "  \"unsuppressed\": {},", outcome.unsuppressed());
+    let _ = writeln!(s, "  \"suppressed\": {},", outcome.suppressed());
+    let _ = writeln!(s, "  \"findings\": [");
+    for (i, f) in outcome.findings.iter().enumerate() {
+        let reason = match &f.reason {
+            Some(r) => format!("\"{}\"", esc(r)),
+            None => "null".to_string(),
+        };
+        let _ = write!(
+            s,
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"col\": {}, \
+             \"suppressed\": {}, \"reason\": {}, \"message\": \"{}\"}}",
+            esc(&f.rule),
+            esc(&f.file),
+            f.line,
+            f.col,
+            f.suppressed,
+            reason,
+            esc(&f.message),
+        );
+        let _ = writeln!(s, "{}", if i + 1 < outcome.findings.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// A parsed JSON value (nested, unlike `profile_io::Jval`).
+#[derive(Clone, Debug, PartialEq)]
+enum Val {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+    Arr(Vec<Val>),
+    Obj(BTreeMap<String, Val>),
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(text: &'a str) -> Self {
+        Cursor { bytes: text.as_bytes(), pos: 0 }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        while self.bytes.get(self.pos).is_some_and(|b| b.is_ascii_whitespace()) {
+            self.pos += 1;
+        }
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
+        match self.peek() {
+            Some(b) if b == c => {
+                self.pos += 1;
+                Ok(())
+            }
+            other => crate::bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.pos,
+                other.map(|b| b as char)
+            ),
+        }
+    }
+
+    fn eat_word(&mut self, word: &str) -> bool {
+        self.peek();
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect_byte(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.bytes.get(self.pos).copied() else {
+                crate::bail!("unterminated string at byte {}", self.pos);
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.bytes.get(self.pos).copied() else {
+                        crate::bail!("dangling escape at byte {}", self.pos);
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32)
+                                .with_context(|| format!("bad \\u escape at {}", self.pos))?;
+                            self.pos += 4;
+                            out.push(hex);
+                        }
+                        other => crate::bail!("unsupported escape \\{}", other as char),
+                    }
+                }
+                other => out.push(other as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.peek();
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad number at byte {start}"))
+    }
+
+    fn value(&mut self) -> Result<Val> {
+        match self.peek() {
+            Some(b'"') => Ok(Val::Str(self.string()?)),
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = BTreeMap::new();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Val::Obj(map));
+                }
+                loop {
+                    let key = self.string()?;
+                    self.expect_byte(b':')?;
+                    map.insert(key, self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Val::Obj(map));
+                        }
+                        other => crate::bail!("expected ',' or '}}' in object, found {other:?}"),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Val::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Val::Arr(items));
+                        }
+                        other => crate::bail!("expected ',' or ']' in array, found {other:?}"),
+                    }
+                }
+            }
+            Some(b't') | Some(b'f') => {
+                if self.eat_word("true") {
+                    Ok(Val::Bool(true))
+                } else if self.eat_word("false") {
+                    Ok(Val::Bool(false))
+                } else {
+                    crate::bail!("bad literal at byte {}", self.pos)
+                }
+            }
+            Some(b'n') => {
+                if self.eat_word("null") {
+                    Ok(Val::Null)
+                } else {
+                    crate::bail!("bad literal at byte {}", self.pos)
+                }
+            }
+            Some(_) => Ok(Val::Num(self.number()?)),
+            None => crate::bail!("unexpected end of input"),
+        }
+    }
+}
+
+/// A parsed `LINT_REPORT.json`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ParsedReport {
+    pub files_scanned: u64,
+    pub findings: Vec<Finding>,
+}
+
+fn need_u64(map: &BTreeMap<String, Val>, key: &str) -> Result<u64> {
+    match map.get(key) {
+        Some(Val::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Ok(*x as u64),
+        other => crate::bail!("report key {key:?}: want a non-negative integer, got {other:?}"),
+    }
+}
+
+fn need_str(map: &BTreeMap<String, Val>, key: &str) -> Result<String> {
+    match map.get(key) {
+        Some(Val::Str(s)) => Ok(s.clone()),
+        other => crate::bail!("report key {key:?}: want a string, got {other:?}"),
+    }
+}
+
+fn need_bool(map: &BTreeMap<String, Val>, key: &str) -> Result<bool> {
+    match map.get(key) {
+        Some(Val::Bool(b)) => Ok(*b),
+        other => crate::bail!("report key {key:?}: want a bool, got {other:?}"),
+    }
+}
+
+/// Parse a lint report, checking schema shape and internal consistency
+/// (counts must match the findings array; suppressed findings must carry
+/// a justification).
+pub fn parse_report(text: &str) -> Result<ParsedReport> {
+    let mut c = Cursor::new(text);
+    let Val::Obj(top) = c.value()? else {
+        crate::bail!("lint report must be a JSON object");
+    };
+    if c.peek().is_some() {
+        crate::bail!("trailing garbage after the report object at byte {}", c.pos);
+    }
+    let version = need_u64(&top, "schema_version")?;
+    crate::ensure!(
+        version == SCHEMA_VERSION,
+        "unsupported lint report schema_version {version} (want {SCHEMA_VERSION})"
+    );
+    let tool = need_str(&top, "tool")?;
+    crate::ensure!(tool == "skrull-lint", "not a skrull-lint report (tool = {tool:?})");
+    let files_scanned = need_u64(&top, "files_scanned")?;
+    let Some(Val::Arr(items)) = top.get("findings") else {
+        crate::bail!("report key \"findings\": want an array");
+    };
+    let mut findings = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let Val::Obj(f) = item else {
+            crate::bail!("finding {i}: want an object");
+        };
+        let reason = match f.get("reason") {
+            Some(Val::Str(s)) => Some(s.clone()),
+            Some(Val::Null) | None => None,
+            other => crate::bail!("finding {i}: reason must be a string or null, got {other:?}"),
+        };
+        let finding = Finding {
+            rule: need_str(f, "rule")?,
+            file: need_str(f, "file")?,
+            line: u32::try_from(need_u64(f, "line")?)
+                .map_err(|_| crate::anyhow!("finding {i}: line out of range"))?,
+            col: u32::try_from(need_u64(f, "col")?)
+                .map_err(|_| crate::anyhow!("finding {i}: col out of range"))?,
+            message: need_str(f, "message")?,
+            suppressed: need_bool(f, "suppressed")?,
+            reason,
+        };
+        crate::ensure!(
+            !finding.suppressed || finding.reason.as_deref().is_some_and(|r| !r.is_empty()),
+            "finding {i} ({}:{} {}) is suppressed without a written reason",
+            finding.file,
+            finding.line,
+            finding.rule
+        );
+        findings.push(finding);
+    }
+    let total = need_u64(&top, "total")?;
+    let unsuppressed = need_u64(&top, "unsuppressed")?;
+    let suppressed = need_u64(&top, "suppressed")?;
+    let actual_unsup = findings.iter().filter(|f| !f.suppressed).count() as u64;
+    crate::ensure!(
+        total == findings.len() as u64,
+        "total {total} does not match the {} findings listed",
+        findings.len()
+    );
+    crate::ensure!(
+        unsuppressed == actual_unsup && suppressed == total - actual_unsup,
+        "suppression counts ({unsuppressed}/{suppressed}) disagree with the findings array"
+    );
+    Ok(ParsedReport { files_scanned, findings })
+}
+
+/// The CI gate: a report is valid iff it parses, is internally
+/// consistent, and lists zero unsuppressed findings.
+pub fn validate_json(text: &str) -> Result<()> {
+    let report = parse_report(text)?;
+    let unsup: Vec<&Finding> = report.findings.iter().filter(|f| !f.suppressed).collect();
+    crate::ensure!(
+        unsup.is_empty(),
+        "{} unsuppressed finding(s), first: {}:{}:{} [{}] {}",
+        unsup.len(),
+        unsup[0].file,
+        unsup[0].line,
+        unsup[0].col,
+        unsup[0].rule,
+        unsup[0].message
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::engine::lint_source;
+
+    fn outcome_of(rel: &str, src: &str) -> LintOutcome {
+        LintOutcome { findings: lint_source(rel, src), files_scanned: 1 }
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let out = outcome_of(
+            "scheduler/x.rs",
+            "
+            fn f() { a.unwrap(); }
+            // skrull-lint: allow(truncating-cast) -- bounded by \"cp\" \\ degree
+            fn g(x: u64) -> u32 { x as u32 }
+            ",
+        );
+        let json = render_json(&out);
+        let parsed = parse_report(&json).unwrap();
+        assert_eq!(parsed.files_scanned, 1);
+        assert_eq!(parsed.findings, out.findings);
+    }
+
+    #[test]
+    fn validate_fails_on_unsuppressed_findings() {
+        let out = outcome_of("scheduler/x.rs", "fn f() { a.unwrap(); }");
+        let err = validate_json(&render_json(&out)).unwrap_err();
+        assert!(format!("{err:#}").contains("panic-in-lib"), "{err:#}");
+    }
+
+    #[test]
+    fn validate_passes_on_clean_and_fully_suppressed_reports() {
+        let clean = outcome_of("scheduler/x.rs", "fn f() {}");
+        validate_json(&render_json(&clean)).unwrap();
+        let suppressed = outcome_of(
+            "scheduler/x.rs",
+            "
+            // skrull-lint: allow(panic-in-lib) -- test fixture
+            fn f() { a.unwrap(); }
+            ",
+        );
+        validate_json(&render_json(&suppressed)).unwrap();
+    }
+
+    #[test]
+    fn tampered_counts_are_rejected() {
+        let out = outcome_of("scheduler/x.rs", "fn f() { a.unwrap(); }");
+        let json = render_json(&out).replace("\"unsuppressed\": 1", "\"unsuppressed\": 0");
+        assert!(parse_report(&json).is_err());
+    }
+
+    #[test]
+    fn suppressed_without_reason_is_rejected() {
+        let json = r#"{
+            "schema_version": 1, "tool": "skrull-lint", "files_scanned": 1,
+            "total": 1, "unsuppressed": 0, "suppressed": 1,
+            "findings": [
+                {"rule": "panic-in-lib", "file": "x.rs", "line": 1, "col": 1,
+                 "suppressed": true, "reason": null, "message": "m"}
+            ]
+        }"#;
+        assert!(parse_report(json).is_err());
+    }
+}

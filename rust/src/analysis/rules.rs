@@ -1,0 +1,367 @@
+//! The rule catalog: each rule encodes one invariant this repo has
+//! already been bitten by (see the per-rule docs), expressed as token
+//! patterns over [`crate::analysis::lexer`] output with per-rule module
+//! scoping.  Paths are relative to the scan root (`rust/src`) with `/`
+//! separators; a scope entry matches any path it prefixes.
+
+use crate::analysis::lexer::{TokKind, Token};
+
+/// Where a rule applies, as path prefixes relative to the scan root.
+#[derive(Clone, Copy, Debug)]
+pub enum Scope {
+    /// Everywhere.
+    All,
+    /// Only under these prefixes.
+    Within(&'static [&'static str]),
+    /// Everywhere except under these prefixes (the sanctioned sites).
+    Except(&'static [&'static str]),
+}
+
+impl Scope {
+    pub fn contains(&self, rel: &str) -> bool {
+        match self {
+            Scope::All => true,
+            Scope::Within(paths) => paths.iter().any(|p| rel.starts_with(p)),
+            Scope::Except(paths) => !paths.iter().any(|p| rel.starts_with(p)),
+        }
+    }
+}
+
+/// One lint rule.
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub scope: Scope,
+}
+
+/// Modules whose iteration order can leak into schedules, reports or
+/// benchmark artifacts — everywhere byte-identity is load-bearing.
+const DETERMINISTIC_MODULES: &[&str] = &[
+    "analysis/",
+    "bench/",
+    "calib/",
+    "cluster/",
+    "config/",
+    "coordinator/",
+    "data/",
+    "memplan/",
+    "scheduler/",
+];
+
+/// Library modules where `SchedError`/`Result` propagation is the
+/// convention.  Deliberately absent: `util/` (the SPSC channel treats
+/// lock poisoning as fatal by design — Miri covers it), `runtime/` and
+/// `logging/` (fail-fast process boundaries), `cli/` and `main.rs` (the
+/// launcher may abort on hard usage errors).
+const ERROR_CONVENTION_MODULES: &[&str] = &[
+    "analysis/",
+    "bench/",
+    "calib/",
+    "cluster/",
+    "config/",
+    "coordinator/",
+    "data/",
+    "memplan/",
+    "model/",
+    "perfmodel/",
+    "rng/",
+    "scheduler/",
+];
+
+/// Accumulation-path modules where a narrowing cast can silently wrap
+/// token/FLOP counts (the PR 6 overflow class at K = 2^20).
+const ACCUMULATION_MODULES: &[&str] = &["config/", "memplan/", "perfmodel/", "scheduler/"];
+
+/// The sanctioned wall-clock sites: measurement (bench), the pipelined
+/// loader's overhead accounting, the trainer, logging, and the PJRT
+/// boundary.  Everywhere else timing must flow through recorded values
+/// so `--deterministic-timing` stays a pure wall-clock lever.
+const TIMING_SANCTIONED: &[&str] =
+    &["bench/", "coordinator/trainer.rs", "data/loader.rs", "logging/", "runtime/pjrt.rs"];
+
+/// The declared hot-path set for `hot-path-alloc`: the static complement
+/// of `tests/alloc_audit.rs`.  `(file, fn)` pairs; the rule scans the
+/// named fn's body only.
+pub const HOT_FUNCTIONS: &[(&str, &str)] = &[
+    ("scheduler/gds.rs", "schedule_rank_inner"),
+    ("scheduler/dacp.rs", "schedule_into"),
+    ("scheduler/binpack.rs", "balance_into"),
+    ("scheduler/shard.rs", "worker"),
+];
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "nan-unsafe-ord",
+        summary: "partial_cmp-based ordering; NaN makes it panic or reorder (use f64::total_cmp)",
+        scope: Scope::All,
+    },
+    Rule {
+        id: "truncating-cast",
+        summary: "narrowing `as` cast in an accumulation path can wrap silently",
+        scope: Scope::Within(ACCUMULATION_MODULES),
+    },
+    Rule {
+        id: "hot-path-alloc",
+        summary: "allocation-capable construct inside a declared zero-alloc hot path",
+        scope: Scope::Within(&["scheduler/"]),
+    },
+    Rule {
+        id: "nondet-iteration",
+        summary: "HashMap/HashSet in schedule-output-affecting code breaks byte-identity",
+        scope: Scope::Within(DETERMINISTIC_MODULES),
+    },
+    Rule {
+        id: "wall-clock-in-pure-code",
+        summary: "Instant/SystemTime outside the sanctioned timing sites",
+        scope: Scope::Except(TIMING_SANCTIONED),
+    },
+    Rule {
+        id: "panic-in-lib",
+        summary: "unwrap/expect/panic! in library code where error propagation is the convention",
+        scope: Scope::Within(ERROR_CONVENTION_MODULES),
+    },
+];
+
+/// Meta rules emitted by the engine itself; they cannot be suppressed.
+pub const META_RULES: &[&str] = &["malformed-suppression", "unused-suppression"];
+
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// A rule hit before suppression matching.
+#[derive(Clone, Debug)]
+pub struct RawFinding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+const NARROW_INTS: &[&str] = &["u8", "i8", "u16", "i16", "u32", "i32"];
+const ALLOC_METHODS: &[&str] = &["collect", "clone", "to_vec", "to_owned"];
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+const ALLOC_PATHS: &[&str] = &["Vec", "Box", "String"];
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn text_at(toks: &[Token<'_>], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text)
+}
+
+/// Run every rule over one file's token stream.  Findings in `#[cfg(test)]`
+/// items are dropped at the source; scope filtering happens here too.
+pub fn check_file(rel: &str, toks: &[Token<'_>]) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    let scoped =
+        |id: &'static str| RULES.iter().any(|r| r.id == id && r.scope.contains(rel));
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.in_test {
+            continue;
+        }
+        let next = text_at(toks, i + 1);
+        let prev = if i > 0 { text_at(toks, i - 1) } else { "" };
+        if t.text == "partial_cmp" && scoped("nan-unsafe-ord") {
+            out.push(RawFinding {
+                rule: "nan-unsafe-ord",
+                line: t.line,
+                col: t.col,
+                message: "partial_cmp-based ordering (NaN-unsafe); use f64::total_cmp".into(),
+            });
+        }
+        if t.text == "as" && NARROW_INTS.contains(&next) && scoped("truncating-cast") {
+            out.push(RawFinding {
+                rule: "truncating-cast",
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "narrowing `as {next}` can truncate silently; use try_from or a checked helper"
+                ),
+            });
+        }
+        if (t.text == "HashMap" || t.text == "HashSet") && scoped("nondet-iteration") {
+            out.push(RawFinding {
+                rule: "nondet-iteration",
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "{} iteration order is nondeterministic; use BTreeMap/BTreeSet here",
+                    t.text
+                ),
+            });
+        }
+        if (t.text == "Instant" || t.text == "SystemTime") && scoped("wall-clock-in-pure-code") {
+            out.push(RawFinding {
+                rule: "wall-clock-in-pure-code",
+                line: t.line,
+                col: t.col,
+                message: format!(
+                    "{} outside the sanctioned timing sites breaks --deterministic-timing",
+                    t.text
+                ),
+            });
+        }
+        if scoped("panic-in-lib") {
+            if PANIC_METHODS.contains(&t.text) && prev == "." {
+                out.push(RawFinding {
+                    rule: "panic-in-lib",
+                    line: t.line,
+                    col: t.col,
+                    message: format!(
+                        ".{}() in library code; propagate a structured error instead",
+                        t.text
+                    ),
+                });
+            }
+            if PANIC_MACROS.contains(&t.text) && next == "!" {
+                out.push(RawFinding {
+                    rule: "panic-in-lib",
+                    line: t.line,
+                    col: t.col,
+                    message: format!(
+                        "{}! in library code; propagate a structured error instead",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+    if scoped("hot-path-alloc") {
+        check_hot_paths(rel, toks, &mut out);
+    }
+    out
+}
+
+/// Scan the bodies of the declared hot-path functions in `rel` for
+/// allocation-capable constructs.
+fn check_hot_paths(rel: &str, toks: &[Token<'_>], out: &mut Vec<RawFinding>) {
+    let hot: Vec<&str> =
+        HOT_FUNCTIONS.iter().filter(|(p, _)| *p == rel).map(|(_, f)| *f).collect();
+    if hot.is_empty() {
+        return;
+    }
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if !(toks[i].text == "fn" && hot.contains(&text_at(toks, i + 1))) {
+            i += 1;
+            continue;
+        }
+        let name = text_at(toks, i + 1);
+        // find the body's `{`; a `;` first means a trait-method signature
+        let mut j = i + 2;
+        while j < n && toks[j].text != "{" && toks[j].text != ";" {
+            j += 1;
+        }
+        if j >= n || toks[j].text == ";" {
+            i = j + 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut k = j;
+        while k < n {
+            match toks[k].text {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for m in j..=k.min(n - 1) {
+            let t = &toks[m];
+            if t.kind != TokKind::Ident || t.in_test {
+                continue;
+            }
+            let next = text_at(toks, m + 1);
+            let prev = if m > 0 { text_at(toks, m - 1) } else { "" };
+            let what = if ALLOC_MACROS.contains(&t.text) && next == "!" {
+                Some(format!("{}!", t.text))
+            } else if ALLOC_METHODS.contains(&t.text) && prev == "." {
+                Some(format!(".{}()", t.text))
+            } else if ALLOC_PATHS.contains(&t.text)
+                && next == ":"
+                && text_at(toks, m + 2) == ":"
+                && text_at(toks, m + 3) == "new"
+            {
+                Some(format!("{}::new", t.text))
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                out.push(RawFinding {
+                    rule: "hot-path-alloc",
+                    line: t.line,
+                    col: t.col,
+                    message: format!("{what} allocates inside declared hot path fn `{name}`"),
+                });
+            }
+        }
+        i = k + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn rules_hit(rel: &str, src: &str) -> Vec<&'static str> {
+        let lexed = lex(src);
+        check_file(rel, &lexed.tokens).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn scope_gates_rules_by_path() {
+        let src = "fn f() { x.unwrap(); }";
+        assert_eq!(rules_hit("scheduler/x.rs", src), ["panic-in-lib"]);
+        assert!(rules_hit("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allows_sanctioned_sites() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(rules_hit("cluster/x.rs", src), ["wall-clock-in-pure-code"]);
+        assert!(rules_hit("bench/x.rs", src).is_empty());
+        assert!(rules_hit("data/loader.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_only_in_declared_fns() {
+        let src = "
+            fn schedule_rank_inner() { let v = vec![1]; }
+            fn helper() { let v = vec![1]; }
+        ";
+        assert_eq!(rules_hit("scheduler/gds.rs", src), ["hot-path-alloc"]);
+        assert!(rules_hit("scheduler/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn narrowing_casts_flagged_widening_ignored() {
+        let src = "fn f(x: u64) { let a = x as u32; let b = x as u128; let c = 3u32 as u64; }";
+        assert_eq!(rules_hit("scheduler/x.rs", src), ["truncating-cast"]);
+        assert!(rules_hit("cluster/x.rs", src).is_empty(), "cluster is not an accumulation path");
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(Vec::new); }";
+        assert!(rules_hit("scheduler/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_items_are_exempt() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                fn t() { x.unwrap(); let m = HashMap::new(); }
+            }
+        ";
+        assert!(rules_hit("scheduler/x.rs", src).is_empty());
+    }
+}

@@ -382,6 +382,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
             for si in 0..ns {
                 let mut baseline_wall = None;
                 for pi in 0..np {
+                    // skrull-lint: allow(panic-in-lib) -- reduce loop visits each grid slot exactly once; a double-take is a bench-harness bug, not an input error
                     let r = results[idx].take().expect("each job reduced once")?;
                     idx += 1;
                     let base = *baseline_wall.get_or_insert(r.wall);
@@ -395,8 +396,9 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                 }
             }
             for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
-                let (report, speedup, batch_size, estimator_error) =
-                    primaries[pi].take().expect("primary seed ran");
+                // skrull-lint: allow(panic-in-lib) -- si == 0 always populates primaries[pi] above; absence is a bench-harness bug
+                let primary = primaries[pi].take().expect("primary seed ran");
+                let (report, speedup, batch_size, estimator_error) = primary;
                 cells.push(E2eCell {
                     policy,
                     dataset: name.clone(),
@@ -638,7 +640,9 @@ pub fn validate_json(text: &str) -> Result<()> {
         let oom: u64 = o
             .parse()
             .map_err(|_| crate::anyhow!("cell {i}: \"oom_count\" value {o:?} is not an integer"))?;
-        let frac: f64 = p.parse().expect("checked finite above");
+        let frac: f64 = p.parse().map_err(|_| {
+            crate::anyhow!("cell {i}: \"peak_mem_fraction\" value {p:?} is not a number")
+        })?;
         if oom == 0 {
             crate::ensure!(
                 frac > 0.0 && frac <= 1.0,
@@ -680,7 +684,9 @@ pub fn validate_json(text: &str) -> Result<()> {
         .map(|v| *v == "\"calibrated\"")
         .unwrap_or(false);
     for (i, v) in values_after(text, "estimator_error").iter().enumerate() {
-        let err: f64 = v.parse().expect("checked finite above");
+        let err: f64 = v.parse().map_err(|_| {
+            crate::anyhow!("cell {i}: \"estimator_error\" value {v:?} is not a number")
+        })?;
         crate::ensure!(err >= 0.0, "cell {i}: negative estimator_error {err}");
         if calibrated {
             crate::ensure!(

@@ -131,14 +131,16 @@ pub fn run(opts: &SchedBenchOptions) -> Result<SchedBenchReport> {
         // pre-fast-path scheduler and is deliberately slow there
         let (warmup, samples) = if k <= 256 { (3, 20) } else { (1, 5) };
         let fast = measure(&format!("gds k={k}"), warmup, samples, || {
+            // skrull-lint: allow(panic-in-lib) -- measure() closures can't propagate Result; a failed schedule invalidates the whole benchmark
             let _ = gds::schedule_with_ctx(&batch, &gcfg, &flops, &mut ctx).expect("schedule");
         });
         let refined = measure(&format!("gds+refine k={k}"), warmup, samples, || {
-            let _ =
-                gds::schedule_refined_with_ctx(&batch, &gcfg, &cost, &mut ctx).expect("schedule");
+            // skrull-lint: allow(panic-in-lib) -- measure() closures can't propagate Result; a failed schedule invalidates the whole benchmark
+            gds::schedule_refined_with_ctx(&batch, &gcfg, &cost, &mut ctx).expect("schedule");
         });
         let reference =
             measure(&format!("gds reference k={k}"), warmup.min(1), samples.min(5), || {
+                // skrull-lint: allow(panic-in-lib) -- measure() closures can't propagate Result; a failed schedule invalidates the whole benchmark
                 let _ = gds::schedule_reference(&batch, &gcfg, &flops).expect("schedule");
             });
         let sched = gds::schedule(&batch, &gcfg, &flops)?;
@@ -168,14 +170,14 @@ pub fn run(opts: &SchedBenchOptions) -> Result<SchedBenchReport> {
     for &k in &opts.scaling_ks {
         let batch = ds.sample_batch(&mut rng, k);
         let m = measure(&format!("gds sharded k={k}"), warmup, samples, || {
-            let _ = gds::schedule_with_ctx(&batch, &sharded_cfg, &flops, &mut sctx)
-                .expect("schedule");
+            // skrull-lint: allow(panic-in-lib) -- measure() closures can't propagate Result; a failed schedule invalidates the whole benchmark
+            gds::schedule_with_ctx(&batch, &sharded_cfg, &flops, &mut sctx).expect("schedule");
         });
         // warmup ≥ 1 means the measured calls all replay the cached
         // solution — this is the steady-state repeated-batch number
         let m_inc = measure(&format!("gds incremental k={k}"), warmup.max(1), samples, || {
-            let _ =
-                gds::schedule_with_ctx(&batch, &inc_cfg, &flops, &mut ictx).expect("schedule");
+            // skrull-lint: allow(panic-in-lib) -- measure() closures can't propagate Result; a failed schedule invalidates the whole benchmark
+            gds::schedule_with_ctx(&batch, &inc_cfg, &flops, &mut ictx).expect("schedule");
         });
         scaling.push(ScalingRow {
             k,

@@ -52,7 +52,7 @@ impl<'a> Cursor<'a> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         match self.peek() {
             Some(b) if b == c => {
                 self.pos += 1;
@@ -68,7 +68,7 @@ impl<'a> Cursor<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let start = self.pos;
         while self.pos < self.bytes.len() {
             match self.bytes[self.pos] {
@@ -122,7 +122,7 @@ impl<'a> Cursor<'a> {
                 Ok(Jval::Bool(false))
             }
             Some(b'[') => {
-                self.expect(b'[')?;
+                self.expect_byte(b'[')?;
                 let mut items = Vec::new();
                 if self.peek() == Some(b']') {
                     self.pos += 1;
@@ -154,7 +154,7 @@ impl<'a> Cursor<'a> {
 /// Parse one flat JSON object (`{"k": v, ...}`) into a key → value map.
 pub fn parse_object(text: &str) -> Result<BTreeMap<String, Jval>> {
     let mut c = Cursor::new(text);
-    c.expect(b'{')?;
+    c.expect_byte(b'{')?;
     let mut map = BTreeMap::new();
     if c.peek() == Some(b'}') {
         c.pos += 1;
@@ -162,7 +162,7 @@ pub fn parse_object(text: &str) -> Result<BTreeMap<String, Jval>> {
     }
     loop {
         let key = c.string()?;
-        c.expect(b':')?;
+        c.expect_byte(b':')?;
         let val = c.value()?;
         map.insert(key, val);
         match c.peek() {

@@ -11,6 +11,30 @@ use crate::model::ModelSpec;
 use crate::perfmodel::CostModel;
 use crate::scheduler::SchedError;
 
+/// Range-checked integer lookup: `default` when the key is absent, an
+/// error when it is present but non-integer or out of range for the
+/// target type.  Replaces the old `i64_or(..) as u32/usize` pattern,
+/// where an out-of-range TOML value (say `bucket_size = 4294967297`)
+/// silently wrapped instead of erroring.
+fn checked_int<T: TryFrom<i64>>(
+    t: &toml::Table,
+    key: &str,
+    default: T,
+) -> crate::util::error::Result<T> {
+    let Some(v) = t.get(key) else {
+        return Ok(default);
+    };
+    let raw = v
+        .as_i64()
+        .ok_or_else(|| crate::anyhow!("config key {key} must be an integer, got {v:?}"))?;
+    T::try_from(raw).map_err(|_| {
+        crate::anyhow!(
+            "config key {key} = {raw} is out of range for {}",
+            std::any::type_name::<T>()
+        )
+    })
+}
+
 /// Where the cost/memory model coefficients come from.
 ///
 /// `Analytic` is the first-principles `Hardware::h100()` stack (the
@@ -261,29 +285,28 @@ impl ExperimentConfig {
             .ok_or_else(|| crate::anyhow!("unknown model {model_name:?}"))?;
         let dataset = t.str_or("dataset.name", "wikipedia");
         let mut cfg = ExperimentConfig::paper_default(model, &dataset);
-        cfg.cluster.dp = t.i64_or("cluster.dp", cfg.cluster.dp as i64) as usize;
-        cfg.cluster.cp = t.i64_or("cluster.cp", cfg.cluster.cp as i64) as usize;
-        cfg.cluster.batch_size =
-            t.i64_or("cluster.batch_size", cfg.cluster.batch_size as i64) as usize;
-        cfg.cluster.nodes = t.i64_or("cluster.nodes", cfg.cluster.nodes as i64) as usize;
+        cfg.cluster.dp = checked_int(t, "cluster.dp", cfg.cluster.dp)?;
+        cfg.cluster.cp = checked_int(t, "cluster.cp", cfg.cluster.cp)?;
+        cfg.cluster.batch_size = checked_int(t, "cluster.batch_size", cfg.cluster.batch_size)?;
+        cfg.cluster.nodes = checked_int(t, "cluster.nodes", cfg.cluster.nodes)?;
         cfg.cluster.gpus_per_node =
-            t.i64_or("cluster.gpus_per_node", cfg.cluster.gpus_per_node as i64) as usize;
-        cfg.bucket_size = t.i64_or("scheduler.bucket_size", cfg.bucket_size as i64) as u32;
+            checked_int(t, "cluster.gpus_per_node", cfg.cluster.gpus_per_node)?;
+        cfg.bucket_size = checked_int(t, "scheduler.bucket_size", cfg.bucket_size)?;
         let policy = t.str_or("scheduler.policy", cfg.policy.name());
         cfg.policy = Policy::by_name(&policy)
             .ok_or_else(|| crate::anyhow!("unknown policy {policy:?}"))?;
-        cfg.iterations = t.i64_or("run.iterations", cfg.iterations as i64) as usize;
-        cfg.seed = t.i64_or("run.seed", cfg.seed as i64) as u64;
+        cfg.iterations = checked_int(t, "run.iterations", cfg.iterations)?;
+        cfg.seed = checked_int(t, "run.seed", cfg.seed)?;
         cfg.pipelined = t.bool_or("run.pipelined", cfg.pipelined);
         cfg.epoch = t.bool_or("run.epoch", cfg.epoch);
         // 0 (or negative) means "auto": the machine's available
         // parallelism — same semantics as `--jobs 0`
-        let jobs = t.i64_or("run.jobs", cfg.jobs as i64);
+        let jobs: i64 = checked_int(t, "run.jobs", cfg.jobs as i64)?;
         if jobs > 0 {
             cfg.jobs = jobs as usize;
         }
         // same auto convention as run.jobs: 0 / negative = one shard per core
-        let shards = t.i64_or("scheduler.shards", cfg.shards as i64);
+        let shards: i64 = checked_int(t, "scheduler.shards", cfg.shards as i64)?;
         cfg.shards = if shards > 0 {
             shards as usize
         } else {
@@ -395,6 +418,28 @@ pipelined = false
         // defaults to pipelined when the key is absent
         let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
         assert!(d.pipelined);
+    }
+
+    #[test]
+    fn out_of_range_integer_keys_error_instead_of_wrapping() {
+        // u32::MAX + 2: the old `i64_or(..) as u32` parse wrapped this
+        // to bucket_size = 1 silently
+        let t = toml::parse("[scheduler]\nbucket_size = 4294967297\n").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // negative values must not wrap into huge unsigned ones
+        for bad in ["[scheduler]\nbucket_size = -1\n", "[cluster]\ndp = -2\n", "[run]\nseed = -7\n"]
+        {
+            let t = toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "accepted {bad:?}");
+        }
+        // wrong type used to fall back to the default silently; now it errors
+        let t = toml::parse("[scheduler]\nbucket_size = \"big\"\n").unwrap();
+        let err = ExperimentConfig::from_table(&t).unwrap_err();
+        assert!(format!("{err:#}").contains("must be an integer"), "{err:#}");
+        // in-range values still parse exactly
+        let t = toml::parse("[scheduler]\nbucket_size = 4294967295\n").unwrap();
+        assert_eq!(ExperimentConfig::from_table(&t).unwrap().bucket_size, u32::MAX);
     }
 
     #[test]

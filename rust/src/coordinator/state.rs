@@ -24,6 +24,7 @@ pub enum CheckpointError {
     BadMagic,
     BadVersion(u32),
     BadChecksum,
+    Truncated { need: usize, got: usize },
     SizeMismatch { got: usize, want: usize },
 }
 
@@ -34,6 +35,9 @@ impl std::fmt::Display for CheckpointError {
             CheckpointError::BadMagic => write!(f, "bad magic — not a skrull checkpoint"),
             CheckpointError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
             CheckpointError::BadChecksum => write!(f, "checksum mismatch (file corrupt)"),
+            CheckpointError::Truncated { need, got } => {
+                write!(f, "checkpoint truncated: need {need} bytes, got {got}")
+            }
             CheckpointError::SizeMismatch { got, want } => {
                 write!(f, "parameter count mismatch: checkpoint {got}, model {want}")
             }
@@ -75,10 +79,23 @@ fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
     }
 }
 
+/// Read a fixed-width little-endian field, propagating a structured
+/// error (never panicking) on short input.
+fn le_bytes<const N: usize>(bytes: &[u8], off: usize) -> Result<[u8; N], CheckpointError> {
+    bytes
+        .get(off..off + N)
+        .and_then(|s| <[u8; N]>::try_from(s).ok())
+        .ok_or(CheckpointError::Truncated { need: off + N, got: bytes.len() })
+}
+
 fn read_f32s(bytes: &[u8], n: usize, off: &mut usize) -> Result<Vec<f32>, CheckpointError> {
-    let need = n * 4;
-    if *off + need > bytes.len() {
-        return Err(CheckpointError::BadMagic);
+    // saturating: `n` comes straight from the (possibly corrupt) file
+    let need = n.saturating_mul(4);
+    if off.saturating_add(need) > bytes.len() {
+        return Err(CheckpointError::Truncated {
+            need: off.saturating_add(need),
+            got: bytes.len(),
+        });
     }
     let mut out = vec![0f32; n];
     for (i, ch) in bytes[*off..*off + need].chunks_exact(4).enumerate() {
@@ -107,21 +124,26 @@ impl TrainState {
     }
 
     pub fn decode(bytes: &[u8]) -> Result<TrainState, CheckpointError> {
-        if bytes.len() < 32 + 8 || &bytes[..8] != MAGIC {
+        if bytes.get(..8) != Some(&MAGIC[..]) {
             return Err(CheckpointError::BadMagic);
         }
+        // magic + version/step/lr/n header + trailing crc
+        let min = 8 + 20 + 8;
+        if bytes.len() < min {
+            return Err(CheckpointError::Truncated { need: min, got: bytes.len() });
+        }
         let body = &bytes[..bytes.len() - 8];
-        let crc_stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let crc_stored = u64::from_le_bytes(le_bytes(bytes, bytes.len() - 8)?);
         if fnv1a(body) != crc_stored {
             return Err(CheckpointError::BadChecksum);
         }
-        let ver = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let ver = u32::from_le_bytes(le_bytes(bytes, 8)?);
         if ver != VERSION {
             return Err(CheckpointError::BadVersion(ver));
         }
-        let step = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
-        let lr = f32::from_le_bytes(bytes[16..20].try_into().unwrap());
-        let n = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
+        let step = u32::from_le_bytes(le_bytes(bytes, 12)?);
+        let lr = f32::from_le_bytes(le_bytes(bytes, 16)?);
+        let n = u64::from_le_bytes(le_bytes(bytes, 20)?) as usize;
         let mut off = 28;
         let params = read_f32s(body, n, &mut off)?;
         let m = read_f32s(body, n, &mut off)?;
@@ -228,5 +250,31 @@ mod tests {
     fn truncated_file_errors() {
         let bytes = sample().encode();
         assert!(TrainState::decode(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn truncation_is_a_structured_error_not_a_panic() {
+        // valid magic but nothing else: the old decode length check
+        // reported this as BadMagic; it is a truncation
+        let short = &sample().encode()[..20];
+        assert!(matches!(
+            TrainState::decode(short),
+            Err(CheckpointError::Truncated { got: 20, .. })
+        ));
+        // header intact but the f32 payload cut off: caught by the
+        // checksum first (the crc is no longer where the length says)
+        let bytes = sample().encode();
+        assert!(TrainState::decode(&bytes[..bytes.len() - 4]).is_err());
+        // a corrupt param count must not panic or overflow, even with a
+        // crc recomputed to match the corrupted header
+        let mut bytes = sample().encode();
+        bytes[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let crc = super::fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            TrainState::decode(&bytes),
+            Err(CheckpointError::Truncated { .. })
+        ));
     }
 }

@@ -256,8 +256,10 @@ impl<'a> ScheduledLoader<'a> {
             for i in 0..iterations {
                 let (mut loader, mut next, r) = pending
                     .take()
+                    // skrull-lint: allow(panic-in-lib) -- pending is refilled every iteration below; an empty slot is a pipeline bug
                     .expect("prefetch handle present")
                     .join()
+                    // skrull-lint: allow(panic-in-lib) -- re-raises a panic from the prefetch thread on the caller's thread
                     .expect("prefetch thread panicked");
                 let sched_s = loader.last_sched_seconds;
                 let (batch, sched) = r?;
@@ -273,6 +275,7 @@ impl<'a> ScheduledLoader<'a> {
                 }
                 consume(i, &batch, &sched, sched_s);
             }
+            // skrull-lint: allow(panic-in-lib) -- the iterations == 0 early-return above guarantees the loop's last pass stored the loader
             Ok(done.expect("loop ran at least once"))
         })
     }

@@ -12,6 +12,7 @@
 //! * L1 (python/compile/kernels/): the Pallas packed flash-attention
 //!   kernel the train step calls.
 
+pub mod analysis;
 pub mod bench;
 pub mod calib;
 pub mod cli;

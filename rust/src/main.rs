@@ -386,6 +386,43 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    use skrull::analysis;
+
+    // `--validate=FILE` checks an existing report (parse + consistency +
+    // zero unsuppressed findings) without rescanning, same convention as
+    // `e2e --validate`.  Bare `--validate` is the CI gate: scan, write
+    // the report, and fail on any unsuppressed finding.
+    if let Some(path) = args.get("validate") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        analysis::validate_json(&text).with_context(|| format!("{path} failed validation"))?;
+        println!("{path}: ok");
+        return Ok(());
+    }
+
+    let root = args.str_or("root", "rust/src");
+    let outcome = analysis::lint_tree(std::path::Path::new(&root))
+        .with_context(|| format!("linting {root}"))?;
+    print!("{}", analysis::render_human(&outcome));
+
+    let out_path = args.str_or("out", "LINT_REPORT.json");
+    let json = analysis::render_json(&outcome);
+    analysis::parse_report(&json).context("self-check of rendered LINT_REPORT.json")?;
+    std::fs::write(&out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+
+    if args.flag("validate") {
+        let n = outcome.unsuppressed();
+        skrull::ensure!(
+            n == 0,
+            "{root}: {n} unsuppressed lint finding(s) — fix them or add a justified \
+             `// skrull-lint: allow(<rule>) -- <reason>`"
+        );
+        println!("{root}: lint clean ({} suppressed, all justified)", outcome.suppressed());
+    }
+    Ok(())
+}
+
 fn cmd_sched_bench(args: &Args) -> Result<()> {
     use skrull::bench::sched_overhead as sb;
 
@@ -612,7 +649,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: skrull <schedule|simulate|e2e|sched-bench|calibrate|train|analyze|profile> [--options]
+const USAGE: &str = "usage: skrull <schedule|simulate|e2e|lint|sched-bench|calibrate|train|analyze|profile> [--options]
   common:    --config FILE | --model M --dataset D --dp N --cp N --batch-size K
              --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
              --shards N (scheduler shards, 0 = auto) --incremental
@@ -623,6 +660,9 @@ const USAGE: &str = "usage: skrull <schedule|simulate|e2e|sched-bench|calibrate|
              --config FILE ([run] jobs key only) --out FILE --smoke | --validate=FILE
   sched-bench: overhead + K-scaling sweep -> BENCH_sched_overhead.json
              --smoke --shards N (0 = auto) --out FILE | --validate=FILE
+  lint:      static analysis of rust/src -> LINT_REPORT.json
+             --root DIR --out FILE --validate (gate: fail on unsuppressed findings)
+             --validate=FILE (check an existing report)
   calibrate: --emit FILE (run the calibration sweep, write a JSONL trace)
              --trace FILE [--out PROFILE.json] [--validate [--min-r2 R] [--tolerance T]]
   train:     --artifacts DIR --steps N --workers W --lr F --corpus-size K";
@@ -646,6 +686,7 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "simulate" => cmd_simulate(&args),
         "e2e" => cmd_e2e(&args),
+        "lint" => cmd_lint(&args),
         "sched-bench" => cmd_sched_bench(&args),
         "calibrate" => cmd_calibrate(&args),
         "train" => cmd_train(&args),

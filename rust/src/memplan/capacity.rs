@@ -186,6 +186,7 @@ impl MemPlan {
             return None;
         }
         let max_c = (1u32 << 24) as f64;
+        // skrull-lint: allow(truncating-cast) -- .min(max_c) clamps to 2^24 before the cast, so the u32 conversion is exact
         Some((budget / per_token).min(max_c).floor() as u32)
     }
 }

@@ -44,8 +44,10 @@ impl MemoryModel {
 
     /// BucketSize C: the largest token count whose activations fit.
     pub fn bucket_size(&self) -> u32 {
-        (((self.activation_budget_bytes - self.beta_bytes) / self.alpha_bytes_per_token)
-            .max(0.0)) as u32
+        let per_token = self.alpha_bytes_per_token;
+        let tokens = ((self.activation_budget_bytes - self.beta_bytes) / per_token).max(0.0);
+        // skrull-lint: allow(truncating-cast) -- f64-to-u32 `as` saturates; .max(0.0) clamps negatives and the ratio is bounded by physical HBM
+        tokens as u32
     }
 
     /// Static memory per rank under ZeRO-2 (params replicated; optimizer

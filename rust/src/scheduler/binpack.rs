@@ -20,6 +20,7 @@ struct TotalF64(f64);
 impl Eq for TotalF64 {}
 
 impl PartialOrd for TotalF64 {
+    // skrull-lint: allow(nan-unsafe-ord) -- delegates to Ord::cmp, which is total_cmp; this is the documented NaN-safe exception
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
@@ -62,7 +63,7 @@ pub fn balance_into<T: Copy>(
     placed: &mut Vec<Vec<usize>>,
 ) {
     assert!(bins > 0);
-    out.resize_with(bins, Vec::new);
+    out.resize_with(bins, Vec::new); // skrull-lint: allow(hot-path-alloc) -- bin arenas grow once to `bins` and are recycled (cleared, not freed) across calls
     placed.resize_with(bins, Vec::new);
     for b in out.iter_mut() {
         b.clear();
@@ -85,6 +86,7 @@ pub fn balance_into<T: Copy>(
         scratch.heap.push(Reverse((TotalF64(0.0), j)));
     }
     for &idx in &scratch.order {
+        // skrull-lint: allow(panic-in-lib) -- heap is seeded with `bins` entries and bins > 0 is asserted at entry
         let Reverse((TotalF64(load), j)) = scratch.heap.pop().expect("bins > 0");
         out[j].push(items[idx].0);
         placed[j].push(idx);
@@ -102,6 +104,7 @@ pub fn balance_reference<T: Copy>(items: &[(T, f64)], bins: usize) -> Vec<Vec<T>
     for idx in order {
         let j = (0..bins)
             .min_by(|&a, &b| load[a].total_cmp(&load[b]))
+            // skrull-lint: allow(panic-in-lib) -- min over 0..bins with bins > 0 asserted; never empty
             .unwrap();
         out[j].push(items[idx].0);
         load[j] += items[idx].1;

@@ -83,6 +83,7 @@ impl<'a> State<'a> {
 
     /// UPDATELOCAL (Alg. 3): place sequence `idx` whole on `rank`.
     fn update_local(&mut self, idx: usize, rank: usize) {
+        // skrull-lint: allow(truncating-cast) -- a CP rank index < cp_degree, a GPU count nowhere near i32::MAX
         self.assign[idx] = rank as i32;
         self.rb[rank] -= self.lens[idx] as i64;
         self.load[rank] += self.flops.seq(self.lens[idx]);
@@ -106,6 +107,7 @@ impl<'a> State<'a> {
             .assign
             .iter()
             .enumerate()
+            // skrull-lint: allow(truncating-cast) -- a CP rank index < cp_degree, a GPU count nowhere near i32::MAX
             .filter(|(_, &a)| a == rank as i32)
             .map(|(i, _)| i)
             .reduce(|best, i| {
@@ -134,14 +136,17 @@ impl<'a> State<'a> {
         // algorithm actually produces.
         (0..self.cfg.cp_degree)
             .min_by(|&a, &b| self.load[a].total_cmp(&self.load[b]))
+            // skrull-lint: allow(panic-in-lib) -- total_cmp reduction over cp_degree >= 1 ranks; never empty
             .unwrap()
     }
 
     fn argmax_rb(&self) -> usize {
+        // skrull-lint: allow(panic-in-lib) -- reduction over cp_degree >= 1 ranks; never empty
         (0..self.cfg.cp_degree).max_by_key(|&j| self.rb[j]).unwrap()
     }
 
     fn argmin_rb(&self) -> usize {
+        // skrull-lint: allow(panic-in-lib) -- reduction over cp_degree >= 1 ranks; never empty
         (0..self.cfg.cp_degree).min_by_key(|&j| self.rb[j]).unwrap()
     }
 }
@@ -458,6 +463,7 @@ impl<'a> Refiner<'a> {
             let mut improved: Option<(usize, i32, f64)> = None;
             for k in 0..self.lens.len() {
                 let from = self.plan.assign[k];
+                // skrull-lint: allow(truncating-cast) -- n is the CP rank count, a GPU count nowhere near i32::MAX
                 let candidates = (0..n as i32).map(Some).chain(std::iter::once(None));
                 for cand in candidates {
                     let to = cand.unwrap_or(DISTRIBUTED);

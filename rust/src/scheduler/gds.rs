@@ -382,6 +382,7 @@ pub(crate) fn schedule_rank_inner(
         .extend(rctx.keys.iter().map(|&key| subset[(key & u32::MAX as u64) as usize]));
     let k = rctx.sorted.len();
     rctx.lens.clear();
+    // skrull-lint: allow(truncating-cast) -- exact by construction: the high 32 bits of `key` are the packed u32 length
     rctx.lens.extend(rctx.keys.iter().map(|&key| (key >> 32) as u32));
 
     // incremental re-scheduling: an exact match on the sorted lengths (and
@@ -398,6 +399,7 @@ pub(crate) fn schedule_rank_inner(
             let (a, b) = (rctx.cache.offsets[j], rctx.cache.offsets[j + 1]);
             mbs.push(MicroBatch {
                 seqs: subset_seqs(&rctx.sorted, j, n_mb, chunk, cfg.interleave),
+                // skrull-lint: allow(hot-path-alloc) -- builds the returned RankSchedule; within the audited per-call allocation budget
                 plan: DacpPlan { assign: rctx.cache.assign[a..b].to_vec() },
             });
         }
@@ -447,6 +449,7 @@ pub(crate) fn schedule_rank_inner(
             // decision ("did any subset fail?") and the accepted plans are
             // identical to the serial j-order walk
             if rctx.lens_pool.len() < active {
+                // skrull-lint: allow(hot-path-alloc) -- lazy pool growth: reached only when the pool is too small, then recycled
                 rctx.lens_pool.resize_with(active, Vec::new);
             }
             if rctx.dacp_pool.len() < active {
@@ -520,6 +523,7 @@ pub(crate) fn schedule_rank_inner(
             cache.cp = cfg.cp;
             cache.interleave = cfg.interleave;
             cache.rollback_largest = cfg.rollback_largest;
+            // skrull-lint: allow(hot-path-alloc) -- fresh-solve bookkeeping, off the cached steady-state path
             cache.flops = Some(flops.clone());
             cache.lens.clear();
             cache.lens.extend_from_slice(&rctx.lens);
@@ -534,6 +538,7 @@ pub(crate) fn schedule_rank_inner(
             let (a, b) = (rctx.plan_offsets[j], rctx.plan_offsets[j + 1]);
             mbs.push(MicroBatch {
                 seqs: subset_seqs(&rctx.sorted, j, n_mb, chunk, cfg.interleave),
+                // skrull-lint: allow(hot-path-alloc) -- builds the returned RankSchedule; within the audited per-call allocation budget
                 plan: DacpPlan { assign: rctx.plan_assign[a..b].to_vec() },
             });
         }

@@ -66,6 +66,7 @@ impl DacpPlan {
 
     /// Indices of local sequences on CP rank `j`.
     pub fn locals_of(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        // skrull-lint: allow(truncating-cast) -- a CP rank index, a GPU count nowhere near i32::MAX
         let j = j as i32;
         self.assign
             .iter()
@@ -98,7 +99,9 @@ impl DacpPlan {
             if local + dist_tokens > bucket_size as u64 {
                 return Err(SchedError::Infeasible {
                     seq_idx: j,
+                    // skrull-lint: allow(truncating-cast) -- diagnostic error-report field; token counts are bounded by the capacity clamp
                     len: (local + dist_tokens) as u32,
+                    // skrull-lint: allow(truncating-cast) -- diagnostic error-report field; token counts are bounded by the capacity clamp
                     shard: dist_tokens as u32,
                     remain: bucket_size as i64 - local as i64,
                 });

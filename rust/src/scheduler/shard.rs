@@ -80,6 +80,7 @@ impl std::fmt::Debug for ShardPool {
 
 fn worker(jobs: Receiver<Job>, done: Sender<Done>) {
     // the worker's private arenas, one per rank slot it owns
+    // skrull-lint: allow(hot-path-alloc) -- per-worker arena allocated once at thread startup, before the job loop
     let mut ctxs: Vec<gds::RankCtx> = Vec::new();
     while let Some(job) = jobs.recv() {
         if ctxs.len() <= job.slot {
@@ -104,6 +105,7 @@ impl ShardPool {
             let handle = std::thread::Builder::new()
                 .name(format!("skrull-shard-{i}"))
                 .spawn(move || worker(jrx, dtx))
+                // skrull-lint: allow(panic-in-lib) -- thread-spawn failure (OS resource exhaustion) is unrecoverable here
                 .expect("failed to spawn scheduler shard");
             v.push(Shard { jobs: Some(jtx), done: drx, handle: Some(handle) });
         }
@@ -144,6 +146,7 @@ impl ShardPool {
                     flops: flops.clone(),
                     outer: shards_used,
                 };
+                // skrull-lint: allow(panic-in-lib) -- jobs is Some for the pool's whole life; None only inside Drop
                 let sent = self.shards[s].jobs.as_ref().expect("pool closed").send(job);
                 assert!(sent.is_ok(), "scheduler shard worker died");
             }
@@ -153,6 +156,7 @@ impl ShardPool {
             let lo = s * chunk;
             let hi = ((s + 1) * chunk).min(dp);
             for _ in lo..hi {
+                // skrull-lint: allow(panic-in-lib) -- recv fails only if the worker died; re-raises the worker's panic on the caller
                 let d = self.shards[s].done.recv().expect("scheduler shard worker died");
                 bins[d.rank] = d.bin;
                 results.push(d.result);
@@ -192,6 +196,7 @@ pub(crate) fn ensure_pool<'a>(
     if stale {
         *slot = Some(ShardPool::new(shards, need.max(16)));
     }
+    // skrull-lint: allow(panic-in-lib) -- the stale branch above just stored Some; None is impossible
     slot.as_mut().expect("just ensured")
 }
 

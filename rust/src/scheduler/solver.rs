@@ -108,6 +108,7 @@ impl<'a> Search<'a> {
                 self.rb[j] -= s;
                 self.local_flops[j] = saved + w;
                 self.local_count[j] += 1;
+                // skrull-lint: allow(truncating-cast) -- a CP rank index, a GPU count nowhere near i32::MAX
                 self.assign[k] = j as i32;
                 self.dfs(k + 1);
                 self.rb[j] += s;

@@ -1,0 +1,29 @@
+//! Lint fixture: `panic-in-lib`, with `#[cfg(test)]` items exempt and
+//! `unwrap_or`-style methods never confused with `unwrap`.
+
+pub fn risky(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn fallback(x: Option<u32>) -> u32 {
+    x.unwrap_or(7)
+}
+
+pub fn checked(x: Option<u32>) -> u32 {
+    // skrull-lint: allow(panic-in-lib) -- fixture: caller asserts Some at the boundary
+    x.expect("validated upstream")
+}
+
+pub fn boom() {
+    panic!("kaboom");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(super::risky(Some(3)), 3);
+        let v = vec![1u32];
+        v.first().unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+//! Lint fixture: `nondet-iteration` in a deterministic-output module.
+
+pub fn histogram(xs: &[u64]) -> Vec<(u64, u64)> {
+    let mut m = std::collections::HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0u64) += 1;
+    }
+    let mut v: Vec<(u64, u64)> = m.into_iter().collect();
+    v.sort_unstable();
+    v
+}
+
+pub fn seen(xs: &[u64]) -> bool {
+    // skrull-lint: allow(nondet-iteration) -- fixture: membership queries only, iteration order never observed
+    let s: std::collections::HashSet<u64> = xs.iter().copied().collect();
+    s.contains(&0)
+}

@@ -1,0 +1,25 @@
+//! Lint fixture: lexer stress test.  Every rule-triggering token below is
+//! hidden inside a literal or comment except one real `partial_cmp` at the
+//! bottom — the file must produce exactly that single finding.
+
+pub fn torture<'a>(s: &'a str) -> &'a str {
+    let _raw = r"not findings: .unwrap() as u32 HashMap";
+    let _raw_hash = r#"still " a string: partial_cmp Instant"#;
+    let _raw_two = r##"nested "# quote: SystemTime"##;
+    let _bytes = b"panic! vec! Box::new";
+    let _braw = br#"unreachable!"#;
+    let r#type = 1u32;
+    let _ = r#type;
+    let _ch = 'x';
+    let _quote = '\'';
+    let _newline = '\n';
+    /* block comment: .expect("x") as u16
+       /* nested: SystemTime::now() */
+       still commented out: HashSet::new() */
+    let _s = "string with // not a comment: .unwrap()";
+    s
+}
+
+pub fn the_real_one(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).is_some()
+}

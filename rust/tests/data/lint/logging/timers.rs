@@ -1,0 +1,5 @@
+//! Lint fixture: logging/ is a sanctioned wall-clock site — no findings.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,16 @@
+//! Lint fixture: the suppression audit itself — reason-less, unknown,
+//! unused and unparseable directives are all findings.
+
+// skrull-lint: allow(nan-unsafe-ord)
+pub fn reasonless(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).is_some()
+}
+
+// skrull-lint: allow(no-such-rule) -- the rule name is a typo
+pub fn unknown() {}
+
+// skrull-lint: allow(panic-in-lib) -- nothing here panics
+pub fn unused() {}
+
+// skrull-lint allow(nan-unsafe-ord) -- missing the colon
+pub fn unparseable() {}

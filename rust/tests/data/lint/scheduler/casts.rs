@@ -1,0 +1,18 @@
+//! Lint fixture: `truncating-cast` fires on narrowing casts only.
+
+pub fn narrow(x: u64) -> u32 {
+    x as u32
+}
+
+pub fn widen(x: u32) -> u64 {
+    x as u64
+}
+
+pub fn index(x: u64) -> usize {
+    x as usize
+}
+
+pub fn clamped(x: u64) -> u32 {
+    // skrull-lint: allow(truncating-cast) -- fixture: clamped to u32::MAX first, conversion is exact
+    x.min(u32::MAX as u64) as u32
+}

@@ -1,0 +1,5 @@
+//! Lint fixture: `wall-clock-in-pure-code` fires outside sanctioned sites.
+
+pub fn elapsed_s(t0: std::time::Instant) -> f64 {
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,14 @@
+//! Lint fixture: `hot-path-alloc` fires only inside the declared hot
+//! function (`schedule_rank_inner` for a file named scheduler/gds.rs).
+
+pub fn schedule_rank_inner(n: usize) -> Vec<usize> {
+    let mut out = vec![0; n];
+    // skrull-lint: allow(hot-path-alloc) -- fixture: arena grows once then is recycled
+    let pool: Vec<usize> = Vec::new();
+    out.extend(pool);
+    out
+}
+
+pub fn helper(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}

@@ -1,0 +1,14 @@
+//! Lint fixture: `nan-unsafe-ord` (plus the panic the unwrap idiom adds).
+
+pub fn sort_bad(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn sort_good(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn sort_documented(xs: &mut [f64]) {
+    // skrull-lint: allow(nan-unsafe-ord) -- fixture: Equal fallback keeps the sort NaN-tolerant
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(core::cmp::Ordering::Equal));
+}

@@ -1,0 +1,6 @@
+//! Lint fixture: util/ is outside the `panic-in-lib` scope (the SPSC
+//! channel's lock-poison-fatal convention; Miri covers it instead).
+
+pub fn must(x: Option<u32>) -> u32 {
+    x.unwrap()
+}

@@ -1,0 +1,108 @@
+//! `skrull lint` end-to-end: every rule fires and suppresses against the
+//! fixture corpus under `rust/tests/data/lint/`, the corpus reproduces
+//! the golden `lint_golden.json` report exactly, and — the CI gate in
+//! test form — the real source tree lints clean.
+
+use std::path::{Path, PathBuf};
+
+use skrull::analysis::{
+    lint_source, lint_tree, parse_report, render_json, validate_json, HOT_FUNCTIONS, LintOutcome,
+};
+
+fn manifest_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+#[test]
+fn fixture_corpus_matches_golden_report() {
+    let outcome = lint_tree(&manifest_path("rust/tests/data/lint")).expect("fixture tree lints");
+    let live = parse_report(&render_json(&outcome)).expect("own report round-trips");
+    let golden_text =
+        std::fs::read_to_string(manifest_path("rust/tests/data/lint_golden.json"))
+            .expect("golden report present");
+    let golden = parse_report(&golden_text).expect("golden report parses");
+    assert_eq!(live.files_scanned, golden.files_scanned);
+    assert_eq!(live.findings, golden.findings);
+}
+
+#[test]
+fn each_rule_fires_and_a_justified_suppression_silences_it() {
+    // (rule, file the source pretends to live at, offending line)
+    let cases: &[(&str, &str, &str)] = &[
+        ("nan-unsafe-ord", "scheduler/x.rs", "fn f(a: f64, b: f64) { a.partial_cmp(&b); }"),
+        ("truncating-cast", "scheduler/x.rs", "fn f(x: u64) -> u32 { x as u32 }"),
+        ("hot-path-alloc", "scheduler/gds.rs", "fn schedule_rank_inner() { let v = vec![1]; }"),
+        ("nondet-iteration", "data/x.rs", "fn f(m: HashMap<u32, u32>) {}"),
+        ("wall-clock-in-pure-code", "cluster/x.rs", "fn f(t: Instant) {}"),
+        ("panic-in-lib", "calib/x.rs", "fn f(x: Option<u32>) { x.unwrap(); }"),
+    ];
+    for (rule, rel, line) in cases {
+        let fired = lint_source(rel, line);
+        assert!(
+            fired.iter().any(|f| f.rule == *rule && !f.suppressed),
+            "{rule} should fire on {line:?}: {fired:?}"
+        );
+
+        let src = format!("// skrull-lint: allow({rule}) -- test justification\n{line}\n");
+        let silenced = lint_source(rel, &src);
+        assert!(
+            silenced.iter().filter(|f| f.rule == *rule).all(|f| f.suppressed),
+            "{rule} should be suppressed in {src:?}: {silenced:?}"
+        );
+        assert!(
+            silenced.iter().all(|f| f.rule != "unused-suppression"),
+            "the suppression was used: {silenced:?}"
+        );
+        assert!(
+            silenced
+                .iter()
+                .filter(|f| f.suppressed)
+                .all(|f| f.reason.as_deref() == Some("test justification")),
+            "suppressed findings carry the written reason: {silenced:?}"
+        );
+    }
+}
+
+#[test]
+fn the_source_tree_lints_clean() {
+    let outcome = lint_tree(&manifest_path("rust/src")).expect("source tree lints");
+    let offenders: Vec<_> = outcome.findings.iter().filter(|f| !f.suppressed).collect();
+    assert!(
+        offenders.is_empty(),
+        "unsuppressed lint findings in rust/src (fix or add a justified \
+         `// skrull-lint: allow(<rule>) -- <reason>`):\n{offenders:#?}"
+    );
+    for f in outcome.findings.iter().filter(|f| f.suppressed) {
+        assert!(
+            f.reason.as_deref().is_some_and(|r| !r.is_empty()),
+            "suppressed finding without a written justification: {f:?}"
+        );
+    }
+}
+
+#[test]
+fn declared_hot_functions_still_exist() {
+    for (file, func) in HOT_FUNCTIONS {
+        let src = std::fs::read_to_string(manifest_path("rust/src").join(file))
+            .expect("hot-path file exists");
+        assert!(
+            src.contains(&format!("fn {func}")),
+            "{file} no longer defines fn {func}; update analysis::rules::HOT_FUNCTIONS"
+        );
+    }
+}
+
+#[test]
+fn validate_json_gates_on_unsuppressed_findings() {
+    let clean = LintOutcome { findings: lint_source("util/x.rs", "fn f() {}"), files_scanned: 1 };
+    validate_json(&render_json(&clean)).expect("clean report validates");
+
+    let dirty = LintOutcome {
+        findings: lint_source("scheduler/x.rs", "fn f(x: Option<u32>) { x.unwrap(); }"),
+        files_scanned: 1,
+    };
+    let err = validate_json(&render_json(&dirty)).expect_err("dirty report rejected");
+    assert!(err.to_string().contains("unsuppressed"), "{err}");
+
+    validate_json("{not json").expect_err("garbage rejected");
+}
