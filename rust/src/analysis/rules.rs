@@ -45,6 +45,7 @@ const DETERMINISTIC_MODULES: &[&str] = &[
     "config/",
     "coordinator/",
     "data/",
+    "fleet/",
     "memplan/",
     "scheduler/",
 ];
@@ -62,6 +63,7 @@ const ERROR_CONVENTION_MODULES: &[&str] = &[
     "config/",
     "coordinator/",
     "data/",
+    "fleet/",
     "memplan/",
     "model/",
     "perfmodel/",
@@ -80,6 +82,10 @@ const ACCUMULATION_MODULES: &[&str] = &["config/", "memplan/", "perfmodel/", "sc
 const TIMING_SANCTIONED: &[&str] =
     &["bench/", "coordinator/trainer.rs", "data/loader.rs", "logging/", "runtime/pjrt.rs"];
 
+/// Modules carrying declared zero-alloc hot paths (`hot-path-alloc`
+/// scans only the [`HOT_FUNCTIONS`] bodies within them).
+const HOT_PATH_MODULES: &[&str] = &["fleet/", "scheduler/"];
+
 /// The declared hot-path set for `hot-path-alloc`: the static complement
 /// of `tests/alloc_audit.rs`.  `(file, fn)` pairs; the rule scans the
 /// named fn's body only.
@@ -88,6 +94,8 @@ pub const HOT_FUNCTIONS: &[(&str, &str)] = &[
     ("scheduler/dacp.rs", "schedule_into"),
     ("scheduler/binpack.rs", "balance_into"),
     ("scheduler/shard.rs", "worker"),
+    ("fleet/queue.rs", "pick_next"),
+    ("fleet/sim.rs", "next_event"),
 ];
 
 pub const RULES: &[Rule] = &[
@@ -104,7 +112,7 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: "hot-path-alloc",
         summary: "allocation-capable construct inside a declared zero-alloc hot path",
-        scope: Scope::Within(&["scheduler/"]),
+        scope: Scope::Within(HOT_PATH_MODULES),
     },
     Rule {
         id: "nondet-iteration",

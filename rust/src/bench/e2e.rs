@@ -23,6 +23,7 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+use crate::bench::harness::{finite_values, json_str, require_count, require_top_keys, values_after};
 use crate::cluster::run::{build_run, price_run, RunConfig, RunReport};
 use crate::cluster::Topology;
 use crate::config::{CostSource, ExperimentConfig, Policy};
@@ -449,11 +450,6 @@ fn estimator_error(run: &RunReport, reference: &RunReport) -> f64 {
     total / n as f64
 }
 
-fn json_str(s: &str) -> &str {
-    assert!(!s.contains(['"', '\\', '\n']), "unescapable: {s}");
-    s
-}
-
 /// Render the sweep as `BENCH_e2e.json` (hand-rolled JSON; no serde in the
 /// image).  Schema: see README "End-to-end benchmark".
 pub fn render_json(sweep: &E2eSweep) -> String {
@@ -570,20 +566,6 @@ const FINITE_CELL_KEYS: [&str; 10] = [
 /// the acceptance bar for the calibration round trip.
 pub const CALIBRATED_ESTIMATOR_ERROR_MAX: f64 = 0.05;
 
-/// Every value token following `"key":` occurrences, in file order.
-fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
-    let needle = format!("\"{key}\":");
-    let mut out = Vec::new();
-    let mut rest = text;
-    while let Some(pos) = rest.find(&needle) {
-        rest = &rest[pos + needle.len()..];
-        let tail = rest.trim_start();
-        let end = tail.find([',', '}', '\n']).unwrap_or(tail.len());
-        out.push(tail[..end].trim());
-    }
-    out
-}
-
 /// CI gate: does `text` look like a complete, sane `BENCH_e2e.json`?
 /// Checks required top-level and per-cell keys (schema v4: `sweep_seconds`
 /// and per-cell `sched_invocations`), rejects non-finite (or unparsable)
@@ -593,9 +575,7 @@ fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
 /// non-epoch cell's `sched_invocations` must equal the sweep's iteration
 /// count exactly (one GDS/DACP pass per played iteration, no 2x work).
 pub fn validate_json(text: &str) -> Result<()> {
-    for key in REQUIRED_TOP_KEYS {
-        crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
-    }
+    require_top_keys(text, &REQUIRED_TOP_KEYS)?;
     // schema v4 or later
     let version: u64 = values_after(text, "schema_version")
         .first()
@@ -613,28 +593,15 @@ pub fn validate_json(text: &str) -> Result<()> {
     let n_cells = values_after(text, "policy").len();
     crate::ensure!(n_cells > 0, "no cells in BENCH_e2e.json");
     for key in REQUIRED_CELL_KEYS {
-        let n = values_after(text, key).len();
-        crate::ensure!(
-            n == n_cells,
-            "cell key \"{key}\" appears {n} times, expected {n_cells}"
-        );
+        require_count(text, key, n_cells, "cell")?;
     }
     for key in FINITE_CELL_KEYS {
-        for (i, v) in values_after(text, key).iter().enumerate() {
-            let x: f64 = v
-                .parse()
-                .map_err(|_| crate::anyhow!("cell {i}: \"{key}\" value {v:?} is not a number"))?;
-            crate::ensure!(x.is_finite(), "cell {i}: \"{key}\" = {v} is not finite");
-        }
+        finite_values(text, key)?;
     }
     // memory-model consistency: oom_count is a per-cell integer, and an
     // OOM-free cell's peak fraction must land in (0, 1]
+    require_count(text, "oom_count", n_cells, "cell")?;
     let ooms = values_after(text, "oom_count");
-    crate::ensure!(
-        ooms.len() == n_cells,
-        "cell key \"oom_count\" appears {} times, expected {n_cells}",
-        ooms.len()
-    );
     let peaks = values_after(text, "peak_mem_fraction");
     for (i, (o, p)) in ooms.iter().zip(&peaks).enumerate() {
         let oom: u64 = o
@@ -961,14 +928,6 @@ mod tests {
             1,
         );
         assert!(validate_json(&negative).is_err());
-    }
-
-    #[test]
-    fn values_after_extracts_tokens() {
-        let text = r#"{"a": 1, "b": "x", "a": 2.5}"#;
-        assert_eq!(values_after(text, "a"), vec!["1", "2.5"]);
-        assert_eq!(values_after(text, "b"), vec!["\"x\""]);
-        assert!(values_after(text, "c").is_empty());
     }
 
     #[test]

@@ -1,0 +1,563 @@
+//! Fleet-scheduling sweep (`skrull fleet`): the discrete-event fleet
+//! simulator (`fleet::sim`) played over every arrival pattern × queue
+//! policy × pool topology, emitting the machine-readable
+//! `BENCH_fleet.json` (schema v1) and validating it for CI
+//! (`skrull fleet --validate`).
+//!
+//! Each arrival pattern synthesizes ONE workload per sweep, so every
+//! (policy, pool set) cell of that pattern replays identical arrivals —
+//! the cells differ only in what the fleet does with them.  Cells fan
+//! out over `--jobs` worker threads with the e2e sweep's round-robin/
+//! scatter-back discipline, and the simulator runs in pure simulated
+//! time, so the JSON is byte-identical for any job count with no timing
+//! pin needed (the sweep's own wall-clock goes to stdout, never into the
+//! file).
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::bench::harness::{finite_values, json_str, require_count, require_top_keys, values_after};
+use crate::bench::TableBuilder;
+use crate::fleet::job::{synthesize, ArrivalPattern, Workload};
+use crate::fleet::placement::ClusterSpec;
+use crate::fleet::queue::FleetPolicy;
+use crate::fleet::sim::{simulate, FleetReport, SimOptions};
+use crate::util::error::{Context, Result};
+use crate::util::par;
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct FleetBenchOptions {
+    /// Jobs synthesized per arrival pattern; every (policy, pool) cell of
+    /// a pattern replays the same workload.
+    pub jobs_per_cell: usize,
+    pub seed: u64,
+    pub arrivals: Vec<ArrivalPattern>,
+    pub policies: Vec<FleetPolicy>,
+    /// Pool-set names (`ClusterSpec::by_name`).
+    pub pool_sets: Vec<String>,
+    /// Worker threads for the cell fan-out (`--jobs`); wall-clock lever
+    /// only, never results.
+    pub jobs: usize,
+}
+
+impl FleetBenchOptions {
+    /// The full grid: 3 arrivals × 4 policies × 2 pool sets, 12 jobs per
+    /// cell → 288 simulated jobs per sweep.
+    pub fn paper_default() -> Self {
+        FleetBenchOptions {
+            jobs_per_cell: 12,
+            seed: 42,
+            arrivals: ArrivalPattern::ALL.to_vec(),
+            policies: FleetPolicy::ALL.to_vec(),
+            pool_sets: ClusterSpec::ALL_NAMES.iter().map(|s| s.to_string()).collect(),
+            jobs: par::max_threads().max(1),
+        }
+    }
+
+    /// Same grid, fewer jobs per cell, for CI smoke runs.
+    pub fn smoke() -> Self {
+        let mut o = Self::paper_default();
+        o.jobs_per_cell = 6;
+        o
+    }
+}
+
+/// One sweep cell: one simulated fleet.
+#[derive(Clone, Debug)]
+pub struct FleetCell {
+    pub arrival: ArrivalPattern,
+    pub pool_set: &'static str,
+    pub pool_gpus: usize,
+    pub report: FleetReport,
+}
+
+/// The whole sweep.
+#[derive(Clone, Debug)]
+pub struct FleetSweep {
+    pub seed: u64,
+    pub jobs_per_cell: usize,
+    /// Sum of submitted jobs over all cells.
+    pub total_jobs: usize,
+    /// Measured sweep wall-clock — printed, never rendered into the JSON
+    /// (the file must not depend on the host machine).
+    pub sweep_seconds: f64,
+    pub cells: Vec<FleetCell>,
+}
+
+/// One fanned-out unit: (arrival, policy, pool set) indices.
+#[derive(Clone, Copy)]
+struct CellJob {
+    ai: usize,
+    pi: usize,
+    ci: usize,
+}
+
+/// Run the sweep: every (arrival × policy × pool set) cell in grid order,
+/// fanned out round-robin over `opts.jobs` workers and scattered back, so
+/// the result is independent of the job count.
+pub fn run_sweep(opts: &FleetBenchOptions) -> Result<FleetSweep> {
+    let t_sweep = Instant::now();
+    crate::ensure!(opts.jobs_per_cell > 0, "fleet sweep needs at least 1 job per cell");
+    crate::ensure!(!opts.arrivals.is_empty(), "fleet sweep needs at least one arrival pattern");
+    crate::ensure!(!opts.policies.is_empty(), "fleet sweep needs at least one policy");
+    crate::ensure!(!opts.pool_sets.is_empty(), "fleet sweep needs at least one pool set");
+    let clusters: Vec<ClusterSpec> = opts
+        .pool_sets
+        .iter()
+        .map(|name| {
+            ClusterSpec::by_name(name).with_context(|| format!("unknown pool set {name:?}"))
+        })
+        .collect::<Result<_>>()?;
+    let jobs = opts.jobs.max(1);
+
+    // one workload per arrival pattern, shared by that pattern's cells
+    let workloads: Vec<Workload> = opts
+        .arrivals
+        .iter()
+        .map(|&p| synthesize(p, opts.jobs_per_cell, opts.seed))
+        .collect();
+
+    let (na, np) = (opts.arrivals.len(), opts.policies.len());
+    let cell_jobs: Vec<CellJob> = (0..na)
+        .flat_map(|ai| {
+            (0..np).flat_map(move |pi| (0..clusters.len()).map(move |ci| CellJob { ai, pi, ci }))
+        })
+        .collect();
+    // round-robin permutation + scatter-back, as in the e2e sweep: strided
+    // chunks spread slow cells across workers, grid-order reduction keeps
+    // the output independent of both
+    let n_cells = cell_jobs.len();
+    let stride = jobs.min(n_cells).max(1);
+    let order: Vec<usize> = (0..stride).flat_map(|c| (c..n_cells).step_by(stride)).collect();
+    let permuted: Vec<CellJob> = order.iter().map(|&gi| cell_jobs[gi]).collect();
+    let permuted_results = par::map_up_to(jobs, &permuted, |_, job| {
+        let &CellJob { ai, pi, ci } = job;
+        let sim_opts = SimOptions {
+            policy: opts.policies[pi],
+            cluster: clusters[ci].clone(),
+            // same rule as e2e: with cells on worker threads, keep each
+            // cell's scheduler single-threaded
+            serial_scheduler: jobs > 1,
+        };
+        Some(simulate(&workloads[ai], &sim_opts))
+    });
+    let mut results: Vec<Option<Result<FleetReport>>> = (0..n_cells).map(|_| None).collect();
+    for (&gi, r) in order.iter().zip(permuted_results) {
+        results[gi] = r;
+    }
+
+    let mut cells = Vec::with_capacity(n_cells);
+    let mut total_jobs = 0usize;
+    let mut idx = 0usize;
+    for (ai, &arrival) in opts.arrivals.iter().enumerate() {
+        for _pi in 0..np {
+            for cluster in &clusters {
+                // skrull-lint: allow(panic-in-lib) -- reduce loop visits each grid slot exactly once; a double-take is a bench-harness bug, not an input error
+                let report = results[idx].take().expect("each cell reduced once").with_context(
+                    || {
+                        format!(
+                            "fleet cell {} × {} failed",
+                            arrival.name(),
+                            cluster.name
+                        )
+                    },
+                )?;
+                idx += 1;
+                crate::ensure!(
+                    report.submitted == workloads[ai].jobs.len(),
+                    "cell lost jobs: {} submitted of {}",
+                    report.submitted,
+                    workloads[ai].jobs.len()
+                );
+                total_jobs += report.submitted;
+                cells.push(FleetCell {
+                    arrival,
+                    pool_set: cluster.name,
+                    pool_gpus: cluster.total_gpus(),
+                    report,
+                });
+            }
+        }
+    }
+    Ok(FleetSweep {
+        seed: opts.seed,
+        jobs_per_cell: opts.jobs_per_cell,
+        total_jobs,
+        sweep_seconds: t_sweep.elapsed().as_secs_f64(),
+        cells,
+    })
+}
+
+/// Render the sweep as `BENCH_fleet.json` (schema v1, hand-rolled JSON; no
+/// serde in the image).  Deliberately excludes `sweep_seconds`: nothing in
+/// the file depends on the host, so byte-identity across `--jobs` holds
+/// unconditionally.
+pub fn render_json(sweep: &FleetSweep) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"fleet\",");
+    let _ = writeln!(out, "  \"schema_version\": 1,");
+    let _ = writeln!(out, "  \"seed\": {},", sweep.seed);
+    let _ = writeln!(out, "  \"jobs_per_cell\": {},", sweep.jobs_per_cell);
+    let _ = writeln!(out, "  \"total_jobs\": {},", sweep.total_jobs);
+    out.push_str("  \"cells\": [\n");
+    for (i, c) in sweep.cells.iter().enumerate() {
+        let r = &c.report;
+        let w = &r.queue_wait;
+        let _ = writeln!(
+            out,
+            "    {{\"arrival\": \"{}\", \"fleet_policy\": \"{}\", \"pool_set\": \"{}\", \
+             \"pool_gpus\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \
+             \"finished\": {}, \"preemptions\": {}, \"builds\": {}, \"pricings\": {}, \
+             \"max_builds_per_job\": {}, \"priority_inversions\": {}, \
+             \"makespan\": {:e}, \"utilization\": {:.4}, \"fairness_ratio\": {:.4}, \
+             \"queue_wait_mean\": {:e}, \"queue_wait_p50\": {:e}, \
+             \"queue_wait_p95\": {:e}, \"queue_wait_max\": {:e}}}{}",
+            json_str(c.arrival.name()),
+            json_str(r.policy.name()),
+            json_str(c.pool_set),
+            c.pool_gpus,
+            r.submitted,
+            r.admitted,
+            r.rejected,
+            r.finished,
+            r.preemptions,
+            r.builds,
+            r.pricings,
+            r.max_builds_per_job,
+            r.priority_inversions,
+            r.makespan,
+            r.utilization,
+            r.fairness_ratio,
+            w.mean(),
+            w.quantile(0.5),
+            w.quantile(0.95),
+            w.max(),
+            if i + 1 == sweep.cells.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+const REQUIRED_TOP_KEYS: [&str; 6] = [
+    "\"bench\"",
+    "\"schema_version\"",
+    "\"seed\"",
+    "\"jobs_per_cell\"",
+    "\"total_jobs\"",
+    "\"cells\"",
+];
+
+const REQUIRED_CELL_KEYS: [&str; 20] = [
+    "arrival",
+    "fleet_policy",
+    "pool_set",
+    "pool_gpus",
+    "submitted",
+    "admitted",
+    "rejected",
+    "finished",
+    "preemptions",
+    "builds",
+    "pricings",
+    "max_builds_per_job",
+    "priority_inversions",
+    "makespan",
+    "utilization",
+    "fairness_ratio",
+    "queue_wait_mean",
+    "queue_wait_p50",
+    "queue_wait_p95",
+    "queue_wait_max",
+];
+
+const FINITE_CELL_KEYS: [&str; 7] = [
+    "makespan",
+    "utilization",
+    "fairness_ratio",
+    "queue_wait_mean",
+    "queue_wait_p50",
+    "queue_wait_p95",
+    "queue_wait_max",
+];
+
+fn cell_ints(text: &str, key: &str) -> Result<Vec<u64>> {
+    values_after(text, key)
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.parse()
+                .map_err(|_| crate::anyhow!("cell {i}: \"{key}\" value {v:?} is not an integer"))
+        })
+        .collect()
+}
+
+/// CI gate: does `text` look like a complete, sane `BENCH_fleet.json`?
+/// Schema v1 checks: required top-level and per-cell keys, finite metric
+/// values, and the fleet invariants — per-cell conservation
+/// (`submitted == finished + rejected`, `admitted == finished`), the
+/// build-once guarantee (`builds == finished`, `max_builds_per_job == 1`,
+/// `pricings ≥ builds`), zero priority inversions, `utilization` in
+/// (0, 1], `fairness_ratio ≥ 1`, ordered queue-wait quantiles, the
+/// total-jobs sum, and full grid coverage (every arrival pattern, queue
+/// policy and pool set present).
+pub fn validate_json(text: &str) -> Result<()> {
+    require_top_keys(text, &REQUIRED_TOP_KEYS)?;
+    let version: u64 = values_after(text, "schema_version")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable schema_version"))?;
+    crate::ensure!(version >= 1, "schema_version {version} predates v1");
+    let n_cells = values_after(text, "arrival").len();
+    crate::ensure!(n_cells > 0, "no cells in BENCH_fleet.json");
+    for key in REQUIRED_CELL_KEYS {
+        require_count(text, key, n_cells, "cell")?;
+    }
+    for key in FINITE_CELL_KEYS {
+        finite_values(text, key)?;
+    }
+    let submitted = cell_ints(text, "submitted")?;
+    let admitted = cell_ints(text, "admitted")?;
+    let rejected = cell_ints(text, "rejected")?;
+    let finished = cell_ints(text, "finished")?;
+    let builds = cell_ints(text, "builds")?;
+    let pricings = cell_ints(text, "pricings")?;
+    let max_builds = cell_ints(text, "max_builds_per_job")?;
+    let inversions = cell_ints(text, "priority_inversions")?;
+    for i in 0..n_cells {
+        crate::ensure!(
+            submitted[i] == finished[i] + rejected[i] && admitted[i] == finished[i],
+            "cell {i}: conservation violated ({} submitted, {} admitted, {} rejected, {} finished)",
+            submitted[i],
+            admitted[i],
+            rejected[i],
+            finished[i]
+        );
+        crate::ensure!(
+            builds[i] == finished[i] && max_builds[i] == 1 && pricings[i] >= builds[i],
+            "cell {i}: build-once violated ({} builds, max {} per job, {} pricings, {} finished)",
+            builds[i],
+            max_builds[i],
+            pricings[i],
+            finished[i]
+        );
+        crate::ensure!(
+            inversions[i] == 0,
+            "cell {i}: {} priority inversions — the priority discipline is broken",
+            inversions[i]
+        );
+    }
+    let makespans = finite_values(text, "makespan")?;
+    let utils = finite_values(text, "utilization")?;
+    let fairness = finite_values(text, "fairness_ratio")?;
+    let p50 = finite_values(text, "queue_wait_p50")?;
+    let p95 = finite_values(text, "queue_wait_p95")?;
+    let wmax = finite_values(text, "queue_wait_max")?;
+    for i in 0..n_cells {
+        crate::ensure!(makespans[i] > 0.0, "cell {i}: makespan {} not positive", makespans[i]);
+        crate::ensure!(
+            utils[i] > 0.0 && utils[i] <= 1.0,
+            "cell {i}: utilization {} outside (0, 1]",
+            utils[i]
+        );
+        crate::ensure!(fairness[i] >= 1.0, "cell {i}: fairness_ratio {} < 1", fairness[i]);
+        crate::ensure!(
+            p50[i] <= p95[i] && p95[i] <= wmax[i] && p50[i] >= 0.0,
+            "cell {i}: queue-wait quantiles out of order ({} / {} / {})",
+            p50[i],
+            p95[i],
+            wmax[i]
+        );
+    }
+    let total: u64 = values_after(text, "total_jobs")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable total_jobs"))?;
+    let sum: u64 = submitted.iter().sum();
+    crate::ensure!(total == sum, "total_jobs {total} != sum of submitted {sum}");
+    for p in ArrivalPattern::ALL {
+        crate::ensure!(
+            text.contains(&format!("\"arrival\": \"{}\"", p.name())),
+            "arrival pattern {} missing from sweep",
+            p.name()
+        );
+    }
+    for p in FleetPolicy::ALL {
+        crate::ensure!(
+            text.contains(&format!("\"fleet_policy\": \"{}\"", p.name())),
+            "fleet policy {} missing from sweep",
+            p.name()
+        );
+    }
+    for name in ClusterSpec::ALL_NAMES {
+        crate::ensure!(
+            text.contains(&format!("\"pool_set\": \"{name}\"")),
+            "pool set {name} missing from sweep"
+        );
+    }
+    Ok(())
+}
+
+/// Paper-shaped summary table: one row per cell.
+pub fn print_summary(sweep: &FleetSweep) {
+    let mut t = TableBuilder::new("Fleet scheduling sweep").header(&[
+        "Arrival",
+        "Policy",
+        "Pools",
+        "Jobs",
+        "Rej",
+        "Preempt",
+        "Makespan",
+        "Util",
+        "Fairness",
+        "Wait p50",
+        "Wait p95",
+    ]);
+    for c in &sweep.cells {
+        let r = &c.report;
+        t.row(&[
+            c.arrival.name().to_string(),
+            r.policy.name().to_string(),
+            c.pool_set.to_string(),
+            r.submitted.to_string(),
+            r.rejected.to_string(),
+            r.preemptions.to_string(),
+            crate::util::fmt_secs(r.makespan),
+            format!("{:.1}%", r.utilization * 100.0),
+            format!("{:.2}", r.fairness_ratio),
+            crate::util::fmt_secs(r.queue_wait.quantile(0.5)),
+            crate::util::fmt_secs(r.queue_wait.quantile(0.95)),
+        ]);
+    }
+    t.print();
+    println!(
+        "{} jobs over {} cells (seed {}), swept in {:.2}s",
+        sweep.total_jobs,
+        sweep.cells.len(),
+        sweep.seed,
+        sweep.sweep_seconds
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> FleetBenchOptions {
+        let mut o = FleetBenchOptions::smoke();
+        o.jobs_per_cell = 4;
+        o.jobs = 1;
+        o
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_counts_jobs() {
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        assert_eq!(sweep.cells.len(), 3 * 4 * 2);
+        assert_eq!(sweep.total_jobs, 3 * 4 * 2 * 4);
+        assert!(sweep.sweep_seconds > 0.0);
+        for c in &sweep.cells {
+            assert_eq!(c.report.submitted, 4);
+            assert_eq!(c.report.max_builds_per_job, 1);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_emits_byte_identical_json() {
+        let mut o = tiny_opts();
+        let serial = render_json(&run_sweep(&o).unwrap());
+        for jobs in [2, 4, 16] {
+            o.jobs = jobs;
+            let parallel = render_json(&run_sweep(&o).unwrap());
+            assert_eq!(serial, parallel, "jobs={jobs} diverged from serial");
+        }
+        validate_json(&serial).unwrap();
+    }
+
+    #[test]
+    fn rendered_json_validates_and_mutations_fail() {
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        let json = render_json(&sweep);
+        validate_json(&json).unwrap();
+        // the sweep's wall-clock never reaches the file
+        assert!(!json.contains("sweep_seconds"));
+
+        let broken = json.replace("\"schema_version\"", "\"schema_ver\"");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replacen("\"fairness_ratio\"", "\"fairness\"", 1);
+        assert!(validate_json(&broken).is_err());
+        assert!(validate_json(&json[..json.len() / 2]).is_err());
+        // conservation: drop a finished job
+        let sample = format!("\"finished\": {}", sweep.cells[0].report.finished);
+        let broken = json.replacen(&sample, "\"finished\": 0", 1);
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // build-once: a job built twice
+        let broken = json.replacen("\"max_builds_per_job\": 1", "\"max_builds_per_job\": 2", 1);
+        assert_ne!(broken, json, "mutation must apply");
+        let err = validate_json(&broken).unwrap_err().to_string();
+        assert!(err.contains("build-once"), "{err}");
+        // a priority inversion
+        let broken = json.replacen("\"priority_inversions\": 0", "\"priority_inversions\": 3", 1);
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // a non-finite metric
+        let sample = values_after(&json, "makespan")[0].to_string();
+        let broken = json.replacen(
+            &format!("\"makespan\": {sample}"),
+            "\"makespan\": NaN",
+            1,
+        );
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // utilization above 1
+        let sample = values_after(&json, "utilization")[0].to_string();
+        let broken = json.replacen(
+            &format!("\"utilization\": {sample}"),
+            "\"utilization\": 1.5000",
+            1,
+        );
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // total_jobs disagreeing with the cells
+        let broken = json.replacen(
+            &format!("\"total_jobs\": {}", sweep.total_jobs),
+            "\"total_jobs\": 1",
+            1,
+        );
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        // a missing policy
+        let broken = json.replace("\"fleet_policy\": \"fifo\"", "\"fleet_policy\": \"lifo\"");
+        assert!(validate_json(&broken).is_err());
+    }
+
+    #[test]
+    fn summary_table_renders_every_cell() {
+        let sweep = run_sweep(&tiny_opts()).unwrap();
+        // print_summary goes to stdout; exercise the row construction path
+        // via the same table builder
+        let mut t = TableBuilder::new("t").header(&["Arrival"]);
+        for c in &sweep.cells {
+            t.row_strs(&[c.arrival.name()]);
+        }
+        let rendered = t.render();
+        assert_eq!(rendered.matches("steady").count(), 8);
+        print_summary(&sweep);
+    }
+
+    #[test]
+    fn bad_options_are_rejected() {
+        let mut o = tiny_opts();
+        o.pool_sets = vec!["mystery".into()];
+        assert!(run_sweep(&o).is_err());
+        let mut o = tiny_opts();
+        o.jobs_per_cell = 0;
+        assert!(run_sweep(&o).is_err());
+        let mut o = tiny_opts();
+        o.arrivals = vec![];
+        assert!(run_sweep(&o).is_err());
+    }
+}

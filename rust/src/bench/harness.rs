@@ -1,7 +1,12 @@
-//! Timing harness: warmup + N samples, summary statistics.
+//! Bench harness shared by every `BENCH_*.json` producer: wall-clock
+//! measurement (warmup + N samples, summary statistics) and the
+//! hand-rolled JSON validator plumbing (`values_after` token scanning,
+//! finiteness checks, key-count assertions) that `bench::e2e`,
+//! `bench::sched_overhead` and `bench::fleet` all gate CI with.
 
 use std::time::Instant;
 
+use crate::util::error::Result;
 use crate::util::stats::Summary;
 
 #[derive(Clone, Debug)]
@@ -42,6 +47,63 @@ pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) 
     Measurement { name: name.to_string(), samples: summary }
 }
 
+/// Keep the hand-rolled JSON writers honest: every string we emit is
+/// identifier-ish, so anything that would need escaping is a bug in the
+/// caller, not a rendering case to support.
+pub fn json_str(s: &str) -> &str {
+    assert!(!s.contains(['"', '\\', '\n']), "unescapable: {s}");
+    s
+}
+
+/// Every value token following `"key":` occurrences, in file order — the
+/// substrate of all `BENCH_*.json` validators (no serde in the image, so
+/// validation is text scanning over the renderer's known output shape).
+pub fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
+    let needle = format!("\"{key}\":");
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find(&needle) {
+        rest = &rest[pos + needle.len()..];
+        let tail = rest.trim_start();
+        let end = tail.find([',', '}', '\n']).unwrap_or(tail.len());
+        out.push(tail[..end].trim());
+    }
+    out
+}
+
+/// All of `key`'s values parsed as finite `f64`s, or a structured error
+/// naming the first offender.
+pub fn finite_values(text: &str, key: &str) -> Result<Vec<f64>> {
+    values_after(text, key)
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let x: f64 = v.parse().map_err(|_| {
+                crate::anyhow!("entry {i}: \"{key}\" value {v:?} is not a number")
+            })?;
+            crate::ensure!(x.is_finite(), "entry {i}: \"{key}\" = {v} is not finite");
+            Ok(x)
+        })
+        .collect()
+}
+
+/// Require every listed top-level key (pre-quoted, e.g. `"\"bench\""`) to
+/// appear as `key:` at least once.
+pub fn require_top_keys(text: &str, keys: &[&str]) -> Result<()> {
+    for key in keys {
+        crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
+    }
+    Ok(())
+}
+
+/// Require `key` to appear exactly `expected` times (`what` names the row
+/// kind in the error, e.g. "cell").
+pub fn require_count(text: &str, key: &str, expected: usize, what: &str) -> Result<()> {
+    let n = values_after(text, key).len();
+    crate::ensure!(n == expected, "{what} key \"{key}\" appears {n} times, expected {expected}");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,5 +123,37 @@ mod tests {
         let slow = measure("slow", 0, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
         let fast = measure("fast", 0, 3, || {});
         assert!(slow.mean_s() > fast.mean_s());
+    }
+
+    #[test]
+    fn values_after_extracts_tokens() {
+        let text = r#"{"a": 1, "b": "x", "a": 2.5}"#;
+        assert_eq!(values_after(text, "a"), vec!["1", "2.5"]);
+        assert_eq!(values_after(text, "b"), vec!["\"x\""]);
+        assert!(values_after(text, "c").is_empty());
+    }
+
+    #[test]
+    fn finite_values_parses_and_rejects() {
+        let text = r#"{"t": 1.5, "t": 2e-3, "bad": NaN, "word": "x"}"#;
+        assert_eq!(finite_values(text, "t").unwrap(), vec![1.5, 2e-3]);
+        assert!(finite_values(text, "bad").is_err());
+        assert!(finite_values(text, "word").is_err());
+        assert!(finite_values(text, "absent").unwrap().is_empty());
+    }
+
+    #[test]
+    fn key_requirements_gate_presence_and_counts() {
+        let text = r#"{"bench": "x", "rows": [{"k": 1}, {"k": 2}]}"#;
+        require_top_keys(text, &["\"bench\"", "\"rows\""]).unwrap();
+        assert!(require_top_keys(text, &["\"missing\""]).is_err());
+        require_count(text, "k", 2, "row").unwrap();
+        let err = require_count(text, "k", 3, "row").unwrap_err().to_string();
+        assert!(err.contains("appears 2 times, expected 3"), "{err}");
+    }
+
+    #[test]
+    fn json_str_passes_identifier_ish_strings() {
+        assert_eq!(json_str("best-fit-price"), "best-fit-price");
     }
 }

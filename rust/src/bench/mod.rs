@@ -1,9 +1,11 @@
 //! Benchmark harness substrate (criterion is not in the vendored set):
 //! wall-clock measurement with warmup + repetitions, plain-text table
-//! rendering shared by all `benches/*.rs` targets, and the end-to-end
-//! policy × distribution × topology sweep behind `skrull e2e`.
+//! rendering shared by all `benches/*.rs` targets, the end-to-end
+//! policy × distribution × topology sweep behind `skrull e2e`, and the
+//! multi-tenant fleet-scheduling sweep behind `skrull fleet`.
 
 pub mod e2e;
+pub mod fleet;
 pub mod harness;
 pub mod sched_overhead;
 pub mod table;

@@ -20,6 +20,7 @@
 
 use std::fmt::Write as _;
 
+use crate::bench::harness::{finite_values, json_str, require_count, require_top_keys, values_after};
 use crate::bench::{measure, Measurement, TableBuilder};
 use crate::cluster::simulate_iteration;
 use crate::config::ExperimentConfig;
@@ -237,12 +238,6 @@ pub fn print_report(r: &SchedBenchReport) {
     table.print();
 }
 
-fn json_escape_free(s: &str) -> &str {
-    // all strings we emit are identifier-ish; keep the writer honest
-    assert!(!s.contains(['"', '\\', '\n']), "unescapable: {s}");
-    s
-}
-
 /// Render the machine-trackable `BENCH_sched_overhead.json` (schema v2:
 /// v1's overhead rows plus the `scaling_rows` curve).
 pub fn render_json(r: &SchedBenchReport) -> String {
@@ -254,8 +249,8 @@ pub fn render_json(r: &SchedBenchReport) -> String {
     let _ = writeln!(
         out,
         "  \"config\": {{\"model\": \"{}\", \"dataset\": \"{}\", \"dp\": {}, \"cp\": {}, \"bucket_size\": {}}},",
-        json_escape_free(&cfg.model.name),
-        json_escape_free(&cfg.dataset),
+        json_str(&cfg.model.name),
+        json_str(&cfg.dataset),
         cfg.cluster.dp,
         cfg.cluster.cp,
         cfg.bucket_size
@@ -332,34 +327,6 @@ const REQUIRED_SCALING_KEYS: [&str; 5] = [
     "scaling_incremental_mean_s",
 ];
 
-/// Every value token following `"key":` occurrences, in file order.
-fn values_after<'a>(text: &'a str, key: &str) -> Vec<&'a str> {
-    let needle = format!("\"{key}\":");
-    let mut out = Vec::new();
-    let mut rest = text;
-    while let Some(pos) = rest.find(&needle) {
-        rest = &rest[pos + needle.len()..];
-        let tail = rest.trim_start();
-        let end = tail.find([',', '}', '\n']).unwrap_or(tail.len());
-        out.push(tail[..end].trim());
-    }
-    out
-}
-
-fn finite_values(text: &str, key: &str) -> Result<Vec<f64>> {
-    values_after(text, key)
-        .iter()
-        .enumerate()
-        .map(|(i, v)| {
-            let x: f64 = v
-                .parse()
-                .map_err(|_| crate::anyhow!("row {i}: \"{key}\" value {v:?} is not a number"))?;
-            crate::ensure!(x.is_finite(), "row {i}: \"{key}\" = {v} is not finite");
-            Ok(x)
-        })
-        .collect()
-}
-
 /// CI gate: does `text` look like a complete, sane
 /// `BENCH_sched_overhead.json`?  Checks required top-level / per-row
 /// keys, finiteness everywhere, strictly increasing K in both sweeps, the
@@ -367,9 +334,7 @@ fn finite_values(text: &str, key: &str) -> Result<Vec<f64>> {
 /// overhead claim (`worst_paper_scale_ratio < 1%`, `near_zero_overhead_pass`
 /// true).
 pub fn validate_json(text: &str) -> Result<()> {
-    for key in REQUIRED_TOP_KEYS {
-        crate::ensure!(text.contains(&format!("{key}:")), "missing top-level key {key}");
-    }
+    require_top_keys(text, &REQUIRED_TOP_KEYS)?;
     let version: u64 = values_after(text, "schema_version")
         .first()
         .and_then(|v| v.parse().ok())
@@ -380,8 +345,7 @@ pub fn validate_json(text: &str) -> Result<()> {
     let n_rows = values_after(text, "k").len();
     crate::ensure!(n_rows > 0, "no overhead rows");
     for key in REQUIRED_ROW_KEYS {
-        let n = values_after(text, key).len();
-        crate::ensure!(n == n_rows, "row key \"{key}\" appears {n} times, expected {n_rows}");
+        require_count(text, key, n_rows, "row")?;
     }
     for key in ["sched_mean_s", "refine_mean_s", "reference_mean_s", "iter_time_s", "overhead_ratio"]
     {
@@ -396,8 +360,7 @@ pub fn validate_json(text: &str) -> Result<()> {
     let n_scaling = values_after(text, "scaling_k").len();
     crate::ensure!(n_scaling >= 2, "need at least 2 scaling rows, got {n_scaling}");
     for key in REQUIRED_SCALING_KEYS {
-        let n = values_after(text, key).len();
-        crate::ensure!(n == n_scaling, "scaling key \"{key}\" appears {n} times, expected {n_scaling}");
+        require_count(text, key, n_scaling, "scaling")?;
     }
     let sks = finite_values(text, "scaling_k")?;
     crate::ensure!(sks.windows(2).all(|w| w[0] < w[1]), "scaling K values not increasing");

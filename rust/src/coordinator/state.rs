@@ -63,7 +63,9 @@ pub struct TrainState {
     pub v: Vec<f32>,
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a over a byte payload — the checkpoint CRC shared with the fleet
+/// simulator's preemption resume codec (`fleet::sim::ResumePoint`).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

@@ -1,0 +1,211 @@
+//! The fleet's job model: tenants with weights and admission quotas,
+//! fine-tuning jobs (dataset distribution, sequence count, scheduling
+//! policy, priority, dp×cp shape), and deterministic workload synthesis
+//! under three arrival patterns (steady, bursty, heavy-tailed tenant
+//! sizes).  Everything is a pure function of the seed — the fleet
+//! simulator's inputs carry no wall-clock anywhere.
+
+use crate::config::Policy;
+use crate::rng::Rng;
+
+/// One tenant sharing the cluster.
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    pub id: usize,
+    /// Fair-share weight: the fairness metric divides each tenant's
+    /// delivered service by this.
+    pub weight: f64,
+    /// Admission quota: maximum jobs this tenant may have in the system
+    /// (queued + running) at once; arrivals beyond it are rejected.
+    pub quota: usize,
+}
+
+/// One submitted fine-tuning job.
+#[derive(Clone, Debug)]
+pub struct FleetJob {
+    pub id: u64,
+    pub tenant: usize,
+    /// Length-distribution name (`data::LengthDistribution::by_name`).
+    pub dataset: &'static str,
+    /// Data-parallel × context-parallel shape the job is built for; the
+    /// placement engine decides which pool's nodes host it.
+    pub dp: usize,
+    pub cp: usize,
+    pub batch_size: usize,
+    pub iterations: usize,
+    /// Synthesized dataset size (the tenant's corpus).
+    pub seq_count: usize,
+    /// Intra-job scheduling policy (the paper's axis).
+    pub policy: Policy,
+    /// Larger = more urgent; drives the priority queue discipline and
+    /// iteration-boundary preemption.
+    pub priority: u32,
+    /// Simulated submit time, seconds from sweep start.
+    pub submit_time: f64,
+    pub seed: u64,
+}
+
+impl FleetJob {
+    pub fn gpus(&self) -> usize {
+        self.dp * self.cp
+    }
+}
+
+/// How job arrivals are spread over simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Near-uniform inter-arrival gaps.
+    Steady,
+    /// Clustered bursts of 3–6 jobs separated by quiet spells.
+    Bursty,
+    /// Exponential-ish gaps with lognormal corpus sizes and one dominant
+    /// tenant (heavy-tailed tenant sizes).
+    HeavyTailed,
+}
+
+impl ArrivalPattern {
+    pub const ALL: [ArrivalPattern; 3] =
+        [ArrivalPattern::Steady, ArrivalPattern::Bursty, ArrivalPattern::HeavyTailed];
+
+    pub fn by_name(s: &str) -> Option<ArrivalPattern> {
+        match s {
+            "steady" => Some(ArrivalPattern::Steady),
+            "bursty" => Some(ArrivalPattern::Bursty),
+            "heavy-tailed" => Some(ArrivalPattern::HeavyTailed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Bursty => "bursty",
+            ArrivalPattern::HeavyTailed => "heavy-tailed",
+        }
+    }
+}
+
+/// One synthesized fleet workload: tenants plus their submitted jobs,
+/// sorted by (submit_time, id).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub pattern: ArrivalPattern,
+    pub tenants: Vec<Tenant>,
+    pub jobs: Vec<FleetJob>,
+}
+
+const DATASETS: [&str; 3] = ["wikipedia", "lmsys", "chatqa2"];
+/// Job shapes on the 32-GPU build canvas, small jobs most common.
+const SHAPES: [(usize, usize); 3] = [(1, 8), (2, 8), (4, 8)];
+const SHAPE_WEIGHTS: [f64; 3] = [0.5, 0.3, 0.2];
+const POLICIES: [Policy; 4] =
+    [Policy::Baseline, Policy::DacpOnly, Policy::Skrull, Policy::SkrullRefined];
+
+/// Synthesize a deterministic workload: `n_jobs` jobs from four tenants
+/// under `pattern`.  Same (pattern, n_jobs, seed) → byte-identical
+/// workload, so every placement policy and pool set of a sweep sees the
+/// same arrivals.
+pub fn synthesize(pattern: ArrivalPattern, n_jobs: usize, seed: u64) -> Workload {
+    let mut rng = Rng::seed_from_u64(seed ^ 0xF1EE7);
+    let tenants = vec![
+        Tenant { id: 0, weight: 4.0, quota: 4 },
+        Tenant { id: 1, weight: 2.0, quota: 3 },
+        Tenant { id: 2, weight: 1.0, quota: 3 },
+        Tenant { id: 3, weight: 1.0, quota: 2 },
+    ];
+    // the dominant tenant submits most heavy-tailed traffic; the other
+    // patterns spread jobs more evenly
+    let tenant_weights: [f64; 4] = match pattern {
+        ArrivalPattern::HeavyTailed => [8.0, 2.0, 1.0, 1.0],
+        _ => [3.0, 3.0, 2.0, 2.0],
+    };
+    let mut jobs = Vec::with_capacity(n_jobs);
+    let mut t = 0.0f64;
+    let mut burst_left = 0usize;
+    for id in 0..n_jobs {
+        match pattern {
+            ArrivalPattern::Steady => t += 4.0 * (0.5 + rng.f64()),
+            ArrivalPattern::Bursty => {
+                if burst_left == 0 {
+                    burst_left = 3 + rng.usize_below(4);
+                    t += 14.0 + 8.0 * rng.f64();
+                } else {
+                    // burst members arrive back to back, a hair apart so
+                    // event ordering stays unambiguous
+                    t += 1e-3;
+                }
+                burst_left -= 1;
+            }
+            ArrivalPattern::HeavyTailed => {
+                // inverse-CDF exponential gaps, mean 4s
+                t += -(1.0 - rng.f64()).ln() * 4.0;
+            }
+        }
+        let seq_count = match pattern {
+            ArrivalPattern::HeavyTailed => rng.lognormal(7.2, 0.6).clamp(500.0, 6000.0) as usize,
+            _ => 800 + rng.usize_below(1600),
+        };
+        let (dp, cp) = SHAPES[rng.weighted_index(&SHAPE_WEIGHTS)];
+        jobs.push(FleetJob {
+            id: id as u64,
+            tenant: rng.weighted_index(&tenant_weights),
+            dataset: DATASETS[rng.usize_below(DATASETS.len())],
+            dp,
+            cp,
+            batch_size: if rng.bool_with(0.3) { 16 } else { 8 },
+            iterations: 2 + rng.usize_below(3),
+            seq_count,
+            policy: POLICIES[rng.usize_below(POLICIES.len())],
+            priority: rng.range_u32(0, 4),
+            submit_time: t,
+            seed: rng.next_u64(),
+        });
+    }
+    Workload { pattern, tenants, jobs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesis_is_deterministic_and_sorted() {
+        for pattern in ArrivalPattern::ALL {
+            let a = synthesize(pattern, 40, 7);
+            let b = synthesize(pattern, 40, 7);
+            assert_eq!(a.jobs.len(), 40);
+            assert_eq!(a.tenants.len(), 4);
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.submit_time.to_bits(), y.submit_time.to_bits());
+                assert_eq!(x.seed, y.seed);
+            }
+            // arrivals are already in submit order
+            assert!(a.jobs.windows(2).all(|w| w[0].submit_time <= w[1].submit_time));
+            assert!(a.jobs.iter().all(|j| j.gpus() <= 32 && j.iterations >= 2));
+        }
+    }
+
+    #[test]
+    fn seeds_change_the_workload() {
+        let a = synthesize(ArrivalPattern::Steady, 20, 1);
+        let b = synthesize(ArrivalPattern::Steady, 20, 2);
+        assert!(a.jobs.iter().zip(&b.jobs).any(|(x, y)| x.seed != y.seed));
+    }
+
+    #[test]
+    fn heavy_tail_concentrates_on_the_big_tenant() {
+        let w = synthesize(ArrivalPattern::HeavyTailed, 200, 3);
+        let big = w.jobs.iter().filter(|j| j.tenant == 0).count();
+        assert!(big > 200 / 3, "dominant tenant got only {big}/200 jobs");
+        assert!(w.jobs.iter().any(|j| j.seq_count > 3000), "no heavy corpus in the tail");
+    }
+
+    #[test]
+    fn pattern_names_round_trip() {
+        for p in ArrivalPattern::ALL {
+            assert_eq!(ArrivalPattern::by_name(p.name()), Some(p));
+        }
+        assert_eq!(ArrivalPattern::by_name("poisson"), None);
+    }
+}

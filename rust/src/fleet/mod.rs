@@ -1,0 +1,22 @@
+//! Multi-tenant fleet scheduling over build-once/price-many placement.
+//!
+//! The Skrull run engine separates *building* a run (all GDS/DACP
+//! scheduling work, `cluster::run::build_run`) from *pricing* it on a
+//! topology (`price_run`).  This subsystem lifts that split to cluster
+//! scale: tenants submit fine-tuning jobs ([`job`]), a queue discipline
+//! decides what starts next ([`queue`]), a placement engine prices each
+//! job's single `BuiltRun` against every pool that could host it
+//! ([`placement`]), and a deterministic discrete-event loop advances
+//! starts, iteration-boundary preemptions and finishes in simulated time
+//! ([`sim`]).  The `bench::fleet` sweep drives it across arrival
+//! patterns × queue policies × pool topologies.
+
+pub mod job;
+pub mod placement;
+pub mod queue;
+pub mod sim;
+
+pub use job::{synthesize, ArrivalPattern, FleetJob, Tenant, Workload};
+pub use placement::{Candidate, ClusterSpec, PlacementEngine, PoolSpec};
+pub use queue::{pick_next, FleetPolicy, QueueEntry};
+pub use sim::{simulate, FleetReport, ResumeError, ResumePoint, SimOptions, TenantStats};

@@ -1,0 +1,268 @@
+//! The placement engine: carve (possibly heterogeneous-HBM) node pools
+//! into candidate dp×cp slices and price one already-built run against
+//! every candidate with `cluster::run::price_run` — the build-once/
+//! price-many engine lifted one level up.  A job is scheduled (GDS/DACP)
+//! exactly once; *where* it lands is decided by repricing that
+//! `BuiltRun` on each pool's slice layout (fat NVLink nodes vs thin
+//! IB-crossing ones price very differently for the same schedule).
+
+use crate::cluster::run::{price_run, BuiltRun};
+use crate::cluster::Topology;
+use crate::perfmodel::CostModel;
+use crate::util::error::Result;
+
+/// One homogeneous node pool.
+#[derive(Clone, Debug)]
+pub struct PoolSpec {
+    pub name: &'static str,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Per-GPU HBM of this pool's node class (the heterogeneity axis;
+    /// reported per placement, smallest class governs nothing because
+    /// jobs never span pools).
+    pub hbm_gb: f64,
+}
+
+impl PoolSpec {
+    pub fn gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+/// A named set of pools — the sweep's pool-topology axis.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub pools: Vec<PoolSpec>,
+}
+
+impl ClusterSpec {
+    pub const ALL_NAMES: [&'static str; 2] = ["paper", "hetero"];
+
+    /// `"paper"` is the testbed alone (4 nodes × 8 GPUs); `"hetero"` adds
+    /// a fat-NVLink pod (2 × 16) and a thin pod (8 × 4) of different HBM
+    /// classes, so the same built run prices differently per pool.
+    pub fn by_name(s: &str) -> Option<ClusterSpec> {
+        match s {
+            "paper" => Some(ClusterSpec {
+                name: "paper",
+                pools: vec![PoolSpec { name: "testbed", nodes: 4, gpus_per_node: 8, hbm_gb: 80.0 }],
+            }),
+            "hetero" => Some(ClusterSpec {
+                name: "hetero",
+                pools: vec![
+                    PoolSpec { name: "testbed", nodes: 4, gpus_per_node: 8, hbm_gb: 80.0 },
+                    PoolSpec { name: "fat", nodes: 2, gpus_per_node: 16, hbm_gb: 96.0 },
+                    PoolSpec { name: "thin", nodes: 8, gpus_per_node: 4, hbm_gb: 40.0 },
+                ],
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.pools.iter().map(PoolSpec::gpus).sum()
+    }
+}
+
+/// One priced placement option: `nodes` whole nodes of `pool`, with the
+/// run's remaining execution time under that slice's layout.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub pool: usize,
+    pub nodes: usize,
+    /// GPUs allocated (whole nodes) minus GPUs the dp×cp shape uses.
+    pub waste_gpus: usize,
+    /// Priced time to play iterations `done..` on this slice.
+    pub seconds: f64,
+    /// Per-iteration durations for iterations `done..` — absolute
+    /// preemption boundaries come from their prefix sums.
+    pub per_iter: Vec<f64>,
+}
+
+/// Free-node accounting over a pool set (whole-node allocation; no
+/// fragmentation model — pools are flat NVLink/IB domains here).
+#[derive(Clone, Debug)]
+pub struct PlacementEngine {
+    pub pools: Vec<PoolSpec>,
+    free: Vec<usize>,
+}
+
+impl PlacementEngine {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let free = spec.pools.iter().map(|p| p.nodes).collect();
+        PlacementEngine { pools: spec.pools.clone(), free }
+    }
+
+    pub fn free_nodes(&self, pool: usize) -> usize {
+        self.free[pool]
+    }
+
+    /// The node count a dp×cp shape needs in `pool`, if the pool can host
+    /// it at all (enough GPUs and a layout `Topology::new` accepts).
+    fn fit(&self, pool: &PoolSpec, dp: usize, cp: usize) -> Option<usize> {
+        let need = (dp * cp).div_ceil(pool.gpus_per_node);
+        if need > pool.nodes {
+            return None;
+        }
+        Topology::new(need, pool.gpus_per_node, dp, cp).ok().map(|_| need)
+    }
+
+    /// Could this shape *ever* run here (ignoring current occupancy)?
+    pub fn placeable(&self, dp: usize, cp: usize) -> bool {
+        self.pools.iter().any(|p| self.fit(p, dp, cp).is_some())
+    }
+
+    /// Price `built` (from iteration `done` on) against every pool with
+    /// enough free nodes right now.  Clears and fills `out`; returns the
+    /// number of pricings performed.  Build-once/price-many: this is pure
+    /// `price_run` arithmetic, no GDS/DACP work.
+    pub fn candidates(
+        &self,
+        built: &BuiltRun,
+        cost: &CostModel,
+        done: usize,
+        out: &mut Vec<Candidate>,
+    ) -> Result<usize> {
+        out.clear();
+        let mut priced = 0usize;
+        for (pi, pool) in self.pools.iter().enumerate() {
+            let Some(need) = self.fit(pool, built.dp, built.cp) else { continue };
+            if need > self.free[pi] {
+                continue;
+            }
+            // the candidate slice: `need` whole nodes of this pool's class
+            let topo = Topology::new(need, pool.gpus_per_node, built.dp, built.cp)
+                .map_err(|e| crate::anyhow!("candidate layout vanished: {e}"))?;
+            let report = price_run(built, cost, &topo);
+            priced += 1;
+            crate::ensure!(
+                done <= report.iterations.len(),
+                "resume point {done} past the built run's {} iterations",
+                report.iterations.len()
+            );
+            let per_iter: Vec<f64> = report.iterations[done..]
+                .iter()
+                .map(|it| it.exec_seconds + it.exposed_sched_seconds)
+                .collect();
+            let seconds = per_iter.iter().sum();
+            out.push(Candidate {
+                pool: pi,
+                nodes: need,
+                waste_gpus: need * pool.gpus_per_node - built.dp * built.cp,
+                seconds,
+                per_iter,
+            });
+        }
+        Ok(priced)
+    }
+
+    pub fn allocate(&mut self, c: &Candidate) -> Result<()> {
+        crate::ensure!(
+            self.free[c.pool] >= c.nodes,
+            "allocating {} nodes from pool {} with only {} free",
+            c.nodes,
+            c.pool,
+            self.free[c.pool]
+        );
+        self.free[c.pool] -= c.nodes;
+        Ok(())
+    }
+
+    pub fn release(&mut self, pool: usize, nodes: usize) -> Result<()> {
+        self.free[pool] += nodes;
+        crate::ensure!(
+            self.free[pool] <= self.pools[pool].nodes,
+            "pool {pool} over-released to {} of {} nodes",
+            self.free[pool],
+            self.pools[pool].nodes
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::run::{build_run, RunConfig};
+    use crate::config::ExperimentConfig;
+    use crate::data::{Dataset, LengthDistribution};
+    use crate::model::ModelSpec;
+
+    fn tiny_built(dp: usize, cp: usize) -> (BuiltRun, CostModel) {
+        let cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "chatqa2");
+        let mut cfg = cfg;
+        cfg.cluster.dp = dp;
+        cfg.cluster.cp = cp;
+        cfg.cluster.batch_size = 8;
+        let cfg = cfg.resolve_capacity().unwrap();
+        let dist = LengthDistribution::by_name("chatqa2").unwrap();
+        let ds = Dataset::synthesize(&dist, 500, 5).truncated(cfg.bucket_size * cp as u32);
+        let cost = cfg.cost_model();
+        let mut built = build_run(&ds, &cfg, &RunConfig::new(2, true)).unwrap();
+        built.pin_sched_seconds(1e-6);
+        (built, cost)
+    }
+
+    #[test]
+    fn cluster_specs_resolve_by_name() {
+        for name in ClusterSpec::ALL_NAMES {
+            let spec = ClusterSpec::by_name(name).unwrap();
+            assert_eq!(spec.name, name);
+            assert!(spec.total_gpus() >= 32);
+        }
+        assert!(ClusterSpec::by_name("mystery").is_none());
+    }
+
+    #[test]
+    fn hetero_pools_price_the_same_built_run_differently() {
+        let spec = ClusterSpec::by_name("hetero").unwrap();
+        let engine = PlacementEngine::new(&spec);
+        let (built, cost) = tiny_built(4, 8);
+        let mut out = Vec::new();
+        let priced = engine.candidates(&built, &cost, 0, &mut out).unwrap();
+        // all three pools can host a 32-GPU job when empty
+        assert_eq!(priced, 3);
+        assert_eq!(out.len(), 3);
+        // the fat-NVLink pod (everything node-contained) must beat the
+        // thin pod (CP rings cross IB): same schedule, different price
+        let fat = out.iter().find(|c| c.pool == 1).unwrap();
+        let thin = out.iter().find(|c| c.pool == 2).unwrap();
+        assert!(
+            fat.seconds < thin.seconds,
+            "fat {} should underprice thin {}",
+            fat.seconds,
+            thin.seconds
+        );
+        assert!(out.iter().all(|c| c.per_iter.len() == 2 && c.seconds > 0.0));
+    }
+
+    #[test]
+    fn occupancy_and_resume_points_narrow_candidates() {
+        let spec = ClusterSpec::by_name("hetero").unwrap();
+        let mut engine = PlacementEngine::new(&spec);
+        let (built, cost) = tiny_built(4, 8);
+        let mut out = Vec::new();
+        engine.candidates(&built, &cost, 0, &mut out).unwrap();
+        let first = out[0].clone();
+        engine.allocate(&first).unwrap();
+        engine.candidates(&built, &cost, 0, &mut out).unwrap();
+        assert!(out.iter().all(|c| c.pool != first.pool), "occupied pool still offered");
+        engine.release(first.pool, first.nodes).unwrap();
+        // a resumed job (1 of 2 iterations done) prices only the tail
+        engine.candidates(&built, &cost, 0, &mut out).unwrap();
+        let full = out[0].seconds;
+        engine.candidates(&built, &cost, 1, &mut out).unwrap();
+        assert!(out[0].seconds < full);
+        assert_eq!(out[0].per_iter.len(), 1);
+        // a resume point past the run is a structured error, not a panic
+        assert!(engine.candidates(&built, &cost, 3, &mut out).is_err());
+    }
+
+    #[test]
+    fn release_guards_against_double_free() {
+        let spec = ClusterSpec::by_name("paper").unwrap();
+        let mut engine = PlacementEngine::new(&spec);
+        assert!(engine.release(0, 1).is_err());
+    }
+}

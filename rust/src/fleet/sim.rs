@@ -1,0 +1,741 @@
+//! The deterministic discrete-event fleet simulator.  Tenants submit
+//! jobs (admission-controlled by per-tenant quota), the queue discipline
+//! picks what runs next, the placement engine prices each job's single
+//! `BuiltRun` against every pool that could host it, and the event loop
+//! advances start / iteration-boundary-preemption / finish events in
+//! purely simulated time.  Preempted jobs carry their progress through a
+//! checksummed `ResumePoint` codec (the `coordinator::state` checkpoint
+//! idiom), so a resumed job re-prices only its remaining iterations.
+//!
+//! Nothing here reads a wall clock: the same workload, policy and pool
+//! set produce bit-identical reports on any machine at any parallelism.
+
+use std::fmt;
+
+use crate::cluster::run::{build_run, BuiltRun, RunConfig};
+use crate::config::ExperimentConfig;
+use crate::coordinator::state::fnv1a;
+use crate::data::{Dataset, LengthDistribution};
+use crate::fleet::job::Workload;
+use crate::fleet::placement::{Candidate, ClusterSpec, PlacementEngine};
+use crate::fleet::queue::{pick_next, FleetPolicy, QueueEntry};
+use crate::model::ModelSpec;
+use crate::perfmodel::CostModel;
+use crate::util::error::{Context, Result};
+use crate::util::stats::Summary;
+
+/// Pinned per-invocation scheduler cost, so simulated durations never
+/// depend on the host machine (same convention as `bench::e2e`).
+pub const DETERMINISTIC_SCHED_SECONDS: f64 = 1e-6;
+
+const RESUME_MAGIC: [u8; 8] = *b"SKRLFLT\0";
+const RESUME_VERSION: u32 = 1;
+
+/// Progress a preempted job carries back into the queue: iterations
+/// done plus the service/wait it accrued, guarded by magic, version and
+/// an FNV-1a checksum exactly like the trainer's checkpoints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResumePoint {
+    pub job_id: u64,
+    pub done_iters: u32,
+    pub service_seconds: f64,
+    pub wait_seconds: f64,
+}
+
+/// Structured decode failure — never a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ResumeError {
+    Truncated { need: usize, have: usize },
+    BadMagic,
+    BadVersion(u32),
+    BadChecksum { expected: u64, found: u64 },
+}
+
+impl fmt::Display for ResumeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ResumeError::Truncated { need, have } => {
+                write!(f, "resume point truncated: need {need} bytes, have {have}")
+            }
+            ResumeError::BadMagic => write!(f, "resume point has wrong magic"),
+            ResumeError::BadVersion(v) => write!(f, "unsupported resume point version {v}"),
+            ResumeError::BadChecksum { expected, found } => {
+                write!(
+                    f,
+                    "resume point checksum mismatch: expected {expected:#x}, found {found:#x}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ResumeError {}
+
+fn take<const N: usize>(bytes: &[u8], off: usize) -> Result<[u8; N], ResumeError> {
+    match bytes.get(off..off + N) {
+        Some(s) => {
+            let mut out = [0u8; N];
+            out.copy_from_slice(s);
+            Ok(out)
+        }
+        None => Err(ResumeError::Truncated { need: off + N, have: bytes.len() }),
+    }
+}
+
+impl ResumePoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(8 + 4 + 8 + 4 + 8 + 8 + 8);
+        buf.extend_from_slice(&RESUME_MAGIC);
+        buf.extend_from_slice(&RESUME_VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.job_id.to_le_bytes());
+        buf.extend_from_slice(&self.done_iters.to_le_bytes());
+        buf.extend_from_slice(&self.service_seconds.to_le_bytes());
+        buf.extend_from_slice(&self.wait_seconds.to_le_bytes());
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ResumePoint, ResumeError> {
+        let magic: [u8; 8] = take(bytes, 0)?;
+        if magic != RESUME_MAGIC {
+            return Err(ResumeError::BadMagic);
+        }
+        let version = u32::from_le_bytes(take(bytes, 8)?);
+        if version != RESUME_VERSION {
+            return Err(ResumeError::BadVersion(version));
+        }
+        let job_id = u64::from_le_bytes(take(bytes, 12)?);
+        let done_iters = u32::from_le_bytes(take(bytes, 20)?);
+        let service_seconds = f64::from_le_bytes(take(bytes, 24)?);
+        let wait_seconds = f64::from_le_bytes(take(bytes, 32)?);
+        let found = u64::from_le_bytes(take(bytes, 40)?);
+        let expected = fnv1a(&bytes[..40]);
+        if found != expected {
+            return Err(ResumeError::BadChecksum { expected, found });
+        }
+        Ok(ResumePoint { job_id, done_iters, service_seconds, wait_seconds })
+    }
+}
+
+/// Simulator knobs (the workload supplies everything else).
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    pub policy: FleetPolicy,
+    pub cluster: ClusterSpec,
+    /// Forwarded to `RunConfig::serial_scheduler` when fleet cells fan
+    /// out across worker threads (same rule as the e2e sweep).
+    pub serial_scheduler: bool,
+}
+
+/// Per-tenant accounting for the fairness and quota gates.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub finished: usize,
+    pub service_seconds: f64,
+    /// High-water mark of this tenant's queued + running jobs; the quota
+    /// property test asserts it never exceeds the tenant's quota.
+    pub peak_in_flight: usize,
+}
+
+/// What one simulated fleet run produced.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub policy: FleetPolicy,
+    pub cluster: &'static str,
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub finished: usize,
+    pub preemptions: usize,
+    /// `build_run` invocations — exactly one per admitted job.
+    pub builds: usize,
+    /// `price_run` invocations — many per build.
+    pub pricings: usize,
+    pub max_builds_per_job: usize,
+    /// Dispatches under `Priority` that passed over a strictly
+    /// higher-priority placeable entry (must stay zero).
+    pub priority_inversions: usize,
+    pub makespan: f64,
+    /// Busy GPU-seconds over total GPU-seconds to makespan.
+    pub utilization: f64,
+    /// Max over min weighted tenant service (1.0 if fewer than two
+    /// tenants finished anything).
+    pub fairness_ratio: f64,
+    /// Total queue wait per finished job.
+    pub queue_wait: Summary,
+    pub tenants: Vec<TenantStats>,
+}
+
+/// One placed job occupying nodes.
+struct Running {
+    job: usize,
+    pool: usize,
+    nodes: usize,
+    gpus: usize,
+    start: f64,
+    /// Iterations completed before this placement.
+    done_before: usize,
+    /// Absolute completion time of each remaining iteration.
+    iter_ends: Vec<f64>,
+    finish: f64,
+    /// Next event for this machine: the finish, or an earlier preemption
+    /// boundary once a preemption is pending.
+    event_time: f64,
+    /// Index into `iter_ends` where a pending preemption takes effect.
+    preempt_at: Option<usize>,
+    wait_so_far: f64,
+    service_so_far: f64,
+}
+
+enum Event {
+    Arrival,
+    Machine(usize),
+    Idle,
+}
+
+/// Pick the earliest pending event: machine events (finish/preempt) by
+/// time, lowest job id on ties, and at equal times machines fire before
+/// the next arrival.  `next_arrival` is `f64::INFINITY` once the
+/// workload is exhausted.
+///
+/// Hot path: called once per simulated event; index scan, no allocation.
+fn next_event(running: &[Running], next_arrival: f64) -> Event {
+    let mut best: Option<usize> = None;
+    let mut i = 0;
+    while i < running.len() {
+        match best {
+            Some(b) => {
+                let ord = running[i].event_time.total_cmp(&running[b].event_time);
+                if ord == core::cmp::Ordering::Less
+                    || (ord == core::cmp::Ordering::Equal && running[i].job < running[b].job)
+                {
+                    best = Some(i);
+                }
+            }
+            None => best = Some(i),
+        }
+        i += 1;
+    }
+    match best {
+        Some(b) => {
+            if running[b].event_time.total_cmp(&next_arrival) == core::cmp::Ordering::Greater {
+                Event::Arrival
+            } else {
+                Event::Machine(b)
+            }
+        }
+        None if next_arrival.is_finite() => Event::Arrival,
+        None => Event::Idle,
+    }
+}
+
+struct Sim<'a> {
+    workload: &'a Workload,
+    opts: &'a SimOptions,
+    cost: CostModel,
+    engine: PlacementEngine,
+    builts: Vec<Option<BuiltRun>>,
+    build_counts: Vec<usize>,
+    queue: Vec<QueueEntry>,
+    running: Vec<Running>,
+    in_system: Vec<usize>,
+    tenants: Vec<TenantStats>,
+    queue_wait: Summary,
+    busy_gpu_seconds: f64,
+    pricings: usize,
+    preemptions: usize,
+    priority_inversions: usize,
+    finished: usize,
+    admitted: usize,
+    rejected: usize,
+    last_finish: f64,
+}
+
+impl Sim<'_> {
+    /// Schedule (GDS/DACP) the job exactly once; every later placement
+    /// decision reprices this artifact.
+    fn ensure_built(&mut self, job_idx: usize) -> Result<()> {
+        if self.builts[job_idx].is_some() {
+            return Ok(());
+        }
+        let job = &self.workload.jobs[job_idx];
+        let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), job.dataset);
+        cfg.cluster.dp = job.dp;
+        cfg.cluster.cp = job.cp;
+        cfg.cluster.batch_size = job.batch_size;
+        cfg.policy = job.policy;
+        cfg.seed = job.seed;
+        cfg.pipelined = true;
+        let cfg = cfg
+            .resolve_capacity()
+            .with_context(|| format!("job {}: capacity resolution failed", job.id))?;
+        let dist = LengthDistribution::by_name(job.dataset)
+            .ok_or_else(|| crate::anyhow!("job {}: unknown dataset {}", job.id, job.dataset))?;
+        let ds = Dataset::synthesize(&dist, job.seq_count, job.seed)
+            .truncated(cfg.bucket_size * job.cp as u32);
+        let mut run = RunConfig::new(job.iterations, true);
+        run.serial_scheduler = self.opts.serial_scheduler;
+        let mut built = build_run(&ds, &cfg, &run)
+            .with_context(|| format!("job {}: schedule build failed", job.id))?;
+        built.pin_sched_seconds(DETERMINISTIC_SCHED_SECONDS);
+        self.builts[job_idx] = Some(built);
+        self.build_counts[job_idx] += 1;
+        Ok(())
+    }
+
+    /// Price entry `queue[qi]`'s remaining iterations on every pool and
+    /// keep the policy-preferred candidate.
+    fn best_candidate(&mut self, qi: usize) -> Result<Option<Candidate>> {
+        let job_idx = self.queue[qi].job;
+        self.ensure_built(job_idx)?;
+        let done = self.queue[qi].done_iters;
+        let built = self.builts[job_idx]
+            .as_ref()
+            .ok_or_else(|| crate::anyhow!("job {job_idx} vanished from the build cache"))?;
+        let mut cands = Vec::new();
+        self.pricings += self.engine.candidates(built, &self.cost, done, &mut cands)?;
+        let best_fit = self.opts.policy == FleetPolicy::BestFitPrice;
+        let mut best: Option<Candidate> = None;
+        for c in cands {
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    if best_fit && c.waste_gpus != b.waste_gpus {
+                        c.waste_gpus < b.waste_gpus
+                    } else {
+                        c.seconds.total_cmp(&b.seconds) == core::cmp::Ordering::Less
+                    }
+                }
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+        Ok(best)
+    }
+
+    /// Start queued jobs while the policy and free nodes allow.
+    fn dispatch(&mut self, now: f64) -> Result<()> {
+        loop {
+            if self.queue.is_empty() {
+                return Ok(());
+            }
+            let n = self.queue.len();
+            let mut feasible = Vec::with_capacity(n);
+            let mut secs = Vec::with_capacity(n);
+            let mut prios = Vec::with_capacity(n);
+            let mut chosen: Vec<Option<Candidate>> = Vec::with_capacity(n);
+            for qi in 0..n {
+                let cand = self.best_candidate(qi)?;
+                feasible.push(cand.is_some());
+                secs.push(cand.as_ref().map_or(f64::INFINITY, |c| c.seconds));
+                prios.push(self.workload.jobs[self.queue[qi].job].priority);
+                chosen.push(cand);
+            }
+            let Some(qi) = pick_next(self.opts.policy, &feasible, &secs, &prios) else {
+                return Ok(());
+            };
+            if self.opts.policy == FleetPolicy::Priority {
+                self.priority_inversions += (0..n)
+                    .filter(|&i| feasible[i] && prios[i] > prios[qi])
+                    .count();
+            }
+            let cand = chosen
+                .swap_remove(qi)
+                .ok_or_else(|| crate::anyhow!("policy picked an infeasible entry"))?;
+            self.start(qi, cand, now)?;
+        }
+    }
+
+    fn start(&mut self, qi: usize, cand: Candidate, now: f64) -> Result<()> {
+        let mut entry = self.queue.remove(qi);
+        let job = &self.workload.jobs[entry.job];
+        // a preempted job's progress must round-trip the resume codec
+        // intact before it re-enters service
+        if let Some(bytes) = entry.resume.take() {
+            let point = ResumePoint::decode(&bytes)
+                .with_context(|| format!("job {}: corrupt resume point", job.id))?;
+            crate::ensure!(
+                point.job_id == job.id
+                    && point.done_iters as usize == entry.done_iters
+                    && point.service_seconds.to_bits() == entry.service_so_far.to_bits()
+                    && point.wait_seconds.to_bits() == entry.wait_so_far.to_bits(),
+                "job {}: resume point disagrees with queue entry",
+                job.id
+            );
+        }
+        crate::ensure!(!cand.per_iter.is_empty(), "job {} has no remaining iterations", job.id);
+        entry.wait_so_far += now - entry.enqueued_at;
+        self.engine.allocate(&cand)?;
+        let mut iter_ends = Vec::with_capacity(cand.per_iter.len());
+        let mut t = now;
+        for d in &cand.per_iter {
+            t += d;
+            iter_ends.push(t);
+        }
+        let finish = t;
+        self.running.push(Running {
+            job: entry.job,
+            pool: cand.pool,
+            nodes: cand.nodes,
+            gpus: job.gpus(),
+            start: now,
+            done_before: entry.done_iters,
+            iter_ends,
+            finish,
+            event_time: finish,
+            preempt_at: None,
+            wait_so_far: entry.wait_so_far,
+            service_so_far: entry.service_so_far,
+        });
+        Ok(())
+    }
+
+    /// Under `Priority`, make room for a placeable-nowhere arrival by
+    /// preempting the weakest strictly-lower-priority running job at its
+    /// next iteration boundary (one victim per arrival, no cascades).
+    fn preempt_for(&mut self, arriving_priority: u32, now: f64) {
+        let mut victim: Option<usize> = None;
+        for (i, r) in self.running.iter().enumerate() {
+            if r.preempt_at.is_some() {
+                continue;
+            }
+            let prio = self.workload.jobs[r.job].priority;
+            if prio >= arriving_priority {
+                continue;
+            }
+            // first boundary strictly after now that is not the finish
+            let has_boundary = r
+                .iter_ends
+                .iter()
+                .take(r.iter_ends.len().saturating_sub(1))
+                .any(|&b| b > now);
+            if !has_boundary {
+                continue;
+            }
+            let better = match victim {
+                None => true,
+                Some(v) => {
+                    let vp = self.workload.jobs[self.running[v].job].priority;
+                    prio < vp || (prio == vp && r.job < self.running[v].job)
+                }
+            };
+            if better {
+                victim = Some(i);
+            }
+        }
+        if let Some(v) = victim {
+            let r = &mut self.running[v];
+            let last = r.iter_ends.len() - 1;
+            for (j, &b) in r.iter_ends.iter().enumerate() {
+                if b > now && j < last {
+                    r.preempt_at = Some(j);
+                    r.event_time = b;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn arrive(&mut self, job_idx: usize, now: f64) -> Result<()> {
+        let job = &self.workload.jobs[job_idx];
+        let tenant = job.tenant;
+        self.tenants[tenant].submitted += 1;
+        let quota = self.workload.tenants[tenant].quota;
+        if self.in_system[tenant] >= quota {
+            self.rejected += 1;
+            self.tenants[tenant].rejected += 1;
+            return Ok(());
+        }
+        self.admitted += 1;
+        self.tenants[tenant].admitted += 1;
+        self.in_system[tenant] += 1;
+        self.tenants[tenant].peak_in_flight =
+            self.tenants[tenant].peak_in_flight.max(self.in_system[tenant]);
+        self.queue.push(QueueEntry {
+            job: job_idx,
+            enqueued_at: now,
+            done_iters: 0,
+            resume: None,
+            wait_so_far: 0.0,
+            service_so_far: 0.0,
+        });
+        self.dispatch(now)?;
+        if self.opts.policy == FleetPolicy::Priority {
+            if let Some(qi) = self.queue.iter().position(|e| e.job == job_idx) {
+                if self.best_candidate(qi)?.is_none() {
+                    self.preempt_for(self.workload.jobs[job_idx].priority, now);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn machine_event(&mut self, mi: usize) -> Result<()> {
+        let r = self.running.swap_remove(mi);
+        let now = r.event_time;
+        let job = &self.workload.jobs[r.job];
+        let segment = now - r.start;
+        self.busy_gpu_seconds += r.gpus as f64 * segment;
+        self.tenants[job.tenant].service_seconds += segment;
+        self.engine.release(r.pool, r.nodes)?;
+        match r.preempt_at {
+            Some(j) => {
+                self.preemptions += 1;
+                let done_iters = r.done_before + j + 1;
+                crate::ensure!(
+                    done_iters < job.iterations,
+                    "job {} preempted past its final iteration",
+                    job.id
+                );
+                let service = r.service_so_far + segment;
+                let point = ResumePoint {
+                    job_id: job.id,
+                    done_iters: done_iters as u32,
+                    service_seconds: service,
+                    wait_seconds: r.wait_so_far,
+                };
+                self.queue.push(QueueEntry {
+                    job: r.job,
+                    enqueued_at: now,
+                    done_iters,
+                    resume: Some(point.encode()),
+                    wait_so_far: r.wait_so_far,
+                    service_so_far: service,
+                });
+            }
+            None => {
+                self.finished += 1;
+                self.tenants[job.tenant].finished += 1;
+                self.in_system[job.tenant] -= 1;
+                self.queue_wait.push(r.wait_so_far);
+                self.last_finish = self.last_finish.max(r.finish);
+            }
+        }
+        self.dispatch(now)
+    }
+}
+
+/// Run the fleet to completion and account for every job.
+pub fn simulate(workload: &Workload, opts: &SimOptions) -> Result<FleetReport> {
+    let n_jobs = workload.jobs.len();
+    crate::ensure!(n_jobs > 0, "empty workload");
+    let engine = PlacementEngine::new(&opts.cluster);
+    for job in &workload.jobs {
+        crate::ensure!(
+            engine.placeable(job.dp, job.cp),
+            "job {} shape {}x{} fits no pool of {}",
+            job.id,
+            job.dp,
+            job.cp,
+            opts.cluster.name
+        );
+    }
+    let cost = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia").cost_model();
+    let mut sim = Sim {
+        workload,
+        opts,
+        cost,
+        engine,
+        builts: vec![None; n_jobs],
+        build_counts: vec![0; n_jobs],
+        queue: Vec::new(),
+        running: Vec::new(),
+        in_system: vec![0; workload.tenants.len()],
+        tenants: vec![TenantStats::default(); workload.tenants.len()],
+        queue_wait: Summary::new(),
+        busy_gpu_seconds: 0.0,
+        pricings: 0,
+        preemptions: 0,
+        priority_inversions: 0,
+        finished: 0,
+        admitted: 0,
+        rejected: 0,
+        last_finish: 0.0,
+    };
+    let mut next_job = 0usize;
+    loop {
+        let next_arrival = if next_job < n_jobs {
+            workload.jobs[next_job].submit_time
+        } else {
+            f64::INFINITY
+        };
+        match next_event(&sim.running, next_arrival) {
+            Event::Arrival => {
+                sim.arrive(next_job, next_arrival)?;
+                next_job += 1;
+            }
+            Event::Machine(mi) => sim.machine_event(mi)?,
+            Event::Idle => break,
+        }
+    }
+    crate::ensure!(sim.queue.is_empty(), "fleet went idle with {} queued jobs", sim.queue.len());
+    crate::ensure!(
+        sim.admitted + sim.rejected == n_jobs && sim.finished == sim.admitted,
+        "conservation violated: {} submitted, {} admitted, {} rejected, {} finished",
+        n_jobs,
+        sim.admitted,
+        sim.rejected,
+        sim.finished
+    );
+    let builds: usize = sim.build_counts.iter().sum();
+    let max_builds_per_job = sim.build_counts.iter().copied().max().unwrap_or(0);
+    crate::ensure!(
+        max_builds_per_job <= 1 && builds == sim.admitted,
+        "build-once violated: {builds} builds for {} admitted jobs (max {max_builds_per_job})",
+        sim.admitted
+    );
+    crate::ensure!(sim.finished > 0, "no job finished");
+    let makespan = sim.last_finish;
+    let total_gpus = opts.cluster.total_gpus();
+    let utilization = sim.busy_gpu_seconds / (total_gpus as f64 * makespan);
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    let mut served = 0usize;
+    for (t, stats) in workload.tenants.iter().zip(&sim.tenants) {
+        if stats.finished == 0 {
+            continue;
+        }
+        served += 1;
+        let weighted = stats.service_seconds / t.weight;
+        lo = lo.min(weighted);
+        hi = hi.max(weighted);
+    }
+    let fairness_ratio = if served >= 2 { hi / lo } else { 1.0 };
+    Ok(FleetReport {
+        policy: opts.policy,
+        cluster: opts.cluster.name,
+        submitted: n_jobs,
+        admitted: sim.admitted,
+        rejected: sim.rejected,
+        finished: sim.finished,
+        preemptions: sim.preemptions,
+        builds,
+        pricings: sim.pricings,
+        max_builds_per_job,
+        priority_inversions: sim.priority_inversions,
+        makespan,
+        utilization,
+        fairness_ratio,
+        queue_wait: sim.queue_wait,
+        tenants: sim.tenants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::job::{synthesize, ArrivalPattern};
+
+    fn run(pattern: ArrivalPattern, policy: FleetPolicy, cluster: &str, n: usize) -> FleetReport {
+        let workload = synthesize(pattern, n, 11);
+        let opts = SimOptions {
+            policy,
+            cluster: ClusterSpec::by_name(cluster).unwrap(),
+            serial_scheduler: false,
+        };
+        simulate(&workload, &opts).unwrap()
+    }
+
+    #[test]
+    fn resume_points_round_trip_and_reject_corruption() {
+        let p = ResumePoint {
+            job_id: 42,
+            done_iters: 3,
+            service_seconds: 12.5,
+            wait_seconds: 0.75,
+        };
+        let bytes = p.encode();
+        assert_eq!(ResumePoint::decode(&bytes).unwrap(), p);
+        let mut flipped = bytes.clone();
+        flipped[15] ^= 1;
+        assert!(matches!(
+            ResumePoint::decode(&flipped),
+            Err(ResumeError::BadChecksum { .. })
+        ));
+        assert!(matches!(
+            ResumePoint::decode(&bytes[..20]),
+            Err(ResumeError::Truncated { .. })
+        ));
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        assert_eq!(ResumePoint::decode(&wrong_magic), Err(ResumeError::BadMagic));
+        let mut wrong_version = bytes;
+        wrong_version[8] = 9;
+        // version is checked before the checksum
+        assert_eq!(ResumePoint::decode(&wrong_version), Err(ResumeError::BadVersion(9)));
+    }
+
+    #[test]
+    fn fleet_accounts_for_every_job() {
+        for policy in FleetPolicy::ALL {
+            let r = run(ArrivalPattern::Steady, policy, "paper", 20);
+            assert_eq!(r.submitted, 20);
+            assert_eq!(r.admitted + r.rejected, 20);
+            assert_eq!(r.finished, r.admitted);
+            assert_eq!(r.builds, r.admitted);
+            assert_eq!(r.max_builds_per_job, 1);
+            assert!(r.pricings >= r.builds);
+            assert!(r.makespan > 0.0);
+            assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+            assert!(r.fairness_ratio >= 1.0);
+            assert_eq!(r.queue_wait.len(), r.finished);
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_reject_over_quota_and_queue_waits_grow() {
+        let r = run(ArrivalPattern::Bursty, FleetPolicy::Fifo, "paper", 40);
+        assert!(r.rejected > 0, "bursts of 3-6 against quota 2-4 must reject");
+        for (t, stats) in r.tenants.iter().enumerate() {
+            let quota = synthesize(ArrivalPattern::Bursty, 40, 11).tenants[t].quota;
+            assert!(stats.peak_in_flight <= quota, "tenant {t} exceeded quota {quota}");
+        }
+        assert!(r.queue_wait.max() > 0.0, "a one-pool bursty fleet must make someone wait");
+    }
+
+    #[test]
+    fn priority_policy_preempts_and_never_inverts() {
+        let mut preempted = 0usize;
+        for seed_pattern in [ArrivalPattern::Bursty, ArrivalPattern::HeavyTailed] {
+            let r = run(seed_pattern, FleetPolicy::Priority, "paper", 60);
+            assert_eq!(r.priority_inversions, 0);
+            preempted += r.preemptions;
+        }
+        assert!(preempted > 0, "priority fleets under load should preempt at least once");
+    }
+
+    #[test]
+    fn identical_inputs_are_bit_identical_and_policies_differ() {
+        let a = run(ArrivalPattern::HeavyTailed, FleetPolicy::ShortestPricedFirst, "hetero", 30);
+        let b = run(ArrivalPattern::HeavyTailed, FleetPolicy::ShortestPricedFirst, "hetero", 30);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.fairness_ratio.to_bits(), b.fairness_ratio.to_bits());
+        assert_eq!(a.pricings, b.pricings);
+        let fifo = run(ArrivalPattern::HeavyTailed, FleetPolicy::Fifo, "hetero", 30);
+        assert!(
+            fifo.makespan.to_bits() != a.makespan.to_bits()
+                || fifo.queue_wait.mean().to_bits() != a.queue_wait.mean().to_bits(),
+            "policies should not be observationally identical"
+        );
+    }
+
+    #[test]
+    fn serial_scheduler_flag_does_not_change_the_simulation() {
+        let workload = synthesize(ArrivalPattern::Steady, 15, 4);
+        let mk = |serial| SimOptions {
+            policy: FleetPolicy::BestFitPrice,
+            cluster: ClusterSpec::by_name("hetero").unwrap(),
+            serial_scheduler: serial,
+        };
+        let a = simulate(&workload, &mk(false)).unwrap();
+        let b = simulate(&workload, &mk(true)).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.queue_wait.mean().to_bits(), b.queue_wait.mean().to_bits());
+    }
+}

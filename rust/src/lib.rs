@@ -20,6 +20,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod logging;
 pub mod memplan;
 pub mod model;

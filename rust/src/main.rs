@@ -5,6 +5,12 @@
 //!   simulate  — run N simulated iterations under each policy, report speedup
 //!   e2e       — the end-to-end sweep: policies × distributions × topologies
 //!               through the run engine; writes BENCH_e2e.json
+//!   fleet     — multi-tenant fleet-scheduling sweep: arrival patterns ×
+//!               queue policies × pool sets; writes BENCH_fleet.json
+//!   lint      — repo-aware static analysis of rust/src; writes
+//!               LINT_REPORT.json (the CI gate behind --validate)
+//!   sched-bench — scheduler overhead + K-scaling benches; writes
+//!               BENCH_sched_overhead.json
 //!   calibrate — trace → fitted coefficients: emit a calibration trace
 //!               (--emit), fit one (--trace), write the profile (--out),
 //!               gate it (--validate)
@@ -477,6 +483,63 @@ fn cmd_sched_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use skrull::bench::fleet as fb;
+
+    // validation-only mode (the CI gate), same calling convention as
+    // `e2e --validate`
+    let validate_path = args.get("validate").map(str::to_string).or_else(|| {
+        if args.flag("validate") {
+            args.positional.get(1).cloned()
+        } else {
+            None
+        }
+    });
+    if args.flag("validate") && validate_path.is_none() {
+        skrull::bail!("fleet --validate needs a file: `fleet --validate=BENCH_fleet.json`");
+    }
+    if let Some(path) = validate_path {
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        fb::validate_json(&text).with_context(|| format!("{path} failed validation"))?;
+        println!("{path}: ok");
+        return Ok(());
+    }
+
+    let mut opts = if args.flag("smoke") {
+        fb::FleetBenchOptions::smoke()
+    } else {
+        fb::FleetBenchOptions::paper_default()
+    };
+    opts.jobs_per_cell = args.parse_or("jobs-per-cell", opts.jobs_per_cell)?;
+    opts.seed = args.parse_or("seed", opts.seed)?;
+    // worker count for the cell fan-out; 0 = auto, and any value changes
+    // wall-clock only — BENCH_fleet.json is byte-identical regardless
+    opts.jobs = match args.parse_or("jobs", opts.jobs)? {
+        0 => fb::FleetBenchOptions::paper_default().jobs,
+        n => n,
+    };
+    println!(
+        "fleet sweep: {} arrivals × {} policies × {} pool sets, {} jobs/cell (seed {}), {} worker{}",
+        opts.arrivals.len(),
+        opts.policies.len(),
+        opts.pool_sets.len(),
+        opts.jobs_per_cell,
+        opts.seed,
+        opts.jobs,
+        if opts.jobs == 1 { "" } else { "s" },
+    );
+    let sweep = fb::run_sweep(&opts)?;
+    fb::print_summary(&sweep);
+
+    let out_path = args.str_or("out", "BENCH_fleet.json");
+    let json = fb::render_json(&sweep);
+    fb::validate_json(&json).context("self-check of rendered BENCH_fleet.json")?;
+    std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 fn cmd_calibrate(args: &Args) -> Result<()> {
     use skrull::calib;
 
@@ -649,23 +712,32 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: skrull <schedule|simulate|e2e|lint|sched-bench|calibrate|train|analyze|profile> [--options]
+const USAGE: &str = "usage: skrull <schedule|simulate|e2e|fleet|lint|sched-bench|calibrate|train|analyze|profile> [--options]
   common:    --config FILE | --model M --dataset D --dp N --cp N --batch-size K
              --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
              --shards N (scheduler shards, 0 = auto) --incremental
              --cost-profile FILE (calibrated coefficients from `skrull calibrate`)
   memory:    --capacity (fixed|hbm-derived) --hbm-gb F[,F,...] --recompute (full|selective|none)
-  e2e:       --datasets a,b,c --topologies 4x8,2x16 --iterations N --samples N
-             --seeds a,b,c --epoch --jobs N (0 = auto) --deterministic-timing
+             (accepted by schedule, simulate, e2e and train)
+  e2e:       --model M --datasets a,b,c --topologies 4x8,2x16 --iterations N
+             --samples N --batch-size K --seed S | --seeds a,b,c --sync --epoch
+             --cost-profile FILE --jobs N (0 = auto) --deterministic-timing
              --config FILE ([run] jobs key only) --out FILE --smoke | --validate=FILE
+  fleet:     multi-tenant fleet sweep: arrivals x policies x pool sets -> BENCH_fleet.json
+             --smoke --jobs-per-cell N --seed S --jobs N (0 = auto)
+             --out FILE | --validate=FILE
   sched-bench: overhead + K-scaling sweep -> BENCH_sched_overhead.json
-             --smoke --shards N (0 = auto) --out FILE | --validate=FILE
+             --smoke --model M --dataset D --shards N (0 = auto) --out FILE | --validate=FILE
   lint:      static analysis of rust/src -> LINT_REPORT.json
              --root DIR --out FILE --validate (gate: fail on unsuppressed findings)
              --validate=FILE (check an existing report)
-  calibrate: --emit FILE (run the calibration sweep, write a JSONL trace)
+  calibrate: --emit FILE (run the calibration sweep; --model --datasets --iterations
+             --batch-size --samples --seed shape the sweep)
              --trace FILE [--out PROFILE.json] [--validate [--min-r2 R] [--tolerance T]]
-  train:     --artifacts DIR --steps N --workers W --lr F --corpus-size K";
+  train:     --artifacts DIR --steps N --workers W --lr F --corpus-size K
+             --policy P --bucket-size C --batch-size K --seed S --cost-profile FILE
+  analyze:   --samples N --seed S (Table 1 over the synthesized datasets)
+  profile:   --model M --dp N (Appendix A offline-profiling fits)";
 
 fn main() -> Result<()> {
     skrull::logging::init();
@@ -686,6 +758,7 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "simulate" => cmd_simulate(&args),
         "e2e" => cmd_e2e(&args),
+        "fleet" => cmd_fleet(&args),
         "lint" => cmd_lint(&args),
         "sched-bench" => cmd_sched_bench(&args),
         "calibrate" => cmd_calibrate(&args),

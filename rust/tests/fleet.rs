@@ -1,0 +1,144 @@
+//! Fleet subsystem property tests, exercised through the public API
+//! (`skrull::fleet` + `skrull::bench::fleet`) exactly as `skrull fleet`
+//! uses it:
+//!
+//! * no tenant ever holds more in-flight jobs than its quota;
+//! * every job is conserved (submitted = finished + rejected) and every
+//!   admitted job is scheduled exactly once (build-once/price-many);
+//! * the priority discipline never dispatches over a strictly
+//!   higher-priority placeable entry;
+//! * the rendered `BENCH_fleet.json` is byte-identical across `--jobs 1`
+//!   and `--jobs 4` and across repeated same-seed sweeps, and passes the
+//!   schema-v1 validator.
+
+use skrull::bench::fleet::{render_json, run_sweep, validate_json, FleetBenchOptions};
+use skrull::fleet::{simulate, synthesize, ArrivalPattern, ClusterSpec, FleetPolicy, SimOptions};
+
+fn report(
+    pattern: ArrivalPattern,
+    policy: FleetPolicy,
+    cluster: &str,
+    n_jobs: usize,
+    seed: u64,
+) -> skrull::fleet::FleetReport {
+    let workload = synthesize(pattern, n_jobs, seed);
+    let opts = SimOptions {
+        policy,
+        cluster: ClusterSpec::by_name(cluster).expect("known cluster"),
+        serial_scheduler: false,
+    };
+    simulate(&workload, &opts).expect("simulation completes")
+}
+
+#[test]
+fn no_tenant_ever_exceeds_its_quota() {
+    for pattern in ArrivalPattern::ALL {
+        for policy in FleetPolicy::ALL {
+            let workload = synthesize(pattern, 24, 7);
+            let opts = SimOptions {
+                policy,
+                cluster: ClusterSpec::by_name("paper").expect("known cluster"),
+                serial_scheduler: false,
+            };
+            let r = simulate(&workload, &opts).expect("simulation completes");
+            for (t, stats) in r.tenants.iter().enumerate() {
+                let quota = workload.tenants[t].quota;
+                assert!(
+                    stats.peak_in_flight <= quota,
+                    "{} × {}: tenant {t} peaked at {} in-flight against quota {quota}",
+                    pattern.name(),
+                    policy.name(),
+                    stats.peak_in_flight
+                );
+                assert_eq!(
+                    stats.submitted,
+                    stats.admitted + stats.rejected,
+                    "tenant {t}: admission accounting leaked a job"
+                );
+                assert_eq!(stats.finished, stats.admitted, "tenant {t}: a job went missing");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_job_is_conserved_and_built_exactly_once() {
+    for pattern in ArrivalPattern::ALL {
+        for cluster in ClusterSpec::ALL_NAMES {
+            let r = report(pattern, FleetPolicy::ShortestPricedFirst, cluster, 20, 3);
+            assert_eq!(r.submitted, 20);
+            assert_eq!(r.submitted, r.finished + r.rejected, "conservation violated");
+            assert_eq!(r.admitted, r.finished, "an admitted job never finished");
+            assert_eq!(r.builds, r.admitted, "build count diverged from admissions");
+            assert_eq!(r.max_builds_per_job, 1, "a job was scheduled more than once");
+            assert!(
+                r.pricings >= r.builds,
+                "placement priced fewer times ({}) than it built ({})",
+                r.pricings,
+                r.builds
+            );
+            assert_eq!(r.queue_wait.len(), r.finished, "queue-wait sample per finished job");
+        }
+    }
+}
+
+#[test]
+fn priority_discipline_never_inverts_and_preempts_under_load() {
+    let mut preemptions = 0usize;
+    for pattern in ArrivalPattern::ALL {
+        let r = report(pattern, FleetPolicy::Priority, "paper", 48, 13);
+        assert_eq!(
+            r.priority_inversions, 0,
+            "{}: priority dispatch passed over a higher-priority placeable job",
+            pattern.name()
+        );
+        preemptions += r.preemptions;
+    }
+    assert!(preemptions > 0, "48-job fleets on one pool should preempt at least once");
+}
+
+#[test]
+fn preempted_work_is_never_lost() {
+    // Preemption re-queues a job with a checksummed resume point; the
+    // simulator's end-of-run conservation gate (finished == admitted)
+    // only holds if every preempted job resumes and completes.
+    let mut saw_preemption = false;
+    for pattern in ArrivalPattern::ALL {
+        let r = report(pattern, FleetPolicy::Priority, "paper", 48, 13);
+        if r.preemptions == 0 {
+            continue;
+        }
+        saw_preemption = true;
+        assert_eq!(r.finished, r.admitted, "a preempted job failed to resume");
+        assert_eq!(r.max_builds_per_job, 1, "resume must reprice, never rebuild");
+    }
+    assert!(saw_preemption, "48-job priority fleets on one pool should preempt");
+}
+
+#[test]
+fn sweep_json_is_byte_identical_across_jobs_and_repeat_runs() {
+    let mut opts = FleetBenchOptions::smoke();
+    opts.jobs_per_cell = 4;
+    opts.jobs = 1;
+    let first = render_json(&run_sweep(&opts).expect("sweep completes"));
+    // repeated same-seed run
+    let second = render_json(&run_sweep(&opts).expect("sweep completes"));
+    assert_eq!(first, second, "same-seed sweeps diverged");
+    // --jobs 4 fan-out
+    opts.jobs = 4;
+    let parallel = render_json(&run_sweep(&opts).expect("sweep completes"));
+    assert_eq!(first, parallel, "--jobs 4 diverged from --jobs 1");
+    validate_json(&first).expect("rendered sweep passes the schema-v1 validator");
+    assert!(!first.contains("sweep_seconds"), "wall-clock leaked into the JSON");
+}
+
+#[test]
+fn different_seeds_produce_different_fleets() {
+    let a = report(ArrivalPattern::Steady, FleetPolicy::Fifo, "hetero", 16, 1);
+    let b = report(ArrivalPattern::Steady, FleetPolicy::Fifo, "hetero", 16, 2);
+    assert!(
+        a.makespan.to_bits() != b.makespan.to_bits()
+            || a.queue_wait.mean().to_bits() != b.queue_wait.mean().to_bits(),
+        "two seeds produced observationally identical fleets"
+    );
+}
