@@ -48,6 +48,7 @@ const DETERMINISTIC_MODULES: &[&str] = &[
     "fleet/",
     "memplan/",
     "scheduler/",
+    "stream/",
 ];
 
 /// Library modules where `SchedError`/`Result` propagation is the
@@ -69,6 +70,7 @@ const ERROR_CONVENTION_MODULES: &[&str] = &[
     "perfmodel/",
     "rng/",
     "scheduler/",
+    "stream/",
 ];
 
 /// Accumulation-path modules where a narrowing cast can silently wrap
@@ -84,7 +86,7 @@ const TIMING_SANCTIONED: &[&str] =
 
 /// Modules carrying declared zero-alloc hot paths (`hot-path-alloc`
 /// scans only the [`HOT_FUNCTIONS`] bodies within them).
-const HOT_PATH_MODULES: &[&str] = &["fleet/", "scheduler/"];
+const HOT_PATH_MODULES: &[&str] = &["data/", "fleet/", "scheduler/", "stream/"];
 
 /// The declared hot-path set for `hot-path-alloc`: the static complement
 /// of `tests/alloc_audit.rs`.  `(file, fn)` pairs; the rule scans the
@@ -96,6 +98,10 @@ pub const HOT_FUNCTIONS: &[(&str, &str)] = &[
     ("scheduler/shard.rs", "worker"),
     ("fleet/queue.rs", "pick_next"),
     ("fleet/sim.rs", "next_event"),
+    ("data/dataset.rs", "fill_batch"),
+    ("data/dataset.rs", "sample_batch_into"),
+    ("stream/spill.rs", "get"),
+    ("stream/source.rs", "fill_sampled_batch"),
 ];
 
 pub const RULES: &[Rule] = &[

@@ -21,16 +21,20 @@
 //! (`skrull e2e --validate`).
 
 use std::fmt::Write as _;
+use std::path::Path;
 use std::time::Instant;
 
 use crate::bench::harness::{finite_values, json_str, require_count, require_top_keys, values_after};
-use crate::cluster::run::{build_run, price_run, RunConfig, RunReport};
+use crate::cluster::run::{
+    build_run, build_run_streamed, price_run, schedule_digest, RunConfig, RunReport,
+};
 use crate::cluster::Topology;
 use crate::config::{CostSource, ExperimentConfig, Policy};
 use crate::data::{Dataset, LengthDistribution};
 use crate::memplan::MemoryConfig;
 use crate::model::ModelSpec;
 use crate::perfmodel::CostModel;
+use crate::stream::{ingest_dataset, IngestReport, StreamConfig, StreamSource};
 use crate::util::error::{Context, Result};
 use crate::util::par;
 use crate::util::stats::Summary;
@@ -95,6 +99,13 @@ pub struct E2eOptions {
     /// counts) emit byte-identical `BENCH_e2e.json`.  For determinism
     /// tests/CI; production sweeps keep real measurements.
     pub deterministic_timing: bool,
+    /// Streaming out-of-core data plane (`--spill-dir`/`--stream-ram-mb`):
+    /// when `stream.enabled()` the sweep spills every truncated workload
+    /// to disk once, then builds each cell through the bounded-RAM page
+    /// cache instead of the in-memory dataset.  Schedules are
+    /// byte-identical either way — the CI gate `cmp`s the two modes'
+    /// `--sched-digest` files.
+    pub stream: StreamConfig,
 }
 
 impl E2eOptions {
@@ -102,7 +113,12 @@ impl E2eOptions {
     pub fn paper_default() -> Self {
         E2eOptions {
             model: ModelSpec::qwen2_5_0_5b(),
-            datasets: vec!["wikipedia".into(), "lmsys".into(), "chatqa2".into()],
+            datasets: vec![
+                "wikipedia".into(),
+                "lmsys".into(),
+                "chatqa2".into(),
+                "bursty-long".into(),
+            ],
             topologies: vec![(4, 8), (2, 16)],
             iterations: 10,
             batch_size: None,
@@ -114,6 +130,7 @@ impl E2eOptions {
             cost: CostSource::Analytic,
             jobs: par::max_threads().max(1),
             deterministic_timing: false,
+            stream: StreamConfig::default(),
         }
     }
 
@@ -151,6 +168,10 @@ pub struct E2eCell {
     pub speedup_mean: f64,
     pub speedup_std: f64,
     pub runs: usize,
+    /// FNV-1a digest over the primary run's schedule bytes
+    /// (`cluster::run::schedule_digest`) — identical for streamed and
+    /// in-memory builds of the same cell
+    pub sched_digest: u64,
 }
 
 /// The whole sweep.
@@ -168,6 +189,10 @@ pub struct E2eSweep {
     /// `deterministic_timing`) — the harness's own speed, tracked across
     /// PRs alongside the numbers it produces
     pub sweep_seconds: f64,
+    /// whether cells were built through the out-of-core data plane
+    pub streamed: bool,
+    /// the page-cache byte budget streamed cells ran under (0 in-memory)
+    pub stream_ram_bytes: u64,
     pub cells: Vec<E2eCell>,
 }
 
@@ -195,6 +220,7 @@ struct CellRun {
     wall: f64,
     batch_size: usize,
     estimator_error: f64,
+    digest: u64,
 }
 
 /// One cell group's shared experiment config (everything but the policy);
@@ -221,7 +247,9 @@ fn cell_config(
 
 /// Build + price one cell: exactly one scheduling pass, however many
 /// pricings the cost source needs.  `ds` arrives already truncated to the
-/// group's resolved capacity.
+/// group's resolved capacity.  When `stream` names a spill file and its
+/// ingest report, the build goes through the out-of-core data plane
+/// instead of `ds` — byte-identical schedules, bounded RAM.
 fn run_cell(
     opts: &E2eOptions,
     ds: &Dataset,
@@ -230,6 +258,7 @@ fn run_cell(
     seed: u64,
     policy: Policy,
     primary: bool,
+    stream: Option<(&str, &IngestReport)>,
 ) -> Result<CellRun> {
     let mut cfg = cell_config(opts, name, (dp, cp), seed);
     cfg.policy = policy;
@@ -245,9 +274,22 @@ fn run_cell(
     // --jobs 1 keeps the scheduler's own fan-out, i.e. today's serial
     // sweep behaves exactly as before the cell fan-out existed.
     run.serial_scheduler = opts.jobs > 1;
-    let mut built = build_run(ds, &cfg, &run).with_context(|| {
-        format!("{} on {name} <DP={dp},CP={cp}> seed {seed}", policy.name())
-    })?;
+    let mut built = match stream {
+        Some((path, ingest)) => {
+            let mut src = StreamSource::open(Path::new(path), &opts.stream)
+                .map_err(|e| crate::anyhow!("opening spill {path}: {e}"))?;
+            build_run_streamed(&mut src, ingest, &cfg, &run).with_context(|| {
+                format!(
+                    "{} on {name} <DP={dp},CP={cp}> seed {seed} (streamed)",
+                    policy.name()
+                )
+            })?
+        }
+        None => build_run(ds, &cfg, &run).with_context(|| {
+            format!("{} on {name} <DP={dp},CP={cp}> seed {seed}", policy.name())
+        })?,
+    };
+    let digest = schedule_digest(&built);
     if opts.deterministic_timing {
         built.pin_sched_seconds(DETERMINISTIC_SCHED_SECONDS);
     }
@@ -268,6 +310,7 @@ fn run_cell(
         batch_size: cfg.cluster.batch_size,
         report,
         estimator_error: estimator_err,
+        digest,
     })
 }
 
@@ -332,6 +375,39 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
     .into_iter()
     .collect::<Result<_>>()?;
 
+    // streaming pre-pass: spill every truncated workload to disk exactly
+    // once, *before* the parallel cell grid — cells then open the store
+    // read-only, so the fan-out stays race-free.  One ingest pass per
+    // (topology, dataset, seed) group carries the reservoir length sketch
+    // and any drift events into every policy cell of that group.
+    let streamed = opts.stream.enabled();
+    let spill_paths: Vec<String> = trunc_keys
+        .iter()
+        .map(|&(ti, di, si)| match &opts.stream.spill_dir {
+            Some(dir) => format!("{dir}/cell-{ti}-{di}-{si}.spill"),
+            None => String::new(),
+        })
+        .collect();
+    let ingests: Vec<Option<IngestReport>> = if streamed {
+        let dir = opts.stream.spill_dir.as_deref().unwrap_or(".");
+        std::fs::create_dir_all(dir).with_context(|| format!("creating spill dir {dir}"))?;
+        par::map_up_to(jobs, &trunc_keys, |_, &(ti, di, si)| {
+            let idx = (ti * nd + di) * ns + si;
+            ingest_dataset(
+                &truncated[idx],
+                Path::new(&spill_paths[idx]),
+                &opts.stream,
+                opts.seeds[si],
+            )
+            .map(Some)
+            .map_err(|e| crate::anyhow!("spilling {}: {e}", spill_paths[idx]))
+        })
+        .into_iter()
+        .collect::<Result<_>>()?
+    } else {
+        (0..trunc_keys.len()).map(|_| None).collect()
+    };
+
     // one job per (topology, dataset, seed, policy), in grid order — the
     // same order the serial reduction below consumes them in
     let cell_jobs: Vec<CellJob> = (0..opts.topologies.len())
@@ -355,14 +431,17 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
     let permuted: Vec<CellJob> = order.iter().map(|&gi| cell_jobs[gi]).collect();
     let permuted_results = par::map_up_to(jobs, &permuted, |_, job| {
         let &CellJob { ti, di, si, pi } = job;
+        let idx = (ti * nd + di) * ns + si;
+        let stream = ingests[idx].as_ref().map(|ing| (spill_paths[idx].as_str(), ing));
         Some(run_cell(
             opts,
-            &truncated[(ti * nd + di) * ns + si],
+            &truncated[idx],
             &opts.datasets[di],
             opts.topologies[ti],
             opts.seeds[si],
             ALL_POLICIES[pi],
             si == 0,
+            stream,
         ))
     });
     let mut results: Vec<Option<Result<CellRun>>> = (0..n_cells).map(|_| None).collect();
@@ -378,7 +457,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
         for name in &opts.datasets {
             let mut walls: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
             let mut speedups: Vec<Summary> = (0..np).map(|_| Summary::new()).collect();
-            let mut primaries: Vec<Option<(RunReport, f64, usize, f64)>> =
+            let mut primaries: Vec<Option<(RunReport, f64, usize, f64, u64)>> =
                 (0..np).map(|_| None).collect();
             for si in 0..ns {
                 let mut baseline_wall = None;
@@ -392,14 +471,14 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                     speedups[pi].push(speedup);
                     if si == 0 {
                         primaries[pi] =
-                            Some((r.report, speedup, r.batch_size, r.estimator_error));
+                            Some((r.report, speedup, r.batch_size, r.estimator_error, r.digest));
                     }
                 }
             }
             for (pi, policy) in ALL_POLICIES.into_iter().enumerate() {
                 // skrull-lint: allow(panic-in-lib) -- si == 0 always populates primaries[pi] above; absence is a bench-harness bug
                 let primary = primaries[pi].take().expect("primary seed ran");
-                let (report, speedup, batch_size, estimator_error) = primary;
+                let (report, speedup, batch_size, estimator_error, sched_digest) = primary;
                 cells.push(E2eCell {
                     policy,
                     dataset: name.clone(),
@@ -414,6 +493,7 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
                     speedup_mean: speedups[pi].mean(),
                     speedup_std: speedups[pi].std(),
                     runs: ns,
+                    sched_digest,
                 });
             }
         }
@@ -430,6 +510,8 @@ pub fn run_sweep(opts: &E2eOptions) -> Result<E2eSweep> {
         } else {
             t_sweep.elapsed().as_secs_f64()
         },
+        streamed,
+        stream_ram_bytes: if streamed { opts.stream.budget_bytes() } else { 0 },
         cells,
     })
 }
@@ -456,13 +538,15 @@ pub fn render_json(sweep: &E2eSweep) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"bench\": \"e2e\",");
-    let _ = writeln!(out, "  \"schema_version\": 4,");
+    let _ = writeln!(out, "  \"schema_version\": 5,");
     let _ = writeln!(out, "  \"model\": \"{}\",", json_str(&sweep.model));
     let _ = writeln!(out, "  \"iterations\": {},", sweep.iterations);
     let _ = writeln!(out, "  \"pipelined\": {},", sweep.pipelined);
     let _ = writeln!(out, "  \"epoch\": {},", sweep.epoch);
     let _ = writeln!(out, "  \"cost_source\": \"{}\",", json_str(&sweep.cost_source));
     let _ = writeln!(out, "  \"sweep_seconds\": {:e},", sweep.sweep_seconds);
+    let _ = writeln!(out, "  \"streamed\": {},", sweep.streamed);
+    let _ = writeln!(out, "  \"stream_ram_bytes\": {},", sweep.stream_ram_bytes);
     let seeds: Vec<String> = sweep.seeds.iter().map(|s| s.to_string()).collect();
     let _ = writeln!(out, "  \"seeds\": [{}],", seeds.join(", "));
     out.push_str("  \"cells\": [\n");
@@ -481,7 +565,8 @@ pub fn render_json(sweep: &E2eSweep) -> String {
              \"effective_utilization\": {:.4}, \"sched_overhead_fraction\": {:e}, \
              \"padding_fraction\": {:.4}, \"peak_mem_fraction\": {:.6}, \
              \"oom_count\": {}, \"dp_imbalance\": {:.4}, \"micro_batches\": {}, \
-             \"sched_invocations\": {}}}{}",
+             \"sched_invocations\": {}, \"drift_events\": {}, \
+             \"peak_stream_rss_bytes\": {}, \"sched_digest\": \"{:016x}\"}}{}",
             json_str(c.policy.name()),
             json_str(&c.dataset),
             c.dp,
@@ -509,6 +594,9 @@ pub fn render_json(sweep: &E2eSweep) -> String {
             r.mean_dp_imbalance(),
             r.total_micro_batches(),
             r.sched_invocations,
+            r.drift_events,
+            r.peak_stream_rss_bytes,
+            c.sched_digest,
             if i + 1 == sweep.cells.len() { "" } else { "," }
         );
     }
@@ -516,8 +604,31 @@ pub fn render_json(sweep: &E2eSweep) -> String {
     out
 }
 
+/// Render the per-cell schedule digests as a stable text file, one line
+/// per cell in grid order.  A streamed sweep and an in-memory sweep of
+/// the same grid produce *identical* files — the CI byte-identity gate
+/// `cmp`s these rather than the full JSONs, which legitimately differ in
+/// the stream-only accounting fields (`drift_events`,
+/// `peak_stream_rss_bytes`, `streamed`).
+pub fn render_digests(sweep: &E2eSweep) -> String {
+    let mut out = String::new();
+    out.push_str("# e2e schedule digests v1\n");
+    for c in &sweep.cells {
+        let _ = writeln!(
+            out,
+            "{} {} dp{} cp{} {:016x}",
+            c.policy.name(),
+            c.dataset,
+            c.dp,
+            c.cp,
+            c.sched_digest
+        );
+    }
+    out
+}
+
 /// Top-level keys every `BENCH_e2e.json` must carry.
-const REQUIRED_TOP_KEYS: [&str; 9] = [
+const REQUIRED_TOP_KEYS: [&str; 11] = [
     "\"bench\"",
     "\"schema_version\"",
     "\"model\"",
@@ -526,11 +637,13 @@ const REQUIRED_TOP_KEYS: [&str; 9] = [
     "\"epoch\"",
     "\"cost_source\"",
     "\"sweep_seconds\"",
+    "\"streamed\"",
+    "\"stream_ram_bytes\"",
     "\"cells\"",
 ];
 
 /// Per-cell keys; the numeric ones are additionally checked for finiteness.
-const REQUIRED_CELL_KEYS: [&str; 16] = [
+const REQUIRED_CELL_KEYS: [&str; 19] = [
     "policy",
     "dataset",
     "dp",
@@ -547,6 +660,9 @@ const REQUIRED_CELL_KEYS: [&str; 16] = [
     "speedup_std",
     "peak_mem_fraction",
     "sched_invocations",
+    "drift_events",
+    "peak_stream_rss_bytes",
+    "sched_digest",
 ];
 
 const FINITE_CELL_KEYS: [&str; 10] = [
@@ -567,21 +683,25 @@ const FINITE_CELL_KEYS: [&str; 10] = [
 pub const CALIBRATED_ESTIMATOR_ERROR_MAX: f64 = 0.05;
 
 /// CI gate: does `text` look like a complete, sane `BENCH_e2e.json`?
-/// Checks required top-level and per-cell keys (schema v4: `sweep_seconds`
-/// and per-cell `sched_invocations`), rejects non-finite (or unparsable)
-/// values for every speedup/time/utilization/memory field, and enforces
-/// two consistency rules: an OOM-free cell must report
-/// `peak_mem_fraction` in (0, 1], and — the build-once guarantee — every
+/// Checks required top-level and per-cell keys (schema v5: top-level
+/// `streamed`/`stream_ram_bytes`, per-cell `drift_events`/
+/// `peak_stream_rss_bytes`/`sched_digest`), rejects non-finite (or
+/// unparsable) values for every speedup/time/utilization/memory field,
+/// and enforces the consistency rules: an OOM-free cell must report
+/// `peak_mem_fraction` in (0, 1]; the build-once guarantee — every
 /// non-epoch cell's `sched_invocations` must equal the sweep's iteration
-/// count exactly (one GDS/DACP pass per played iteration, no 2x work).
+/// count exactly (one GDS/DACP pass per played iteration, no 2x work);
+/// and the bounded-RAM guarantee — a streamed sweep's per-cell page-cache
+/// peak must be positive and within the declared byte budget, while an
+/// in-memory sweep must report it as exactly 0.
 pub fn validate_json(text: &str) -> Result<()> {
     require_top_keys(text, &REQUIRED_TOP_KEYS)?;
-    // schema v4 or later
+    // schema v5 or later
     let version: u64 = values_after(text, "schema_version")
         .first()
         .and_then(|v| v.parse().ok())
         .ok_or_else(|| crate::anyhow!("unparsable schema_version"))?;
-    crate::ensure!(version >= 4, "schema_version {version} predates v4");
+    crate::ensure!(version >= 5, "schema_version {version} predates v5");
     let sweep_s: f64 = values_after(text, "sweep_seconds")
         .first()
         .and_then(|v| v.parse().ok())
@@ -614,6 +734,41 @@ pub fn validate_json(text: &str) -> Result<()> {
             crate::ensure!(
                 frac > 0.0 && frac <= 1.0,
                 "cell {i}: peak_mem_fraction {frac} outside (0, 1] with no OOM flagged"
+            );
+        }
+    }
+    // streaming consistency: drift/RSS accounting is a u64 per cell; a
+    // streamed sweep's page cache must actually have resident frames
+    // (peak > 0) and stay within the declared byte budget — the
+    // bounded-RAM acceptance criterion as a validator rule — while an
+    // in-memory sweep must report exactly 0
+    let streamed = values_after(text, "streamed")
+        .first()
+        .map(|v| *v == "true")
+        .unwrap_or(false);
+    let ram_bytes: u64 = values_after(text, "stream_ram_bytes")
+        .first()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| crate::anyhow!("unparsable stream_ram_bytes"))?;
+    for (i, v) in values_after(text, "drift_events").iter().enumerate() {
+        let _: u64 = v.parse().map_err(|_| {
+            crate::anyhow!("cell {i}: \"drift_events\" value {v:?} is not an integer")
+        })?;
+    }
+    for (i, v) in values_after(text, "peak_stream_rss_bytes").iter().enumerate() {
+        let peak: u64 = v.parse().map_err(|_| {
+            crate::anyhow!("cell {i}: \"peak_stream_rss_bytes\" value {v:?} is not an integer")
+        })?;
+        if streamed {
+            crate::ensure!(peak > 0, "cell {i}: streamed sweep with peak_stream_rss_bytes = 0");
+            crate::ensure!(
+                peak <= ram_bytes,
+                "cell {i}: peak_stream_rss_bytes {peak} exceeds stream_ram_bytes {ram_bytes}"
+            );
+        } else {
+            crate::ensure!(
+                peak == 0,
+                "cell {i}: in-memory sweep reports peak_stream_rss_bytes {peak}"
             );
         }
     }
@@ -693,7 +848,13 @@ mod tests {
             cost: CostSource::Analytic,
             jobs: 1,
             deterministic_timing: false,
+            stream: StreamConfig::default(),
         }
+    }
+
+    fn temp_spill_dir(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("skrull-e2e-{tag}-{}", std::process::id()));
+        dir.to_string_lossy().into_owned()
     }
 
     #[test]
@@ -880,16 +1041,34 @@ mod tests {
         let broken = json.replacen("\"oom_count\": 0", "\"oom_count\": 0.5", 1);
         assert_ne!(broken, json, "mutation must apply");
         assert!(validate_json(&broken).is_err());
-        // schema v4: cost_source, sweep_seconds and sched_invocations are
-        // mandatory, and the version itself is gated
-        assert!(json.contains("\"schema_version\": 4"));
+        // schema v5: cost_source, sweep_seconds, sched_invocations and the
+        // streaming fields are mandatory, and the version itself is gated
+        assert!(json.contains("\"schema_version\": 5"));
         assert!(json.contains("\"cost_source\": \"analytic\""));
         assert!(json.contains("\"sweep_seconds\""));
+        assert!(json.contains("\"streamed\": false"));
+        assert!(json.contains("\"stream_ram_bytes\": 0"));
         let broken = json.replace("\"estimator_error\"", "\"est_err\"");
         assert!(validate_json(&broken).is_err());
         let broken = json.replace("\"cost_source\"", "\"cost_src\"");
         assert!(validate_json(&broken).is_err());
-        let broken = json.replace("\"schema_version\": 4", "\"schema_version\": 3");
+        let broken = json.replace("\"schema_version\": 5", "\"schema_version\": 4");
+        assert!(validate_json(&broken).is_err());
+        // streaming consistency rules: the fields are mandatory, an
+        // in-memory sweep must report zero peaks, and a streamed flag with
+        // zero peaks is inconsistent
+        let broken = json.replace("\"drift_events\"", "\"drift_evs\"");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replace("\"sched_digest\"", "\"digest\"");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replacen(
+            "\"peak_stream_rss_bytes\": 0",
+            "\"peak_stream_rss_bytes\": 17",
+            1,
+        );
+        assert_ne!(broken, json, "mutation must apply");
+        assert!(validate_json(&broken).is_err());
+        let broken = json.replace("\"streamed\": false", "\"streamed\": true");
         assert!(validate_json(&broken).is_err());
         let broken = json.replace("\"sweep_seconds\"", "\"sweep_secs\"");
         assert!(validate_json(&broken).is_err());
@@ -928,6 +1107,42 @@ mod tests {
             1,
         );
         assert!(validate_json(&negative).is_err());
+    }
+
+    #[test]
+    fn streamed_sweep_is_byte_identical_to_in_memory_and_bounded() {
+        // the headline acceptance criterion, cell-grid edition: a sweep
+        // built through the disk-spilled page cache emits the exact same
+        // schedule digests as the in-memory sweep, at bounded RAM
+        let mut o = tiny_opts();
+        o.deterministic_timing = true;
+        let in_memory = run_sweep(&o).unwrap();
+        let mut s = o.clone();
+        s.stream.spill_dir = Some(temp_spill_dir("digest"));
+        s.stream.ram_mb = 1;
+        let streamed = run_sweep(&s).unwrap();
+        assert!(streamed.streamed && !in_memory.streamed);
+        // identical digest files — what the CI gate cmp's
+        assert_eq!(render_digests(&in_memory), render_digests(&streamed));
+        // per-cell digests and full run accounting agree
+        for (a, b) in in_memory.cells.iter().zip(&streamed.cells) {
+            assert_eq!(a.sched_digest, b.sched_digest, "{}", a.policy.name());
+            assert_eq!(a.report.data_tokens, b.report.data_tokens);
+            assert_eq!(a.report.exec_seconds, b.report.exec_seconds);
+            assert_eq!(a.report.sched_invocations, b.report.sched_invocations);
+            // bounded RAM: the page cache stayed within its byte budget
+            assert_eq!(a.report.peak_stream_rss_bytes, 0);
+            assert!(b.report.peak_stream_rss_bytes > 0);
+            assert!(b.report.peak_stream_rss_bytes <= s.stream.budget_bytes());
+        }
+        let json = render_json(&streamed);
+        assert!(json.contains("\"streamed\": true"));
+        validate_json(&json).unwrap();
+        // ... and the streamed file still validates in-memory too
+        validate_json(&render_json(&in_memory)).unwrap();
+        if let Some(dir) = &s.stream.spill_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
     }
 
     #[test]

@@ -18,6 +18,9 @@
 //!   for traces and profiles.
 //! * [`report`] — residual report + the `skrull calibrate --validate`
 //!   gate.
+//! * [`recal`] — the streaming data plane's drift → recalibration hook:
+//!   turns a `stream::DriftEvent`'s post-shift sketch into fresh capacity
+//!   accounting (never into schedule changes).
 //!
 //! The loop is self-validating: calibrating on a trace emitted by the
 //! analytic simulator reproduces the analytic model's per-iteration
@@ -27,6 +30,7 @@
 
 pub mod fit;
 pub mod profile_io;
+pub mod recal;
 pub mod report;
 pub mod trace;
 

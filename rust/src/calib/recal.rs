@@ -1,0 +1,90 @@
+//! Drift → recalibration hook.
+//!
+//! A `stream::DriftEvent` means the length mix that the capacity plan and
+//! the cost estimator were calibrated against no longer describes the
+//! corpus: the `estimator_error` trajectory will start to climb.  This
+//! module turns the detector's post-shift window sketch into fresh
+//! *accounting* quantities — quantiles, mean length, a suggested bucket
+//! size — that capacity/estimator consumers can adopt.  It never perturbs
+//! schedules: by the streaming byte-identity invariant, schedules depend
+//! only on the data and the seed, so recalibration is observable in
+//! reports (and in a future re-fit of the calibrated profile) but not in
+//! placement.
+
+use crate::stream::reservoir::LengthSketch;
+
+/// Granularity for `suggested_bucket` (matches the KiB-aligned bucket
+/// sizes used throughout the configs).
+const BUCKET_ALIGN: u64 = 1024;
+
+/// Fresh capacity accounting derived from a post-drift sketch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recalibration {
+    /// Sequences ingested when the triggering window closed.
+    pub at: u64,
+    pub p50: u32,
+    pub p90: u32,
+    pub p99: u32,
+    pub mean_len: f64,
+    /// Smallest KiB-aligned bucket that holds the new mix's p99 — the
+    /// quantity a capacity planner would re-derive after the shift.
+    pub suggested_bucket: u32,
+}
+
+/// Derive recalibrated accounting from the shifted window's sketch.
+pub fn recalibrate(at: u64, sketch: &LengthSketch) -> Recalibration {
+    let p99 = sketch.quantile(0.99);
+    let aligned = (p99 as u64).max(1).div_ceil(BUCKET_ALIGN) * BUCKET_ALIGN;
+    Recalibration {
+        at,
+        p50: sketch.quantile(0.5),
+        p90: sketch.quantile(0.9),
+        p99,
+        mean_len: sketch.mean(),
+        // skrull-lint: allow(truncating-cast) -- p99 is a u32 length, so its KiB round-up fits u32 (lengths are capped well below u32::MAX)
+        suggested_bucket: aligned as u32,
+    }
+}
+
+impl Recalibration {
+    /// Expected padded tokens for a batch of `batch_size` sequences under
+    /// the new mix if every sequence were padded to `suggested_bucket` —
+    /// the pessimistic bound the pre-Skrull baseline would pay, useful as
+    /// a "how much does scheduling matter now" indicator after a shift.
+    pub fn padded_tokens_per_batch(&self, batch_size: usize) -> u64 {
+        self.suggested_bucket as u64 * batch_size as u64
+    }
+
+    /// Mean data tokens per batch under the new mix (the numerator of the
+    /// post-shift padding-efficiency estimate).
+    pub fn data_tokens_per_batch(&self, batch_size: usize) -> f64 {
+        self.mean_len * batch_size as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recalibration_tracks_the_sketch() {
+        let sketch = LengthSketch::from_lengths(&[100, 200, 300, 4000, 5000]);
+        let rc = recalibrate(500, &sketch);
+        assert_eq!(rc.at, 500);
+        assert_eq!(rc.p50, 300);
+        assert_eq!(rc.p99, 5000);
+        assert_eq!(rc.suggested_bucket, 5 * 1024);
+        assert!((rc.mean_len - 1920.0).abs() < 1e-9);
+        assert_eq!(rc.padded_tokens_per_batch(8), 8 * 5 * 1024);
+        assert!((rc.data_tokens_per_batch(8) - 15360.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn suggested_bucket_is_kib_aligned_and_positive() {
+        let sketch = LengthSketch::from_lengths(&[1]);
+        let rc = recalibrate(1, &sketch);
+        assert_eq!(rc.suggested_bucket, 1024);
+        let sketch = LengthSketch::from_lengths(&[1025]);
+        assert_eq!(recalibrate(1, &sketch).suggested_bucket, 2048);
+    }
+}

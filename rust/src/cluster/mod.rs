@@ -10,8 +10,9 @@ pub mod topology;
 pub mod trace;
 
 pub use run::{
-    build_run, price_run, price_run_traced, simulate_run, simulate_run_traced, BatchSource,
-    BuiltIteration, BuiltRun, IterationRecord, LoaderMode, RunConfig, RunReport,
+    build_run, build_run_streamed, price_run, price_run_traced, schedule_digest, simulate_run,
+    simulate_run_traced, BatchSource, BuiltIteration, BuiltRun, IterationRecord, LoaderMode,
+    RunConfig, RunReport,
 };
 pub use sim::{simulate_iteration, simulate_iteration_on, IterationSim, MicroBatchSim};
 pub use topology::Topology;

@@ -46,7 +46,9 @@ use crate::data::loader::ScheduledLoader;
 use crate::data::{Dataset, Sequence};
 use crate::memplan::{self, CapacitySource, IterationMemory, MemPlan, OomEvent};
 use crate::perfmodel::CostModel;
+use crate::rng::Rng;
 use crate::scheduler::plan::{IterationSchedule, MicroBatch, SchedError};
+use crate::stream::{IngestReport, SpillError, StreamSource};
 
 use super::sim::{simulate_iteration, simulate_iteration_on, IterationSim};
 
@@ -74,9 +76,9 @@ pub enum BatchSource {
     /// `RunConfig::iterations` i.i.d. batches sampled with replacement
     /// (the paper's iteration-time measurements).
     Sampled,
-    /// One full shuffled epoch via `Dataset::epoch_batches` — every
-    /// sequence exactly once; the iteration count is the epoch length and
-    /// `RunConfig::iterations` is ignored.
+    /// One full shuffled epoch via `Dataset::epoch_order` — every
+    /// sequence exactly once, chunked lazily into batches; the iteration
+    /// count is the epoch length and `RunConfig::iterations` is ignored.
     Epoch,
 }
 
@@ -156,6 +158,14 @@ pub struct BuiltRun {
     /// GDS/DACP passes the loader performed building this run — pricing
     /// performs none, so this is the run's *total* scheduling work
     pub sched_invocations: usize,
+    /// drift events the streaming ingest recorded for this run's corpus —
+    /// 0 for in-memory builds.  Accounting only: drift never changes the
+    /// schedules (the byte-identity invariant)
+    pub drift_events: u64,
+    /// page-cache high-water of the stream source that fed this run
+    /// (bytes; deterministic frame accounting, not OS RSS) — 0 for
+    /// in-memory builds, ≤ the configured budget for streamed ones
+    pub peak_stream_rss_bytes: u64,
 }
 
 impl BuiltRun {
@@ -234,6 +244,10 @@ pub struct RunReport {
     /// GDS/DACP passes performed building this run's schedules — exactly
     /// one per played iteration; repricing the same [`BuiltRun`] adds none
     pub sched_invocations: usize,
+    /// drift events the streaming ingest recorded (0 for in-memory runs)
+    pub drift_events: u64,
+    /// stream page-cache high-water in bytes (0 for in-memory runs)
+    pub peak_stream_rss_bytes: u64,
 }
 
 impl RunReport {
@@ -493,58 +507,43 @@ pub fn build_run(
     };
     let mem = cfg.mem_plan();
     let (bucket_size, cp) = (cfg.bucket_size, cfg.cluster.cp);
-    let epoch_batches = match run.source {
-        BatchSource::Epoch => Some(ds.epoch_batches(cfg.cluster.batch_size, cfg.seed)),
+    let batch_size = cfg.cluster.batch_size;
+    // lazy epoch: O(dataset) shuffled ids with one scratch batch in
+    // flight, never the whole epoch's materialized batch list.  The
+    // shuffle and chunking are `Dataset::epoch_batches`' exactly, so
+    // the schedules are byte-identical to the old materialized path
+    // (pinned by `lazy_epoch_build_matches_materialized_batches`).
+    let epoch_order = match run.source {
+        BatchSource::Epoch => Some(ds.epoch_order(cfg.seed)),
         BatchSource::Sampled => None,
     };
-    let iterations = epoch_batches.as_ref().map_or(run.iterations, Vec::len);
+    let iterations = epoch_order
+        .as_ref()
+        .map_or(run.iterations, |o| o.len().div_ceil(batch_size.max(1)));
     let mut built: Vec<BuiltIteration> = Vec::with_capacity(iterations);
     let sched_invocations;
     {
-        // capture the iteration plus every cost-model-independent piece of
-        // accounting (padding, token sums, memory simulation) so pricing
-        // passes never recompute them
         let mut capture = |i: usize, batch: &[Sequence], sched: &IterationSchedule, sched_s: f64| {
-            let mut padded = 0u64;
-            let mut bucket = 0u64;
-            let mut n_mb = 0usize;
-            for rank in &sched.ranks {
-                for mb in &rank.micro_batches {
-                    let (p, b) = micro_batch_padding(mb, bucket_size, cp);
-                    padded += p;
-                    bucket += b;
-                    n_mb += 1;
-                }
-            }
-            built.push(BuiltIteration {
-                batch: batch.to_vec(),
-                schedule: sched.clone(),
-                sched_seconds: sched_s,
-                data_tokens: batch.iter().map(|s| s.len as u64).sum(),
-                padded_tokens: padded,
-                bucket_tokens: bucket,
-                micro_batches: n_mb,
-                memory: memplan::iteration_memory(sched, &mem, bucket_size, cp, i),
-            });
+            built.push(capture_iteration(i, batch, sched, sched_s, &mem, bucket_size, cp));
         };
         let mut loader = ScheduledLoader::new(ds, &cfg);
         loader.sched_parallel = !run.serial_scheduler;
-        sched_invocations = match (run.mode, &epoch_batches) {
+        sched_invocations = match (run.mode, &epoch_order) {
             (LoaderMode::Synchronous, None) => {
                 let mut loader = loader;
                 loader.run_synchronous(iterations, &mut capture)?;
                 loader.sched_invocations
             }
-            (LoaderMode::Synchronous, Some(batches)) => {
+            (LoaderMode::Synchronous, Some(order)) => {
                 let mut loader = loader;
-                loader.run_synchronous_batches(batches, &mut capture)?;
+                loader.run_synchronous_order(order, batch_size, &mut capture)?;
                 loader.sched_invocations
             }
             (LoaderMode::Pipelined, None) => {
                 loader.run_pipelined(iterations, &mut capture)?.sched_invocations
             }
-            (LoaderMode::Pipelined, Some(batches)) => {
-                loader.run_pipelined_batches(batches, &mut capture)?.sched_invocations
+            (LoaderMode::Pipelined, Some(order)) => {
+                loader.run_pipelined_order(order, batch_size, &mut capture)?.sched_invocations
             }
         };
     }
@@ -558,7 +557,167 @@ pub fn build_run(
         mem,
         iterations: built,
         sched_invocations,
+        drift_events: 0,
+        peak_stream_rss_bytes: 0,
     })
+}
+
+/// Capture one scheduled iteration plus every cost-model-independent
+/// piece of accounting (padding, token sums, memory simulation) so
+/// pricing passes never recompute them.  Shared by [`build_run`] and
+/// [`build_run_streamed`]: both builders produce the same
+/// [`BuiltIteration`] for the same batch/schedule pair, which is what
+/// makes the spilled-vs-in-memory byte-identity testable at the
+/// `BuiltRun` level.
+fn capture_iteration(
+    i: usize,
+    batch: &[Sequence],
+    sched: &IterationSchedule,
+    sched_s: f64,
+    mem: &MemPlan,
+    bucket_size: u32,
+    cp: usize,
+) -> BuiltIteration {
+    let mut padded = 0u64;
+    let mut bucket = 0u64;
+    let mut n_mb = 0usize;
+    for rank in &sched.ranks {
+        for mb in &rank.micro_batches {
+            let (p, b) = micro_batch_padding(mb, bucket_size, cp);
+            padded += p;
+            bucket += b;
+            n_mb += 1;
+        }
+    }
+    BuiltIteration {
+        batch: batch.to_vec(),
+        schedule: sched.clone(),
+        sched_seconds: sched_s,
+        data_tokens: batch.iter().map(|s| s.len as u64).sum(),
+        padded_tokens: padded,
+        bucket_tokens: bucket,
+        micro_batches: n_mb,
+        memory: memplan::iteration_memory(sched, mem, bucket_size, cp, i),
+    }
+}
+
+/// [`build_run`] against a spilled corpus: batches are resolved through
+/// the stream source's bounded-RAM page cache instead of a materialized
+/// [`Dataset`], replaying the in-memory path's RNG draws exactly — one
+/// `rng.below(n)` per sampled slot, the same seeded Fisher-Yates epoch
+/// shuffle — so the resulting schedules are byte-identical to
+/// [`build_run`]'s (pinned by `rust/tests/stream.rs` and the CI
+/// schedule-digest cmp gate).
+///
+/// The loader is driven synchronously regardless of `run.mode`: the page
+/// cache already decouples batch production from disk, and pipelined and
+/// synchronous builds are byte-identical by construction.  `run.mode` is
+/// still recorded on the [`BuiltRun`], so pricing's overhead-exposure
+/// semantics are unchanged.
+///
+/// `ingest` carries what the one-pass ingestion learned about the corpus
+/// (drift events, length sketch) into the run's accounting — never into
+/// its schedules.
+pub fn build_run_streamed(
+    src: &mut StreamSource,
+    ingest: &IngestReport,
+    cfg: &ExperimentConfig,
+    run: &RunConfig,
+) -> Result<BuiltRun, SchedError> {
+    let cfg = cfg.resolve_capacity()?;
+    let topology = match cfg.cluster.topology() {
+        Ok(t) => t,
+        Err(e) => return Err(SchedError::BadTopology { reason: e.to_string() }),
+    };
+    let mem = cfg.mem_plan();
+    let (bucket_size, cp) = (cfg.bucket_size, cfg.cluster.cp);
+    let batch_size = cfg.cluster.batch_size.max(1);
+    let epoch_order = match run.source {
+        BatchSource::Epoch => Some(src.epoch_order(cfg.seed)),
+        BatchSource::Sampled => None,
+    };
+    let iterations = epoch_order
+        .as_ref()
+        .map_or(run.iterations, |o| o.len().div_ceil(batch_size));
+    // the loader only schedules here (batches come from the stream), so
+    // it wraps an empty placeholder dataset; its sampling RNG is never
+    // drawn from — the replayed draw stream below is the authoritative one
+    let placeholder = Dataset { name: src.name().to_string(), lengths: Vec::new() };
+    let mut loader = ScheduledLoader::new(&placeholder, &cfg);
+    loader.sched_parallel = !run.serial_scheduler;
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut batch: Vec<Sequence> = Vec::with_capacity(batch_size);
+    let mut built: Vec<BuiltIteration> = Vec::with_capacity(iterations);
+    let stream_err = |e: SpillError| SchedError::Stream { reason: e.to_string() };
+    for i in 0..iterations {
+        match &epoch_order {
+            Some(order) => {
+                let lo = i * batch_size;
+                let hi = (lo + batch_size).min(order.len());
+                src.fill_batch_from_ids(&order[lo..hi], &mut batch)
+                    .map_err(stream_err)?;
+            }
+            None => src
+                .fill_sampled_batch(&mut rng, batch_size, &mut batch)
+                .map_err(stream_err)?,
+        }
+        let sched = loader.schedule_batch(&batch)?;
+        built.push(capture_iteration(
+            i,
+            &batch,
+            &sched,
+            loader.last_sched_seconds(),
+            &mem,
+            bucket_size,
+            cp,
+        ));
+    }
+    Ok(BuiltRun {
+        dp: cfg.cluster.dp,
+        cp,
+        bucket_size,
+        mode: run.mode,
+        capacity_source: cfg.memory.source,
+        topology,
+        mem,
+        iterations: built,
+        sched_invocations: loader.sched_invocations,
+        drift_events: ingest.drift_events.len() as u64,
+        peak_stream_rss_bytes: src.peak_resident_bytes(),
+    })
+}
+
+/// Order-sensitive FNV-1a digest over everything schedule-shaped in a
+/// built run: each iteration's global batch (ids + lengths) and every
+/// micro-batch's sequence list and DACP assignment.  Streamed and
+/// in-memory builds of the same configuration hash identically; the CI
+/// byte-identity gate `cmp`s digest files rather than full reports,
+/// because the reports legitimately differ in the stream-only accounting
+/// fields (`drift_events`, `peak_stream_rss_bytes`).
+pub fn schedule_digest(built: &BuiltRun) -> u64 {
+    let mut bytes: Vec<u8> = Vec::new();
+    for (i, it) in built.iterations.iter().enumerate() {
+        bytes.extend_from_slice(&(i as u64).to_le_bytes());
+        bytes.extend_from_slice(&(it.batch.len() as u64).to_le_bytes());
+        for s in &it.batch {
+            bytes.extend_from_slice(&s.id.to_le_bytes());
+            bytes.extend_from_slice(&s.len.to_le_bytes());
+        }
+        for rank in &it.schedule.ranks {
+            bytes.extend_from_slice(&(rank.micro_batches.len() as u64).to_le_bytes());
+            for mb in &rank.micro_batches {
+                bytes.extend_from_slice(&(mb.seqs.len() as u64).to_le_bytes());
+                for s in &mb.seqs {
+                    bytes.extend_from_slice(&s.id.to_le_bytes());
+                    bytes.extend_from_slice(&s.len.to_le_bytes());
+                }
+                for &a in &mb.plan.assign {
+                    bytes.extend_from_slice(&a.to_le_bytes());
+                }
+            }
+        }
+    }
+    crate::coordinator::state::fnv1a(&bytes)
 }
 
 /// Price a [`BuiltRun`] under a cost model on a topology: pure,
@@ -688,6 +847,8 @@ fn price_run_impl(
         rank_peak_bytes: rank_peak,
         oom_events,
         sched_invocations: built.sched_invocations,
+        drift_events: built.drift_events,
+        peak_stream_rss_bytes: built.peak_stream_rss_bytes,
     }
 }
 
@@ -959,6 +1120,34 @@ mod tests {
         let again = simulate_run(&ds, &cfg, &cost, &RunConfig::epoch(true)).unwrap();
         assert_eq!(again.data_tokens, r.data_tokens);
         assert_eq!(again.exec_seconds, r.exec_seconds);
+    }
+
+    #[test]
+    fn lazy_epoch_build_matches_materialized_batches() {
+        // Regression for the O(dataset) epoch materialization: the lazy
+        // epoch_order + scratch-batch driver must reproduce the old
+        // epoch_batches path byte for byte — batches, schedules, digests.
+        let (ds, mut cfg, _cost) = setup(Policy::Skrull);
+        cfg.cluster.batch_size = 16;
+        let built = build_run(&ds, &cfg, &RunConfig::epoch(false)).unwrap();
+        let batches = ds.epoch_batches(cfg.cluster.batch_size, cfg.seed);
+        let resolved = cfg.resolve_capacity().unwrap();
+        let mut old: Vec<(Vec<Sequence>, IterationSchedule)> = Vec::new();
+        let mut loader = ScheduledLoader::new(&ds, &resolved);
+        loader
+            .run_synchronous_batches(&batches, |_, b, s, _| old.push((b.to_vec(), s.clone())))
+            .unwrap();
+        assert_eq!(built.iterations.len(), old.len());
+        for (it, (b, s)) in built.iterations.iter().zip(&old) {
+            assert_eq!(&it.batch, b);
+            assert_eq!(&it.schedule, s);
+        }
+        // the digest sees the same bytes regardless of driver
+        let again = build_run(&ds, &cfg, &RunConfig::epoch(true)).unwrap();
+        assert_eq!(schedule_digest(&built), schedule_digest(&again));
+        // in-memory builds carry zeroed stream accounting
+        assert_eq!(built.drift_events, 0);
+        assert_eq!(built.peak_stream_rss_bytes, 0);
     }
 
     #[test]

@@ -199,6 +199,12 @@ pub struct ExperimentConfig {
     /// Byte-identical to fresh scheduling — reuse is gated on exact
     /// equality of lengths, model and knobs.
     pub incremental: bool,
+    /// Streaming out-of-core data plane (`[stream]` table, `--spill-dir` /
+    /// `--stream-ram-mb`): disk-spilled sequence store with a bounded-RAM
+    /// page cache, reservoir length-sketching and drift-triggered
+    /// recalibration (see `stream`).  Disabled unless `spill_dir` is set;
+    /// schedules are byte-identical spilled or in-memory.
+    pub stream: crate::stream::StreamConfig,
 }
 
 impl ExperimentConfig {
@@ -227,6 +233,7 @@ impl ExperimentConfig {
             jobs: crate::util::par::max_threads().max(1),
             shards: 1,
             incremental: false,
+            stream: crate::stream::StreamConfig::default(),
         }
     }
 
@@ -361,6 +368,28 @@ impl ExperimentConfig {
             cfg.cost = CostSource::calibrated(path)?;
             cfg.cost.ensure_model(cfg.model.name)?;
         }
+        // [stream]: the out-of-core data plane is off unless a spill
+        // directory is named (same convention as the CLI's --spill-dir)
+        if let Some(v) = t.get("stream.spill_dir") {
+            let dir = v
+                .as_str()
+                .ok_or_else(|| crate::anyhow!("stream.spill_dir must be a string path"))?;
+            cfg.stream.spill_dir = Some(dir.to_string());
+        }
+        cfg.stream.ram_mb = checked_int(t, "stream.ram_mb", cfg.stream.ram_mb)?;
+        crate::ensure!(cfg.stream.ram_mb > 0, "stream.ram_mb must be positive");
+        cfg.stream.page_len = checked_int(t, "stream.page_len", cfg.stream.page_len)?;
+        crate::ensure!(cfg.stream.page_len > 0, "stream.page_len must be positive");
+        cfg.stream.reservoir_shards =
+            checked_int(t, "stream.reservoir_shards", cfg.stream.reservoir_shards)?;
+        cfg.stream.reservoir_per_shard =
+            checked_int(t, "stream.reservoir_per_shard", cfg.stream.reservoir_per_shard)?;
+        cfg.stream.drift_window = checked_int(t, "stream.drift_window", cfg.stream.drift_window)?;
+        cfg.stream.drift_threshold = t.f64_or("stream.drift_threshold", cfg.stream.drift_threshold);
+        crate::ensure!(
+            cfg.stream.drift_threshold > 0.0 && cfg.stream.drift_threshold.is_finite(),
+            "stream.drift_threshold must be a positive number"
+        );
         Ok(cfg)
     }
 
@@ -539,6 +568,47 @@ epoch = true
         let t = toml::parse("[cluster]\nnodes = 2\n[memory]\nhbm_gb = [80.0, 40.0]\n").unwrap();
         let c = ExperimentConfig::from_table(&t).unwrap();
         assert_eq!(c.memory.effective_hbm_gb(), 40.0);
+    }
+
+    #[test]
+    fn stream_table_parses_and_defaults_to_disabled() {
+        let t = toml::parse(
+            r#"
+[stream]
+spill_dir = "/tmp/skrull-spill"
+ram_mb = 8
+page_len = 512
+reservoir_shards = 4
+reservoir_per_shard = 128
+drift_window = 256
+drift_threshold = 0.5
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert!(c.stream.enabled());
+        assert_eq!(c.stream.spill_dir.as_deref(), Some("/tmp/skrull-spill"));
+        assert_eq!(c.stream.ram_mb, 8);
+        assert_eq!(c.stream.budget_bytes(), 8 * 1024 * 1024);
+        assert_eq!(c.stream.page_len, 512);
+        assert_eq!(c.stream.reservoir_shards, 4);
+        assert_eq!(c.stream.reservoir_per_shard, 128);
+        assert_eq!(c.stream.drift_window, 256);
+        assert_eq!(c.stream.drift_threshold, 0.5);
+        // absent: disabled, defaults intact
+        let d = ExperimentConfig::from_table(&toml::parse("").unwrap()).unwrap();
+        assert!(!d.stream.enabled());
+        assert_eq!(d.stream, crate::stream::StreamConfig::default());
+        // bad values are rejected, not silently defaulted
+        for bad in [
+            "[stream]\nram_mb = 0\n",
+            "[stream]\npage_len = 0\n",
+            "[stream]\ndrift_threshold = -0.1\n",
+            "[stream]\nspill_dir = 7\n",
+        ] {
+            let t = toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_table(&t).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

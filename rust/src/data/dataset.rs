@@ -47,13 +47,22 @@ impl Dataset {
         self.lengths.iter().copied().max().unwrap_or(0)
     }
 
+    /// The seeded shuffled visit order for one epoch.  O(dataset) ids, not
+    /// O(dataset) materialized batches: the lazy epoch drivers
+    /// (`ScheduledLoader::run_synchronous_order` / `run_pipelined_order`
+    /// and the streaming `StreamSource`) chunk this and fill one batch at
+    /// a time into a reused scratch buffer.
+    pub fn epoch_order(&self, seed: u64) -> Vec<u64> {
+        shuffled_order(self.lengths.len() as u64, seed)
+    }
+
     /// Iterate the dataset in shuffled order as global batches of
     /// `batch_size` sequences — one epoch.  The tail short batch is kept.
+    /// Materializes every batch up front; the run engine uses the lazy
+    /// [`Dataset::epoch_order`] + [`Dataset::fill_batch`] pair instead,
+    /// which is byte-identical (same shuffle, same chunking).
     pub fn epoch_batches(&self, batch_size: usize, seed: u64) -> Vec<Vec<Sequence>> {
-        let mut order: Vec<u64> = (0..self.lengths.len() as u64).collect();
-        let mut rng = Rng::seed_from_u64(seed);
-        rng.shuffle(&mut order);
-        order
+        self.epoch_order(seed)
             .chunks(batch_size)
             .map(|chunk| {
                 chunk
@@ -64,15 +73,35 @@ impl Dataset {
             .collect()
     }
 
+    /// Resolve an id slice (one epoch-order chunk) into `out`.  Hot path:
+    /// `out` is a scratch buffer reused across iterations.
+    pub fn fill_batch(&self, ids: &[u64], out: &mut Vec<Sequence>) {
+        out.clear();
+        for &id in ids {
+            out.push(Sequence { id, len: self.lengths[id as usize] });
+        }
+    }
+
     /// Sample one global batch with replacement (for benchmarking runs that
     /// draw i.i.d. batches like the paper's iteration-time measurements).
     pub fn sample_batch(&self, rng: &mut Rng, batch_size: usize) -> Vec<Sequence> {
-        (0..batch_size)
-            .map(|_| {
-                let id = rng.below(self.lengths.len() as u64);
-                Sequence { id, len: self.lengths[id as usize] }
-            })
-            .collect()
+        let mut out = Vec::with_capacity(batch_size);
+        self.sample_batch_into(rng, batch_size, &mut out);
+        out
+    }
+
+    /// [`Dataset::sample_batch`] into a reused scratch buffer — the
+    /// loader's per-iteration hot path draws through this to avoid a fresh
+    /// allocation every iteration.  One `rng.below(n)` per slot; the
+    /// streaming `StreamSource::fill_sampled_batch` replays the identical
+    /// draw sequence.
+    pub fn sample_batch_into(&self, rng: &mut Rng, batch_size: usize, out: &mut Vec<Sequence>) {
+        out.clear();
+        let n = self.lengths.len() as u64;
+        for _ in 0..batch_size {
+            let id = rng.below(n);
+            out.push(Sequence { id, len: self.lengths[id as usize] });
+        }
     }
 
     /// Clamp all lengths (used when a bucket/CP config cannot hold the
@@ -83,6 +112,16 @@ impl Dataset {
             lengths: self.lengths.iter().map(|&l| l.min(max_len)).collect(),
         }
     }
+}
+
+/// The seeded Fisher-Yates permutation of `0..n` shared by every epoch
+/// driver — in-memory and streamed epochs must shuffle identically for
+/// the byte-identity invariant to hold.
+pub fn shuffled_order(n: u64, seed: u64) -> Vec<u64> {
+    let mut order: Vec<u64> = (0..n).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut order);
+    order
 }
 
 #[cfg(test)]
@@ -135,6 +174,36 @@ mod tests {
         let ds = toy().truncated(35);
         assert_eq!(ds.lengths, vec![10, 20, 30, 35, 35, 35, 35]);
         assert_eq!(ds.max_len(), 35);
+    }
+
+    #[test]
+    fn lazy_epoch_order_reproduces_materialized_batches() {
+        let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 257, 42);
+        let old = ds.epoch_batches(16, 9);
+        let order = ds.epoch_order(9);
+        assert_eq!(order.len(), 257);
+        let mut scratch = Vec::new();
+        let lazy: Vec<Vec<Sequence>> = order
+            .chunks(16)
+            .map(|chunk| {
+                ds.fill_batch(chunk, &mut scratch);
+                scratch.clone()
+            })
+            .collect();
+        assert_eq!(lazy, old);
+    }
+
+    #[test]
+    fn sample_batch_into_replays_sample_batch() {
+        let ds = toy();
+        let mut a = Rng::seed_from_u64(5);
+        let mut b = Rng::seed_from_u64(5);
+        let mut scratch = Vec::new();
+        for _ in 0..10 {
+            let owned = ds.sample_batch(&mut a, 32);
+            ds.sample_batch_into(&mut b, 32, &mut scratch);
+            assert_eq!(scratch, owned);
+        }
     }
 
     #[test]

@@ -22,6 +22,20 @@ pub enum LengthDistribution {
     },
     /// Uniform in [lo, hi] — for tests and toy runs.
     Uniform { lo: u32, hi: u32 },
+    /// Non-stationary: the corpus alternates between phases of
+    /// `phase_len` sequences, each drawn from its own lognormal.
+    /// Position-dependent by construction — `sample_many` is the
+    /// authoritative corpus-order generator (sample index *i* belongs to
+    /// phase `(i / phase_len) % phases.len()`), while a bare `sample`
+    /// draws the stationary marginal (uniform over phases).  This is the
+    /// bursty long-doc traffic axis the streaming drift detector exists
+    /// for.
+    Phased {
+        name: &'static str,
+        phase_len: usize,
+        phases: Vec<(f64, f64)>, // (mu, sigma) per phase
+        max_len: u32,
+    },
 }
 
 impl LengthDistribution {
@@ -79,6 +93,20 @@ impl LengthDistribution {
         }
     }
 
+    /// Bursty long-doc traffic: stretches of short chat-style sequences
+    /// (median ≈ 270 tokens) interleaved with long retrieval-context
+    /// bursts (median ≈ 15K) every 2048 samples — the non-stationary mix
+    /// that LongAlign-style Long-SFT corpora exhibit and that the
+    /// streaming drift detector is built to catch.
+    pub fn bursty_long() -> Self {
+        LengthDistribution::Phased {
+            name: "bursty-long",
+            phase_len: 2048,
+            phases: vec![(5.6, 1.0), (9.6, 0.5)],
+            max_len: 99 * 1024,
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "wikipedia" | "wiki" => Some(Self::wikipedia()),
@@ -86,6 +114,7 @@ impl LengthDistribution {
             "chatqa2" | "chatqa2-long-sft" => Some(Self::chatqa2()),
             "llama3-mix" | "llama3" => Some(Self::llama3_mix()),
             "qwen-turbo-mix" | "qwen-turbo" => Some(Self::qwen_turbo_mix()),
+            "bursty-long" | "bursty" => Some(Self::bursty_long()),
             _ => None,
         }
     }
@@ -94,6 +123,7 @@ impl LengthDistribution {
         match self {
             LengthDistribution::LognormalMixture { name, .. } => name,
             LengthDistribution::Uniform { .. } => "uniform",
+            LengthDistribution::Phased { name, .. } => name,
         }
     }
 
@@ -101,10 +131,13 @@ impl LengthDistribution {
         match self {
             LengthDistribution::LognormalMixture { max_len, .. } => *max_len,
             LengthDistribution::Uniform { hi, .. } => *hi,
+            LengthDistribution::Phased { max_len, .. } => *max_len,
         }
     }
 
-    /// Draw one sequence length.
+    /// Draw one sequence length.  For [`LengthDistribution::Phased`] this
+    /// is the stationary marginal (uniform over phases); corpus-order
+    /// generation goes through [`LengthDistribution::sample_many`].
     pub fn sample(&self, rng: &mut Rng) -> u32 {
         match self {
             LengthDistribution::LognormalMixture { components, max_len, .. } => {
@@ -114,11 +147,31 @@ impl LengthDistribution {
                 (x.round() as u64).clamp(1, *max_len as u64) as u32
             }
             LengthDistribution::Uniform { lo, hi } => rng.range_u32(*lo, *hi + 1),
+            LengthDistribution::Phased { phases, max_len, .. } => {
+                let (mu, sigma) = phases[rng.usize_below(phases.len())];
+                let x = rng.lognormal(mu, sigma);
+                (x.round() as u64).clamp(1, *max_len as u64) as u32
+            }
         }
     }
 
+    /// Draw `n` lengths in corpus order.  Phased distributions are
+    /// position-dependent here: sample *i* comes from phase
+    /// `(i / phase_len) % phases.len()`.
     pub fn sample_many(&self, rng: &mut Rng, n: usize) -> Vec<u32> {
-        (0..n).map(|_| self.sample(rng)).collect()
+        match self {
+            LengthDistribution::Phased { phase_len, phases, max_len, .. } => {
+                let pl = (*phase_len).max(1);
+                (0..n)
+                    .map(|i| {
+                        let (mu, sigma) = phases[(i / pl) % phases.len()];
+                        let x = rng.lognormal(mu, sigma);
+                        (x.round() as u64).clamp(1, *max_len as u64) as u32
+                    })
+                    .collect()
+            }
+            _ => (0..n).map(|_| self.sample(rng)).collect(),
+        }
     }
 }
 
@@ -198,10 +251,32 @@ mod tests {
 
     #[test]
     fn by_name_resolves_all_datasets() {
-        for n in ["wikipedia", "lmsys", "chatqa2", "llama3-mix", "qwen-turbo-mix"] {
+        for n in ["wikipedia", "lmsys", "chatqa2", "llama3-mix", "qwen-turbo-mix", "bursty-long"] {
             assert_eq!(LengthDistribution::by_name(n).unwrap().name(), n);
         }
         assert!(LengthDistribution::by_name("imagenet").is_none());
+    }
+
+    #[test]
+    fn bursty_long_is_position_dependent() {
+        let d = LengthDistribution::bursty_long();
+        let mut rng = Rng::seed_from_u64(7);
+        let xs = d.sample_many(&mut rng, 4096);
+        let short_phase = &xs[..2048];
+        let long_phase = &xs[2048..];
+        let mean = |v: &[u32]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(long_phase) > 10.0 * mean(short_phase),
+            "phases not distinct: {} vs {}",
+            mean(short_phase),
+            mean(long_phase)
+        );
+        assert!(xs.iter().all(|&x| x >= 1 && x <= d.max_len()));
+        // the stationary marginal still respects the bounds
+        for _ in 0..5_000 {
+            let x = d.sample(&mut rng);
+            assert!(x >= 1 && x <= d.max_len());
+        }
     }
 
     #[test]

@@ -162,8 +162,37 @@ impl<'a> ScheduledLoader<'a> {
     where
         F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
     {
+        // one scratch batch reused across iterations (the draws are
+        // byte-identical to `next_iteration`'s owned batches)
+        let mut batch: Vec<Sequence> = Vec::with_capacity(self.cfg.cluster.batch_size);
         for i in 0..iterations {
-            let (batch, sched) = self.next_iteration()?;
+            self.dataset
+                .sample_batch_into(&mut self.rng, self.cfg.cluster.batch_size, &mut batch);
+            let sched = self.schedule_batch(&batch)?;
+            consume(i, &batch, &sched, self.last_sched_seconds);
+        }
+        Ok(())
+    }
+
+    /// Lazy epoch driver: chunk a shuffled [`Dataset::epoch_order`] and
+    /// fill one batch at a time into a reused scratch buffer — O(batch)
+    /// extra memory instead of `epoch_batches`' O(dataset) batch
+    /// materialization, with byte-identical schedules (same shuffle, same
+    /// chunking; regression-pinned in `rust/tests/stream.rs`).
+    pub fn run_synchronous_order<F>(
+        &mut self,
+        order: &[u64],
+        batch_size: usize,
+        mut consume: F,
+    ) -> Result<(), SchedError>
+    where
+        F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
+    {
+        let bs = batch_size.max(1);
+        let mut batch: Vec<Sequence> = Vec::with_capacity(bs.min(order.len()));
+        for (i, chunk) in order.chunks(bs).enumerate() {
+            self.dataset.fill_batch(chunk, &mut batch);
+            let sched = self.schedule_batch(&batch)?;
             consume(i, &batch, &sched, self.last_sched_seconds);
         }
         Ok(())
@@ -220,6 +249,36 @@ impl<'a> ScheduledLoader<'a> {
             batches.len(),
             |l, i| {
                 let batch = batches[i].clone();
+                let sched = l.schedule_batch(&batch)?;
+                Ok((batch, sched))
+            },
+            consume,
+        )
+    }
+
+    /// Pipelined counterpart of [`run_synchronous_order`]: the epoch order
+    /// is chunked lazily on the prefetch thread, so an epoch run holds one
+    /// in-flight batch instead of the whole epoch's batch list.
+    ///
+    /// [`run_synchronous_order`]: ScheduledLoader::run_synchronous_order
+    pub fn run_pipelined_order<F>(
+        self,
+        order: &[u64],
+        batch_size: usize,
+        consume: F,
+    ) -> Result<Self, SchedError>
+    where
+        F: FnMut(usize, &[Sequence], &IterationSchedule, f64),
+    {
+        let bs = batch_size.max(1);
+        let iterations = order.len().div_ceil(bs);
+        self.run_pipelined_with(
+            iterations,
+            |l, i| {
+                let lo = i * bs;
+                let hi = (lo + bs).min(order.len());
+                let mut batch = Vec::with_capacity(hi - lo);
+                l.dataset.fill_batch(&order[lo..hi], &mut batch);
                 let sched = l.schedule_batch(&batch)?;
                 Ok((batch, sched))
             },

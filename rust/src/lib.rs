@@ -28,4 +28,5 @@ pub mod perfmodel;
 pub mod rng;
 pub mod runtime;
 pub mod scheduler;
+pub mod stream;
 pub mod util;

@@ -28,7 +28,7 @@ use skrull::util::error::{Context, Result};
 use skrull::bench::e2e::{self, E2eOptions};
 use skrull::bench::TableBuilder;
 use skrull::cli::Args;
-use skrull::cluster::run::{simulate_run, RunConfig};
+use skrull::cluster::run::{build_run_streamed, price_run, simulate_run, RunConfig};
 use skrull::cluster::simulate_iteration;
 use skrull::config::{ExperimentConfig, Policy};
 use skrull::coordinator::corpus::CorpusConfig;
@@ -38,6 +38,7 @@ use skrull::data::{Dataset, LengthDistribution};
 use skrull::model::ModelSpec;
 use skrull::perfmodel::profile;
 use skrull::rng::Rng;
+use skrull::stream::{ingest_dataset, StreamSource};
 use skrull::util::stats::fraction_below;
 use skrull::util::{fmt_secs, fmt_tokens};
 
@@ -104,6 +105,14 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("incremental") {
         cfg.incremental = true;
     }
+    // streaming data plane: --spill-dir turns the out-of-core path on,
+    // --stream-ram-mb bounds the page-cache budget.  Schedules are
+    // byte-identical either way, so these are safe to flip per run.
+    if let Some(dir) = args.get("spill-dir") {
+        cfg.stream.spill_dir = Some(dir.to_string());
+    }
+    cfg.stream.ram_mb = args.parse_or("stream-ram-mb", cfg.stream.ram_mb)?;
+    skrull::ensure!(cfg.stream.ram_mb > 0, "--stream-ram-mb must be positive");
     if let Some(p) = args.get("policy") {
         cfg.policy = Policy::by_name(p).context("unknown --policy")?;
     }
@@ -186,8 +195,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         RunConfig::new(cfg.iterations, cfg.pipelined)
     };
 
+    // streaming data plane: with --spill-dir the dataset is spilled once
+    // and every policy's run streams batches through the bounded page
+    // cache; schedules (and so every printed number) are byte-identical
+    // to the in-memory path — the trailing telemetry line is the only
+    // visible difference
+    let stream_ingest = if cfg.stream.enabled() {
+        let dir = cfg.stream.spill_dir.clone().unwrap_or_default();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating spill dir {dir}"))?;
+        let path = std::path::PathBuf::from(&dir).join("simulate.spill");
+        let report = ingest_dataset(&ds, &path, &cfg.stream, cfg.seed)
+            .map_err(|e| skrull::anyhow!("spilling {}: {e}", path.display()))?;
+        Some((path, report))
+    } else {
+        None
+    };
+
     let policies = [Policy::Baseline, Policy::DacpOnly, Policy::Skrull];
     let mut base_wall = None;
+    let mut peak_stream_rss = 0u64;
     println!(
         "model={} dataset={} <DP={},CP={},B={}> C={} ({}) {} loader={}",
         cfg.model.name,
@@ -203,7 +229,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     for policy in policies {
         let mut pcfg = cfg.clone();
         pcfg.policy = policy;
-        let report = simulate_run(&ds, &pcfg, &cost, &run)?;
+        let report = match &stream_ingest {
+            Some((path, ingest)) => {
+                let mut src = StreamSource::open(path, &cfg.stream)
+                    .map_err(|e| skrull::anyhow!("opening spill {}: {e}", path.display()))?;
+                let built = build_run_streamed(&mut src, ingest, &pcfg, &run)?;
+                price_run(&built, &cost, &built.topology)
+            }
+            None => simulate_run(&ds, &pcfg, &cost, &run)?,
+        };
+        peak_stream_rss = peak_stream_rss.max(report.peak_stream_rss_bytes);
         let wall = report.wall_seconds();
         let iters = report.iterations.len().max(1);
         let base = *base_wall.get_or_insert(wall);
@@ -215,6 +250,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             100.0 * report.utilization(),
             100.0 * report.peak_mem_fraction(),
             fmt_secs(report.exposed_sched_seconds),
+        );
+    }
+    if let Some((_, ingest)) = &stream_ingest {
+        println!(
+            "  streamed: {} drift event(s), {} recalibration(s), peak stream RSS {:.2} MiB (budget {} MiB)",
+            ingest.drift_events.len(),
+            ingest.recalibrations.len(),
+            peak_stream_rss as f64 / (1024.0 * 1024.0),
+            cfg.stream.ram_mb,
         );
     }
     Ok(())
@@ -312,6 +356,15 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     if args.flag("deterministic-timing") {
         opts.deterministic_timing = true;
     }
+    // streaming data plane: with --spill-dir every cell's dataset is
+    // spilled to disk and the run engine streams batches through the
+    // bounded page cache; digests prove byte-identity to the in-memory
+    // path, so the flag changes RSS and drift telemetry only
+    if let Some(dir) = args.get("spill-dir") {
+        opts.stream.spill_dir = Some(dir.to_string());
+    }
+    opts.stream.ram_mb = args.parse_or("stream-ram-mb", opts.stream.ram_mb)?;
+    skrull::ensure!(opts.stream.ram_mb > 0, "--stream-ram-mb must be positive");
     if let Some(p) = args.get("cost-profile") {
         opts.cost = skrull::config::CostSource::calibrated(p)?;
         opts.cost.ensure_model(opts.model.name)?;
@@ -389,6 +442,14 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     e2e::validate_json(&json).context("self-check of rendered BENCH_e2e.json")?;
     std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
+    // per-cell schedule digests, for the spilled-vs-in-memory CI cmp: the
+    // full JSONs legitimately differ in drift/RSS telemetry, the digests
+    // must not
+    if let Some(path) = args.get("sched-digest") {
+        std::fs::write(path, e2e::render_digests(&sweep))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -719,9 +780,13 @@ const USAGE: &str = "usage: skrull <schedule|simulate|e2e|fleet|lint|sched-bench
              --cost-profile FILE (calibrated coefficients from `skrull calibrate`)
   memory:    --capacity (fixed|hbm-derived) --hbm-gb F[,F,...] --recompute (full|selective|none)
              (accepted by schedule, simulate, e2e and train)
+  streaming: --spill-dir DIR (out-of-core data plane; schedules stay byte-identical)
+             --stream-ram-mb N (page-cache budget, default 64)
+             (accepted by simulate and e2e)
   e2e:       --model M --datasets a,b,c --topologies 4x8,2x16 --iterations N
              --samples N --batch-size K --seed S | --seeds a,b,c --sync --epoch
              --cost-profile FILE --jobs N (0 = auto) --deterministic-timing
+             --spill-dir DIR --stream-ram-mb N --sched-digest FILE (per-cell digests)
              --config FILE ([run] jobs key only) --out FILE --smoke | --validate=FILE
   fleet:     multi-tenant fleet sweep: arrivals x policies x pool sets -> BENCH_fleet.json
              --smoke --jobs-per-cell N --seed S --jobs N (0 = auto)

@@ -19,6 +19,9 @@ pub enum SchedError {
     /// The physical cluster layout cannot host the requested dp×cp ranks
     /// (the run engine refuses to price an impossible topology).
     BadTopology { reason: String },
+    /// The streaming data plane failed to produce a batch (spill I/O or
+    /// checksum failure surfaced through `build_run_streamed`).
+    Stream { reason: String },
 }
 
 impl std::fmt::Display for SchedError {
@@ -40,6 +43,9 @@ impl std::fmt::Display for SchedError {
             ),
             SchedError::BadTopology { reason } => {
                 write!(f, "invalid cluster layout: {reason}")
+            }
+            SchedError::Stream { reason } => {
+                write!(f, "streaming data plane error: {reason}")
             }
         }
     }

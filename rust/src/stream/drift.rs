@@ -1,0 +1,217 @@
+//! Online distribution-drift detection over the ingestion stream.
+//!
+//! Long-SFT corpora are non-stationary: bursty long-document phases change
+//! the length mix that the capacity plan and the cost estimator were
+//! calibrated against.  The detector compares a tumbling window's quantile
+//! sketch against the calibration-time baseline sketch and emits a
+//! structured [`DriftEvent`] when any probe quantile moves by more than the
+//! configured relative threshold.  Events feed `calib::recal` (fresh
+//! capacity/padded-token accounting) and surface per cell as
+//! `drift_events` in `BENCH_e2e.json` — they never perturb schedules,
+//! which by the byte-identity invariant depend only on the data and the
+//! seed.
+
+use super::reservoir::LengthSketch;
+
+/// Probe quantiles compared between the window and the baseline.  The far
+/// tail (p99+) of a few-thousand-sample window is too noisy to gate on;
+/// the body and shoulder move decisively under a real mix shift.
+pub const DRIFT_PROBES: [f64; 3] = [0.25, 0.5, 0.9];
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftConfig {
+    /// Tumbling-window size in sequences; the first full window becomes
+    /// the calibration baseline.
+    pub window: usize,
+    /// Relative quantile displacement that fires an event.
+    pub threshold: f64,
+    /// Windows to stay silent after firing (hysteresis).
+    pub cooldown_windows: u32,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { window: 1024, threshold: 0.30, cooldown_windows: 1 }
+    }
+}
+
+/// One detected mix shift, in ingestion order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftEvent {
+    /// Sequences ingested when the window closed.
+    pub at: u64,
+    /// Largest relative probe displacement vs the baseline.
+    pub rel_change: f64,
+    /// Median of the offending window vs the baseline's.
+    pub window_p50: u32,
+    pub baseline_p50: u32,
+    /// Shoulder (p90) of the offending window vs the baseline's.
+    pub window_p90: u32,
+    pub baseline_p90: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    baseline: Option<LengthSketch>,
+    window: Vec<u32>,
+    last_window: Option<LengthSketch>,
+    seen: u64,
+    cooldown: u32,
+    events: u64,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> Self {
+        let cap = cfg.window.max(1);
+        DriftDetector {
+            cfg,
+            baseline: None,
+            window: Vec::with_capacity(cap),
+            last_window: None,
+            seen: 0,
+            cooldown: 0,
+            events: 0,
+        }
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Events fired so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// The calibration-time (or last rebased) reference sketch.
+    pub fn baseline(&self) -> Option<&LengthSketch> {
+        self.baseline.as_ref()
+    }
+
+    /// The most recent completed window's sketch.
+    pub fn last_window(&self) -> Option<&LengthSketch> {
+        self.last_window.as_ref()
+    }
+
+    /// Feed one length from the ingestion stream; returns an event when a
+    /// window closes beyond the threshold.
+    pub fn observe(&mut self, len: u32) -> Option<DriftEvent> {
+        self.seen += 1;
+        self.window.push(len);
+        if self.window.len() < self.cfg.window.max(1) {
+            return None;
+        }
+        let sketch = LengthSketch::from_lengths(&self.window);
+        self.window.clear();
+        let Some(base) = self.baseline.as_ref() else {
+            // first full window: calibration baseline
+            self.baseline = Some(sketch);
+            return None;
+        };
+        let d = sketch.rel_distance(base, &DRIFT_PROBES);
+        let fired = d > self.cfg.threshold && self.cooldown == 0;
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        }
+        let ev = if fired {
+            self.cooldown = self.cfg.cooldown_windows;
+            self.events += 1;
+            Some(DriftEvent {
+                at: self.seen,
+                rel_change: d,
+                window_p50: sketch.quantile(0.5),
+                baseline_p50: base.quantile(0.5),
+                window_p90: sketch.quantile(0.9),
+                baseline_p90: base.quantile(0.9),
+            })
+        } else {
+            None
+        };
+        self.last_window = Some(sketch);
+        ev
+    }
+
+    /// Re-baseline after recalibration: the most recent full window becomes
+    /// the new reference mix and the hysteresis resets.
+    pub fn rebase(&mut self) {
+        if let Some(s) = self.last_window.take() {
+            self.baseline = Some(s);
+        }
+        self.cooldown = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detector(window: usize) -> DriftDetector {
+        DriftDetector::new(DriftConfig { window, threshold: 0.30, cooldown_windows: 1 })
+    }
+
+    #[test]
+    fn fires_on_injected_mix_shift_and_rebase_silences() {
+        let mut d = detector(100);
+        let mut events = Vec::new();
+        // calibration + one stationary window of short docs
+        for _ in 0..200 {
+            if let Some(e) = d.observe(100) {
+                events.push(e);
+            }
+        }
+        assert!(events.is_empty());
+        // shift to long docs: the next full window must fire
+        for _ in 0..100 {
+            if let Some(e) = d.observe(5000) {
+                events.push(e);
+            }
+        }
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].at, 300);
+        assert!(events[0].rel_change > 0.9);
+        assert_eq!(events[0].baseline_p50, 100);
+        assert_eq!(events[0].window_p50, 5000);
+        // after rebasing onto the shifted window, the new mix is quiet
+        d.rebase();
+        for _ in 0..300 {
+            assert!(d.observe(5000).is_none());
+        }
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_windows() {
+        let mut d = detector(50);
+        for _ in 0..50 {
+            d.observe(10);
+        }
+        let mut fired = 0;
+        // three shifted windows without rebase: fire, cool down, fire again
+        for _ in 0..150 {
+            if d.observe(9000).is_some() {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 2);
+    }
+
+    #[test]
+    fn stays_silent_on_stationary_mix_across_seeds() {
+        use crate::data::LengthDistribution;
+        use crate::rng::Rng;
+        for dist in [LengthDistribution::wikipedia(), LengthDistribution::chatqa2()] {
+            for seed in [1u64, 2, 3] {
+                let mut rng = Rng::seed_from_u64(seed);
+                let lens = dist.sample_many(&mut rng, 8192);
+                let mut d = detector(1024);
+                for &l in &lens {
+                    assert!(
+                        d.observe(l).is_none(),
+                        "{} seed {seed} fired spuriously",
+                        dist.name()
+                    );
+                }
+            }
+        }
+    }
+}

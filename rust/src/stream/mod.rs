@@ -1,0 +1,194 @@
+//! Streaming out-of-core data plane.
+//!
+//! Production corpora do not fit in RAM and arrive continuously.  This
+//! subsystem replaces the fully-materialized [`crate::data::Dataset`] on
+//! demand with a three-stage streaming path:
+//!
+//! 1. **Ingest** ([`ingest_dataset`]): the corpus streams once, in corpus
+//!    order, into a checksummed on-disk spill file ([`spill`]) while a
+//!    seeded stratified reservoir ([`reservoir`]) sketches the length
+//!    distribution and a windowed quantile detector ([`drift`]) watches
+//!    for mix shifts, re-triggering capacity/estimator recalibration
+//!    (`calib::recal`) on every event.
+//! 2. **Schedule** ([`source::StreamSource`]): batches are filled through
+//!    a bounded-RAM page cache, replaying the in-memory path's RNG draws
+//!    exactly — schedules are byte-identical to a `Dataset`-backed run
+//!    (`cluster::run::build_run_streamed`, enforced by test and the CI
+//!    digest `cmp` gate).
+//! 3. **Account**: `peak_stream_rss_bytes` (deterministic cache
+//!    accounting, ≤ the configured budget by construction) and
+//!    `drift_events` surface per cell in schema-v5 `BENCH_e2e.json`.
+
+pub mod drift;
+pub mod reservoir;
+pub mod source;
+pub mod spill;
+
+pub use drift::{DriftConfig, DriftDetector, DriftEvent, DRIFT_PROBES};
+pub use reservoir::{LengthSketch, Reservoir, StratifiedReservoir};
+pub use source::StreamSource;
+pub use spill::{spill_lengths, RamRole, SpillError, SpillStore};
+
+use std::path::Path;
+
+use crate::calib::recal::{recalibrate, Recalibration};
+use crate::data::Dataset;
+
+/// The `[stream]` config table: spill location, cache budget and the
+/// sketching/drift knobs.  Everything is an explicit value — the RAM
+/// budget is a byte count from config, never a `/proc` or wall-clock
+/// reading, so cache sizing is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamConfig {
+    /// Directory for spill files; `Some` switches the e2e sweep (and
+    /// `build_run_streamed` callers) onto the out-of-core path.
+    pub spill_dir: Option<String>,
+    /// Page-cache budget in MiB (`--stream-ram-mb`).
+    pub ram_mb: usize,
+    /// Sequences per spill page.
+    pub page_len: u32,
+    /// Stratification shards for the reservoir sketch.
+    pub reservoir_shards: usize,
+    /// Reservoir capacity per shard.
+    pub reservoir_per_shard: usize,
+    /// Drift tumbling-window size in sequences.
+    pub drift_window: usize,
+    /// Relative quantile displacement that fires a drift event.
+    pub drift_threshold: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            spill_dir: None,
+            ram_mb: 64,
+            page_len: 1024,
+            reservoir_shards: 16,
+            reservoir_per_shard: 256,
+            drift_window: 1024,
+            drift_threshold: 0.30,
+        }
+    }
+}
+
+impl StreamConfig {
+    pub fn enabled(&self) -> bool {
+        self.spill_dir.is_some()
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.ram_mb as u64 * 1024 * 1024
+    }
+
+    pub fn drift_config(&self) -> DriftConfig {
+        DriftConfig {
+            window: self.drift_window,
+            threshold: self.drift_threshold,
+            ..DriftConfig::default()
+        }
+    }
+}
+
+/// Everything the single ingestion pass learned about the corpus.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    pub sequences: u64,
+    pub total_tokens: u64,
+    /// Stratified-reservoir length sketch (what GDS/memplan consumers see
+    /// instead of a full scan).
+    pub sketch: LengthSketch,
+    /// Mix shifts detected in corpus order.
+    pub drift_events: Vec<DriftEvent>,
+    /// One recalibration per drift event (accounting only — schedules
+    /// never depend on these).
+    pub recalibrations: Vec<Recalibration>,
+}
+
+/// Spill `lengths` to `path` and stream them once through the reservoir
+/// sketch and the drift detector.  `seed` drives the reservoir's RNG
+/// streams; the detector is deterministic given the corpus order.
+pub fn ingest_lengths(
+    lengths: &[u32],
+    path: &Path,
+    cfg: &StreamConfig,
+    seed: u64,
+) -> Result<IngestReport, SpillError> {
+    spill_lengths(lengths, path, cfg.page_len)?;
+    let mut reservoir =
+        StratifiedReservoir::new(cfg.reservoir_shards, cfg.reservoir_per_shard, seed);
+    let mut detector = DriftDetector::new(cfg.drift_config());
+    let mut drift_events = Vec::new();
+    let mut recalibrations = Vec::new();
+    let mut total_tokens = 0u64;
+    for (i, &len) in lengths.iter().enumerate() {
+        total_tokens += len as u64;
+        reservoir.observe(i as u64, len);
+        if let Some(ev) = detector.observe(len) {
+            // drift → recalibration hook: derive fresh capacity accounting
+            // from the shifted window, then adopt it as the new baseline
+            if let Some(window) = detector.last_window() {
+                recalibrations.push(recalibrate(ev.at, window));
+            }
+            detector.rebase();
+            drift_events.push(ev);
+        }
+    }
+    Ok(IngestReport {
+        sequences: lengths.len() as u64,
+        total_tokens,
+        sketch: reservoir.sketch(),
+        drift_events,
+        recalibrations,
+    })
+}
+
+/// [`ingest_lengths`] over a materialized dataset (the e2e sweep's entry
+/// point: synthesize once, spill, then schedule out-of-core).
+pub fn ingest_dataset(
+    ds: &Dataset,
+    path: &Path,
+    cfg: &StreamConfig,
+    seed: u64,
+) -> Result<IngestReport, SpillError> {
+    ingest_lengths(&ds.lengths, path, cfg, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LengthDistribution;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("skrull-ingest-{}-{tag}.spill", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn ingest_reports_drift_and_recalibrations_on_bursty_corpus() {
+        let ds = Dataset::synthesize(&LengthDistribution::bursty_long(), 8192, 5);
+        let path = tmp_path("bursty");
+        let cfg = StreamConfig::default();
+        let report = ingest_dataset(&ds, &path, &cfg, 11).unwrap();
+        assert_eq!(report.sequences, 8192);
+        assert_eq!(report.total_tokens, ds.total_tokens());
+        assert!(!report.drift_events.is_empty(), "bursty phases must fire drift");
+        assert_eq!(report.drift_events.len(), report.recalibrations.len());
+        for (ev, rc) in report.drift_events.iter().zip(&report.recalibrations) {
+            assert_eq!(ev.at, rc.at);
+            assert!(rc.suggested_bucket > 0);
+        }
+        assert!(!report.sketch.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn ingest_is_silent_on_stationary_corpus() {
+        let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 8192, 5);
+        let path = tmp_path("flat");
+        let report = ingest_dataset(&ds, &path, &StreamConfig::default(), 11).unwrap();
+        assert!(report.drift_events.is_empty());
+        assert!(report.recalibrations.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

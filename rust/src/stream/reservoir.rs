@@ -1,0 +1,215 @@
+//! Deterministic reservoir length-sketching.
+//!
+//! GDS and memplan want an accurate picture of the length distribution —
+//! bucket feasibility, capacity planning, padded-token estimates — but an
+//! out-of-core corpus cannot be scanned on demand.  A seeded reservoir
+//! (Vitter's Algorithm R on our xoshiro256++ streams) keeps a bounded,
+//! uniform sample per shard while the corpus streams through ingestion
+//! once; stratifying by `id % shards` keeps every region of the corpus
+//! represented even under adversarial orderings.  Same seed ⇒ same sketch,
+//! bit-for-bit — the sketch is diagnostic/calibration state and never
+//! feeds back into schedules (the byte-identity invariant).
+
+use crate::rng::Rng;
+
+/// Vitter Algorithm R over one stratum: a uniform sample of everything
+/// observed, held in arrival order of the surviving items.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    items: Vec<u32>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, rng: Rng) -> Self {
+        Reservoir { cap, items: Vec::with_capacity(cap), seen: 0, rng }
+    }
+
+    pub fn observe(&mut self, len: u32) {
+        self.seen += 1;
+        if self.items.len() < self.cap {
+            self.items.push(len);
+            return;
+        }
+        if self.cap == 0 {
+            return;
+        }
+        // t-th item replaces a slot with probability cap/t
+        let j = self.rng.below(self.seen);
+        if (j as usize) < self.cap {
+            self.items[j as usize] = len;
+        }
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn items(&self) -> &[u32] {
+        &self.items
+    }
+}
+
+/// Per-shard stratified reservoir: shard `id % n_shards` samples its own
+/// stratum with an independent forked RNG stream.
+#[derive(Debug, Clone)]
+pub struct StratifiedReservoir {
+    shards: Vec<Reservoir>,
+}
+
+impl StratifiedReservoir {
+    pub fn new(n_shards: usize, per_shard: usize, seed: u64) -> Self {
+        let mut base = Rng::seed_from_u64(seed);
+        let shards = (0..n_shards.max(1))
+            .map(|s| Reservoir::new(per_shard, base.fork(s as u64)))
+            .collect();
+        StratifiedReservoir { shards }
+    }
+
+    pub fn observe(&mut self, id: u64, len: u32) {
+        let s = (id % self.shards.len() as u64) as usize;
+        self.shards[s].observe(len);
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.shards.iter().map(Reservoir::seen).sum()
+    }
+
+    /// Merge every shard's sample into one sorted sketch.
+    pub fn sketch(&self) -> LengthSketch {
+        let mut all: Vec<u32> = Vec::new();
+        for sh in &self.shards {
+            all.extend_from_slice(sh.items());
+        }
+        LengthSketch::from_unsorted(all)
+    }
+}
+
+/// A sorted sample of sequence lengths with quantile/mean accessors — the
+/// unit both the drift detector and the recalibration hook consume.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LengthSketch {
+    sorted: Vec<u32>,
+}
+
+impl LengthSketch {
+    pub fn from_unsorted(mut lens: Vec<u32>) -> Self {
+        lens.sort_unstable();
+        LengthSketch { sorted: lens }
+    }
+
+    pub fn from_lengths(lens: &[u32]) -> Self {
+        LengthSketch::from_unsorted(lens.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Nearest-rank quantile; 0 on an empty sketch.
+    pub fn quantile(&self, q: f64) -> u32 {
+        if self.sorted.is_empty() {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((self.sorted.len() - 1) as f64 * q).round() as usize;
+        self.sorted[idx.min(self.sorted.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.sorted.iter().map(|&l| l as u64).sum();
+        total as f64 / self.sorted.len() as f64
+    }
+
+    pub fn max_len(&self) -> u32 {
+        self.sorted.last().copied().unwrap_or(0)
+    }
+
+    /// Largest relative quantile displacement between two sketches over the
+    /// given probe points — the drift detector's distance measure.
+    pub fn rel_distance(&self, other: &LengthSketch, probes: &[f64]) -> f64 {
+        let mut worst = 0.0f64;
+        for &q in probes {
+            let a = self.quantile(q) as f64;
+            let b = other.quantile(q) as f64;
+            let d = (a - b).abs() / a.max(b).max(1.0);
+            if d > worst {
+                worst = d;
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LengthDistribution;
+
+    #[test]
+    fn same_seed_same_sketch() {
+        let mut rng = Rng::seed_from_u64(9);
+        let lens: Vec<u32> = (0..50_000).map(|_| rng.range_u32(1, 10_000)).collect();
+        let mut a = StratifiedReservoir::new(16, 256, 7);
+        let mut b = StratifiedReservoir::new(16, 256, 7);
+        let mut c = StratifiedReservoir::new(16, 256, 8);
+        for (i, &l) in lens.iter().enumerate() {
+            a.observe(i as u64, l);
+            b.observe(i as u64, l);
+            c.observe(i as u64, l);
+        }
+        assert_eq!(a.sketch(), b.sketch());
+        assert_ne!(a.sketch(), c.sketch());
+    }
+
+    #[test]
+    fn sketch_quantiles_track_true_distribution() {
+        let dist = LengthDistribution::wikipedia();
+        let mut rng = Rng::seed_from_u64(3);
+        let lens = dist.sample_many(&mut rng, 100_000);
+        let truth = LengthSketch::from_lengths(&lens);
+        let mut res = StratifiedReservoir::new(16, 512, 5);
+        for (i, &l) in lens.iter().enumerate() {
+            res.observe(i as u64, l);
+        }
+        let sketch = res.sketch();
+        assert_eq!(sketch.len(), 16 * 512);
+        for q in [0.25, 0.5, 0.75, 0.9] {
+            let s = sketch.quantile(q) as f64;
+            let t = truth.quantile(q) as f64;
+            let rel = (s - t).abs() / t.max(1.0);
+            assert!(rel < 0.10, "q{q}: sketch {s} vs truth {t} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn small_corpus_is_kept_whole() {
+        let mut res = StratifiedReservoir::new(4, 100, 1);
+        for i in 0..50u64 {
+            res.observe(i, (i + 1) as u32);
+        }
+        let sketch = res.sketch();
+        assert_eq!(sketch.len(), 50);
+        assert_eq!(sketch.quantile(0.0), 1);
+        assert_eq!(sketch.quantile(1.0), 50);
+        assert_eq!(sketch.max_len(), 50);
+        assert!((sketch.mean() - 25.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_distance_is_zero_on_self_and_large_on_shift() {
+        let a = LengthSketch::from_lengths(&[100, 200, 300, 400, 500]);
+        let b = LengthSketch::from_lengths(&[1000, 2000, 3000, 4000, 5000]);
+        assert_eq!(a.rel_distance(&a, &[0.25, 0.5, 0.9]), 0.0);
+        assert!(a.rel_distance(&b, &[0.25, 0.5, 0.9]) > 0.8);
+    }
+}

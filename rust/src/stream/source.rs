@@ -1,0 +1,151 @@
+//! Streaming batch source: the `cluster::run` / `ScheduledLoader` facing
+//! side of the spill store.
+//!
+//! The byte-identity invariant lives here: the source replays *exactly*
+//! the RNG draw sequence of the in-memory path (`Dataset::sample_batch`'s
+//! one `rng.below(n)` per slot; `Dataset::epoch_order`'s seeded
+//! Fisher-Yates shuffle) and resolves each drawn id through the page
+//! cache.  Same seed, same ids, same lengths ⇒ the scheduler sees the
+//! same batches and emits byte-identical schedules — the page cache can
+//! only change how many disk reads happen, never what the scheduler sees.
+
+use std::path::Path;
+
+use super::spill::{SpillError, SpillStore};
+use super::StreamConfig;
+use crate::data::dataset::shuffled_order;
+use crate::data::Sequence;
+use crate::rng::Rng;
+
+/// A spilled corpus opened for scheduling: bounded-RAM random access plus
+/// the two batch-filling modes (`Sampled` replay and epoch order).
+pub struct StreamSource {
+    store: SpillStore,
+    name: String,
+}
+
+impl StreamSource {
+    /// Open under the `[stream]` config's RAM budget (leader role).
+    pub fn open(path: &Path, cfg: &StreamConfig) -> Result<StreamSource, SpillError> {
+        StreamSource::open_with_budget(path, cfg.budget_bytes())
+    }
+
+    /// Open with an explicit cache budget in bytes (tests use tiny budgets
+    /// to force eviction).
+    pub fn open_with_budget(path: &Path, budget_bytes: u64) -> Result<StreamSource, SpillError> {
+        let store = SpillStore::open(path, budget_bytes)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(StreamSource { store, name })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn len(&self) -> u64 {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// See [`SpillStore::peak_resident_bytes`].
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.store.peak_resident_bytes()
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.store.budget_bytes()
+    }
+
+    /// Fill one i.i.d. global batch, drawing ids exactly like
+    /// `Dataset::sample_batch` (one `rng.below(n)` per slot) so a loader
+    /// seeded identically sees identical batches.  Hot path.
+    pub fn fill_sampled_batch(
+        &mut self,
+        rng: &mut Rng,
+        batch_size: usize,
+        out: &mut Vec<Sequence>,
+    ) -> Result<(), SpillError> {
+        out.clear();
+        let n = self.store.len();
+        for _ in 0..batch_size {
+            let id = rng.below(n);
+            let len = self.store.get(id)?;
+            out.push(Sequence { id, len });
+        }
+        Ok(())
+    }
+
+    /// Resolve an explicit id slice (one epoch-order chunk) into `out`.
+    pub fn fill_batch_from_ids(
+        &mut self,
+        ids: &[u64],
+        out: &mut Vec<Sequence>,
+    ) -> Result<(), SpillError> {
+        out.clear();
+        for &id in ids {
+            let len = self.store.get(id)?;
+            out.push(Sequence { id, len });
+        }
+        Ok(())
+    }
+
+    /// The epoch visit order — same seeded shuffle as
+    /// `Dataset::epoch_order`, so epoch runs match the in-memory path.
+    pub fn epoch_order(&self, seed: u64) -> Vec<u64> {
+        shuffled_order(self.store.len(), seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spill::spill_lengths;
+    use super::*;
+    use crate::data::{Dataset, LengthDistribution};
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("skrull-source-{}-{tag}.spill", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn sampled_batches_replay_the_in_memory_draws() {
+        let ds = Dataset::synthesize(&LengthDistribution::wikipedia(), 3_000, 17);
+        let path = tmp_path("sampled");
+        spill_lengths(&ds.lengths, &path, 128).unwrap();
+        let mut src = StreamSource::open_with_budget(&path, 4096).unwrap();
+
+        let mut rng_mem = Rng::seed_from_u64(42);
+        let mut rng_spill = Rng::seed_from_u64(42);
+        let mut batch = Vec::new();
+        for _ in 0..20 {
+            let expect = ds.sample_batch(&mut rng_mem, 64);
+            src.fill_sampled_batch(&mut rng_spill, 64, &mut batch).unwrap();
+            assert_eq!(batch, expect);
+        }
+        assert!(src.peak_resident_bytes() <= 4096);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn epoch_order_matches_dataset() {
+        let ds = Dataset::synthesize(&LengthDistribution::chatqa2(), 500, 3);
+        let path = tmp_path("epoch");
+        spill_lengths(&ds.lengths, &path, 64).unwrap();
+        let mut src = StreamSource::open_with_budget(&path, 2048).unwrap();
+        let order = src.epoch_order(42);
+        assert_eq!(order, ds.epoch_order(42));
+        let mut batch = Vec::new();
+        for (chunk, expect) in order.chunks(16).zip(ds.epoch_batches(16, 42)) {
+            src.fill_batch_from_ids(chunk, &mut batch).unwrap();
+            assert_eq!(batch, expect);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

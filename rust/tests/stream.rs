@@ -1,0 +1,144 @@
+//! Streaming data plane integration tests, exercised through the public
+//! API exactly as the CLI uses it:
+//!
+//! * a spilled-to-disk build produces **byte-identical** schedules to the
+//!   in-memory build — same batches, same `IterationSchedule`s, same
+//!   `schedule_digest` — for sampled and epoch modes across policies,
+//!   while the page cache stays within a deliberately tiny budget that
+//!   forces eviction;
+//! * a corrupted spill file surfaces as `SchedError::Stream`, never as a
+//!   wrong schedule;
+//! * the streamed e2e sweep on the bursty non-stationary corpus fires
+//!   drift events, stays within the configured RAM budget in every cell,
+//!   matches the in-memory sweep digest-for-digest, and renders schema-v5
+//!   JSON that passes the validator.
+
+use skrull::bench::e2e::{self, E2eOptions};
+use skrull::cluster::run::{build_run, build_run_streamed, schedule_digest, RunConfig};
+use skrull::config::{ExperimentConfig, Policy};
+use skrull::data::{Dataset, LengthDistribution};
+use skrull::model::ModelSpec;
+use skrull::scheduler::SchedError;
+use skrull::stream::{ingest_dataset, StreamConfig, StreamSource};
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("skrull-streamtest-{}-{tag}.spill", std::process::id()));
+    p
+}
+
+fn workload(policy: Policy, dataset: &str, n: usize) -> (Dataset, ExperimentConfig) {
+    let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), dataset);
+    cfg.policy = policy;
+    cfg.cluster.dp = 2;
+    cfg.cluster.cp = 2;
+    cfg.cluster.batch_size = 16;
+    let dist = LengthDistribution::by_name(dataset).expect("known dataset");
+    let ds = Dataset::synthesize(&dist, n, 11).truncated(cfg.bucket_size * 2);
+    (ds, cfg)
+}
+
+/// Small pages + a budget of only a few frames, so every run evicts.
+fn tiny_stream_cfg() -> StreamConfig {
+    StreamConfig { page_len: 64, ..StreamConfig::default() }
+}
+const TINY_BUDGET: u64 = 1024; // 64-entry pages = 256 B → 3 leader frames
+
+#[test]
+fn spilled_build_is_byte_identical_to_in_memory() {
+    for policy in [Policy::Baseline, Policy::Skrull, Policy::SkrullRefined] {
+        for epoch in [false, true] {
+            let (ds, cfg) = workload(policy, "chatqa2", 600);
+            let run = if epoch {
+                RunConfig::epoch(cfg.pipelined)
+            } else {
+                RunConfig::new(4, cfg.pipelined)
+            };
+            let in_mem = build_run(&ds, &cfg, &run).expect("in-memory build");
+
+            let path = tmp_path(&format!("ident-{}-{epoch}", policy.name()));
+            let ingest =
+                ingest_dataset(&ds, &path, &tiny_stream_cfg(), cfg.seed).expect("ingest");
+            let mut src =
+                StreamSource::open_with_budget(&path, TINY_BUDGET).expect("open spill");
+            let streamed = build_run_streamed(&mut src, &ingest, &cfg, &run)
+                .expect("streamed build");
+            std::fs::remove_file(&path).expect("cleanup spill");
+
+            assert_eq!(in_mem.iterations.len(), streamed.iterations.len());
+            for (a, b) in in_mem.iterations.iter().zip(&streamed.iterations) {
+                assert_eq!(a.batch, b.batch, "{policy:?} epoch={epoch}: batch drift");
+                assert_eq!(a.schedule, b.schedule, "{policy:?} epoch={epoch}: schedule drift");
+            }
+            assert_eq!(
+                schedule_digest(&in_mem),
+                schedule_digest(&streamed),
+                "{policy:?} epoch={epoch}: digest drift"
+            );
+            // the streamed build really went through the bounded cache
+            assert_eq!(in_mem.peak_stream_rss_bytes, 0);
+            assert!(streamed.peak_stream_rss_bytes > 0);
+            assert!(streamed.peak_stream_rss_bytes <= TINY_BUDGET);
+        }
+    }
+}
+
+#[test]
+fn corrupted_spill_surfaces_as_stream_error() {
+    let (ds, cfg) = workload(Policy::Skrull, "chatqa2", 600);
+    let path = tmp_path("corrupt");
+    let ingest = ingest_dataset(&ds, &path, &tiny_stream_cfg(), cfg.seed).expect("ingest");
+    // flip one byte in the last page's payload: the checksum must reject
+    // it during the build, not let a wrong length reach the scheduler
+    let mut bytes = std::fs::read(&path).expect("read spill");
+    let n = bytes.len();
+    bytes[n - 12] ^= 0x40;
+    std::fs::write(&path, &bytes).expect("rewrite spill");
+
+    let mut src = StreamSource::open_with_budget(&path, TINY_BUDGET).expect("open spill");
+    let run = RunConfig::epoch(cfg.pipelined); // epoch order visits every page
+    let err = build_run_streamed(&mut src, &ingest, &cfg, &run)
+        .expect_err("corrupted page must fail the build");
+    assert!(matches!(err, SchedError::Stream { .. }), "got {err:?}");
+    std::fs::remove_file(&path).expect("cleanup spill");
+}
+
+#[test]
+fn streamed_e2e_sweep_fires_drift_within_budget_and_matches_in_memory() {
+    let mut opts = E2eOptions::smoke();
+    opts.datasets = vec!["bursty-long".into()];
+    opts.dataset_samples = 8192; // 4 bursty phases of 2048 > the 1024 window
+    opts.seeds = vec![42];
+    opts.jobs = 2;
+    opts.deterministic_timing = true;
+
+    let in_mem = e2e::run_sweep(&opts).expect("in-memory sweep");
+
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("skrull-streamtest-e2e-{}", std::process::id()));
+    let mut sopts = opts.clone();
+    sopts.stream.spill_dir = Some(dir.to_string_lossy().into_owned());
+    sopts.stream.ram_mb = 1;
+    let streamed = e2e::run_sweep(&sopts).expect("streamed sweep");
+    std::fs::remove_dir_all(&dir).expect("cleanup spill dir");
+
+    assert!(!in_mem.streamed && streamed.streamed);
+    assert_eq!(streamed.stream_ram_bytes, 1024 * 1024);
+    assert_eq!(e2e::render_digests(&in_mem), e2e::render_digests(&streamed));
+    for (a, b) in in_mem.cells.iter().zip(&streamed.cells) {
+        assert_eq!(a.sched_digest, b.sched_digest, "{}/{:?}", a.dataset, a.policy);
+        assert_eq!(a.report.data_tokens, b.report.data_tokens);
+        assert_eq!(a.report.drift_events, 0);
+        assert!(
+            b.report.drift_events > 0,
+            "{}/{:?}: bursty ingest must fire drift",
+            b.dataset,
+            b.policy
+        );
+        assert_eq!(a.report.peak_stream_rss_bytes, 0);
+        assert!(b.report.peak_stream_rss_bytes > 0);
+        assert!(b.report.peak_stream_rss_bytes <= streamed.stream_ram_bytes);
+    }
+    e2e::validate_json(&e2e::render_json(&in_mem)).expect("in-memory JSON validates");
+    e2e::validate_json(&e2e::render_json(&streamed)).expect("streamed JSON validates");
+}
