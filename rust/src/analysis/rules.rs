@@ -48,6 +48,7 @@ const DETERMINISTIC_MODULES: &[&str] = &[
     "fleet/",
     "memplan/",
     "scheduler/",
+    "serve/",
     "stream/",
 ];
 
@@ -70,6 +71,7 @@ const ERROR_CONVENTION_MODULES: &[&str] = &[
     "perfmodel/",
     "rng/",
     "scheduler/",
+    "serve/",
     "stream/",
 ];
 
@@ -86,7 +88,7 @@ const TIMING_SANCTIONED: &[&str] =
 
 /// Modules carrying declared zero-alloc hot paths (`hot-path-alloc`
 /// scans only the [`HOT_FUNCTIONS`] bodies within them).
-const HOT_PATH_MODULES: &[&str] = &["data/", "fleet/", "scheduler/", "stream/"];
+const HOT_PATH_MODULES: &[&str] = &["data/", "fleet/", "scheduler/", "serve/", "stream/"];
 
 /// The declared hot-path set for `hot-path-alloc`: the static complement
 /// of `tests/alloc_audit.rs`.  `(file, fn)` pairs; the rule scans the
@@ -98,6 +100,7 @@ pub const HOT_FUNCTIONS: &[(&str, &str)] = &[
     ("scheduler/shard.rs", "worker"),
     ("fleet/queue.rs", "pick_next"),
     ("fleet/sim.rs", "next_event"),
+    ("serve/journal.rs", "append"),
     ("data/dataset.rs", "fill_batch"),
     ("data/dataset.rs", "sample_batch_into"),
     ("stream/spill.rs", "get"),

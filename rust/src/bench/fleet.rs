@@ -189,6 +189,49 @@ pub fn run_sweep(opts: &FleetBenchOptions) -> Result<FleetSweep> {
     })
 }
 
+/// Render one cell's JSON payload, byte-for-byte as `render_json` embeds
+/// it.  `skrull serve --replay` emits this exact string for its single
+/// cell and CI `cmp`s it against the simulator's — the daemon must never
+/// out-decide the simulator, and this shared renderer is where the two
+/// paths converge.
+pub fn render_cell_json(
+    arrival: &str,
+    pool_set: &str,
+    pool_gpus: usize,
+    r: &FleetReport,
+) -> String {
+    let w = &r.queue_wait;
+    format!(
+        "{{\"arrival\": \"{}\", \"fleet_policy\": \"{}\", \"pool_set\": \"{}\", \
+         \"pool_gpus\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \
+         \"finished\": {}, \"preemptions\": {}, \"builds\": {}, \"pricings\": {}, \
+         \"max_builds_per_job\": {}, \"priority_inversions\": {}, \
+         \"makespan\": {:e}, \"utilization\": {:.4}, \"fairness_ratio\": {:.4}, \
+         \"queue_wait_mean\": {:e}, \"queue_wait_p50\": {:e}, \
+         \"queue_wait_p95\": {:e}, \"queue_wait_max\": {:e}}}",
+        json_str(arrival),
+        json_str(r.policy.name()),
+        json_str(pool_set),
+        pool_gpus,
+        r.submitted,
+        r.admitted,
+        r.rejected,
+        r.finished,
+        r.preemptions,
+        r.builds,
+        r.pricings,
+        r.max_builds_per_job,
+        r.priority_inversions,
+        r.makespan,
+        r.utilization,
+        r.fairness_ratio,
+        w.mean(),
+        w.quantile(0.5),
+        w.quantile(0.95),
+        w.max(),
+    )
+}
+
 /// Render the sweep as `BENCH_fleet.json` (schema v1, hand-rolled JSON; no
 /// serde in the image).  Deliberately excludes `sweep_seconds`: nothing in
 /// the file depends on the host, so byte-identity across `--jobs` holds
@@ -203,37 +246,10 @@ pub fn render_json(sweep: &FleetSweep) -> String {
     let _ = writeln!(out, "  \"total_jobs\": {},", sweep.total_jobs);
     out.push_str("  \"cells\": [\n");
     for (i, c) in sweep.cells.iter().enumerate() {
-        let r = &c.report;
-        let w = &r.queue_wait;
         let _ = writeln!(
             out,
-            "    {{\"arrival\": \"{}\", \"fleet_policy\": \"{}\", \"pool_set\": \"{}\", \
-             \"pool_gpus\": {}, \"submitted\": {}, \"admitted\": {}, \"rejected\": {}, \
-             \"finished\": {}, \"preemptions\": {}, \"builds\": {}, \"pricings\": {}, \
-             \"max_builds_per_job\": {}, \"priority_inversions\": {}, \
-             \"makespan\": {:e}, \"utilization\": {:.4}, \"fairness_ratio\": {:.4}, \
-             \"queue_wait_mean\": {:e}, \"queue_wait_p50\": {:e}, \
-             \"queue_wait_p95\": {:e}, \"queue_wait_max\": {:e}}}{}",
-            json_str(c.arrival.name()),
-            json_str(r.policy.name()),
-            json_str(c.pool_set),
-            c.pool_gpus,
-            r.submitted,
-            r.admitted,
-            r.rejected,
-            r.finished,
-            r.preemptions,
-            r.builds,
-            r.pricings,
-            r.max_builds_per_job,
-            r.priority_inversions,
-            r.makespan,
-            r.utilization,
-            r.fairness_ratio,
-            w.mean(),
-            w.quantile(0.5),
-            w.quantile(0.95),
-            w.max(),
+            "    {}{}",
+            render_cell_json(c.arrival.name(), c.pool_set, c.pool_gpus, &c.report),
             if i + 1 == sweep.cells.len() { "" } else { "," }
         );
     }

@@ -12,7 +12,7 @@
 //!   v       n × f32
 //!   crc     u64  (FNV-1a over everything above)
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SKRULLCK";
@@ -154,13 +154,9 @@ impl TrainState {
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), CheckpointError> {
-        // write-then-rename for atomicity
-        let path = path.as_ref();
-        let tmp = path.with_extension("tmp");
-        let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(&self.encode())?;
-        f.sync_all()?;
-        std::fs::rename(&tmp, path)?;
+        // write-tmp → fsync → rename → fsync(dir): without the final
+        // directory sync the rename itself may not survive a crash
+        crate::util::fsio::write_atomic(path.as_ref(), &self.encode(), "tmp")?;
         Ok(())
     }
 

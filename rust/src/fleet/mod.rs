@@ -19,4 +19,7 @@ pub mod sim;
 pub use job::{synthesize, ArrivalPattern, FleetJob, Tenant, Workload};
 pub use placement::{Candidate, ClusterSpec, PlacementEngine, PoolSpec};
 pub use queue::{pick_next, FleetPolicy, QueueEntry};
-pub use sim::{simulate, FleetReport, ResumeError, ResumePoint, SimOptions, TenantStats};
+pub use sim::{
+    simulate, FleetCore, FleetEvent, FleetReport, ResumeError, ResumePoint, SimOptions,
+    TenantStats, RESUME_POINT_LEN,
+};

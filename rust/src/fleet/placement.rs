@@ -179,6 +179,49 @@ impl PlacementEngine {
         );
         Ok(())
     }
+
+    /// Permanently shrink `pool` by `n` nodes (a node-loss fault).  The
+    /// lost nodes must currently be free — the fleet core vacates running
+    /// victims first, so a busy node is never yanked silently.
+    pub fn remove_nodes(&mut self, pool: usize, n: usize) -> Result<()> {
+        crate::ensure!(pool < self.pools.len(), "pool {pool} of {}", self.pools.len());
+        crate::ensure!(
+            self.free[pool] >= n,
+            "removing {n} nodes from pool {pool} with only {} free",
+            self.free[pool]
+        );
+        self.free[pool] -= n;
+        self.pools[pool].nodes -= n;
+        Ok(())
+    }
+
+    /// Current free-node vector, indexed like `pools` (snapshot codec).
+    pub fn free_state(&self) -> &[usize] {
+        &self.free
+    }
+
+    /// Restore pool sizes and free counts from a snapshot.  Lengths must
+    /// match this engine's pool count and `free[i] <= nodes[i]`.
+    pub fn restore_state(&mut self, nodes: &[usize], free: &[usize]) -> Result<()> {
+        crate::ensure!(
+            nodes.len() == self.pools.len() && free.len() == self.pools.len(),
+            "snapshot has {}/{} pools, engine has {}",
+            nodes.len(),
+            free.len(),
+            self.pools.len()
+        );
+        for i in 0..self.pools.len() {
+            crate::ensure!(
+                free[i] <= nodes[i],
+                "snapshot pool {i} has {} free of {} nodes",
+                free[i],
+                nodes[i]
+            );
+            self.pools[i].nodes = nodes[i];
+            self.free[i] = free[i];
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -264,5 +307,40 @@ mod tests {
         let spec = ClusterSpec::by_name("paper").unwrap();
         let mut engine = PlacementEngine::new(&spec);
         assert!(engine.release(0, 1).is_err());
+    }
+
+    #[test]
+    fn remove_nodes_shrinks_the_pool_and_refuses_busy_nodes() {
+        let spec = ClusterSpec::by_name("paper").unwrap();
+        let mut engine = PlacementEngine::new(&spec);
+        engine.remove_nodes(0, 3).unwrap();
+        assert_eq!(engine.pools[0].nodes, 1);
+        assert_eq!(engine.free_nodes(0), 1);
+        // a 4-node shape no longer fits anywhere
+        assert!(!engine.placeable(4, 8));
+        assert!(engine.placeable(1, 8));
+        // more than the pool holds is an error, as is a bad pool index
+        assert!(engine.remove_nodes(0, 2).is_err());
+        assert!(engine.remove_nodes(7, 1).is_err());
+    }
+
+    #[test]
+    fn engine_state_round_trips_through_restore() {
+        let spec = ClusterSpec::by_name("hetero").unwrap();
+        let mut engine = PlacementEngine::new(&spec);
+        let (built, cost) = tiny_built(4, 8);
+        let mut out = Vec::new();
+        engine.candidates(&built, &cost, 0, &mut out).unwrap();
+        engine.allocate(&out[0]).unwrap();
+        engine.remove_nodes(2, 5).unwrap();
+        let nodes: Vec<usize> = engine.pools.iter().map(|p| p.nodes).collect();
+        let free = engine.free_state().to_vec();
+        let mut fresh = PlacementEngine::new(&spec);
+        fresh.restore_state(&nodes, &free).unwrap();
+        assert_eq!(fresh.free_state(), engine.free_state());
+        assert_eq!(fresh.pools[2].nodes, 3);
+        // malformed snapshots are structured errors
+        assert!(fresh.restore_state(&nodes[..1], &free).is_err());
+        assert!(fresh.restore_state(&[4, 2, 3], &[5, 0, 0]).is_err());
     }
 }

@@ -1,11 +1,18 @@
-//! The deterministic discrete-event fleet simulator.  Tenants submit
-//! jobs (admission-controlled by per-tenant quota), the queue discipline
+//! The deterministic discrete-event fleet core.  Tenants submit jobs
+//! (admission-controlled by per-tenant quota), the queue discipline
 //! picks what runs next, the placement engine prices each job's single
 //! `BuiltRun` against every pool that could host it, and the event loop
 //! advances start / iteration-boundary-preemption / finish events in
 //! purely simulated time.  Preempted jobs carry their progress through a
 //! checksummed `ResumePoint` codec (the `coordinator::state` checkpoint
 //! idiom), so a resumed job re-prices only its remaining iterations.
+//!
+//! [`FleetCore`] is the incremental engine shared by the batch
+//! [`simulate`] wrapper and the `serve` daemon: `submit` one job at a
+//! time, `step_until` a deadline, `drain`, then `finish_report`.  The
+//! daemon additionally records every decision as a [`FleetEvent`] for
+//! its write-ahead journal — the batch path and the daemon run the
+//! *same* code, which is what makes their outputs byte-identical.
 //!
 //! Nothing here reads a wall clock: the same workload, policy and pool
 //! set produce bit-identical reports on any machine at any parallelism.
@@ -16,7 +23,7 @@ use crate::cluster::run::{build_run, BuiltRun, RunConfig};
 use crate::config::ExperimentConfig;
 use crate::coordinator::state::fnv1a;
 use crate::data::{Dataset, LengthDistribution};
-use crate::fleet::job::Workload;
+use crate::fleet::job::{FleetJob, Tenant, Workload};
 use crate::fleet::placement::{Candidate, ClusterSpec, PlacementEngine};
 use crate::fleet::queue::{pick_next, FleetPolicy, QueueEntry};
 use crate::model::ModelSpec;
@@ -30,6 +37,10 @@ pub const DETERMINISTIC_SCHED_SECONDS: f64 = 1e-6;
 
 const RESUME_MAGIC: [u8; 8] = *b"SKRLFLT\0";
 const RESUME_VERSION: u32 = 1;
+
+/// Exact encoded size of a [`ResumePoint`]: magic + version + job_id +
+/// done_iters + service + wait + CRC.  `decode` rejects any other length.
+pub const RESUME_POINT_LEN: usize = 8 + 4 + 8 + 4 + 8 + 8 + 8;
 
 /// Progress a preempted job carries back into the queue: iterations
 /// done plus the service/wait it accrued, guarded by magic, version and
@@ -49,6 +60,9 @@ pub enum ResumeError {
     BadMagic,
     BadVersion(u32),
     BadChecksum { expected: u64, found: u64 },
+    /// Trailing bytes after a checksum-valid encoding (or any length
+    /// mismatch the field reads did not already catch).
+    BadLength { expected: usize, got: usize },
 }
 
 impl fmt::Display for ResumeError {
@@ -64,6 +78,9 @@ impl fmt::Display for ResumeError {
                     f,
                     "resume point checksum mismatch: expected {expected:#x}, found {found:#x}"
                 )
+            }
+            ResumeError::BadLength { expected, got } => {
+                write!(f, "resume point length {got} != {expected}")
             }
         }
     }
@@ -84,7 +101,7 @@ fn take<const N: usize>(bytes: &[u8], off: usize) -> Result<[u8; N], ResumeError
 
 impl ResumePoint {
     pub fn encode(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(8 + 4 + 8 + 4 + 8 + 8 + 8);
+        let mut buf = Vec::with_capacity(RESUME_POINT_LEN);
         buf.extend_from_slice(&RESUME_MAGIC);
         buf.extend_from_slice(&RESUME_VERSION.to_le_bytes());
         buf.extend_from_slice(&self.job_id.to_le_bytes());
@@ -113,6 +130,12 @@ impl ResumePoint {
         let expected = fnv1a(&bytes[..40]);
         if found != expected {
             return Err(ResumeError::BadChecksum { expected, found });
+        }
+        // reject trailing garbage after an otherwise valid encoding (the
+        // old decode silently accepted it, so a mis-framed journal record
+        // could smuggle extra bytes through)
+        if bytes.len() != RESUME_POINT_LEN {
+            return Err(ResumeError::BadLength { expected: RESUME_POINT_LEN, got: bytes.len() });
         }
         Ok(ResumePoint { job_id, done_iters, service_seconds, wait_seconds })
     }
@@ -151,6 +174,9 @@ pub struct FleetReport {
     pub rejected: usize,
     pub finished: usize,
     pub preemptions: usize,
+    /// Jobs dropped because node loss left no pool that could ever host
+    /// their shape (zero unless the daemon injected node loss).
+    pub evicted: usize,
     /// `build_run` invocations — exactly one per admitted job.
     pub builds: usize,
     /// `price_run` invocations — many per build.
@@ -170,25 +196,94 @@ pub struct FleetReport {
     pub tenants: Vec<TenantStats>,
 }
 
+/// One scheduling decision, in the order the core made it.  The serve
+/// daemon journals the canonical encoding of every event and recovery
+/// replay byte-compares recomputed events against the journal — "the
+/// daemon must never out-decide the simulator" is checked per event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    Arrival { job_id: u64, at: f64 },
+    Admit { job_id: u64 },
+    Reject { job_id: u64 },
+    Dispatch { job_id: u64, pool: u64, nodes: u64, finish: f64 },
+    Preempt { job_id: u64, done_iters: u32, at: f64 },
+    Complete { job_id: u64, at: f64, wait: f64 },
+    Evict { job_id: u64, at: f64 },
+}
+
+impl FleetEvent {
+    /// Append the canonical binary form (tag byte + little-endian fields,
+    /// f64 as raw bits) to `buf`.  This layout is part of the journal
+    /// format: recovery compares these bytes, so bit-exact f64 encoding
+    /// matters.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        match self {
+            FleetEvent::Arrival { job_id, at } => {
+                buf.push(1);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+                buf.extend_from_slice(&at.to_le_bytes());
+            }
+            FleetEvent::Admit { job_id } => {
+                buf.push(2);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+            }
+            FleetEvent::Reject { job_id } => {
+                buf.push(3);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+            }
+            FleetEvent::Dispatch { job_id, pool, nodes, finish } => {
+                buf.push(4);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+                buf.extend_from_slice(&pool.to_le_bytes());
+                buf.extend_from_slice(&nodes.to_le_bytes());
+                buf.extend_from_slice(&finish.to_le_bytes());
+            }
+            FleetEvent::Preempt { job_id, done_iters, at } => {
+                buf.push(5);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+                buf.extend_from_slice(&done_iters.to_le_bytes());
+                buf.extend_from_slice(&at.to_le_bytes());
+            }
+            FleetEvent::Complete { job_id, at, wait } => {
+                buf.push(6);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+                buf.extend_from_slice(&at.to_le_bytes());
+                buf.extend_from_slice(&wait.to_le_bytes());
+            }
+            FleetEvent::Evict { job_id, at } => {
+                buf.push(7);
+                buf.extend_from_slice(&job_id.to_le_bytes());
+                buf.extend_from_slice(&at.to_le_bytes());
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
+        buf
+    }
+}
+
 /// One placed job occupying nodes.
-struct Running {
-    job: usize,
-    pool: usize,
-    nodes: usize,
-    gpus: usize,
-    start: f64,
+pub(crate) struct Running {
+    pub(crate) job: usize,
+    pub(crate) pool: usize,
+    pub(crate) nodes: usize,
+    pub(crate) gpus: usize,
+    pub(crate) start: f64,
     /// Iterations completed before this placement.
-    done_before: usize,
+    pub(crate) done_before: usize,
     /// Absolute completion time of each remaining iteration.
-    iter_ends: Vec<f64>,
-    finish: f64,
+    pub(crate) iter_ends: Vec<f64>,
+    pub(crate) finish: f64,
     /// Next event for this machine: the finish, or an earlier preemption
     /// boundary once a preemption is pending.
-    event_time: f64,
+    pub(crate) event_time: f64,
     /// Index into `iter_ends` where a pending preemption takes effect.
-    preempt_at: Option<usize>,
-    wait_so_far: f64,
-    service_so_far: f64,
+    pub(crate) preempt_at: Option<usize>,
+    pub(crate) wait_so_far: f64,
+    pub(crate) service_so_far: f64,
 }
 
 enum Event {
@@ -233,36 +328,155 @@ fn next_event(running: &[Running], next_arrival: f64) -> Event {
     }
 }
 
-struct Sim<'a> {
-    workload: &'a Workload,
-    opts: &'a SimOptions,
+/// The incremental fleet engine.  Owns its jobs and tenants so the serve
+/// daemon can feed it submissions one control-plane record at a time;
+/// [`simulate`] is a thin batch wrapper over the same methods, which is
+/// what makes daemon replay and batch simulation byte-identical.
+pub struct FleetCore {
+    pub(crate) opts: SimOptions,
+    pub(crate) tenant_specs: Vec<Tenant>,
+    pub(crate) jobs: Vec<FleetJob>,
     cost: CostModel,
-    engine: PlacementEngine,
-    builts: Vec<Option<BuiltRun>>,
-    build_counts: Vec<usize>,
-    queue: Vec<QueueEntry>,
-    running: Vec<Running>,
-    in_system: Vec<usize>,
-    tenants: Vec<TenantStats>,
-    queue_wait: Summary,
-    busy_gpu_seconds: f64,
-    pricings: usize,
-    preemptions: usize,
-    priority_inversions: usize,
-    finished: usize,
-    admitted: usize,
-    rejected: usize,
-    last_finish: f64,
+    pub(crate) engine: PlacementEngine,
+    pub(crate) builts: Vec<Option<BuiltRun>>,
+    pub(crate) build_counts: Vec<usize>,
+    /// Set per job on snapshot restore: the next `ensure_built` is a
+    /// cache refill of an already-counted build, not a new scheduling
+    /// pass (keeps the build-once gate honest across restarts).
+    pub(crate) refill: Vec<bool>,
+    pub(crate) queue: Vec<QueueEntry>,
+    pub(crate) running: Vec<Running>,
+    pub(crate) in_system: Vec<usize>,
+    pub(crate) tenants: Vec<TenantStats>,
+    pub(crate) queue_wait: Summary,
+    pub(crate) busy_gpu_seconds: f64,
+    pub(crate) pricings: usize,
+    pub(crate) preemptions: usize,
+    pub(crate) priority_inversions: usize,
+    pub(crate) finished: usize,
+    pub(crate) admitted: usize,
+    pub(crate) rejected: usize,
+    pub(crate) evicted: usize,
+    pub(crate) last_finish: f64,
+    /// The core's simulated clock: the latest submit / machine-event /
+    /// node-loss time processed.  Inputs must be non-decreasing in time.
+    pub(crate) now: f64,
+    record_events: bool,
+    events: Vec<FleetEvent>,
 }
 
-impl Sim<'_> {
+impl FleetCore {
+    pub fn new(tenants: Vec<Tenant>, opts: SimOptions) -> FleetCore {
+        let engine = PlacementEngine::new(&opts.cluster);
+        let cost =
+            ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia").cost_model();
+        let n_tenants = tenants.len();
+        FleetCore {
+            opts,
+            tenant_specs: tenants,
+            jobs: Vec::new(),
+            cost,
+            engine,
+            builts: Vec::new(),
+            build_counts: Vec::new(),
+            refill: Vec::new(),
+            queue: Vec::new(),
+            running: Vec::new(),
+            in_system: vec![0; n_tenants],
+            tenants: vec![TenantStats::default(); n_tenants],
+            queue_wait: Summary::new(),
+            busy_gpu_seconds: 0.0,
+            pricings: 0,
+            preemptions: 0,
+            priority_inversions: 0,
+            finished: 0,
+            admitted: 0,
+            rejected: 0,
+            evicted: 0,
+            last_finish: 0.0,
+            now: 0.0,
+            record_events: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// Record every decision as a [`FleetEvent`] (drained via
+    /// [`FleetCore::take_events`]).  Off by default — the batch simulator
+    /// has no journal to feed.
+    pub fn set_record_events(&mut self, on: bool) {
+        self.record_events = on;
+    }
+
+    /// Drain the recorded events in decision order.
+    pub fn take_events(&mut self) -> Vec<FleetEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    pub fn queued_jobs(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_jobs(&self) -> usize {
+        self.running.len()
+    }
+
+    fn emit(&mut self, ev: FleetEvent) {
+        if self.record_events {
+            self.events.push(ev);
+        }
+    }
+
+    /// Advance machine events (finishes, preemption boundaries) up to and
+    /// including simulated time `t`.  At `t` itself machines fire before
+    /// any arrival, matching the batch event loop's tie rule.
+    pub fn step_until(&mut self, t: f64) -> Result<()> {
+        loop {
+            match next_event(&self.running, t) {
+                Event::Machine(mi) => self.machine_event(mi)?,
+                Event::Arrival | Event::Idle => return Ok(()),
+            }
+        }
+    }
+
+    /// Run every pending machine event to quiescence.
+    pub fn drain(&mut self) -> Result<()> {
+        self.step_until(f64::INFINITY)
+    }
+
+    /// Submit one job at simulated time `now` (non-decreasing across
+    /// calls).  A job whose shape fits no pool — possible after node
+    /// loss — is rejected like a quota violation, never an error: the
+    /// daemon degrades gracefully.
+    pub fn submit(&mut self, job: FleetJob, now: f64) -> Result<()> {
+        crate::ensure!(
+            job.tenant < self.tenant_specs.len(),
+            "job {} names tenant {} of {}",
+            job.id,
+            job.tenant,
+            self.tenant_specs.len()
+        );
+        crate::ensure!(
+            now >= self.now,
+            "job {} arrives at {now}, before the core's clock {}",
+            job.id,
+            self.now
+        );
+        self.now = now;
+        let job_idx = self.jobs.len();
+        self.jobs.push(job);
+        self.builts.push(None);
+        self.build_counts.push(0);
+        self.refill.push(false);
+        self.arrive(job_idx, now)
+    }
+
     /// Schedule (GDS/DACP) the job exactly once; every later placement
     /// decision reprices this artifact.
     fn ensure_built(&mut self, job_idx: usize) -> Result<()> {
         if self.builts[job_idx].is_some() {
             return Ok(());
         }
-        let job = &self.workload.jobs[job_idx];
+        let job = self.jobs[job_idx].clone();
         let mut cfg = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), job.dataset);
         cfg.cluster.dp = job.dp;
         cfg.cluster.cp = job.cp;
@@ -283,7 +497,13 @@ impl Sim<'_> {
             .with_context(|| format!("job {}: schedule build failed", job.id))?;
         built.pin_sched_seconds(DETERMINISTIC_SCHED_SECONDS);
         self.builts[job_idx] = Some(built);
-        self.build_counts[job_idx] += 1;
+        if self.refill[job_idx] {
+            // rebuilding a schedule the pre-restart process already built
+            // and counted — a cache refill, not a second scheduling pass
+            self.refill[job_idx] = false;
+        } else {
+            self.build_counts[job_idx] += 1;
+        }
         Ok(())
     }
 
@@ -333,7 +553,7 @@ impl Sim<'_> {
                 let cand = self.best_candidate(qi)?;
                 feasible.push(cand.is_some());
                 secs.push(cand.as_ref().map_or(f64::INFINITY, |c| c.seconds));
-                prios.push(self.workload.jobs[self.queue[qi].job].priority);
+                prios.push(self.jobs[self.queue[qi].job].priority);
                 chosen.push(cand);
             }
             let Some(qi) = pick_next(self.opts.policy, &feasible, &secs, &prios) else {
@@ -353,22 +573,24 @@ impl Sim<'_> {
 
     fn start(&mut self, qi: usize, cand: Candidate, now: f64) -> Result<()> {
         let mut entry = self.queue.remove(qi);
-        let job = &self.workload.jobs[entry.job];
+        let (job_id, gpus) = {
+            let j = &self.jobs[entry.job];
+            (j.id, j.gpus())
+        };
         // a preempted job's progress must round-trip the resume codec
         // intact before it re-enters service
         if let Some(bytes) = entry.resume.take() {
             let point = ResumePoint::decode(&bytes)
-                .with_context(|| format!("job {}: corrupt resume point", job.id))?;
+                .with_context(|| format!("job {job_id}: corrupt resume point"))?;
             crate::ensure!(
-                point.job_id == job.id
+                point.job_id == job_id
                     && point.done_iters as usize == entry.done_iters
                     && point.service_seconds.to_bits() == entry.service_so_far.to_bits()
                     && point.wait_seconds.to_bits() == entry.wait_so_far.to_bits(),
-                "job {}: resume point disagrees with queue entry",
-                job.id
+                "job {job_id}: resume point disagrees with queue entry"
             );
         }
-        crate::ensure!(!cand.per_iter.is_empty(), "job {} has no remaining iterations", job.id);
+        crate::ensure!(!cand.per_iter.is_empty(), "job {job_id} has no remaining iterations");
         entry.wait_so_far += now - entry.enqueued_at;
         self.engine.allocate(&cand)?;
         let mut iter_ends = Vec::with_capacity(cand.per_iter.len());
@@ -378,11 +600,17 @@ impl Sim<'_> {
             iter_ends.push(t);
         }
         let finish = t;
+        self.emit(FleetEvent::Dispatch {
+            job_id,
+            pool: cand.pool as u64,
+            nodes: cand.nodes as u64,
+            finish,
+        });
         self.running.push(Running {
             job: entry.job,
             pool: cand.pool,
             nodes: cand.nodes,
-            gpus: job.gpus(),
+            gpus,
             start: now,
             done_before: entry.done_iters,
             iter_ends,
@@ -404,7 +632,7 @@ impl Sim<'_> {
             if r.preempt_at.is_some() {
                 continue;
             }
-            let prio = self.workload.jobs[r.job].priority;
+            let prio = self.jobs[r.job].priority;
             if prio >= arriving_priority {
                 continue;
             }
@@ -420,7 +648,7 @@ impl Sim<'_> {
             let better = match victim {
                 None => true,
                 Some(v) => {
-                    let vp = self.workload.jobs[self.running[v].job].priority;
+                    let vp = self.jobs[self.running[v].job].priority;
                     prio < vp || (prio == vp && r.job < self.running[v].job)
                 }
             };
@@ -442,13 +670,17 @@ impl Sim<'_> {
     }
 
     fn arrive(&mut self, job_idx: usize, now: f64) -> Result<()> {
-        let job = &self.workload.jobs[job_idx];
-        let tenant = job.tenant;
+        let (job_id, tenant, priority, dp, cp) = {
+            let j = &self.jobs[job_idx];
+            (j.id, j.tenant, j.priority, j.dp, j.cp)
+        };
+        self.emit(FleetEvent::Arrival { job_id, at: now });
         self.tenants[tenant].submitted += 1;
-        let quota = self.workload.tenants[tenant].quota;
-        if self.in_system[tenant] >= quota {
+        let quota = self.tenant_specs[tenant].quota;
+        if self.in_system[tenant] >= quota || !self.engine.placeable(dp, cp) {
             self.rejected += 1;
             self.tenants[tenant].rejected += 1;
+            self.emit(FleetEvent::Reject { job_id });
             return Ok(());
         }
         self.admitted += 1;
@@ -456,6 +688,7 @@ impl Sim<'_> {
         self.in_system[tenant] += 1;
         self.tenants[tenant].peak_in_flight =
             self.tenants[tenant].peak_in_flight.max(self.in_system[tenant]);
+        self.emit(FleetEvent::Admit { job_id });
         self.queue.push(QueueEntry {
             job: job_idx,
             enqueued_at: now,
@@ -468,7 +701,7 @@ impl Sim<'_> {
         if self.opts.policy == FleetPolicy::Priority {
             if let Some(qi) = self.queue.iter().position(|e| e.job == job_idx) {
                 if self.best_candidate(qi)?.is_none() {
-                    self.preempt_for(self.workload.jobs[job_idx].priority, now);
+                    self.preempt_for(priority, now);
                 }
             }
         }
@@ -478,27 +711,35 @@ impl Sim<'_> {
     fn machine_event(&mut self, mi: usize) -> Result<()> {
         let r = self.running.swap_remove(mi);
         let now = r.event_time;
-        let job = &self.workload.jobs[r.job];
+        self.now = now;
+        let (job_id, tenant, iterations) = {
+            let j = &self.jobs[r.job];
+            (j.id, j.tenant, j.iterations)
+        };
         let segment = now - r.start;
         self.busy_gpu_seconds += r.gpus as f64 * segment;
-        self.tenants[job.tenant].service_seconds += segment;
+        self.tenants[tenant].service_seconds += segment;
         self.engine.release(r.pool, r.nodes)?;
         match r.preempt_at {
             Some(j) => {
                 self.preemptions += 1;
                 let done_iters = r.done_before + j + 1;
                 crate::ensure!(
-                    done_iters < job.iterations,
-                    "job {} preempted past its final iteration",
-                    job.id
+                    done_iters < iterations,
+                    "job {job_id} preempted past its final iteration"
                 );
                 let service = r.service_so_far + segment;
                 let point = ResumePoint {
-                    job_id: job.id,
+                    job_id,
                     done_iters: done_iters as u32,
                     service_seconds: service,
                     wait_seconds: r.wait_so_far,
                 };
+                self.emit(FleetEvent::Preempt {
+                    job_id,
+                    done_iters: done_iters as u32,
+                    at: now,
+                });
                 self.queue.push(QueueEntry {
                     job: r.job,
                     enqueued_at: now,
@@ -510,24 +751,199 @@ impl Sim<'_> {
             }
             None => {
                 self.finished += 1;
-                self.tenants[job.tenant].finished += 1;
-                self.in_system[job.tenant] -= 1;
+                self.tenants[tenant].finished += 1;
+                self.in_system[tenant] -= 1;
                 self.queue_wait.push(r.wait_so_far);
                 self.last_finish = self.last_finish.max(r.finish);
+                self.emit(FleetEvent::Complete { job_id, at: now, wait: r.wait_so_far });
             }
         }
         self.dispatch(now)
+    }
+
+    /// Forcibly preempt `running[mi]` at time `now` (a node-loss victim,
+    /// not an iteration boundary): account the elapsed segment, keep only
+    /// fully completed iterations, and re-queue the remainder behind a
+    /// checksummed resume point.
+    fn preempt_now(&mut self, mi: usize, now: f64) -> Result<()> {
+        let r = self.running.swap_remove(mi);
+        let (job_id, tenant, iterations) = {
+            let j = &self.jobs[r.job];
+            (j.id, j.tenant, j.iterations)
+        };
+        let segment = now - r.start;
+        self.busy_gpu_seconds += r.gpus as f64 * segment;
+        self.tenants[tenant].service_seconds += segment;
+        self.engine.release(r.pool, r.nodes)?;
+        self.preemptions += 1;
+        // a partially executed iteration is lost; boundaries at exactly
+        // `now` count as completed (the finish itself cannot be ≤ now —
+        // step_until fired those machine events already)
+        let completed = r.iter_ends.iter().filter(|&&b| b <= now).count();
+        let done_iters = r.done_before + completed;
+        crate::ensure!(
+            done_iters < iterations,
+            "job {job_id} lost its node after its final iteration"
+        );
+        let service = r.service_so_far + segment;
+        let point = ResumePoint {
+            job_id,
+            done_iters: done_iters as u32,
+            service_seconds: service,
+            wait_seconds: r.wait_so_far,
+        };
+        self.emit(FleetEvent::Preempt { job_id, done_iters: done_iters as u32, at: now });
+        self.queue.push(QueueEntry {
+            job: r.job,
+            enqueued_at: now,
+            done_iters,
+            resume: Some(point.encode()),
+            wait_so_far: r.wait_so_far,
+            service_so_far: service,
+        });
+        Ok(())
+    }
+
+    /// Permanently lose `n` nodes of pool `pool` at simulated time `now`.
+    /// Running victims (lowest job id first) are preempted mid-iteration
+    /// and re-queued behind their resume points for placement on the
+    /// surviving pools; queued jobs whose shape no longer fits any pool
+    /// are evicted (counted, evented, never an error).
+    pub fn lose_nodes(&mut self, pool: usize, n: usize, now: f64) -> Result<()> {
+        crate::ensure!(
+            pool < self.engine.pools.len(),
+            "node loss names pool {pool} of {}",
+            self.engine.pools.len()
+        );
+        crate::ensure!(
+            now >= self.now,
+            "node loss at {now}, before the core's clock {}",
+            self.now
+        );
+        self.now = now;
+        let lose = n.min(self.engine.pools[pool].nodes);
+        if lose == 0 {
+            return Ok(());
+        }
+        // vacate busy nodes until the loss can be taken from free ones:
+        // victims in lowest-job-id order for determinism
+        while self.engine.free_nodes(pool) < lose {
+            let mut victim: Option<usize> = None;
+            for (i, r) in self.running.iter().enumerate() {
+                if r.pool != pool {
+                    continue;
+                }
+                let better = match victim {
+                    None => true,
+                    Some(v) => r.job < self.running[v].job,
+                };
+                if better {
+                    victim = Some(i);
+                }
+            }
+            let Some(vi) = victim else { break };
+            self.preempt_now(vi, now)?;
+        }
+        crate::ensure!(
+            self.engine.free_nodes(pool) >= lose,
+            "pool {pool} still has only {} free nodes after vacating all jobs",
+            self.engine.free_nodes(pool)
+        );
+        self.engine.remove_nodes(pool, lose)?;
+        // evict queued jobs (including just-vacated victims) whose shape
+        // no longer fits anywhere
+        let mut qi = 0;
+        while qi < self.queue.len() {
+            let (job_id, tenant, dp, cp) = {
+                let j = &self.jobs[self.queue[qi].job];
+                (j.id, j.tenant, j.dp, j.cp)
+            };
+            if self.engine.placeable(dp, cp) {
+                qi += 1;
+            } else {
+                self.queue.remove(qi);
+                self.in_system[tenant] -= 1;
+                self.evicted += 1;
+                self.emit(FleetEvent::Evict { job_id, at: now });
+            }
+        }
+        self.dispatch(now)
+    }
+
+    /// Close the books: every conservation / build-once / utilization
+    /// gate of the batch simulator, then the report.
+    pub fn finish_report(&self) -> Result<FleetReport> {
+        let n_jobs = self.jobs.len();
+        crate::ensure!(n_jobs > 0, "empty workload");
+        crate::ensure!(
+            self.queue.is_empty(),
+            "fleet went idle with {} queued jobs",
+            self.queue.len()
+        );
+        crate::ensure!(self.running.is_empty(), "{} jobs still running", self.running.len());
+        crate::ensure!(
+            self.admitted + self.rejected == n_jobs
+                && self.finished + self.evicted == self.admitted,
+            "conservation violated: {} submitted, {} admitted, {} rejected, {} finished, {} evicted",
+            n_jobs,
+            self.admitted,
+            self.rejected,
+            self.finished,
+            self.evicted
+        );
+        let builds: usize = self.build_counts.iter().sum();
+        let max_builds_per_job = self.build_counts.iter().copied().max().unwrap_or(0);
+        crate::ensure!(
+            max_builds_per_job <= 1 && builds == self.admitted,
+            "build-once violated: {builds} builds for {} admitted jobs (max {max_builds_per_job})",
+            self.admitted
+        );
+        crate::ensure!(self.finished > 0, "no job finished");
+        let makespan = self.last_finish;
+        let total_gpus = self.opts.cluster.total_gpus();
+        let utilization = self.busy_gpu_seconds / (total_gpus as f64 * makespan);
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        let mut served = 0usize;
+        for (t, stats) in self.tenant_specs.iter().zip(&self.tenants) {
+            if stats.finished == 0 {
+                continue;
+            }
+            served += 1;
+            let weighted = stats.service_seconds / t.weight;
+            lo = lo.min(weighted);
+            hi = hi.max(weighted);
+        }
+        let fairness_ratio = if served >= 2 { hi / lo } else { 1.0 };
+        Ok(FleetReport {
+            policy: self.opts.policy,
+            cluster: self.opts.cluster.name,
+            submitted: n_jobs,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            finished: self.finished,
+            preemptions: self.preemptions,
+            evicted: self.evicted,
+            builds,
+            pricings: self.pricings,
+            max_builds_per_job,
+            priority_inversions: self.priority_inversions,
+            makespan,
+            utilization,
+            fairness_ratio,
+            queue_wait: self.queue_wait.clone(),
+            tenants: self.tenants.clone(),
+        })
     }
 }
 
 /// Run the fleet to completion and account for every job.
 pub fn simulate(workload: &Workload, opts: &SimOptions) -> Result<FleetReport> {
-    let n_jobs = workload.jobs.len();
-    crate::ensure!(n_jobs > 0, "empty workload");
-    let engine = PlacementEngine::new(&opts.cluster);
+    crate::ensure!(!workload.jobs.is_empty(), "empty workload");
+    let probe = PlacementEngine::new(&opts.cluster);
     for job in &workload.jobs {
         crate::ensure!(
-            engine.placeable(job.dp, job.cp),
+            probe.placeable(job.dp, job.cp),
             "job {} shape {}x{} fits no pool of {}",
             job.id,
             job.dp,
@@ -535,95 +951,14 @@ pub fn simulate(workload: &Workload, opts: &SimOptions) -> Result<FleetReport> {
             opts.cluster.name
         );
     }
-    let cost = ExperimentConfig::paper_default(ModelSpec::qwen2_5_0_5b(), "wikipedia").cost_model();
-    let mut sim = Sim {
-        workload,
-        opts,
-        cost,
-        engine,
-        builts: vec![None; n_jobs],
-        build_counts: vec![0; n_jobs],
-        queue: Vec::new(),
-        running: Vec::new(),
-        in_system: vec![0; workload.tenants.len()],
-        tenants: vec![TenantStats::default(); workload.tenants.len()],
-        queue_wait: Summary::new(),
-        busy_gpu_seconds: 0.0,
-        pricings: 0,
-        preemptions: 0,
-        priority_inversions: 0,
-        finished: 0,
-        admitted: 0,
-        rejected: 0,
-        last_finish: 0.0,
-    };
-    let mut next_job = 0usize;
-    loop {
-        let next_arrival = if next_job < n_jobs {
-            workload.jobs[next_job].submit_time
-        } else {
-            f64::INFINITY
-        };
-        match next_event(&sim.running, next_arrival) {
-            Event::Arrival => {
-                sim.arrive(next_job, next_arrival)?;
-                next_job += 1;
-            }
-            Event::Machine(mi) => sim.machine_event(mi)?,
-            Event::Idle => break,
-        }
+    let mut core = FleetCore::new(workload.tenants.clone(), opts.clone());
+    for job in &workload.jobs {
+        let t = job.submit_time;
+        core.step_until(t)?;
+        core.submit(job.clone(), t)?;
     }
-    crate::ensure!(sim.queue.is_empty(), "fleet went idle with {} queued jobs", sim.queue.len());
-    crate::ensure!(
-        sim.admitted + sim.rejected == n_jobs && sim.finished == sim.admitted,
-        "conservation violated: {} submitted, {} admitted, {} rejected, {} finished",
-        n_jobs,
-        sim.admitted,
-        sim.rejected,
-        sim.finished
-    );
-    let builds: usize = sim.build_counts.iter().sum();
-    let max_builds_per_job = sim.build_counts.iter().copied().max().unwrap_or(0);
-    crate::ensure!(
-        max_builds_per_job <= 1 && builds == sim.admitted,
-        "build-once violated: {builds} builds for {} admitted jobs (max {max_builds_per_job})",
-        sim.admitted
-    );
-    crate::ensure!(sim.finished > 0, "no job finished");
-    let makespan = sim.last_finish;
-    let total_gpus = opts.cluster.total_gpus();
-    let utilization = sim.busy_gpu_seconds / (total_gpus as f64 * makespan);
-    let mut lo = f64::INFINITY;
-    let mut hi = 0.0f64;
-    let mut served = 0usize;
-    for (t, stats) in workload.tenants.iter().zip(&sim.tenants) {
-        if stats.finished == 0 {
-            continue;
-        }
-        served += 1;
-        let weighted = stats.service_seconds / t.weight;
-        lo = lo.min(weighted);
-        hi = hi.max(weighted);
-    }
-    let fairness_ratio = if served >= 2 { hi / lo } else { 1.0 };
-    Ok(FleetReport {
-        policy: opts.policy,
-        cluster: opts.cluster.name,
-        submitted: n_jobs,
-        admitted: sim.admitted,
-        rejected: sim.rejected,
-        finished: sim.finished,
-        preemptions: sim.preemptions,
-        builds,
-        pricings: sim.pricings,
-        max_builds_per_job,
-        priority_inversions: sim.priority_inversions,
-        makespan,
-        utilization,
-        fairness_ratio,
-        queue_wait: sim.queue_wait,
-        tenants: sim.tenants,
-    })
+    core.drain()?;
+    core.finish_report()
 }
 
 #[cfg(test)]
@@ -650,6 +985,7 @@ mod tests {
             wait_seconds: 0.75,
         };
         let bytes = p.encode();
+        assert_eq!(bytes.len(), RESUME_POINT_LEN);
         assert_eq!(ResumePoint::decode(&bytes).unwrap(), p);
         let mut flipped = bytes.clone();
         flipped[15] ^= 1;
@@ -664,10 +1000,36 @@ mod tests {
         let mut wrong_magic = bytes.clone();
         wrong_magic[0] = b'X';
         assert_eq!(ResumePoint::decode(&wrong_magic), Err(ResumeError::BadMagic));
+        // trailing garbage after a checksum-valid body must not decode
+        let mut padded = bytes.clone();
+        padded.push(0xAB);
+        assert_eq!(
+            ResumePoint::decode(&padded),
+            Err(ResumeError::BadLength { expected: RESUME_POINT_LEN, got: 49 })
+        );
         let mut wrong_version = bytes;
         wrong_version[8] = 9;
         // version is checked before the checksum
         assert_eq!(ResumePoint::decode(&wrong_version), Err(ResumeError::BadVersion(9)));
+    }
+
+    #[test]
+    fn resume_codec_survives_exhaustive_mutation() {
+        // every single-bit flip, every truncation, trailing garbage and
+        // seeded random buffers: all structured errors, no panics, no
+        // false accepts
+        let p = ResumePoint {
+            job_id: u64::MAX - 3,
+            done_iters: 7,
+            service_seconds: 1.5e-3,
+            wait_seconds: 0.0,
+        };
+        crate::util::proptest::assert_codec_rejects_mutants(
+            &p.encode(),
+            256,
+            99,
+            ResumePoint::decode,
+        );
     }
 
     #[test]
@@ -677,6 +1039,7 @@ mod tests {
             assert_eq!(r.submitted, 20);
             assert_eq!(r.admitted + r.rejected, 20);
             assert_eq!(r.finished, r.admitted);
+            assert_eq!(r.evicted, 0);
             assert_eq!(r.builds, r.admitted);
             assert_eq!(r.max_builds_per_job, 1);
             assert!(r.pricings >= r.builds);
@@ -737,5 +1100,142 @@ mod tests {
         let b = simulate(&workload, &mk(true)).unwrap();
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
         assert_eq!(a.queue_wait.mean().to_bits(), b.queue_wait.mean().to_bits());
+    }
+
+    fn mini_job(id: u64, dp: usize, cp: usize) -> FleetJob {
+        FleetJob {
+            id,
+            tenant: 0,
+            dataset: "wikipedia",
+            dp,
+            cp,
+            batch_size: 8,
+            iterations: 2,
+            seq_count: 200,
+            policy: crate::config::Policy::Skrull,
+            priority: 1,
+            submit_time: 0.0,
+            seed: 5 + id,
+        }
+    }
+
+    #[test]
+    fn node_loss_preempts_victims_and_evicts_unplaceable_jobs() {
+        // one big job holding all 4 testbed nodes + one small queued job;
+        // losing 3 nodes must preempt the big job, evict it (4-node shape
+        // no longer fits), and let the small job finish on the survivor
+        let tenants = vec![Tenant { id: 0, weight: 1.0, quota: 10 }];
+        let opts = SimOptions {
+            policy: FleetPolicy::Fifo,
+            cluster: ClusterSpec::by_name("paper").unwrap(),
+            serial_scheduler: false,
+        };
+        let mut core = FleetCore::new(tenants, opts);
+        core.set_record_events(true);
+        core.submit(mini_job(0, 4, 8), 0.0).unwrap();
+        core.submit(mini_job(1, 1, 8), 0.0).unwrap();
+        assert_eq!(core.running_jobs(), 1);
+        assert_eq!(core.queued_jobs(), 1);
+        core.lose_nodes(0, 3, 0.0).unwrap();
+        core.drain().unwrap();
+        let r = core.finish_report().unwrap();
+        assert_eq!(r.submitted, 2);
+        assert_eq!(r.admitted, 2);
+        assert_eq!(r.finished, 1);
+        assert_eq!(r.evicted, 1);
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.builds, 2, "both admitted jobs were built exactly once");
+        let kinds: Vec<u8> = core
+            .take_events()
+            .iter()
+            .map(|e| e.encode()[0])
+            .collect();
+        // arrival/admit/dispatch(j0), arrival/admit(j1 queued),
+        // preempt(j0), evict(j0), dispatch(j1), complete(j1)
+        assert_eq!(kinds, vec![1, 2, 4, 1, 2, 5, 7, 4, 6]);
+    }
+
+    #[test]
+    fn submit_after_node_loss_rejects_unplaceable_shapes_gracefully() {
+        let tenants = vec![Tenant { id: 0, weight: 1.0, quota: 10 }];
+        let opts = SimOptions {
+            policy: FleetPolicy::Fifo,
+            cluster: ClusterSpec::by_name("paper").unwrap(),
+            serial_scheduler: false,
+        };
+        let mut core = FleetCore::new(tenants, opts);
+        core.lose_nodes(0, 3, 0.0).unwrap();
+        core.submit(mini_job(0, 4, 8), 0.0).unwrap();
+        core.submit(mini_job(1, 1, 8), 0.0).unwrap();
+        core.drain().unwrap();
+        let r = core.finish_report().unwrap();
+        assert_eq!(r.rejected, 1, "the 4-node shape must be rejected, not an error");
+        assert_eq!(r.finished, 1);
+    }
+
+    #[test]
+    fn incremental_core_matches_batch_simulate_bit_for_bit() {
+        let workload = synthesize(ArrivalPattern::Bursty, 18, 9);
+        let opts = SimOptions {
+            policy: FleetPolicy::Priority,
+            cluster: ClusterSpec::by_name("hetero").unwrap(),
+            serial_scheduler: false,
+        };
+        let batch = simulate(&workload, &opts).unwrap();
+        let mut core = FleetCore::new(workload.tenants.clone(), opts);
+        for job in &workload.jobs {
+            core.step_until(job.submit_time).unwrap();
+            core.submit(job.clone(), job.submit_time).unwrap();
+        }
+        core.drain().unwrap();
+        let inc = core.finish_report().unwrap();
+        assert_eq!(batch.makespan.to_bits(), inc.makespan.to_bits());
+        assert_eq!(batch.utilization.to_bits(), inc.utilization.to_bits());
+        assert_eq!(batch.fairness_ratio.to_bits(), inc.fairness_ratio.to_bits());
+        assert_eq!(batch.pricings, inc.pricings);
+        assert_eq!(batch.preemptions, inc.preemptions);
+        assert_eq!(batch.finished, inc.finished);
+    }
+
+    #[test]
+    fn event_recording_is_off_by_default_and_drains() {
+        let workload = synthesize(ArrivalPattern::Steady, 6, 3);
+        let opts = SimOptions {
+            policy: FleetPolicy::Fifo,
+            cluster: ClusterSpec::by_name("paper").unwrap(),
+            serial_scheduler: false,
+        };
+        let mut core = FleetCore::new(workload.tenants.clone(), opts.clone());
+        for job in &workload.jobs {
+            core.step_until(job.submit_time).unwrap();
+            core.submit(job.clone(), job.submit_time).unwrap();
+        }
+        core.drain().unwrap();
+        assert!(core.take_events().is_empty(), "recording must be opt-in");
+
+        let mut rec = FleetCore::new(workload.tenants.clone(), opts);
+        rec.set_record_events(true);
+        for job in &workload.jobs {
+            rec.step_until(job.submit_time).unwrap();
+            rec.submit(job.clone(), job.submit_time).unwrap();
+        }
+        rec.drain().unwrap();
+        let events = rec.take_events();
+        let arrivals = events
+            .iter()
+            .filter(|e| matches!(e, FleetEvent::Arrival { .. }))
+            .count();
+        assert_eq!(arrivals, 6);
+        let completes = events
+            .iter()
+            .filter(|e| matches!(e, FleetEvent::Complete { .. }))
+            .count();
+        let report = rec.finish_report().unwrap();
+        assert_eq!(completes, report.finished);
+        assert!(rec.take_events().is_empty(), "take_events must drain");
+        // encodings are self-describing: distinct events encode distinctly
+        let a = events[0].encode();
+        let b = events[1].encode();
+        assert_ne!(a, b);
     }
 }

@@ -28,5 +28,6 @@ pub mod perfmodel;
 pub mod rng;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod stream;
 pub mod util;

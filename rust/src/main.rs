@@ -7,6 +7,9 @@
 //!               through the run engine; writes BENCH_e2e.json
 //!   fleet     — multi-tenant fleet-scheduling sweep: arrival patterns ×
 //!               queue policies × pool sets; writes BENCH_fleet.json
+//!   serve     — crash-safe fleet daemon over a JSONL control plane, with
+//!               a checksummed write-ahead journal, snapshots, seeded
+//!               fault injection and byte-identical recovery replay
 //!   lint      — repo-aware static analysis of rust/src; writes
 //!               LINT_REPORT.json (the CI gate behind --validate)
 //!   sched-bench — scheduler overhead + K-scaling benches; writes
@@ -601,6 +604,109 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    use skrull::fleet::{ArrivalPattern, FleetPolicy};
+    use skrull::serve::{daemon, FaultPlan};
+    use std::path::PathBuf;
+
+    let plan = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::from_spec(spec)?,
+        None => FaultPlan::none(),
+    };
+
+    if args.flag("smoke") {
+        return daemon::run_smoke(plan);
+    }
+
+    // --record FILE: synthesize a workload and write its control log
+    if let Some(out) = args.get("record") {
+        let arrival = ArrivalPattern::by_name(args.str_or("arrival", "bursty"))
+            .context("unknown --arrival (steady|bursty|heavy-tailed)")?;
+        let policy = FleetPolicy::by_name(args.str_or("fleet-policy", "priority"))
+            .context("unknown --fleet-policy (fifo|priority|shortest-priced|best-fit-price)")?;
+        let pool_set = args.str_or("pool-set", "paper");
+        let n_jobs: usize = args.parse_or("n-jobs", 24)?;
+        let seed: u64 = args.parse_or("seed", 42)?;
+        let lines = daemon::record_log(arrival, policy, pool_set, n_jobs, seed)?;
+        let mut text = lines.join("\n");
+        text.push('\n');
+        std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+        println!("recorded {} control lines to {out}", lines.len());
+        return Ok(());
+    }
+
+    // --replay FILE: re-run a recorded log (daemon by default, --sim for
+    // the batch simulator) and emit the cell payload — the two paths are
+    // byte-identical, which CI enforces with `cmp`
+    if let Some(log) = args.get("replay") {
+        let text = std::fs::read_to_string(log).with_context(|| format!("reading {log}"))?;
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let cell = if args.flag("sim") {
+            daemon::replay_via_sim(&lines)?
+        } else {
+            let (state_dir, ephemeral) = match args.get("state-dir") {
+                Some(d) => (PathBuf::from(d), false),
+                None => (
+                    std::env::temp_dir()
+                        .join(format!("skrull_serve_replay_{}", std::process::id())),
+                    true,
+                ),
+            };
+            let cell = daemon::replay_via_daemon(&lines, &state_dir)?;
+            if ephemeral {
+                std::fs::remove_dir_all(&state_dir).ok();
+            }
+            cell
+        };
+        match args.get("out") {
+            Some(out) => {
+                let mut payload = cell;
+                payload.push('\n');
+                std::fs::write(out, payload).with_context(|| format!("writing {out}"))?;
+                println!("wrote {out}");
+            }
+            None => println!("{cell}"),
+        }
+        return Ok(());
+    }
+
+    // daemon mode: control records from --input FILE or stdin
+    let state_dir = PathBuf::from(args.str_or("state-dir", "serve-state"));
+    let snapshot_every: usize = args.parse_or("snapshot-every", 64)?;
+    let lines: Vec<String> = match args.get("input") {
+        Some(path) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?
+            .lines()
+            .map(str::to_string)
+            .collect(),
+        None => {
+            let mut buf = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)
+                .context("reading control records from stdin")?;
+            buf.lines().map(str::to_string).collect()
+        }
+    };
+    let opts = daemon::DaemonOptions { state_dir, snapshot_every, fault: plan };
+    match daemon::run(&lines, &opts)? {
+        daemon::Outcome::Completed { cell_json } => {
+            match args.get("out") {
+                Some(out) => {
+                    let mut payload = cell_json;
+                    payload.push('\n');
+                    std::fs::write(out, payload).with_context(|| format!("writing {out}"))?;
+                    println!("wrote {out}");
+                }
+                None => println!("{cell_json}"),
+            }
+            Ok(())
+        }
+        daemon::Outcome::Killed => bail!(
+            "fault plan killed the daemon mid-append; rerun with the same \
+             --state-dir (and no kill in the plan) to recover"
+        ),
+    }
+}
+
 fn cmd_calibrate(args: &Args) -> Result<()> {
     use skrull::calib;
 
@@ -773,7 +879,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: skrull <schedule|simulate|e2e|fleet|lint|sched-bench|calibrate|train|analyze|profile> [--options]
+const USAGE: &str = "usage: skrull <schedule|simulate|e2e|fleet|serve|lint|sched-bench|calibrate|train|analyze|profile> [--options]
   common:    --config FILE | --model M --dataset D --dp N --cp N --batch-size K
              --policy (baseline|dacp|skrull|sorted) --bucket-size C --seed S --sync
              --shards N (scheduler shards, 0 = auto) --incremental
@@ -791,6 +897,13 @@ const USAGE: &str = "usage: skrull <schedule|simulate|e2e|fleet|lint|sched-bench
   fleet:     multi-tenant fleet sweep: arrivals x policies x pool sets -> BENCH_fleet.json
              --smoke --jobs-per-cell N --seed S --jobs N (0 = auto)
              --out FILE | --validate=FILE
+  serve:     crash-safe fleet daemon over a JSONL control plane (stdin or --input FILE)
+             --state-dir DIR (journal + snapshots; default serve-state)
+             --snapshot-every N (inputs between snapshots, 0 = never; default 64)
+             --fault-plan SPEC (seed=N[,kill=N:clean|torn|bitflip][,transient=N])
+             --record FILE (--arrival A --fleet-policy P --pool-set S --n-jobs N --seed S)
+             --replay FILE [--sim] [--out FILE] (daemon vs simulator cells are byte-identical)
+             --smoke (record + replay + kill/recover in every tear mode)
   sched-bench: overhead + K-scaling sweep -> BENCH_sched_overhead.json
              --smoke --model M --dataset D --shards N (0 = auto) --out FILE | --validate=FILE
   lint:      static analysis of rust/src -> LINT_REPORT.json
@@ -814,6 +927,7 @@ fn main() -> Result<()> {
         "validate",
         "deterministic-timing",
         "incremental",
+        "sim",
     ])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
@@ -824,6 +938,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "e2e" => cmd_e2e(&args),
         "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
         "lint" => cmd_lint(&args),
         "sched-bench" => cmd_sched_bench(&args),
         "calibrate" => cmd_calibrate(&args),

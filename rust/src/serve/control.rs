@@ -1,0 +1,361 @@
+//! The daemon's control plane: flat JSONL records on stdin or a file,
+//! one object per line, parsed with the calibration subsystem's
+//! dependency-free flat-JSON reader.  Renderers for every record kind
+//! live here too, and `parse_line(render_*(..))` round-trips exactly —
+//! the recorded arrival logs that feed `serve --replay` are written and
+//! read by this one module.
+//!
+//! Record kinds (discriminated by `"record"`):
+//!   config    {"record": "config", "arrival": "...", "fleet_policy": "...",
+//!              "pool_set": "...", "serial_scheduler": false,
+//!              "tenant_weights": [..], "tenant_quotas": [..]}
+//!   submit    {"record": "submit", "at": t, "id": n, "tenant": n,
+//!              "dataset": "...", "dp": n, "cp": n, "batch_size": n,
+//!              "iterations": n, "seq_count": n, "policy": "...",
+//!              "priority": n, "seed": n}
+//!   status    {"record": "status", "at": t}          (not journaled)
+//!   node-loss {"record": "node-loss", "at": t, "pool": n, "nodes": n}
+//!   drain     {"record": "drain", "at": t}
+//!   shutdown  {"record": "shutdown", "at": t}
+//!
+//! JSON numbers are f64, so u64 seeds are masked to 2^53-1 when rendered
+//! ([`SEED_MASK`]); both replay paths parse the same log, so byte-equality
+//! of their reports is unaffected.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::calib::profile_io::{parse_object, Jval};
+use crate::config::Policy;
+use crate::fleet::job::FleetJob;
+use crate::fleet::queue::FleetPolicy;
+use crate::util::error::Result;
+
+/// JSON carries numbers as f64: only seeds up to 2^53-1 survive the
+/// round trip, so the log writer masks them down.
+pub const SEED_MASK: u64 = (1 << 53) - 1;
+
+/// The fleet configuration record, required first in every session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigSpec {
+    /// Label for the report cell (an `ArrivalPattern` name for recorded
+    /// logs, but any label is accepted).
+    pub arrival: String,
+    pub fleet_policy: FleetPolicy,
+    pub pool_set: String,
+    pub serial_scheduler: bool,
+    pub tenant_weights: Vec<f64>,
+    pub tenant_quotas: Vec<usize>,
+}
+
+/// One parsed control record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControlRecord {
+    Config(ConfigSpec),
+    Submit { at: f64, job: FleetJob },
+    Status { at: f64 },
+    NodeLoss { at: f64, pool: usize, nodes: usize },
+    Drain { at: f64 },
+    Shutdown { at: f64 },
+}
+
+/// Map a dataset name to the `&'static str` the fleet job carries
+/// (`FleetJob.dataset` is static because workloads are usually
+/// synthesized; the control plane and snapshot codec funnel through the
+/// same statics).
+pub(crate) fn static_dataset(name: &str) -> Result<&'static str> {
+    match name {
+        "wikipedia" => Ok("wikipedia"),
+        "lmsys" => Ok("lmsys"),
+        "chatqa2" => Ok("chatqa2"),
+        other => crate::bail!("unknown dataset {other:?} (wikipedia | lmsys | chatqa2)"),
+    }
+}
+
+fn get<'a>(obj: &'a BTreeMap<String, Jval>, key: &str) -> Result<&'a Jval> {
+    obj.get(key).ok_or_else(|| crate::anyhow!("control record missing {key:?}"))
+}
+
+fn num(obj: &BTreeMap<String, Jval>, key: &str) -> Result<f64> {
+    match get(obj, key)? {
+        Jval::Num(x) => Ok(*x),
+        other => crate::bail!("control field {key:?} is not a number: {other:?}"),
+    }
+}
+
+fn uint(obj: &BTreeMap<String, Jval>, key: &str) -> Result<u64> {
+    let x = num(obj, key)?;
+    crate::ensure!(
+        x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= SEED_MASK as f64,
+        "control field {key:?} = {x} is not a non-negative integer"
+    );
+    Ok(x as u64)
+}
+
+fn string<'a>(obj: &'a BTreeMap<String, Jval>, key: &str) -> Result<&'a str> {
+    match get(obj, key)? {
+        Jval::Str(s) => Ok(s),
+        other => crate::bail!("control field {key:?} is not a string: {other:?}"),
+    }
+}
+
+fn boolean(obj: &BTreeMap<String, Jval>, key: &str) -> Result<bool> {
+    match get(obj, key)? {
+        Jval::Bool(b) => Ok(*b),
+        other => crate::bail!("control field {key:?} is not a bool: {other:?}"),
+    }
+}
+
+fn time(obj: &BTreeMap<String, Jval>) -> Result<f64> {
+    let at = num(obj, "at")?;
+    crate::ensure!(at.is_finite() && at >= 0.0, "control field \"at\" = {at} must be finite, >= 0");
+    Ok(at)
+}
+
+/// Parse one control-plane line.
+pub fn parse_line(line: &str) -> Result<ControlRecord> {
+    let obj = parse_object(line.trim())?;
+    let kind = string(&obj, "record")?;
+    match kind {
+        "config" => {
+            let fleet_policy = {
+                let name = string(&obj, "fleet_policy")?;
+                FleetPolicy::by_name(name)
+                    .ok_or_else(|| crate::anyhow!("unknown fleet policy {name:?}"))?
+            };
+            let weights = match get(&obj, "tenant_weights")? {
+                Jval::Arr(xs) => xs.clone(),
+                other => crate::bail!("tenant_weights is not an array: {other:?}"),
+            };
+            let quotas = match get(&obj, "tenant_quotas")? {
+                Jval::Arr(xs) => xs
+                    .iter()
+                    .map(|&x| {
+                        crate::ensure!(
+                            x.is_finite() && x >= 1.0 && x.fract() == 0.0,
+                            "tenant quota {x} is not a positive integer"
+                        );
+                        Ok(x as usize)
+                    })
+                    .collect::<Result<Vec<usize>>>()?,
+                other => crate::bail!("tenant_quotas is not an array: {other:?}"),
+            };
+            crate::ensure!(
+                !weights.is_empty() && weights.len() == quotas.len(),
+                "config needs matching non-empty tenant_weights/tenant_quotas ({} vs {})",
+                weights.len(),
+                quotas.len()
+            );
+            crate::ensure!(
+                weights.iter().all(|&w| w.is_finite() && w > 0.0),
+                "tenant weights must be finite and positive"
+            );
+            Ok(ControlRecord::Config(ConfigSpec {
+                arrival: string(&obj, "arrival")?.to_string(),
+                fleet_policy,
+                pool_set: string(&obj, "pool_set")?.to_string(),
+                serial_scheduler: boolean(&obj, "serial_scheduler")?,
+                tenant_weights: weights,
+                tenant_quotas: quotas,
+            }))
+        }
+        "submit" => {
+            let at = time(&obj)?;
+            let policy = {
+                let name = string(&obj, "policy")?;
+                Policy::by_name(name).ok_or_else(|| crate::anyhow!("unknown policy {name:?}"))?
+            };
+            let job = FleetJob {
+                id: uint(&obj, "id")?,
+                tenant: uint(&obj, "tenant")? as usize,
+                dataset: static_dataset(string(&obj, "dataset")?)?,
+                dp: uint(&obj, "dp")? as usize,
+                cp: uint(&obj, "cp")? as usize,
+                batch_size: uint(&obj, "batch_size")? as usize,
+                iterations: uint(&obj, "iterations")? as usize,
+                seq_count: uint(&obj, "seq_count")? as usize,
+                policy,
+                priority: uint(&obj, "priority")? as u32,
+                submit_time: at,
+                seed: uint(&obj, "seed")?,
+            };
+            crate::ensure!(
+                job.dp >= 1 && job.cp >= 1 && job.iterations >= 1 && job.seq_count >= 1,
+                "job {} has a zero shape field",
+                job.id
+            );
+            Ok(ControlRecord::Submit { at, job })
+        }
+        "status" => Ok(ControlRecord::Status { at: time(&obj)? }),
+        "node-loss" => Ok(ControlRecord::NodeLoss {
+            at: time(&obj)?,
+            pool: uint(&obj, "pool")? as usize,
+            nodes: uint(&obj, "nodes")? as usize,
+        }),
+        "drain" => Ok(ControlRecord::Drain { at: time(&obj)? }),
+        "shutdown" => Ok(ControlRecord::Shutdown { at: time(&obj)? }),
+        other => crate::bail!("unknown control record kind {other:?}"),
+    }
+}
+
+/// Render a config record (the exact line `parse_line` reads back).
+pub fn render_config(spec: &ConfigSpec) -> String {
+    let mut weights = String::new();
+    for (i, w) in spec.tenant_weights.iter().enumerate() {
+        let _ = write!(weights, "{}{}", if i == 0 { "" } else { ", " }, w);
+    }
+    let mut quotas = String::new();
+    for (i, q) in spec.tenant_quotas.iter().enumerate() {
+        let _ = write!(quotas, "{}{}", if i == 0 { "" } else { ", " }, q);
+    }
+    format!(
+        "{{\"record\": \"config\", \"arrival\": \"{}\", \"fleet_policy\": \"{}\", \
+         \"pool_set\": \"{}\", \"serial_scheduler\": {}, \
+         \"tenant_weights\": [{}], \"tenant_quotas\": [{}]}}",
+        spec.arrival,
+        spec.fleet_policy.name(),
+        spec.pool_set,
+        spec.serial_scheduler,
+        weights,
+        quotas
+    )
+}
+
+/// Render a submit record for `job` (seed masked to [`SEED_MASK`]).
+pub fn render_submit(job: &FleetJob) -> String {
+    format!(
+        "{{\"record\": \"submit\", \"at\": {}, \"id\": {}, \"tenant\": {}, \
+         \"dataset\": \"{}\", \"dp\": {}, \"cp\": {}, \"batch_size\": {}, \
+         \"iterations\": {}, \"seq_count\": {}, \"policy\": \"{}\", \
+         \"priority\": {}, \"seed\": {}}}",
+        job.submit_time,
+        job.id,
+        job.tenant,
+        job.dataset,
+        job.dp,
+        job.cp,
+        job.batch_size,
+        job.iterations,
+        job.seq_count,
+        job.policy.name(),
+        job.priority,
+        job.seed & SEED_MASK
+    )
+}
+
+pub fn render_shutdown(at: f64) -> String {
+    format!("{{\"record\": \"shutdown\", \"at\": {at}}}")
+}
+
+pub fn render_node_loss(at: f64, pool: usize, nodes: usize) -> String {
+    format!("{{\"record\": \"node-loss\", \"at\": {at}, \"pool\": {pool}, \"nodes\": {nodes}}}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_config() -> ConfigSpec {
+        ConfigSpec {
+            arrival: "steady".to_string(),
+            fleet_policy: FleetPolicy::Priority,
+            pool_set: "hetero".to_string(),
+            serial_scheduler: false,
+            tenant_weights: vec![4.0, 2.0, 1.0, 1.0],
+            tenant_quotas: vec![4, 3, 3, 2],
+        }
+    }
+
+    #[test]
+    fn config_round_trips() {
+        let spec = sample_config();
+        let line = render_config(&spec);
+        match parse_line(&line).unwrap() {
+            ControlRecord::Config(back) => assert_eq!(back, spec),
+            other => panic!("expected config, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_round_trips_with_masked_seed() {
+        let job = FleetJob {
+            id: 3,
+            tenant: 1,
+            dataset: "lmsys",
+            dp: 2,
+            cp: 8,
+            batch_size: 16,
+            iterations: 4,
+            seq_count: 600,
+            policy: Policy::Skrull,
+            priority: 2,
+            submit_time: 12.5,
+            seed: u64::MAX, // masked on render
+        };
+        let line = render_submit(&job);
+        match parse_line(&line).unwrap() {
+            ControlRecord::Submit { at, job: back } => {
+                assert_eq!(at, 12.5);
+                assert_eq!(back.seed, u64::MAX & SEED_MASK);
+                assert_eq!(back.dataset, "lmsys");
+                assert_eq!(back.policy, Policy::Skrull);
+                assert_eq!(back.dp, 2);
+                assert_eq!(back.submit_time.to_bits(), job.submit_time.to_bits());
+            }
+            other => panic!("expected submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn times_render_shortest_round_trip_exact() {
+        // Rust's {} Display for f64 is shortest-round-trip: the parsed
+        // value is bit-identical to the rendered one, which is what makes
+        // recorded logs a faithful arrival history
+        for t in [0.0, 1.0 / 3.0, 1e-12, 98765.4321] {
+            let line = render_shutdown(t);
+            match parse_line(&line).unwrap() {
+                ControlRecord::Shutdown { at } => assert_eq!(at.to_bits(), t.to_bits()),
+                other => panic!("expected shutdown, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn simple_records_parse() {
+        assert_eq!(
+            parse_line("{\"record\": \"status\", \"at\": 5}").unwrap(),
+            ControlRecord::Status { at: 5.0 }
+        );
+        assert_eq!(
+            parse_line(&render_node_loss(2.5, 1, 3)).unwrap(),
+            ControlRecord::NodeLoss { at: 2.5, pool: 1, nodes: 3 }
+        );
+        assert_eq!(
+            parse_line("{\"record\": \"drain\", \"at\": 0}").unwrap(),
+            ControlRecord::Drain { at: 0.0 }
+        );
+    }
+
+    #[test]
+    fn malformed_records_are_structured_errors() {
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line("{\"record\": \"launch-missiles\", \"at\": 0}").is_err());
+        assert!(parse_line("{\"at\": 0}").is_err(), "missing record kind");
+        assert!(parse_line("{\"record\": \"status\"}").is_err(), "missing at");
+        assert!(parse_line("{\"record\": \"status\", \"at\": -1}").is_err(), "negative time");
+        // bad config payloads
+        let good = render_config(&sample_config());
+        assert!(parse_line(&good.replace("priority", "lifo")).is_err(), "unknown policy");
+        assert!(parse_line(&good.replace("[4, 3, 3, 2]", "[4, 3]")).is_err(), "quota mismatch");
+        assert!(parse_line(&good.replace("[4, 3, 3, 2]", "[4, 3, 3, 0]")).is_err(), "zero quota");
+        // bad submit payloads
+        let job_line = "{\"record\": \"submit\", \"at\": 0, \"id\": 1, \"tenant\": 0, \
+                        \"dataset\": \"wikipedia\", \"dp\": 1, \"cp\": 8, \"batch_size\": 8, \
+                        \"iterations\": 2, \"seq_count\": 100, \"policy\": \"skrull\", \
+                        \"priority\": 1, \"seed\": 5}";
+        assert!(parse_line(job_line).is_ok());
+        assert!(parse_line(&job_line.replace("wikipedia", "imagenet")).is_err());
+        assert!(parse_line(&job_line.replace("\"dp\": 1", "\"dp\": 0")).is_err());
+        assert!(parse_line(&job_line.replace("\"seed\": 5", "\"seed\": 2.5")).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic fault injection for the serve daemon's journal I/O.
+//!
+//! A [`FaultPlan`] is a pure function of (seed, append index, attempt):
+//! the same plan injects the same faults on every run, so every recovery
+//! path in the tests is reproducible bit-for-bit.  Two fault families:
+//!
+//! - **Transient write errors**: an append attempt fails as if the disk
+//!   hiccuped; the journal retries with bounded virtual-clock backoff.
+//!   The schedule is seeded-pseudorandom but fails at most
+//!   [`MAX_CONSECUTIVE_TRANSIENT`] attempts per append, so a bounded
+//!   retry loop always lands the record.
+//! - **Kill**: the process dies at the Nth append, leaving the record
+//!   absent, half-written, or bit-flipped ([`TearMode`]) — the three
+//!   tail states crash recovery must truncate away.
+//!
+//! Nothing here reads a wall clock or OS randomness.
+
+use crate::util::error::Result;
+
+/// Transient faults never repeat more than this many attempts in a row,
+/// so `MAX_WRITE_ATTEMPTS` retries always suffice.
+pub const MAX_CONSECUTIVE_TRANSIENT: u32 = 3;
+
+/// How the kill fault leaves the tail record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TearMode {
+    /// Process dies before any byte of the record lands.
+    Clean,
+    /// The first half of the record lands.
+    Torn,
+    /// The whole record lands with one payload bit flipped.
+    BitFlip,
+}
+
+impl TearMode {
+    pub const ALL: [TearMode; 3] = [TearMode::Clean, TearMode::Torn, TearMode::BitFlip];
+
+    pub fn by_name(s: &str) -> Option<TearMode> {
+        match s {
+            "clean" => Some(TearMode::Clean),
+            "torn" => Some(TearMode::Torn),
+            "bitflip" => Some(TearMode::BitFlip),
+            _ => None,
+        }
+    }
+}
+
+/// What the plan injects at one append attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    Transient,
+    Kill(TearMode),
+}
+
+/// A seeded, deterministic fault schedule (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Kill the process at this append index (counting this process's
+    /// appends from 0), tearing the record per the mode.
+    pub kill_at: Option<(u64, TearMode)>,
+    /// Roughly one in `transient_every` append attempts fails
+    /// transiently; 0 disables transient faults.
+    pub transient_every: u64,
+}
+
+/// splitmix64 — the same stateless mixer the repo's `Rng` seeds with;
+/// used here so fault decisions are a pure hash of (seed, index, attempt).
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// No faults at all — production mode.
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, kill_at: None, transient_every: 0 }
+    }
+
+    /// Kill at append `n` with the given tear; no transient faults.
+    pub fn kill_at(n: u64, mode: TearMode) -> FaultPlan {
+        FaultPlan { seed: 0, kill_at: Some((n, mode)), transient_every: 0 }
+    }
+
+    /// Frequent transient faults (about one attempt in three), no kill —
+    /// exercises the retry/backoff path hard.
+    pub fn transient_heavy(seed: u64) -> FaultPlan {
+        FaultPlan { seed, kill_at: None, transient_every: 3 }
+    }
+
+    /// Parse a `--fault-plan` spec: comma-separated `key=value` pairs
+    /// from `seed=N`, `kill=N:MODE` (mode `clean|torn|bitflip`), and
+    /// `transient=N`.  `seed=7` alone means transient faults only.
+    pub fn from_spec(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { seed: 0, kill_at: None, transient_every: 0 };
+        let mut saw_transient = false;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                crate::bail!("fault-plan part {part:?} is not key=value");
+            };
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| crate::anyhow!("fault-plan seed {value:?} not a u64"))?;
+                }
+                "transient" => {
+                    plan.transient_every = value
+                        .parse()
+                        .map_err(|_| crate::anyhow!("fault-plan transient {value:?} not a u64"))?;
+                    saw_transient = true;
+                }
+                "kill" => {
+                    let (n, mode) = match value.split_once(':') {
+                        Some((n, m)) => (n, m),
+                        None => (value, "clean"),
+                    };
+                    let n: u64 = n
+                        .parse()
+                        .map_err(|_| crate::anyhow!("fault-plan kill index {n:?} not a u64"))?;
+                    let mode = TearMode::by_name(mode)
+                        .ok_or_else(|| crate::anyhow!("unknown tear mode {mode:?}"))?;
+                    plan.kill_at = Some((n, mode));
+                }
+                other => crate::bail!("unknown fault-plan key {other:?}"),
+            }
+        }
+        // a bare seed means "inject the default transient schedule"
+        if plan.seed != 0 && !saw_transient && plan.kill_at.is_none() {
+            plan.transient_every = 4;
+        }
+        Ok(plan)
+    }
+
+    /// Decide the fault (if any) for append `index`, retry `attempt`.
+    /// Pure: the same inputs always produce the same fault.
+    pub fn on_append(&self, index: u64, attempt: u32) -> Option<Fault> {
+        if let Some((kill, mode)) = self.kill_at {
+            if index == kill {
+                return Some(Fault::Kill(mode));
+            }
+        }
+        if self.transient_every != 0
+            && attempt < MAX_CONSECUTIVE_TRANSIENT
+            && mix(self.seed ^ index.wrapping_mul(0x2545_F491_4F6C_DD1D) ^ attempt as u64)
+                % self.transient_every
+                == 0
+        {
+            return Some(Fault::Transient);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_and_bounded() {
+        let plan = FaultPlan::transient_heavy(7);
+        let mut any_transient = false;
+        for index in 0..200u64 {
+            // identical inputs, identical decisions
+            assert_eq!(plan.on_append(index, 0), plan.on_append(index, 0));
+            // attempts at/after the consecutive cap never fail
+            assert_eq!(plan.on_append(index, MAX_CONSECUTIVE_TRANSIENT), None);
+            if plan.on_append(index, 0) == Some(Fault::Transient) {
+                any_transient = true;
+            }
+        }
+        assert!(any_transient, "a heavy plan must actually inject faults");
+    }
+
+    #[test]
+    fn kill_fires_at_exactly_one_index() {
+        let plan = FaultPlan::kill_at(5, TearMode::Torn);
+        for index in 0..10u64 {
+            let fault = plan.on_append(index, 0);
+            if index == 5 {
+                assert_eq!(fault, Some(Fault::Kill(TearMode::Torn)));
+            } else {
+                assert_eq!(fault, None);
+            }
+        }
+    }
+
+    #[test]
+    fn specs_parse_and_reject() {
+        let p = FaultPlan::from_spec("seed=7").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.transient_every, 4, "bare seed implies the default transient schedule");
+        let p = FaultPlan::from_spec("seed=3,kill=12:bitflip,transient=5").unwrap();
+        assert_eq!(p.kill_at, Some((12, TearMode::BitFlip)));
+        assert_eq!(p.transient_every, 5);
+        let p = FaultPlan::from_spec("kill=2").unwrap();
+        assert_eq!(p.kill_at, Some((2, TearMode::Clean)));
+        assert_eq!(p.transient_every, 0, "a kill-only spec stays transient-free");
+        assert!(FaultPlan::from_spec("seed").is_err());
+        assert!(FaultPlan::from_spec("kill=2:melt").is_err());
+        assert!(FaultPlan::from_spec("volts=9000").is_err());
+        assert!(FaultPlan::from_spec("seed=banana").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_no_faults() {
+        let p = FaultPlan::from_spec("").unwrap();
+        assert!(p.kill_at.is_none());
+        assert_eq!(p.transient_every, 0);
+        assert_eq!(p.on_append(0, 0), None);
+    }
+}

@@ -1,0 +1,571 @@
+//! The daemon's write-ahead event journal: a header followed by
+//! length-prefixed, sequence-numbered, FNV-1a-checksummed records, one
+//! per control-plane input or fleet decision.  Append is write-ahead
+//! (journal first, apply second) and fsyncs every record, so a crash can
+//! lose at most the record being written — and recovery truncates that
+//! torn tail back to the last valid record.
+//!
+//! Layout:
+//!   header   magic "SKRLJRN\0" + version u32 + crc u64        20 bytes
+//!   record   len u32 | seq u64 | kind u8 | payload | crc u64
+//! where `len = 9 + payload.len()` (the seq+kind+payload span) and the
+//! crc is FNV-1a over everything before it, len prefix included.
+//!
+//! Corruption policy: a record that fails to validate and *reaches the
+//! end of the file* is a torn tail (the crash interrupted its write) —
+//! recovery truncates it away.  The same failure mid-file, with valid
+//! data after it, cannot be a crash artifact and is a hard
+//! [`JournalError::Corrupt`].
+//!
+//! All faults are injected here, at the I/O boundary, by a seeded
+//! [`FaultPlan`]: transient write errors get bounded retry with
+//! virtual-clock backoff (a tick counter — nothing in `serve/` reads a
+//! wall clock), and kill faults tear the record mid-write exactly like
+//! a real crash.
+
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::state::fnv1a;
+use crate::serve::fault::{Fault, FaultPlan, TearMode};
+
+pub const JOURNAL_MAGIC: [u8; 8] = *b"SKRLJRN\0";
+pub const JOURNAL_VERSION: u32 = 1;
+/// magic + version + header crc.
+pub const HEADER_LEN: usize = 20;
+/// len prefix + seq + kind before the payload, then the trailing crc.
+pub const RECORD_OVERHEAD: usize = 4 + 8 + 1 + 8;
+/// Upper bound on one record's payload (control lines and fleet events
+/// are tiny; anything larger is corruption, not data).
+pub const MAX_PAYLOAD: usize = 1 << 20;
+/// Bounded retry budget for transient write faults.
+pub const MAX_WRITE_ATTEMPTS: u32 = 8;
+
+/// What one journal record carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecordKind {
+    /// A raw control-plane line, journaled before it is applied.
+    Input = 1,
+    /// One `FleetEvent` encoding, journaled after the decision.
+    Event = 2,
+}
+
+impl RecordKind {
+    pub fn from_byte(b: u8) -> Option<RecordKind> {
+        match b {
+            1 => Some(RecordKind::Input),
+            2 => Some(RecordKind::Event),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded journal record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    pub seq: u64,
+    pub kind: RecordKind,
+    pub payload: Vec<u8>,
+}
+
+/// Structured journal failure — never a panic.
+#[derive(Debug)]
+pub enum JournalError {
+    Io(std::io::Error),
+    BadMagic,
+    BadVersion(u32),
+    BadHeaderChecksum,
+    /// Unrecoverable mid-file damage (valid records follow the bad one),
+    /// or a daemon decision that disagrees with the journaled history.
+    Corrupt { offset: usize, reason: &'static str },
+    /// The fault plan killed the process at this append; the record at
+    /// the tail may be torn.
+    Killed,
+}
+
+impl fmt::Display for JournalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalError::Io(e) => write!(f, "journal io: {e}"),
+            JournalError::BadMagic => write!(f, "journal has wrong magic"),
+            JournalError::BadVersion(v) => write!(f, "unsupported journal version {v}"),
+            JournalError::BadHeaderChecksum => write!(f, "journal header checksum mismatch"),
+            JournalError::Corrupt { offset, reason } => {
+                write!(f, "journal corrupt at byte {offset}: {reason}")
+            }
+            JournalError::Killed => write!(f, "fault plan killed the daemon mid-append"),
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+impl From<std::io::Error> for JournalError {
+    fn from(e: std::io::Error) -> Self {
+        JournalError::Io(e)
+    }
+}
+
+/// Encode one record (header-less) into `buf`, which is cleared first.
+pub fn encode_record_into(buf: &mut Vec<u8>, seq: u64, kind: RecordKind, payload: &[u8]) {
+    buf.clear();
+    let len = (9 + payload.len()) as u32;
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.push(kind as u8);
+    buf.extend_from_slice(payload);
+    let crc = fnv1a(buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Strictly decode exactly one record occupying all of `bytes` — used by
+/// the mutation-sweep hardening test.  The streaming reader below uses
+/// the same field layout but handles trailing data itself.
+pub fn decode_record(bytes: &[u8]) -> Result<Record, JournalError> {
+    if bytes.len() < RECORD_OVERHEAD {
+        return Err(JournalError::Corrupt { offset: 0, reason: "record shorter than overhead" });
+    }
+    let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+    if len < 9 || len > MAX_PAYLOAD + 9 {
+        return Err(JournalError::Corrupt { offset: 0, reason: "record length out of range" });
+    }
+    if bytes.len() != 4 + len + 8 {
+        return Err(JournalError::Corrupt { offset: 0, reason: "record length disagrees" });
+    }
+    let body = &bytes[..4 + len];
+    let mut crc = [0u8; 8];
+    crc.copy_from_slice(&bytes[4 + len..]);
+    if fnv1a(body) != u64::from_le_bytes(crc) {
+        return Err(JournalError::Corrupt { offset: 0, reason: "record checksum mismatch" });
+    }
+    let mut seq = [0u8; 8];
+    seq.copy_from_slice(&bytes[4..12]);
+    let kind = RecordKind::from_byte(bytes[12])
+        .ok_or(JournalError::Corrupt { offset: 12, reason: "unknown record kind" })?;
+    Ok(Record {
+        seq: u64::from_le_bytes(seq),
+        kind,
+        payload: bytes[13..4 + len].to_vec(),
+    })
+}
+
+fn encode_header() -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(&JOURNAL_MAGIC);
+    h[8..12].copy_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    let crc = fnv1a(&h[..12]);
+    h[12..].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+/// Parse a journal image: header, then records.  Returns the records and
+/// the byte length of the valid prefix; a torn tail (any failure that
+/// reaches the end of the image) is *reported by a shorter valid length*,
+/// not an error.  Mid-file damage is [`JournalError::Corrupt`].
+pub fn parse_image(bytes: &[u8]) -> Result<(Vec<Record>, usize), JournalError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(JournalError::BadMagic);
+    }
+    if bytes[..8] != JOURNAL_MAGIC {
+        return Err(JournalError::BadMagic);
+    }
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    let mut crc = [0u8; 8];
+    crc.copy_from_slice(&bytes[12..20]);
+    if fnv1a(&bytes[..12]) != u64::from_le_bytes(crc) {
+        return Err(JournalError::BadHeaderChecksum);
+    }
+    if version != JOURNAL_VERSION {
+        return Err(JournalError::BadVersion(version));
+    }
+    let mut records = Vec::new();
+    let mut off = HEADER_LEN;
+    while off < bytes.len() {
+        let remaining = bytes.len() - off;
+        // a record that cannot even state its length is a torn tail
+        if remaining < 4 {
+            return Ok((records, off));
+        }
+        let len =
+            u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+                as usize;
+        let total = 4 + len + 8;
+        if len < 9 || len > MAX_PAYLOAD + 9 || total > remaining {
+            // an absurd or overlong length that extends to/past EOF is a
+            // torn tail; an absurd length with valid data after it cannot
+            // be distinguished, so the conservative call is torn only when
+            // the claimed span leaves nothing after it
+            if total > remaining {
+                return Ok((records, off));
+            }
+            return Err(JournalError::Corrupt { offset: off, reason: "record length out of range" });
+        }
+        match decode_record(&bytes[off..off + total]) {
+            Ok(rec) => {
+                let expected = records.len() as u64;
+                if rec.seq != expected {
+                    return Err(JournalError::Corrupt {
+                        offset: off,
+                        reason: "record sequence number out of order",
+                    });
+                }
+                records.push(rec);
+                off += total;
+            }
+            Err(_) if off + total == bytes.len() => {
+                // checksum failure on the very last record: a torn or
+                // bit-flipped tail from the crash — truncate it away
+                return Ok((records, off));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok((records, off))
+}
+
+/// The append half: an open journal file plus the fault-injection plan.
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    /// Next sequence number to append (== records currently on disk).
+    pub next_seq: u64,
+    /// Reusable record scratch — `append` is on the fleet hot path and
+    /// must not allocate per record.
+    scratch: Vec<u8>,
+    fault: FaultPlan,
+    /// Appends performed by this process — the fault plan's kill index
+    /// counts these, not `next_seq`, which resets on snapshot truncation.
+    appended_total: u64,
+    /// Accumulated virtual backoff from transient-fault retries.  Purely
+    /// simulated (a tick counter): `serve/` never sleeps and never reads
+    /// a wall clock.
+    pub backoff_ticks: u64,
+}
+
+impl Journal {
+    /// Create a fresh journal (truncating any prior file), write and
+    /// fsync the header, and fsync the parent directory so the file
+    /// itself survives a crash.
+    pub fn create(path: &Path, fault: FaultPlan) -> Result<Journal, JournalError> {
+        let mut file = File::create(path)?;
+        file.write_all(&encode_header())?;
+        file.sync_all()?;
+        crate::util::fsio::fsync_dir(path)?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file,
+            next_seq: 0,
+            scratch: Vec::with_capacity(256),
+            fault,
+            appended_total: 0,
+            backoff_ticks: 0,
+        })
+    }
+
+    /// Recover an existing journal: parse it, truncate any torn tail back
+    /// to the last valid record (fsyncing the truncation), and return the
+    /// surviving records plus an append-ready handle.
+    pub fn recover(path: &Path, fault: FaultPlan) -> Result<(Vec<Record>, Journal), JournalError> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        let (records, valid_len) = parse_image(&bytes)?;
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        if valid_len < bytes.len() {
+            file.set_len(valid_len as u64)?;
+            file.sync_all()?;
+        }
+        let mut file = file;
+        file.seek(SeekFrom::End(0))?;
+        let next_seq = records.len() as u64;
+        Ok((
+            records,
+            Journal {
+                path: path.to_path_buf(),
+                file,
+                next_seq,
+                scratch: Vec::with_capacity(256),
+                fault,
+                appended_total: 0,
+                backoff_ticks: 0,
+            },
+        ))
+    }
+
+    /// Append one record write-ahead: encode into the reusable scratch,
+    /// push through the fault plan (bounded retry with virtual backoff on
+    /// transient faults; a kill fault tears the record and dies), write,
+    /// fsync.  Returns the record's sequence number.
+    ///
+    /// Hot path: one fsync is inherent to write-ahead durability, but the
+    /// encode itself reuses `self.scratch` and allocates nothing.
+    pub fn append(&mut self, kind: RecordKind, payload: &[u8]) -> Result<u64, JournalError> {
+        let seq = self.next_seq;
+        encode_record_into(&mut self.scratch, seq, kind, payload);
+        let mut attempt: u32 = 0;
+        loop {
+            match self.fault.on_append(self.appended_total, attempt) {
+                Some(Fault::Transient) => {
+                    attempt += 1;
+                    if attempt >= MAX_WRITE_ATTEMPTS {
+                        return Err(JournalError::Io(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "transient write retries exhausted",
+                        )));
+                    }
+                    // exponential virtual backoff: a tick counter, never a
+                    // sleep or a clock read
+                    self.backoff_ticks += 1u64 << attempt.min(16);
+                }
+                Some(Fault::Kill(mode)) => {
+                    self.tear(mode)?;
+                    return Err(JournalError::Killed);
+                }
+                None => break,
+            }
+        }
+        self.file.write_all(&self.scratch)?;
+        self.file.sync_all()?;
+        self.next_seq = seq + 1;
+        self.appended_total += 1;
+        Ok(seq)
+    }
+
+    /// Simulate the crash the fault plan asked for: leave the record
+    /// absent (`Clean`), half-written (`Torn`), or fully written with one
+    /// bit flipped (`BitFlip`) — the three tail states recovery must
+    /// truncate away.
+    fn tear(&mut self, mode: TearMode) -> Result<(), JournalError> {
+        match mode {
+            TearMode::Clean => {}
+            TearMode::Torn => {
+                let half = self.scratch.len() / 2;
+                self.file.write_all(&self.scratch[..half])?;
+                self.file.sync_all()?;
+            }
+            TearMode::BitFlip => {
+                let mid = self.scratch.len() / 2;
+                self.scratch[mid] ^= 0x10;
+                self.file.write_all(&self.scratch)?;
+                self.file.sync_all()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop every record after a snapshot has captured their effects:
+    /// truncate back to the bare header, fsync, and reset the sequence
+    /// numbering (the snapshot records how many inputs it absorbed).
+    pub fn truncate_to_header(&mut self) -> Result<(), JournalError> {
+        self.file.set_len(HEADER_LEN as u64)?;
+        self.file.seek(SeekFrom::End(0))?;
+        self.file.sync_all()?;
+        crate::util::fsio::fsync_dir(&self.path)?;
+        self.next_seq = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("skrull_jrn_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn records_round_trip_through_the_file() {
+        let dir = tmp_dir("rt");
+        let path = dir.join("j.log");
+        let mut j = Journal::create(&path, FaultPlan::none()).unwrap();
+        assert_eq!(j.append(RecordKind::Input, b"{\"record\": \"submit\"}").unwrap(), 0);
+        assert_eq!(j.append(RecordKind::Event, &[4, 1, 2, 3]).unwrap(), 1);
+        assert_eq!(j.append(RecordKind::Event, b"").unwrap(), 2);
+        drop(j);
+        let (records, j2) = Journal::recover(&path, FaultPlan::none()).unwrap();
+        assert_eq!(j2.next_seq, 3);
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0].kind, RecordKind::Input);
+        assert_eq!(records[0].payload, b"{\"record\": \"submit\"}");
+        assert_eq!(records[1].payload, vec![4, 1, 2, 3]);
+        assert!(records[2].payload.is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_to_the_last_valid_record() {
+        let dir = tmp_dir("torn");
+        let path = dir.join("j.log");
+        let mut j = Journal::create(&path, FaultPlan::none()).unwrap();
+        j.append(RecordKind::Input, b"one").unwrap();
+        j.append(RecordKind::Input, b"two").unwrap();
+        drop(j);
+        // chop mid-record: simulate a crash during the third append
+        let mut bytes = std::fs::read(&path).unwrap();
+        let full = bytes.len();
+        let mut scratch = Vec::new();
+        encode_record_into(&mut scratch, 2, RecordKind::Event, b"partial");
+        bytes.extend_from_slice(&scratch[..scratch.len() / 2]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (records, j2) = Journal::recover(&path, FaultPlan::none()).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(j2.next_seq, 2);
+        assert_eq!(std::fs::metadata(&path).unwrap().len() as usize, full);
+        // recovery is idempotent: a second pass sees a clean file
+        drop(j2);
+        let (records, _) = Journal::recover(&path, FaultPlan::none()).unwrap();
+        assert_eq!(records.len(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bitflipped_tail_truncates_but_midfile_flip_is_corrupt() {
+        let dir = tmp_dir("flip");
+        let path = dir.join("j.log");
+        let mut j = Journal::create(&path, FaultPlan::none()).unwrap();
+        j.append(RecordKind::Input, b"aaaa").unwrap();
+        let tail_start = std::fs::metadata(&path).unwrap().len() as usize;
+        j.append(RecordKind::Input, b"bbbb").unwrap();
+        drop(j);
+        // flip a payload bit in the LAST record: torn tail, truncated away
+        let clean = std::fs::read(&path).unwrap();
+        let mut bytes = clean.clone();
+        bytes[tail_start + 13] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        let (records, _) = Journal::recover(&path, FaultPlan::none()).unwrap();
+        assert_eq!(records.len(), 1, "flipped tail record must be dropped");
+        // flip a bit in the FIRST record while a valid one follows:
+        // unrecoverable mid-file corruption
+        let mut bytes = clean;
+        bytes[HEADER_LEN + 13] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        match Journal::recover(&path, FaultPlan::none()) {
+            Err(JournalError::Corrupt { .. }) => {}
+            other => panic!("mid-file corruption must be fatal, got {other:?}"),
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn header_damage_is_structured() {
+        let dir = tmp_dir("hdr");
+        let path = dir.join("j.log");
+        drop(Journal::create(&path, FaultPlan::none()).unwrap());
+        let clean = std::fs::read(&path).unwrap();
+        let mut bytes = clean.clone();
+        bytes[0] = b'X';
+        assert!(matches!(parse_image(&bytes), Err(JournalError::BadMagic)));
+        let mut bytes = clean.clone();
+        bytes[8] = 9;
+        assert!(matches!(parse_image(&bytes), Err(JournalError::BadHeaderChecksum)));
+        // a version bump with a recomputed crc is BadVersion
+        let mut bytes = clean;
+        bytes[8] = 9;
+        let crc = crate::coordinator::state::fnv1a(&bytes[..12]);
+        bytes[12..20].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(parse_image(&bytes), Err(JournalError::BadVersion(9))));
+        assert!(matches!(parse_image(b"tiny"), Err(JournalError::BadMagic)));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn record_codec_survives_exhaustive_mutation() {
+        // the satellite-2 sweep, reused for the journal record codec:
+        // every bit flip, truncation and garbage buffer must be rejected
+        let mut valid = Vec::new();
+        encode_record_into(&mut valid, 3, RecordKind::Event, &[7, 7, 7, 0, 255]);
+        // decode_record requires seq to be embedded consistently, but the
+        // strict decoder does not know the expected seq — wrap it so any
+        // accepted mutant must still be the original record
+        let reference = decode_record(&valid).unwrap();
+        crate::util::proptest::assert_codec_rejects_mutants(&valid, 256, 17, |bytes| {
+            match decode_record(bytes) {
+                Ok(r) if r == reference => Ok(r),
+                Ok(_) => Err(JournalError::Corrupt { offset: 0, reason: "mutant decoded" }),
+                Err(e) => Err(e),
+            }
+        });
+    }
+
+    #[test]
+    fn sequence_gaps_are_corrupt() {
+        let dir = tmp_dir("seq");
+        let path = dir.join("j.log");
+        let mut j = Journal::create(&path, FaultPlan::none()).unwrap();
+        j.append(RecordKind::Input, b"zero").unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mut scratch = Vec::new();
+        // seq jumps from 0 to 5: a spliced journal, not a crash artifact —
+        // but only detectable as corrupt when valid data follows, so give
+        // it a valid successor
+        encode_record_into(&mut scratch, 5, RecordKind::Input, b"five");
+        bytes.extend_from_slice(&scratch);
+        encode_record_into(&mut scratch, 6, RecordKind::Input, b"six");
+        bytes.extend_from_slice(&scratch);
+        match parse_image(&bytes) {
+            Err(JournalError::Corrupt { reason, .. }) => {
+                assert!(reason.contains("sequence"), "{reason}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncate_to_header_resets_the_log() {
+        let dir = tmp_dir("trunc");
+        let path = dir.join("j.log");
+        let mut j = Journal::create(&path, FaultPlan::none()).unwrap();
+        j.append(RecordKind::Input, b"gone").unwrap();
+        j.truncate_to_header().unwrap();
+        assert_eq!(j.next_seq, 0);
+        j.append(RecordKind::Input, b"kept").unwrap();
+        drop(j);
+        let (records, _) = Journal::recover(&path, FaultPlan::none()).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].payload, b"kept");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn transient_faults_retry_with_virtual_backoff() {
+        let dir = tmp_dir("transient");
+        let path = dir.join("j.log");
+        let mut j = Journal::create(&path, FaultPlan::transient_heavy(7)).unwrap();
+        for i in 0..32u8 {
+            j.append(RecordKind::Event, &[i]).unwrap();
+        }
+        assert!(j.backoff_ticks > 0, "a heavy transient plan must trigger retries");
+        drop(j);
+        let (records, _) = Journal::recover(&path, FaultPlan::none()).unwrap();
+        assert_eq!(records.len(), 32, "every append must eventually land");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn kill_fault_tears_the_tail_exactly_once() {
+        for mode in [TearMode::Clean, TearMode::Torn, TearMode::BitFlip] {
+            let dir = tmp_dir("kill");
+            let path = dir.join(format!("j_{mode:?}.log"));
+            let mut j = Journal::create(&path, FaultPlan::kill_at(2, mode)).unwrap();
+            j.append(RecordKind::Input, b"zero").unwrap();
+            j.append(RecordKind::Input, b"one").unwrap();
+            match j.append(RecordKind::Input, b"two") {
+                Err(JournalError::Killed) => {}
+                other => panic!("expected Killed, got {other:?}"),
+            }
+            drop(j);
+            // recovery finds exactly the two durable records
+            let (records, mut j2) = Journal::recover(&path, FaultPlan::none()).unwrap();
+            assert_eq!(records.len(), 2, "tear mode {mode:?}");
+            // and the journal is append-ready again
+            j2.append(RecordKind::Input, b"two").unwrap();
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+}

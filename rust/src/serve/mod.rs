@@ -1,0 +1,44 @@
+//! `skrull serve` — a crash-safe daemon wrapping the fleet scheduler.
+//!
+//! The batch path (`skrull fleet`, [`crate::fleet::sim::simulate`]) plans
+//! a whole workload in one call; this module runs the *same*
+//! deterministic core ([`crate::fleet::FleetCore`]) as a long-lived
+//! process fed by a JSONL control plane, and makes it durable:
+//!
+//! - [`control`] — the flat-JSON control records (config / submit /
+//!   status / node-loss / drain / shutdown) and their renderers.
+//! - [`journal`] — the write-ahead event journal: length-prefixed,
+//!   FNV-1a-checksummed records; torn tails truncate, mid-file
+//!   corruption is fatal.
+//! - [`snapshot`] — atomic full-state snapshots that let the journal be
+//!   truncated; restart = snapshot + journal-suffix replay.
+//! - [`fault`] — seeded deterministic fault injection (kills with
+//!   clean/torn/bit-flipped tails, transient write errors) at the
+//!   journal I/O boundary, driving every recovery path in tests and CI.
+//! - [`daemon`] — the loop tying them together, plus `--record`,
+//!   `--replay` and `--smoke` entry points.
+//!
+//! Keystone invariant, enforced at recovery time and by the CI replay
+//! gate: **the daemon must never out-decide the simulator.**  Replaying
+//! a recorded log through the daemon and through `fleet::sim` yields
+//! byte-identical `BENCH_fleet.json` cell payloads, and recovery proves
+//! every journaled event against a freshly re-decided core.
+//!
+//! Determinism: no wall-clock reads anywhere in this tree (time is
+//! simulation time from the control records; retry backoff is a virtual
+//! tick counter), so `skrull lint`'s `wall-clock-in-pure-code` rule
+//! holds over `serve/` and every run is replayable.
+
+pub mod control;
+pub mod daemon;
+pub mod fault;
+pub mod journal;
+pub mod snapshot;
+
+pub use control::{parse_line, ConfigSpec, ControlRecord};
+pub use daemon::{
+    record_log, replay_via_daemon, replay_via_sim, run, run_smoke, DaemonOptions, Outcome,
+};
+pub use fault::{FaultPlan, TearMode};
+pub use journal::{Journal, JournalError, RecordKind};
+pub use snapshot::Snapshot;

@@ -33,7 +33,7 @@
 //! stay deterministic.
 
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 
 use crate::coordinator::state::fnv1a;
@@ -139,7 +139,9 @@ pub fn frames_for_budget(role: RamRole, budget_bytes: u64, page_bytes: u64) -> u
         .max(1)
 }
 
-/// Spill a length corpus to `path` (write-to-temp then rename, fsynced).
+/// Spill a length corpus to `path` (write-to-temp then rename, with both
+/// the file *and its parent directory* fsynced — a rename is only durable
+/// once the directory entry is on disk).
 pub fn spill_lengths(lengths: &[u32], path: &Path, page_len: u32) -> Result<(), SpillError> {
     if page_len == 0 {
         return Err(SpillError::BadPageLen);
@@ -161,13 +163,7 @@ pub fn spill_lengths(lengths: &[u32], path: &Path, page_len: u32) -> Result<(), 
         buf.extend_from_slice(&page);
         buf.extend_from_slice(&crc.to_le_bytes());
     }
-    let tmp = path.with_extension("spill.tmp");
-    {
-        let mut f = File::create(&tmp)?;
-        f.write_all(&buf)?;
-        f.sync_all()?;
-    }
-    std::fs::rename(&tmp, path)?;
+    crate::util::fsio::write_atomic(path, &buf, "spill.tmp")?;
     Ok(())
 }
 
@@ -204,6 +200,16 @@ impl SpillStore {
     }
 
     pub fn open_as(path: &Path, budget_bytes: u64, role: RamRole) -> Result<SpillStore, SpillError> {
+        // Sweep this store's own orphaned tmp file (a crash between
+        // `write_all` and `rename` in `spill_lengths` leaks one).  Only the
+        // sibling tmp is removed — never a directory-wide glob, which would
+        // race parallel workers spilling into a shared --spill-dir.
+        let stale = path.with_extension("spill.tmp");
+        match std::fs::remove_file(&stale) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(SpillError::Io(e)),
+        }
         let mut file = File::open(path)?;
         let file_len = file.metadata()?.len();
         let mut header = [0u8; HEADER_LEN];
@@ -472,6 +478,25 @@ mod tests {
             SpillStore::open(&path, 16),
             Err(SpillError::BudgetTooSmall { .. })
         ));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_sweeps_own_orphaned_tmp() {
+        // Regression: a crash between write and rename leaks `X.spill.tmp`;
+        // `open` must clean it up without touching unrelated files.
+        let lens: Vec<u32> = (0..64u32).collect();
+        let path = tmp_path("orphan");
+        spill_lengths(&lens, &path, 32).unwrap();
+        let orphan = path.with_extension("spill.tmp");
+        std::fs::write(&orphan, b"half-written junk").unwrap();
+        let unrelated = path.with_extension("other.spill.tmp");
+        std::fs::write(&unrelated, b"someone else's in-flight tmp").unwrap();
+        let mut store = SpillStore::open(&path, 1 << 20).unwrap();
+        assert_eq!(store.get(5).unwrap(), 5);
+        assert!(!orphan.exists(), "own orphan tmp must be swept on open");
+        assert!(unrelated.exists(), "sweep must not touch other tmp files");
+        std::fs::remove_file(&unrelated).unwrap();
         std::fs::remove_file(&path).unwrap();
     }
 

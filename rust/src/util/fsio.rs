@@ -1,0 +1,77 @@
+//! Crash-safe file write helpers shared by the spill store, the
+//! coordinator checkpoint and the serve journal/snapshot.
+//!
+//! The durability recipe is write-tmp → fsync(file) → rename → **fsync
+//! (parent dir)**.  The last step is the one everybody forgets: POSIX
+//! only guarantees the rename itself is durable once the directory
+//! entry has been synced, so a crash after `rename` but before the
+//! directory flush can resurrect the old file — or lose the new one —
+//! despite the data blocks being on disk.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+/// Fsync the directory containing `path` (or `path` itself if it is a
+/// directory), making a preceding `rename` into it durable.
+pub fn fsync_dir(path: &Path) -> io::Result<()> {
+    let dir = if path.is_dir() {
+        path
+    } else {
+        match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        }
+    };
+    File::open(dir)?.sync_all()
+}
+
+/// Atomically replace `path` with `bytes`: write to a sibling tmp file
+/// (`path.with_extension(tmp_ext)`), fsync it, rename over `path`, then
+/// fsync the parent directory so the rename survives a crash.
+pub fn write_atomic(path: &Path, bytes: &[u8], tmp_ext: &str) -> io::Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension(tmp_ext);
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    fsync_dir(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("skrull_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_cleans_tmp() {
+        let dir = tmpdir("replace");
+        let path = dir.join("state.bin");
+        write_atomic(&path, b"first", "tmp").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second", "tmp").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!path.with_extension("tmp").exists(), "tmp must be renamed away");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsync_dir_handles_bare_and_nested_paths() {
+        let dir = tmpdir("dirsync");
+        let nested = dir.join("file.bin");
+        std::fs::write(&nested, b"x").unwrap();
+        fsync_dir(&nested).unwrap();
+        // a bare filename has no parent component: falls back to "."
+        fsync_dir(Path::new("Cargo.toml")).unwrap();
+        // a directory path syncs itself
+        fsync_dir(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -4,6 +4,7 @@
 //! (util::par) — the offline build vendors its own substitutes.
 
 pub mod error;
+pub mod fsio;
 pub mod par;
 pub mod proptest;
 pub mod stats;

@@ -99,9 +99,101 @@ impl Gen for SeqLensGen {
     }
 }
 
+/// Exhaustive mutation sweep for binary codecs: feeds `decode` every
+/// single-bit flip of `valid`, every truncation length, and `garbage_cases`
+/// seeded random buffers, asserting each one is *rejected* (returns `Err`)
+/// without panicking.  `decode` returning `Ok` for any mutant fails with a
+/// message naming the mutant.  Shared by the `fleet::ResumePoint` and serve
+/// journal-record hardening tests.
+pub fn assert_codec_rejects_mutants<T, E, F>(valid: &[u8], garbage_cases: usize, seed: u64, decode: F)
+where
+    F: Fn(&[u8]) -> Result<T, E>,
+{
+    // every single-bit flip of the valid encoding
+    let mut buf = valid.to_vec();
+    for byte in 0..valid.len() {
+        for bit in 0..8 {
+            buf[byte] ^= 1 << bit;
+            assert!(
+                decode(&buf).is_err(),
+                "decode accepted a corrupt encoding (bit {bit} of byte {byte} flipped)"
+            );
+            buf[byte] ^= 1 << bit;
+        }
+    }
+    // every strict truncation (the full-length prefix is the valid input)
+    for cut in 0..valid.len() {
+        assert!(
+            decode(&valid[..cut]).is_err(),
+            "decode accepted a truncation to {cut} of {} bytes",
+            valid.len()
+        );
+    }
+    // trailing garbage appended to a valid encoding
+    let mut extended = valid.to_vec();
+    extended.push(0);
+    assert!(decode(&extended).is_err(), "decode accepted trailing garbage");
+    // seeded random garbage of assorted lengths
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..garbage_cases {
+        let len = rng.usize_below(valid.len() * 2 + 1);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        if bytes == valid {
+            continue; // astronomically unlikely, but be precise
+        }
+        assert!(
+            decode(&bytes).is_err(),
+            "decode accepted random garbage (case {case}, len {len})"
+        );
+    }
+    // and the valid input itself still decodes
+    assert!(decode(valid).is_ok(), "decode rejected the valid encoding");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mutation_sweep_accepts_a_sound_codec() {
+        // toy codec: 4-byte payload + 8-byte FNV-ish checksum, fixed length
+        fn crc(bytes: &[u8]) -> u64 {
+            let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+            for &b in bytes {
+                h = h.rotate_left(7) ^ b as u64;
+                h = h.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            }
+            h
+        }
+        fn decode(bytes: &[u8]) -> Result<u32, String> {
+            if bytes.len() != 12 {
+                return Err("bad length".into());
+            }
+            let (body, tail) = bytes.split_at(4);
+            let mut c = [0u8; 8];
+            c.copy_from_slice(tail);
+            if crc(body) != u64::from_le_bytes(c) {
+                return Err("bad crc".into());
+            }
+            Ok(u32::from_le_bytes([body[0], body[1], body[2], body[3]]))
+        }
+        let mut valid = 0xDEAD_BEEFu32.to_le_bytes().to_vec();
+        valid.extend_from_slice(&crc(&valid).to_le_bytes());
+        assert_codec_rejects_mutants(&valid, 64, 11, decode);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode accepted")]
+    fn mutation_sweep_catches_a_lax_codec() {
+        // a codec that ignores its checksum: the bit-flip sweep must object
+        fn decode(bytes: &[u8]) -> Result<u32, String> {
+            if bytes.len() < 4 {
+                return Err("too short".into());
+            }
+            Ok(u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]))
+        }
+        assert_codec_rejects_mutants(&[1, 2, 3, 4, 5, 6], 8, 3, decode);
+    }
 
     #[test]
     fn passing_property_runs_all_cases() {

@@ -20,10 +20,22 @@ impl Summary {
         Self::default()
     }
 
+    /// Rebuild a summary from raw samples, in insertion order.  Used by the
+    /// serve snapshot codec to round-trip fleet state exactly: together
+    /// with [`Summary::samples`] this is a lossless (bit-exact) round trip.
+    pub fn from_samples(xs: Vec<f64>) -> Self {
+        Summary { xs, sorted: OnceCell::new() }
+    }
+
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
         // invalidate the cached sorted view
         self.sorted.take();
+    }
+
+    /// The raw samples in insertion order (see [`Summary::from_samples`]).
+    pub fn samples(&self) -> &[f64] {
+        &self.xs
     }
 
     pub fn len(&self) -> usize {
@@ -190,6 +202,20 @@ mod tests {
         assert_eq!(s.sorted(), &[1.0, 2.0, 3.0]);
         // repeated quantile calls agree (served from the cache)
         assert_eq!(s.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn samples_round_trip_bit_exact() {
+        let mut s = Summary::new();
+        for x in [0.1, -3.5e-9, 7.0, f64::MIN_POSITIVE] {
+            s.push(x);
+        }
+        let back = Summary::from_samples(s.samples().to_vec());
+        assert_eq!(back.samples().len(), 4);
+        for (a, b) in s.samples().iter().zip(back.samples()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(s.quantile(0.5), back.quantile(0.5));
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Crash-recovery integration tests for the serve daemon.
+//!
+//! The heavy hammer here is the kill-point sweep: kill the daemon at
+//! EVERY journal append index (cycling through all three tear modes),
+//! recover in a fresh process, and require the final cell payload to be
+//! byte-identical to the batch simulator's.  There is no "mostly
+//! recovers" — a single diverging byte at any crash site fails the
+//! sweep, which is the keystone invariant stated in `serve/mod.rs`:
+//! the daemon must never out-decide the simulator.
+
+use skrull::fleet::{ArrivalPattern, FleetPolicy};
+use skrull::serve::daemon::{self, DaemonOptions, Outcome};
+use skrull::serve::{FaultPlan, Journal, TearMode};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("skrull_serve_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn restart_clean(lines: &[String], state_dir: &std::path::Path, snapshot_every: usize) -> String {
+    let opts = DaemonOptions {
+        state_dir: state_dir.to_path_buf(),
+        snapshot_every,
+        fault: FaultPlan::none(),
+    };
+    match daemon::run(lines, &opts).unwrap() {
+        Outcome::Completed { cell_json } => cell_json,
+        Outcome::Killed => panic!("a fault-free restart cannot be killed"),
+    }
+}
+
+/// Kill at every append index until a kill index past the final append
+/// lets the run complete uninterrupted; every crash site must recover to
+/// the simulator's exact bytes.
+#[test]
+fn kill_point_sweep_recovers_byte_identical_at_every_append() {
+    let base = tmp_dir("sweep");
+    let lines =
+        daemon::record_log(ArrivalPattern::Bursty, FleetPolicy::Priority, "paper", 6, 17)
+            .unwrap();
+    let reference = daemon::replay_via_sim(&lines).unwrap();
+
+    let mut kill: u64 = 0;
+    loop {
+        let mode = TearMode::ALL[(kill % 3) as usize];
+        let dir = base.join(format!("k{kill}"));
+        let opts = DaemonOptions {
+            state_dir: dir.clone(),
+            snapshot_every: 2,
+            fault: FaultPlan { seed: kill, kill_at: Some((kill, mode)), transient_every: 0 },
+        };
+        match daemon::run(&lines, &opts).unwrap() {
+            // the kill index is past the last append: the log has been
+            // fully processed and the sweep has covered every crash site
+            Outcome::Completed { cell_json } => {
+                assert_eq!(cell_json, reference, "uninterrupted run diverged");
+                break;
+            }
+            Outcome::Killed => {
+                let recovered = restart_clean(&lines, &dir, 2);
+                assert_eq!(
+                    recovered, reference,
+                    "recovery diverged after a {mode:?} kill at append {kill}"
+                );
+            }
+        }
+        kill += 1;
+        assert!(kill < 10_000, "kill sweep failed to terminate");
+    }
+    assert!(kill > 10, "sweep ended after only {kill} appends — the log is too trivial");
+    std::fs::remove_dir_all(base).ok();
+}
+
+/// A torn tail is truncated back to the last fully-valid record, and the
+/// daemon then completes byte-identically from what survived.
+#[test]
+fn torn_tail_truncates_to_the_last_valid_record() {
+    let base = tmp_dir("torn");
+    let lines =
+        daemon::record_log(ArrivalPattern::Steady, FleetPolicy::Fifo, "paper", 4, 5).unwrap();
+    let reference = daemon::replay_via_sim(&lines).unwrap();
+
+    let opts = DaemonOptions {
+        state_dir: base.clone(),
+        snapshot_every: 0,
+        fault: FaultPlan::kill_at(3, TearMode::Torn),
+    };
+    match daemon::run(&lines, &opts).unwrap() {
+        Outcome::Killed => {}
+        other => panic!("expected the plan to kill the daemon, got {other:?}"),
+    }
+    let journal_path = base.join("fleet.journal");
+    let len_torn = std::fs::metadata(&journal_path).unwrap().len();
+    {
+        let (records, _j) = Journal::recover(&journal_path, FaultPlan::none()).unwrap();
+        assert_eq!(records.len(), 3, "appends 0..3 landed whole; the torn 4th must drop");
+    }
+    let len_clean = std::fs::metadata(&journal_path).unwrap().len();
+    assert!(
+        len_clean < len_torn,
+        "recovery must physically truncate the torn tail ({len_torn} -> {len_clean})"
+    );
+
+    let recovered = restart_clean(&lines, &base, 0);
+    assert_eq!(recovered, reference);
+    std::fs::remove_dir_all(base).ok();
+}
+
+/// Crash long after a snapshot: recovery loads the snapshot, replays only
+/// the journal suffix, and still lands on the simulator's exact bytes.
+#[test]
+fn snapshot_plus_suffix_replay_matches_the_uninterrupted_run() {
+    let base = tmp_dir("snap");
+    let lines =
+        daemon::record_log(ArrivalPattern::HeavyTailed, FleetPolicy::BestFitPrice, "hetero", 6, 29)
+            .unwrap();
+    let reference = daemon::replay_via_sim(&lines).unwrap();
+
+    let opts = DaemonOptions {
+        state_dir: base.clone(),
+        snapshot_every: 2,
+        fault: FaultPlan::kill_at(20, TearMode::BitFlip),
+    };
+    match daemon::run(&lines, &opts).unwrap() {
+        Outcome::Killed => {}
+        other => panic!("expected the plan to kill the daemon, got {other:?}"),
+    }
+    assert!(
+        base.join("fleet.snap").exists(),
+        "by append 20 at snapshot_every=2 a snapshot must have been taken"
+    );
+    let recovered = restart_clean(&lines, &base, 2);
+    assert_eq!(recovered, reference);
+    std::fs::remove_dir_all(base).ok();
+}
+
+/// Transient write faults are retried behind virtual backoff and leave no
+/// trace in the output: a transient-heavy run matches the simulator.
+#[test]
+fn transient_faults_are_invisible_in_the_output() {
+    let base = tmp_dir("transient");
+    let lines =
+        daemon::record_log(ArrivalPattern::Bursty, FleetPolicy::ShortestPricedFirst, "paper", 5, 13)
+            .unwrap();
+    let reference = daemon::replay_via_sim(&lines).unwrap();
+    let got =
+        daemon::run_to_completion(&lines, &base, FaultPlan::transient_heavy(9), 0).unwrap();
+    assert_eq!(got, reference);
+    std::fs::remove_dir_all(base).ok();
+}
